@@ -1,0 +1,58 @@
+//! Quickstart: evaluate one GEMM on a CiM-integrated SM and on the
+//! tensor-core baseline, and print the What/When/Where story for it.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use www_cim::prelude::*;
+use www_cim::cost::BaselineModel;
+use www_cim::roofline::Roofline;
+
+fn main() {
+    // The architecture of paper §V-A: one SM, 4x4 KB RF, 256 KB SMEM.
+    let arch = Architecture::default_sm();
+
+    // A BERT-Large projection GEMM (Table VI row 1).
+    let gemm = Gemm::new(512, 1024, 1024);
+    println!("workload: {gemm}  (algorithmic reuse {:.0} ops/B)\n", gemm.algorithmic_reuse());
+
+    // WHAT: pick a CiM primitive (Table IV).
+    let prim = CimPrimitive::digital_6t();
+    println!(
+        "primitive: {} — {}x{} parallel CiM units, {} ns/pass, {} pJ/MAC",
+        prim.name, prim.rp, prim.cp, prim.latency_ns, prim.mac_energy_pj
+    );
+
+    // WHERE: integrate it at the register file under iso-area.
+    let sys = CimSystem::at_level(&arch, prim, MemLevel::RegisterFile);
+    println!("system:    {} (peak {:.0} GOPS)\n", sys.label(), sys.peak_gops());
+
+    // Map the GEMM with the paper's priority-based algorithm...
+    let mapping = PriorityMapper::new(&sys).map(&gemm);
+    println!("mapping:   {}\n", mapping.describe());
+
+    // ...and evaluate it with the analytical cost model.
+    let cim = CostModel::new(&sys).evaluate(&gemm, &mapping);
+    let base = BaselineModel::new(&arch).evaluate(&gemm);
+
+    println!("               {:>12} {:>12}", "CiM@RF", "Tensor-core");
+    println!("TOPS/W         {:>12.3} {:>12.3}", cim.tops_per_watt, base.tops_per_watt);
+    println!("GFLOPS         {:>12.0} {:>12.0}", cim.gflops, base.gflops);
+    println!("utilization    {:>11.1}% {:>11.1}%", 100.0 * cim.utilization, 100.0 * base.utilization);
+    println!("fJ/MAC         {:>12.0} {:>12.0}", cim.fj_per_mac(), base.fj_per_mac());
+    println!(
+        "\nWHEN: CiM wins energy here by {:.2}x (weight reuse in-array); the baseline \
+         keeps a {:.2}x throughput edge on this shape.",
+        cim.tops_per_watt / base.tops_per_watt,
+        base.gflops / cim.gflops
+    );
+
+    // Roofline context (Appendix B).
+    let ridge = Roofline::of(&sys, MemLevel::Dram);
+    println!(
+        "roofline: ridge at {:.1} ops/B -> this GEMM is {}.",
+        ridge.ridge_point(),
+        if ridge.memory_bound(&gemm) { "memory-bound" } else { "compute-bound" }
+    );
+}

@@ -1,0 +1,81 @@
+//! WWW explorer: answer What / When / Where for a whole ML workload by
+//! sweeping every (primitive × level) system over its layers — the
+//! paper's Table V in executable form.
+//!
+//! ```sh
+//! cargo run --release --example www_explorer -- [bert|gptj|resnet50|dlrm]
+//! ```
+
+use www_cim::arch::{Architecture, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::coordinator::jobs::{Grid, SystemSpec};
+use www_cim::util::stats::geomean;
+use www_cim::util::table::Table;
+use www_cim::workload::{models, Gemm};
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "bert".into());
+    let wl = match which.as_str() {
+        "bert" => models::bert_large(),
+        "gptj" => models::gpt_j(),
+        "resnet50" => models::resnet50(),
+        "dlrm" => models::dlrm(),
+        other => {
+            eprintln!("unknown workload {other}; using bert");
+            models::bert_large()
+        }
+    };
+    let gemms: Vec<Gemm> = wl.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+    println!("workload: {} ({} unique GEMMs)\n", wl.name, gemms.len());
+
+    let arch = Architecture::default_sm();
+    let grid = Grid::new(arch.clone());
+
+    // The full system matrix: baseline + every primitive at RF and SMEM.
+    let mut specs = vec![SystemSpec::Baseline];
+    for p in CimPrimitive::all() {
+        specs.push(SystemSpec::CimAtRf(p.clone()));
+        specs.push(SystemSpec::CimAtSmem(p, SmemConfig::ConfigB));
+    }
+
+    let jobs = grid.cross(&[(wl.name.clone(), gemms)], &specs);
+    let results = grid.run(&jobs);
+
+    let mut table = Table::new(vec![
+        "system", "geomean TOPS/W", "geomean GFLOPS", "mean util",
+    ]);
+    let mut best_energy: Option<(f64, String)> = None;
+    let mut best_perf: Option<(f64, String)> = None;
+    for spec in &specs {
+        let label = spec.label(&arch);
+        let rows: Vec<_> = results.iter().filter(|r| r.system == label).collect();
+        let t: Vec<f64> = rows.iter().map(|r| r.metrics.tops_per_watt).collect();
+        let f: Vec<f64> = rows.iter().map(|r| r.metrics.gflops).collect();
+        let u = rows.iter().map(|r| r.metrics.utilization).sum::<f64>() / rows.len() as f64;
+        let (gt, gf) = (geomean(&t), geomean(&f));
+        if best_energy.as_ref().map_or(true, |(b, _)| gt > *b) {
+            best_energy = Some((gt, label.clone()));
+        }
+        if best_perf.as_ref().map_or(true, |(b, _)| gf > *b) {
+            best_perf = Some((gf, label.clone()));
+        }
+        table.row(vec![
+            label,
+            format!("{gt:.3}"),
+            format!("{gf:.0}"),
+            format!("{u:.2}"),
+        ]);
+    }
+    print!("{table}");
+
+    let (et, el) = best_energy.unwrap();
+    let (pf, pl) = best_perf.unwrap();
+    println!("\nWHAT/WHERE for {}:", wl.name);
+    println!("  best energy efficiency: {el} ({et:.3} TOPS/W geomean)");
+    println!("  best throughput:        {pl} ({pf:.0} GFLOPS geomean)");
+    println!(
+        "  WHEN: layers with M=1 (GEMVs) defeat CiM weight reuse — \
+         {} of them in this workload.",
+        wl.gemms().iter().filter(|g| g.is_gemv()).count()
+    );
+}

@@ -1,0 +1,154 @@
+"""AOT compilation: lower the Layer-2 graphs (with the Layer-1 Pallas
+kernel inside) to HLO **text** artifacts for the rust runtime.
+
+HLO text — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the rust `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+
+Produces one ``<name>.hlo.txt`` per catalog entry plus ``manifest.tsv``
+describing each artifact's signature:
+
+    name \t file \t in=i8:16x64,i8:64x256 \t out=i32:16x64
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jitted+lowered function to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.int8):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(specs):
+    names = {jnp.int8.dtype: "i8", jnp.int32.dtype: "i32"}
+    return ",".join(
+        f"{names[s.dtype]}:{'x'.join(str(d) for d in s.shape)}" for s in specs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalog.
+#
+# The plain `gemm_*` entries are the tiled-execution workhorses: the rust
+# runtime replays an analytical mapping tile-by-tile by zero-padding each
+# weight-residency tile up to one of these shapes (zero padding is exact
+# for integer GEMM). `mlp_*` / `encoder_*` are composed Layer-2 graphs
+# for the end-to-end driver.
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [
+    (64, 64, 64),       # quickstart
+    (16, 64, 64),
+    (64, 32, 256),      # one Digital-6T residency (2 primitives)
+    (128, 32, 512),
+    (128, 64, 512),     # tile workhorse: every smaller tile pads to this
+    (1, 64, 256),       # GEMV row (DLRM/GPT-J decode shape family)
+    (16, 256, 64),
+]
+
+
+def catalog():
+    """(name, fn, [arg specs]) for every artifact."""
+    out = []
+    for m, n, k in GEMM_SHAPES:
+        name = f"gemm_{m}x{n}x{k}"
+
+        def fn(x, w):
+            return (model.gemm(x, w),)
+
+        out.append((name, fn, [_spec((m, k)), _spec((k, n))]))
+
+    def mlp_fn(x, w1, w2):
+        return (model.mlp(x, w1, w2),)
+
+    out.append(
+        (
+            "mlp_16x64x256",
+            mlp_fn,
+            [_spec((16, 64)), _spec((64, 256)), _spec((256, 64))],
+        )
+    )
+
+    def attn_fn(q, k, v):
+        return (model.attention(q, k, v),)
+
+    out.append(
+        (
+            "attention_16x64",
+            attn_fn,
+            [_spec((16, 64)), _spec((16, 64)), _spec((16, 64))],
+        )
+    )
+
+    def enc_fn(x, wq, wk, wv, wo, w1, w2):
+        return (model.encoder_layer(x, wq, wk, wv, wo, w1, w2),)
+
+    e = 64
+    out.append(
+        (
+            "encoder_16x64",
+            enc_fn,
+            [
+                _spec((16, e)),
+                _spec((e, e)),
+                _spec((e, e)),
+                _spec((e, e)),
+                _spec((e, e)),
+                _spec((e, 256)),
+                _spec((256, e)),
+            ],
+        )
+    )
+    return out
+
+
+def lower_entry(name, fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_specs = jax.eval_shape(fn, *specs)
+    return text, _sig(specs), _sig(list(out_specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, specs in catalog():
+        text, in_sig, out_sig = lower_entry(name, fn, specs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name}\t{fname}\tin={in_sig}\tout={out_sig}")
+        print(f"  {name}: {len(text)} chars -> {fname}")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Conv2D through the CiM GEMM kernel via im2col (paper Table I row 1,
+§III-A): Conv(Ci->Co, KhxKw, stride s) on HxW becomes
+GEMM(M=Ho*Wo, N=Co, K=Kh*Kw*Ci) — the transformation the ResNet-50
+dataset rows were derived with.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.cim_gemm import cim_gemm
+
+
+def im2col(x, kh: int, kw: int, stride: int = 1, pad: int = 0):
+    """Unfold an (H, W, C) int8 image into the (Ho*Wo, Kh*Kw*C) patch
+    matrix. Zero padding matches integer-GEMM identity semantics."""
+    h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    rows = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[i : i + ho * stride : stride, j : j + wo * stride : stride, :]
+            rows.append(patch.reshape(ho * wo, c))
+    # (Ho*Wo, Kh*Kw*C), laid out kernel-position-major to match the
+    # weight reshape below.
+    return jnp.concatenate(rows, axis=1), (ho, wo)
+
+
+def conv2d(x, w, stride: int = 1, pad: int = 0, **blocks):
+    """INT8 Conv2D -> INT32, through the weight-stationary CiM kernel.
+
+    x: (H, W, Cin) int8; w: (Kh, Kw, Cin, Cout) int8.
+    Returns (Ho, Wo, Cout) int32.
+    """
+    kh, kw, cin, cout = w.shape
+    cols, (ho, wo) = im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = cim_gemm(cols, wmat, **blocks)
+    return out.reshape(ho, wo, cout)
+
+
+def conv2d_ref(x, w, stride: int = 1, pad: int = 0):
+    """Oracle: direct convolution in int32 (no GEMM, no Pallas)."""
+    kh, kw, cin, cout = w.shape
+    if pad:
+        x = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    h, wd, _ = x.shape
+    ho = (h - kh) // stride + 1
+    wo = (wd - kw) // stride + 1
+    xi = x.astype(jnp.int32)
+    wi = w.astype(jnp.int32)
+    out = jnp.zeros((ho, wo, cout), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = xi[i : i + ho * stride : stride, j : j + wo * stride : stride, :]
+            out = out + jnp.einsum("hwc,co->hwo", patch, wi[i, j])
+    return out

@@ -1,0 +1,129 @@
+"""Layer-1 Pallas kernel: the CiM primitive's compute schedule as a
+weight-stationary tiled INT8 GEMM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CiM
+primitive holds a ``(Rp·Rh) x (Cp·Ch)`` weight tile stationary in the
+SRAM array while input rows stream through it. On the TPU-shaped
+substrate this becomes a VMEM-resident weight block with the HBM<->VMEM
+schedule expressed through ``BlockSpec``:
+
+* ``block_k`` plays the role of the primitive's weight *rows* (the
+  reduction dimension mapped to wordlines),
+* ``block_n`` plays the weight *columns* (bitlines),
+* the grid iterates ``(n, k, m)`` with **M innermost** — the paper's
+  compute loop order ``M < K < N`` (§IV-B): the weight block's index map
+  ``(k, n)`` is constant across the inner m sweep, so the block stays
+  resident exactly like the stationary CiM tile, and partial sums
+  accumulate across the k axis like the primitive's in-situ reduction.
+
+The kernel is lowered with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute. Correctness
+is pinned to the pure-jnp oracle in ``ref.py`` (pytest + hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default blocks mirror the Digital-6T primitive of Table IV:
+# 256 weight rows (Rp) x 16 columns (Cp), with 64 input rows streamed
+# per residency.
+DEFAULT_BLOCK_M = 64
+DEFAULT_BLOCK_K = 256
+DEFAULT_BLOCK_N = 16
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    """One grid step: multiply an (bm, bk) input slab into the resident
+    (bk, bn) weight block and accumulate into the (bm, bn) output block.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # INT8 x INT8 -> INT32, exactly as the paper's 8b-8b MAC with a
+    # full-precision accumulator.
+    acc = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] += acc
+
+
+def _pad_to(a, rows, cols):
+    """Zero-pad a 2-D array up to (rows, cols); zeros are exact identity
+    padding for integer GEMM."""
+    r, c = a.shape
+    if r == rows and c == cols:
+        return a
+    return jnp.pad(a, ((0, rows - r), (0, cols - c)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_n", "interpret"),
+)
+def cim_gemm(
+    x,
+    w,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_k: int = DEFAULT_BLOCK_K,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+):
+    """Weight-stationary INT8 GEMM: ``x (M,K) @ w (K,N) -> int32 (M,N)``.
+
+    Shapes need not divide the block sizes — inputs are zero-padded to
+    the block grid and the result sliced back, mirroring the partial
+    CiM-tile utilization of the analytical model.
+    """
+    assert x.ndim == 2 and w.ndim == 2, "cim_gemm operates on matrices"
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"reduction mismatch: {k} vs {k2}"
+
+    bm, bk, bn = (min(block_m, m), min(block_k, k), min(block_n, n))
+    mp = pl.cdiv(m, bm) * bm
+    kp = pl.cdiv(k, bk) * bk
+    np_ = pl.cdiv(n, bn) * bn
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+
+    grid = (np_ // bn, kp // bk, mp // bm)  # (n, k, m): M innermost
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda ni, ki, mi: (mi, ki)),
+            # Weight block index ignores the inner m axis: stationary.
+            pl.BlockSpec((bk, bn), lambda ni, ki, mi: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda ni, ki, mi: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def blocks_for_primitive(name: str):
+    """Block configuration mirroring a Table IV primitive's stationary
+    grid (rows = Rp*Rh, cols = Cp*Ch)."""
+    grids = {
+        "analog-6t": (64, 64),
+        "analog-8t": (64, 64),
+        "digital-6t": (256, 16),
+        "digital-8t": (10, 128),
+    }
+    key = name.lower().replace("_", "-")
+    if key not in grids:
+        raise KeyError(f"unknown primitive {name!r}; options: {sorted(grids)}")
+    rows, cols = grids[key]
+    return {"block_m": DEFAULT_BLOCK_M, "block_k": rows, "block_n": cols}

@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+These are the single source of truth for numerics: the Pallas kernel
+(`cim_gemm`) and every composed model graph must match them exactly
+(integer arithmetic — no tolerance).
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(x, w):
+    """INT8 GEMM with INT32 accumulation: the 8b-8b MAC of the paper."""
+    return jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def requant_ref(acc, shift: int = 8):
+    """Deterministic INT32 -> INT8 requantization: arithmetic right
+    shift then two's-complement truncation. Chosen over float scaling so
+    the rust runtime can cross-check results bit-exactly."""
+    return jnp.right_shift(acc, shift).astype(jnp.int8)
+
+
+def mlp_ref(x, w1, w2, shift: int = 8):
+    """Two-layer INT8 MLP: gemm -> requant -> gemm (the DLRM/FFN shape
+    of Table I)."""
+    h = requant_ref(gemm_ref(x, w1), shift)
+    return gemm_ref(h, w2)
+
+
+def attention_scores_ref(q, k, shift: int = 8):
+    """Fused attention-score path of Table I: logits = Q @ K^T followed
+    by requantization (integer stand-in for softmax scaling)."""
+    return requant_ref(gemm_ref(q, k.T), shift)
+
+
+def attention_ref(q, k, v, shift: int = 8):
+    """QK^T -> requant -> (.)V : the logit and attention GEMMs."""
+    s = attention_scores_ref(q, k, shift)
+    return gemm_ref(s, v)

@@ -1,0 +1,48 @@
+"""Layer-2 JAX model: the INT8 GEMM compute graphs of ML inference
+(Table I), built on the Layer-1 Pallas kernel.
+
+Everything here is build-time only: `aot.py` lowers these functions to
+HLO text once; the rust runtime executes the artifacts. Nothing in this
+package runs on the request path.
+"""
+
+from compile.kernels.cim_gemm import cim_gemm
+from compile.kernels.ref import requant_ref
+
+
+def gemm(x, w, **blocks):
+    """A single GEMM layer through the CiM-schedule kernel."""
+    return cim_gemm(x, w, **blocks)
+
+
+def fc_layer(x, w, shift: int = 8, **blocks):
+    """Fully-connected layer: GEMM + INT8 requantization (Table I row 2)."""
+    return requant_ref(cim_gemm(x, w, **blocks), shift)
+
+
+def mlp(x, w1, w2, shift: int = 8, **blocks):
+    """Two-layer MLP (DLRM-style / transformer FFN): the K-then-N chain
+    whose reduction behaviour Fig 10(c) studies."""
+    h = fc_layer(x, w1, shift, **blocks)
+    return cim_gemm(h, w2, **blocks)
+
+
+def attention(q, k, v, shift: int = 8, **blocks):
+    """Fused attention-score computation (Table I rows 4-5):
+    ``QK^T`` (logit GEMM), requantize, then ``(QK^T)V`` (attention GEMM).
+    """
+    logits = cim_gemm(q, k.T, **blocks)
+    s = requant_ref(logits, shift)
+    return cim_gemm(s, v, **blocks)
+
+
+def encoder_layer(x, wq, wk, wv, wo, w1, w2, shift: int = 8, **blocks):
+    """A miniature transformer encoder layer (BERT-style) in pure INT8:
+    Q/K/V projections, fused attention, output projection, and the
+    two-GEMM FFN — every GEMM of Table I exercised in one graph."""
+    q = fc_layer(x, wq, shift, **blocks)
+    k = fc_layer(x, wk, shift, **blocks)
+    v = fc_layer(x, wv, shift, **blocks)
+    a = requant_ref(attention(q, k, v, shift, **blocks), shift)
+    o = fc_layer(a, wo, shift, **blocks)
+    return mlp(o, w1, w2, shift, **blocks)

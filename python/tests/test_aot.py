@@ -1,0 +1,82 @@
+"""AOT pipeline tests: lowering to HLO text, manifest integrity, and the
+artifact catalog's signatures."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    def test_hlo_text_structure(self):
+        spec = jax.ShapeDtypeStruct((8, 16), jnp.int8)
+        wspec = jax.ShapeDtypeStruct((16, 8), jnp.int8)
+        lowered = jax.jit(lambda x, w: (model.gemm(x, w),)).lower(spec, wspec)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "s32" in text  # int32 accumulator
+        assert "s8" in text   # int8 operands
+
+    def test_pallas_lowers_to_plain_hlo(self):
+        # interpret=True must leave no Mosaic custom-calls behind —
+        # otherwise the CPU PJRT client cannot run the artifact.
+        spec = jax.ShapeDtypeStruct((64, 256), jnp.int8)
+        wspec = jax.ShapeDtypeStruct((256, 16), jnp.int8)
+        lowered = jax.jit(lambda x, w: (model.gemm(x, w),)).lower(spec, wspec)
+        text = aot.to_hlo_text(lowered)
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()
+
+    def test_signature_formatting(self):
+        specs = [
+            jax.ShapeDtypeStruct((16, 64), jnp.int8),
+            jax.ShapeDtypeStruct((64, 32), jnp.int8),
+        ]
+        assert aot._sig(specs) == "i8:16x64,i8:64x32"
+
+
+class TestCatalog:
+    def test_catalog_names_unique(self):
+        names = [name for name, _, _ in aot.catalog()]
+        assert len(names) == len(set(names))
+
+    def test_catalog_covers_required_entries(self):
+        names = {name for name, _, _ in aot.catalog()}
+        assert "gemm_128x64x512" in names  # tile workhorse
+        assert "mlp_16x64x256" in names
+        assert "encoder_16x64" in names
+        assert any(n.startswith("gemm_1x") for n in names)  # GEMV
+
+    def test_lower_entry_produces_signatures(self):
+        name, fn, specs = next(
+            e for e in aot.catalog() if e[0] == "gemm_16x64x64"
+        )
+        text, in_sig, out_sig = aot.lower_entry(name, fn, specs)
+        assert in_sig == "i8:16x64,i8:64x64"
+        assert out_sig == "i32:16x64"
+        assert "ENTRY" in text
+
+
+@pytest.mark.slow
+class TestFullPipeline:
+    def test_aot_main_writes_artifacts(self, tmp_path):
+        out = tmp_path / "artifacts"
+        env = dict(os.environ)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+        )
+        manifest = (out / "manifest.tsv").read_text().strip().splitlines()
+        assert len(manifest) == len(aot.catalog())
+        for line in manifest:
+            name, fname, in_sig, out_sig = line.split("\t")
+            assert (out / fname).exists()
+            assert in_sig.startswith("in=")
+            assert out_sig.startswith("out=")

@@ -1,0 +1,79 @@
+"""Conv-through-CiM-GEMM correctness: the im2col path against a direct
+convolution oracle, exact integer comparison."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cim_conv import conv2d, conv2d_ref, im2col
+
+RNG = np.random.default_rng(0xC04)
+
+
+def rand_i8(*shape):
+    return RNG.integers(-128, 128, size=shape, dtype=np.int8)
+
+
+class TestIm2col:
+    def test_shapes(self):
+        x = rand_i8(8, 8, 3)
+        cols, (ho, wo) = im2col(x, 3, 3, stride=1, pad=1)
+        assert (ho, wo) == (8, 8)
+        assert cols.shape == (64, 27)
+
+    def test_stride_two(self):
+        x = rand_i8(8, 8, 2)
+        cols, (ho, wo) = im2col(x, 2, 2, stride=2)
+        assert (ho, wo) == (4, 4)
+        assert cols.shape == (16, 8)
+
+    def test_1x1_is_reshape(self):
+        x = rand_i8(4, 4, 5)
+        cols, _ = im2col(x, 1, 1)
+        np.testing.assert_array_equal(np.asarray(cols), x.reshape(16, 5))
+
+
+class TestConv:
+    def test_identity_kernel(self):
+        # 1x1 conv with identity weights passes channels through.
+        x = rand_i8(6, 6, 3)
+        w = np.eye(3, dtype=np.int8).reshape(1, 1, 3, 3)
+        out = np.asarray(conv2d(x, w))
+        np.testing.assert_array_equal(out, x.astype(np.int32))
+
+    def test_matches_reference_3x3(self):
+        x = rand_i8(10, 10, 4)
+        w = rand_i8(3, 3, 4, 8)
+        np.testing.assert_array_equal(
+            np.asarray(conv2d(x, w, stride=1, pad=1)),
+            np.asarray(conv2d_ref(x, w, stride=1, pad=1)),
+        )
+
+    def test_resnet_stem_shape(self):
+        # The 7x7/2 stem of ResNet-50 at reduced resolution: the im2col
+        # GEMM is (Ho*Wo, Cout, 147) like Table VI's first row.
+        x = rand_i8(28, 28, 3)
+        w = rand_i8(7, 7, 3, 8)
+        out = np.asarray(conv2d(x, w, stride=2, pad=3))
+        assert out.shape == (14, 14, 8)
+        np.testing.assert_array_equal(
+            out, np.asarray(conv2d_ref(x, w, stride=2, pad=3))
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        h=st.integers(4, 12),
+        cin=st.integers(1, 6),
+        cout=st.integers(1, 8),
+        k=st.sampled_from([1, 2, 3]),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_sweep(self, h, cin, cout, k, stride, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, size=(h, h, cin), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(k, k, cin, cout), dtype=np.int8)
+        pad = k // 2
+        np.testing.assert_array_equal(
+            np.asarray(conv2d(x, w, stride=stride, pad=pad)),
+            np.asarray(conv2d_ref(x, w, stride=stride, pad=pad)),
+        )

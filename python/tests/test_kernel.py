@@ -1,0 +1,129 @@
+"""Layer-1 correctness: the Pallas CiM-schedule kernel against the
+pure-jnp oracle. Integer arithmetic — every comparison is exact.
+
+Hypothesis sweeps shapes (including non-block-multiples, GEMV rows, and
+degenerate dims) and block configurations, per the repro requirement
+that the kernel be property-tested against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cim_gemm import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_N,
+    blocks_for_primitive,
+    cim_gemm,
+)
+from compile.kernels.ref import gemm_ref
+
+RNG = np.random.default_rng(0x57575757)
+
+
+def rand_i8(*shape):
+    return RNG.integers(-128, 128, size=shape, dtype=np.int8)
+
+
+def assert_exact(got, want):
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestBasics:
+    def test_small_square(self):
+        x, w = rand_i8(16, 16), rand_i8(16, 16)
+        assert_exact(cim_gemm(x, w), gemm_ref(x, w))
+
+    def test_block_multiple_shape(self):
+        x, w = rand_i8(128, 512), rand_i8(512, 32)
+        assert_exact(cim_gemm(x, w), gemm_ref(x, w))
+
+    def test_non_dividing_shapes_pad_correctly(self):
+        # 147 = the ResNet stem's im2col K; deliberately awkward.
+        x, w = rand_i8(49, 147), rand_i8(147, 33)
+        assert_exact(cim_gemm(x, w), gemm_ref(x, w))
+
+    def test_gemv_row(self):
+        # M = 1: the CiM-hostile shape of §VI-C must still be correct.
+        x, w = rand_i8(1, 256), rand_i8(256, 64)
+        assert_exact(cim_gemm(x, w), gemm_ref(x, w))
+
+    def test_single_output(self):
+        x, w = rand_i8(1, 8), rand_i8(8, 1)
+        assert_exact(cim_gemm(x, w), gemm_ref(x, w))
+
+    def test_extreme_values_accumulate_in_int32(self):
+        # 127*127*K and -128*127*K must not overflow int32 for our K.
+        x = np.full((4, 1024), 127, dtype=np.int8)
+        w = np.full((1024, 4), 127, dtype=np.int8)
+        out = np.asarray(cim_gemm(x, w))
+        assert out.dtype == np.int32
+        assert (out == 127 * 127 * 1024).all()
+        w_neg = np.full((1024, 4), -128, dtype=np.int8)
+        assert (np.asarray(cim_gemm(x, w_neg)) == 127 * -128 * 1024).all()
+
+    def test_zero_inputs(self):
+        x, w = np.zeros((8, 8), np.int8), np.zeros((8, 8), np.int8)
+        assert (np.asarray(cim_gemm(x, w)) == 0).all()
+
+    def test_reduction_mismatch_rejected(self):
+        with pytest.raises(AssertionError):
+            cim_gemm(rand_i8(4, 8), rand_i8(9, 4))
+
+
+class TestPrimitiveBlockConfigs:
+    @pytest.mark.parametrize(
+        "prim", ["analog-6t", "analog-8t", "digital-6t", "digital-8t"]
+    )
+    def test_each_table_iv_grid(self, prim):
+        blocks = blocks_for_primitive(prim)
+        x, w = rand_i8(32, 300), rand_i8(300, 40)
+        assert_exact(cim_gemm(x, w, **blocks), gemm_ref(x, w))
+
+    def test_unknown_primitive(self):
+        with pytest.raises(KeyError):
+            blocks_for_primitive("quantum-3t")
+
+    def test_default_blocks_are_digital6t(self):
+        b = blocks_for_primitive("digital-6t")
+        assert b["block_k"] == DEFAULT_BLOCK_K
+        assert b["block_n"] == DEFAULT_BLOCK_N
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        n=st.integers(1, 96),
+        k=st.integers(1, 160),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_on_random_shapes(self, m, n, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, size=(m, k), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(k, n), dtype=np.int8)
+        assert_exact(cim_gemm(x, w), gemm_ref(x, w))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bm=st.sampled_from([1, 8, 64]),
+        bk=st.sampled_from([16, 64, 256]),
+        bn=st.sampled_from([8, 16, 128]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_across_block_configs(self, bm, bk, bn, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, size=(72, 130), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(130, 36), dtype=np.int8)
+        got = cim_gemm(x, w, block_m=bm, block_k=bk, block_n=bn)
+        assert_exact(got, gemm_ref(x, w))
+
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(1, 2048), seed=st.integers(0, 2**31))
+    def test_reduction_depth_sweep(self, k, seed):
+        # The in-situ-reduction axis (K) is the paper's critical
+        # dimension (Fig 10c); sweep it hard at fixed M, N.
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, size=(8, k), dtype=np.int8)
+        w = rng.integers(-128, 128, size=(k, 8), dtype=np.int8)
+        assert_exact(cim_gemm(x, w), gemm_ref(x, w))

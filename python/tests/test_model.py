@@ -1,0 +1,85 @@
+"""Layer-2 correctness: composed model graphs against the pure-jnp
+composition oracles, plus shape contracts."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xC1A0)
+
+
+def rand_i8(*shape):
+    return RNG.integers(-128, 128, size=shape, dtype=np.int8)
+
+
+def assert_exact(got, want):
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestLayers:
+    def test_gemm_layer(self):
+        x, w = rand_i8(16, 64), rand_i8(64, 32)
+        assert_exact(model.gemm(x, w), ref.gemm_ref(x, w))
+
+    def test_fc_layer_requantizes(self):
+        x, w = rand_i8(16, 64), rand_i8(64, 32)
+        out = np.asarray(model.fc_layer(x, w))
+        assert out.dtype == np.int8
+        assert_exact(out, ref.requant_ref(ref.gemm_ref(x, w)))
+
+    def test_mlp_matches_ref(self):
+        x, w1, w2 = rand_i8(16, 64), rand_i8(64, 256), rand_i8(256, 64)
+        assert_exact(model.mlp(x, w1, w2), ref.mlp_ref(x, w1, w2))
+
+    def test_attention_matches_ref(self):
+        q, k, v = rand_i8(16, 64), rand_i8(16, 64), rand_i8(16, 64)
+        assert_exact(model.attention(q, k, v), ref.attention_ref(q, k, v))
+
+    def test_attention_shapes(self):
+        # QK^T reduces over embed; (QK^T)V reduces over seq (Table I).
+        q, k, v = rand_i8(16, 64), rand_i8(16, 64), rand_i8(16, 64)
+        out = np.asarray(model.attention(q, k, v))
+        assert out.shape == (16, 64)
+
+    def test_encoder_layer_end_to_end(self):
+        e = 64
+        x = rand_i8(16, e)
+        wq, wk, wv, wo = (rand_i8(e, e) for _ in range(4))
+        w1, w2 = rand_i8(e, 256), rand_i8(256, e)
+        got = np.asarray(model.encoder_layer(x, wq, wk, wv, wo, w1, w2))
+        # Reference composition from the oracles only.
+        q = ref.requant_ref(ref.gemm_ref(x, wq))
+        kk = ref.requant_ref(ref.gemm_ref(x, wk))
+        v = ref.requant_ref(ref.gemm_ref(x, wv))
+        a = ref.requant_ref(ref.attention_ref(q, kk, v))
+        o = ref.requant_ref(ref.gemm_ref(a, wo))
+        want = ref.mlp_ref(o, w1, w2)
+        assert_exact(got, want)
+        assert got.shape == (16, e)
+        assert got.dtype == np.int32
+
+
+class TestRequantSemantics:
+    def test_right_shift_is_arithmetic(self):
+        acc = np.array([[-256, 256, -1, 511]], dtype=np.int32)
+        out = np.asarray(ref.requant_ref(acc, 8))
+        assert out.tolist() == [[-1, 1, -1, 1]]
+
+    def test_truncating_cast_wraps(self):
+        acc = np.array([[130 << 8, -130 << 8]], dtype=np.int32)
+        out = np.asarray(ref.requant_ref(acc, 8))
+        # two's-complement wrap (matches rust `as i8`)
+        assert out.tolist() == [[-126, 126]]
+
+    @settings(max_examples=25, deadline=None)
+    @given(shift=st.integers(0, 16), seed=st.integers(0, 2**31))
+    def test_model_and_ref_agree_for_any_shift(self, shift, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, size=(8, 32), dtype=np.int8)
+        w1 = rng.integers(-128, 128, size=(32, 48), dtype=np.int8)
+        w2 = rng.integers(-128, 128, size=(48, 16), dtype=np.int8)
+        assert_exact(
+            model.mlp(x, w1, w2, shift=shift), ref.mlp_ref(x, w1, w2, shift)
+        )

@@ -1,0 +1,67 @@
+//! Ablation benches: quantify the design choices DESIGN.md calls out —
+//! the balance threshold, the exact-local loop-order optimization, and
+//! the quality/speed trade of the heuristic comparator's budget.
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::cost::CostModel;
+use www_cim::mapping::{HeuristicMapper, PriorityMapper};
+use www_cim::util::bench::{black_box, Bencher};
+use www_cim::util::rng::Rng;
+use www_cim::util::stats::geomean;
+use www_cim::workload::synthetic;
+
+fn main() {
+    let arch = Architecture::default_sm();
+    let dataset = synthetic::dataset(7, 64);
+    let mut b = Bencher::new();
+
+    // Threshold ablation: quality (geomean TOPS/W) printed alongside
+    // the mapping-time measurement.
+    let smem = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+    for threshold in [1u64, 4, 64] {
+        let cost = CostModel::new(&smem);
+        let tops: Vec<f64> = dataset
+            .iter()
+            .map(|g| {
+                let m = PriorityMapper::with_threshold(&smem, threshold).map(g);
+                cost.evaluate(g, &m).tops_per_watt
+            })
+            .collect();
+        println!(
+            "quality: threshold={threshold:<3} geomean TOPS/W = {:.4}",
+            geomean(&tops)
+        );
+        b.bench_with_items(&format!("map/threshold={threshold}"), dataset.len() as u64, &mut || {
+            for g in &dataset {
+                black_box(PriorityMapper::with_threshold(&smem, threshold).map(g));
+            }
+        });
+    }
+
+    // Heuristic budget sweep: search cost vs achieved quality.
+    let rf = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    for budget in [20u64, 100, 500] {
+        let cost = CostModel::new(&rf);
+        let mut h = HeuristicMapper::new(&rf);
+        h.valid_budget = budget;
+        let tops: Vec<f64> = dataset
+            .iter()
+            .map(|g| {
+                let (m, _) = h.map(g, &mut Rng::new(11));
+                cost.evaluate(g, &m).tops_per_watt
+            })
+            .collect();
+        println!(
+            "quality: heuristic budget={budget:<4} geomean TOPS/W = {:.4}",
+            geomean(&tops)
+        );
+        b.bench(&format!("heuristic/budget={budget}/64-gemms"), || {
+            let mut rng = Rng::new(11);
+            for g in &dataset {
+                black_box(h.map(g, &mut rng));
+            }
+        });
+    }
+    b.finish("ablations");
+}

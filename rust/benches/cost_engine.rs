@@ -1,0 +1,60 @@
+//! Cost-engine micro-benchmarks: the access-counting + energy/latency
+//! evaluation that sits inside every grid cell of every experiment.
+//! This is the L3 hot path (each fig9 run is ~4000 evaluations).
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel};
+use www_cim::cim::CimPrimitive;
+use www_cim::cost::{BaselineModel, CostModel};
+use www_cim::coordinator::jobs::{Grid, SystemSpec};
+use www_cim::mapping::PriorityMapper;
+use www_cim::util::bench::{black_box, Bencher};
+use www_cim::workload::{synthetic, Gemm};
+
+fn main() {
+    let arch = Architecture::default_sm();
+    let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let g = Gemm::new(512, 1024, 1024);
+    let mapping = PriorityMapper::new(&sys).map(&g);
+
+    let mut b = Bencher::new();
+    b.bench_with_items("cost/evaluate_mapping", 10_000, &mut || {
+        let cost = CostModel::new(&sys);
+        for _ in 0..10_000 {
+            black_box(cost.evaluate(&g, &mapping));
+        }
+    });
+
+    b.bench_with_items("cost/baseline_evaluate", 10_000, &mut || {
+        let bm = BaselineModel::new(&arch);
+        for _ in 0..10_000 {
+            black_box(bm.evaluate(&g));
+        }
+    });
+
+    b.bench_with_items("cost/map+evaluate", 10_000, &mut || {
+        let cost = CostModel::new(&sys);
+        let mapper = PriorityMapper::new(&sys);
+        for _ in 0..10_000 {
+            let m = mapper.map(&g);
+            black_box(cost.evaluate(&g, &m));
+        }
+    });
+
+    // Whole-grid throughput: the coordinator fan-out over a synthetic
+    // slice, serial vs parallel (the §Perf scaling number).
+    let dataset = synthetic::dataset(7, 256);
+    let workloads = vec![("synthetic".to_string(), dataset)];
+    let specs = vec![SystemSpec::CimAtRf(CimPrimitive::digital_6t())];
+    for threads in [1usize, 4, www_cim::util::pool::default_threads()] {
+        let grid = Grid {
+            arch: arch.clone(),
+            threads,
+        };
+        let jobs = grid.cross(&workloads, &specs);
+        let n = jobs.len() as u64;
+        b.bench_with_items(&format!("grid/256-gemms/threads={threads}"), n, &mut || {
+            black_box(grid.run(&jobs));
+        });
+    }
+    b.finish("cost_engine");
+}

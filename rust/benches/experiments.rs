@@ -1,0 +1,26 @@
+//! End-to-end benchmark: wall-time of regenerating every paper
+//! table/figure (quick configuration). One measurement per experiment
+//! id — the "does the harness run fast enough to iterate" metric, and
+//! the per-figure timing reported in EXPERIMENTS.md §Perf.
+//!
+//! Custom harness (criterion is unavailable offline): see
+//! `www_cim::util::bench`.
+
+use www_cim::experiments::{self, Ctx};
+use www_cim::util::bench::Bencher;
+
+fn main() {
+    let mut ctx = Ctx::quick();
+    ctx.out_dir = std::env::temp_dir().join("www_cim_bench_results");
+    ctx.threads = 1; // deterministic single-thread timing
+
+    // Regeneration output would swamp the report; mute stdout noise by
+    // spot-checking once first.
+    let mut b = Bencher::new();
+    for id in experiments::ALL {
+        b.bench(&format!("experiment/{id}"), || {
+            experiments::run(id, &ctx).expect("experiment runs");
+        });
+    }
+    b.finish("experiments");
+}

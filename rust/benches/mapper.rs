@@ -1,0 +1,52 @@
+//! Mapper micro-benchmarks: the priority mapper (the paper's runtime
+//! claim in Table II is that it is cheap) and the heuristic-search
+//! comparator across representative GEMM shapes.
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::mapping::{HeuristicMapper, PriorityMapper};
+use www_cim::util::bench::{black_box, Bencher};
+use www_cim::util::rng::Rng;
+use www_cim::workload::Gemm;
+
+fn main() {
+    let arch = Architecture::default_sm();
+    let rf = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let smem = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+
+    let shapes = [
+        ("bert", Gemm::new(512, 1024, 1024)),
+        ("resnet-stem", Gemm::new(12544, 64, 147)),
+        ("gemv", Gemm::new(1, 4096, 4096)),
+        ("huge", Gemm::new(8192, 8192, 8192)),
+    ];
+
+    let mut b = Bencher::new();
+    for (name, g) in &shapes {
+        b.bench_with_items(&format!("priority_map/rf/{name}"), 1000, &mut || {
+            let mapper = PriorityMapper::new(&rf);
+            for _ in 0..1000 {
+                black_box(mapper.map(g));
+            }
+        });
+    }
+    for (name, g) in &shapes {
+        b.bench_with_items(&format!("priority_map/smem_b/{name}"), 1000, &mut || {
+            let mapper = PriorityMapper::new(&smem);
+            for _ in 0..1000 {
+                black_box(mapper.map(g));
+            }
+        });
+    }
+
+    // Heuristic search with the paper's stopping rule, small budget.
+    let mut h = HeuristicMapper::new(&rf);
+    h.valid_budget = 100;
+    for (name, g) in &shapes[..2] {
+        b.bench(&format!("heuristic_map/rf/{name}/100-valid"), || {
+            let mut rng = Rng::new(7);
+            black_box(h.map(g, &mut rng));
+        });
+    }
+    b.finish("mapper");
+}

@@ -1,0 +1,66 @@
+//! Baseline tensor-core compute model (paper §V-A).
+//!
+//! One SM with 4 sub-cores, each a 16×16 grid of processing elements
+//! performing one INT-8 MAC per cycle — "tensor-core-like operations".
+//! Unlike the CiM primitives, the baseline is *not* weight-stationary
+//! constrained: its mapper may pick any loop order (§VI-C "Comparison
+//! with baseline").
+
+/// Static description of the baseline SM compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorCore {
+    pub subcores: u64,
+    pub pe_rows: u64,
+    pub pe_cols: u64,
+}
+
+impl TensorCore {
+    /// The paper's SM: 4 sub-cores × 16×16 PEs.
+    pub fn default_sm() -> Self {
+        TensorCore {
+            subcores: 4,
+            pe_rows: 16,
+            pe_cols: 16,
+        }
+    }
+
+    /// MAC operations retired per cycle at full utilization.
+    pub fn macs_per_cycle(&self) -> u64 {
+        self.subcores * self.pe_rows * self.pe_cols
+    }
+
+    /// Peak throughput in GOPS at 1 GHz (2 ops per MAC).
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.macs_per_cycle() as f64 * super::FREQ_GHZ
+    }
+
+    /// PE-grid tile dimensions available to one GEMM call:
+    /// the M×N output tile computed in parallel each cycle across
+    /// sub-cores. Sub-cores extend the N dimension (channel-parallel),
+    /// matching how GEMM tiles are spread over sub-cores in GPUs.
+    pub fn tile_m(&self) -> u64 {
+        self.pe_rows
+    }
+
+    pub fn tile_n(&self) -> u64 {
+        self.pe_cols * self.subcores
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sm_peak() {
+        let tc = TensorCore::default_sm();
+        assert_eq!(tc.macs_per_cycle(), 1024);
+        assert_eq!(tc.peak_gops(), 2048.0);
+    }
+
+    #[test]
+    fn tiles_cover_pe_grid() {
+        let tc = TensorCore::default_sm();
+        assert_eq!(tc.tile_m() * tc.tile_n(), tc.macs_per_cycle());
+    }
+}

@@ -1,0 +1,130 @@
+//! Interconnect cost model (extension; paper §VI-D: "such an
+//! exploration should also take into account the interconnect cost
+//! associated with dataflow flexibility").
+//!
+//! CiM primitives tiled along K must merge their partial outputs, and
+//! inputs must be multicast to primitives tiled along N. We model a
+//! mesh NoC over the primitive array: per-element-per-hop energy, with
+//! a binary reduction tree across the `k_prims` groups and a multicast
+//! tree across `n_prims` groups.
+
+use crate::mapping::loopnest::Dim;
+use crate::mapping::Mapping;
+
+/// Mesh NoC parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Energy per INT-8 element per hop (pJ). Calibrated to on-chip
+    /// wire energy at 45 nm (~0.1 pJ/byte/mm, primitive pitch < 1 mm).
+    pub hop_pj: f64,
+}
+
+impl Default for Interconnect {
+    fn default() -> Self {
+        Interconnect { hop_pj: 0.06 }
+    }
+}
+
+impl Interconnect {
+    /// Total interconnect energy (pJ) for executing `mapping` once:
+    /// * partial-sum reduction: each output element produced per weight
+    ///   residency crosses a log2(k_prims)-deep tree (4-byte partials);
+    /// * input multicast: each input element fans out across n_prims
+    ///   (log2 tree) — one extra copy per tree level.
+    pub fn energy_pj(&self, mapping: &Mapping) -> f64 {
+        let s = &mapping.spatial;
+        let g = &mapping.gemm;
+        let reduction_hops = (s.k_prims as f64).log2().ceil().max(0.0);
+        let multicast_hops = (s.n_prims as f64).log2().ceil().max(0.0);
+
+        // Output elements emitted per full execution: every (m, n)
+        // element once per K residency (in-primitive reduction covers
+        // K0; cross-primitive merging covers k_prims groups).
+        let n_res_k = g.k.div_ceil(mapping.k0()) as f64;
+        let z_transfers = (g.m * g.n) as f64 * n_res_k * 4.0; // int32 partials
+        // Input elements streamed: M×K per N-residency sweep.
+        let n_res_n = g.n.div_ceil(mapping.n0()) as f64;
+        let a_transfers = (g.m * g.k) as f64 * n_res_n;
+
+        self.hop_pj * (z_transfers * reduction_hops + a_transfers * multicast_hops)
+    }
+
+    /// Interconnect energy as a fraction of a given base energy.
+    pub fn overhead_fraction(&self, mapping: &Mapping, base_energy_pj: f64) -> f64 {
+        self.energy_pj(mapping) / base_energy_pj
+    }
+
+    /// Latency overhead in cycles: the reduction tree adds pipeline
+    /// depth, negligible against CiM pass latency unless k_prims is
+    /// large; modelled as log2(k_prims) cycles per residency sweep.
+    pub fn extra_cycles(&self, mapping: &Mapping) -> u64 {
+        let s = &mapping.spatial;
+        let sweeps: u64 = mapping.nest.blocks[..2]
+            .iter()
+            .flat_map(|b| b.loops.iter())
+            .map(|l| l.factor)
+            .product();
+        let m1 = mapping.nest.blocks[2].dim_factor(Dim::M);
+        sweeps * m1 * (s.k_prims as f64).log2().ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+    use crate::cim::CimPrimitive;
+    use crate::cost::CostModel;
+    use crate::mapping::PriorityMapper;
+    use crate::workload::Gemm;
+
+    fn mapping(g: Gemm, smem: bool) -> (CimSystem, Mapping) {
+        let arch = Architecture::default_sm();
+        let sys = if smem {
+            CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB)
+        } else {
+            CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile)
+        };
+        let m = PriorityMapper::new(&sys).map(&g);
+        (sys, m)
+    }
+
+    #[test]
+    fn single_primitive_has_no_noc_cost() {
+        let (_, m) = mapping(Gemm::new(64, 16, 256), false);
+        assert_eq!(m.spatial.prims_used(), 1);
+        assert_eq!(Interconnect::default().energy_pj(&m), 0.0);
+    }
+
+    #[test]
+    fn deeper_trees_cost_more_per_transfer() {
+        // Same residency structure, deeper trees: scaling hop energy is
+        // linear, and a K-split mapping pays reduction energy a pure
+        // N-split does not.
+        let (_, m) = mapping(Gemm::new(512, 1024, 1024), true); // configB, kp>1
+        assert!(m.spatial.k_prims > 1, "{:?}", m.spatial);
+        let cheap = Interconnect { hop_pj: 0.01 };
+        let dear = Interconnect { hop_pj: 0.02 };
+        let (e1, e2) = (cheap.energy_pj(&m), dear.energy_pj(&m));
+        assert!(e1 > 0.0);
+        assert!((e2 - 2.0 * e1).abs() < 1e-6 * e2, "linear in hop energy");
+    }
+
+    #[test]
+    fn overhead_is_minor_for_rf_integration() {
+        // Sanity: the NoC does not overturn the paper's conclusions at
+        // RF scale (few primitives, short trees).
+        let g = Gemm::new(512, 1024, 1024);
+        let (sys, m) = mapping(g, false);
+        let base = CostModel::new(&sys).evaluate(&g, &m).energy_pj;
+        let frac = Interconnect::default().overhead_fraction(&m, base);
+        assert!(frac < 0.25, "NoC overhead {frac}");
+    }
+
+    #[test]
+    fn extra_cycles_zero_without_k_split() {
+        let (_, m) = mapping(Gemm::new(64, 16, 256), false);
+        assert_eq!(m.spatial.k_prims, 1);
+        assert_eq!(Interconnect::default().extra_cycles(&m), 0);
+    }
+}

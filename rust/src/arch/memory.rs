@@ -1,0 +1,150 @@
+//! Memory-hierarchy levels of the modelled SM.
+
+/// A level of the on-chip/off-chip memory hierarchy, ordered
+/// outermost (DRAM) to innermost (PE buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemLevel {
+    /// Main memory; assumed large enough to hold all matrices (§IV-B).
+    Dram,
+    /// Shared memory of the SM: 256 KB, 42 B/cycle (§V-A).
+    Smem,
+    /// Register file: 4×4 KB (§V-A).
+    RegisterFile,
+    /// Per-PE operand buffer of the baseline tensor core.
+    PeBuffer,
+}
+
+impl MemLevel {
+    pub fn short_name(self) -> &'static str {
+        match self {
+            MemLevel::Dram => "DRAM",
+            MemLevel::Smem => "SMEM",
+            MemLevel::RegisterFile => "RF",
+            MemLevel::PeBuffer => "PEBUF",
+        }
+    }
+
+    /// Parse a user-facing level name (CLI).
+    pub fn parse(s: &str) -> Option<MemLevel> {
+        match s.to_ascii_lowercase().as_str() {
+            "dram" => Some(MemLevel::Dram),
+            "smem" | "shared" => Some(MemLevel::Smem),
+            "rf" | "regfile" | "registerfile" => Some(MemLevel::RegisterFile),
+            "pebuf" | "pebuffer" => Some(MemLevel::PeBuffer),
+            _ => None,
+        }
+    }
+
+    /// All levels, outermost first.
+    pub fn all() -> [MemLevel; 4] {
+        [
+            MemLevel::Dram,
+            MemLevel::Smem,
+            MemLevel::RegisterFile,
+            MemLevel::PeBuffer,
+        ]
+    }
+
+    /// The next level outward (toward DRAM).
+    pub fn outer(self) -> Option<MemLevel> {
+        match self {
+            MemLevel::Dram => None,
+            MemLevel::Smem => Some(MemLevel::Dram),
+            MemLevel::RegisterFile => Some(MemLevel::Smem),
+            MemLevel::PeBuffer => Some(MemLevel::RegisterFile),
+        }
+    }
+}
+
+impl std::fmt::Display for MemLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.short_name())
+    }
+}
+
+/// Static description of one memory level.
+#[derive(Debug, Clone)]
+pub struct MemoryLevelSpec {
+    pub level: MemLevel,
+    /// Storage capacity in bytes. `u64::MAX` for DRAM ("large enough to
+    /// fit all the matrices", §IV-B).
+    pub capacity_bytes: u64,
+    /// Sustained bandwidth into the level below, bytes per cycle (§V-A).
+    pub bandwidth_bytes_per_cycle: f64,
+}
+
+impl MemoryLevelSpec {
+    pub fn dram() -> Self {
+        MemoryLevelSpec {
+            level: MemLevel::Dram,
+            capacity_bytes: u64::MAX,
+            bandwidth_bytes_per_cycle: 32.0,
+        }
+    }
+
+    pub fn smem() -> Self {
+        MemoryLevelSpec {
+            level: MemLevel::Smem,
+            capacity_bytes: 256 * 1024,
+            bandwidth_bytes_per_cycle: 42.0,
+        }
+    }
+
+    pub fn rf() -> Self {
+        MemoryLevelSpec {
+            level: MemLevel::RegisterFile,
+            capacity_bytes: 4 * 4 * 1024,
+            // RF feeds the PEs every cycle; modelled as not
+            // bandwidth-limiting (the paper limits only SMEM/DRAM).
+            bandwidth_bytes_per_cycle: f64::INFINITY,
+        }
+    }
+
+    pub fn pe_buffer() -> Self {
+        MemoryLevelSpec {
+            level: MemLevel::PeBuffer,
+            // 16x16 PEs x a few operand registers; capacity is not a
+            // binding constraint in the paper's model.
+            capacity_bytes: 2 * 1024,
+            bandwidth_bytes_per_cycle: f64::INFINITY,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_outer_to_inner() {
+        assert!(MemLevel::Dram < MemLevel::Smem);
+        assert!(MemLevel::Smem < MemLevel::RegisterFile);
+        assert!(MemLevel::RegisterFile < MemLevel::PeBuffer);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(MemLevel::parse("rf"), Some(MemLevel::RegisterFile));
+        assert_eq!(MemLevel::parse("SMEM"), Some(MemLevel::Smem));
+        assert_eq!(MemLevel::parse("dram"), Some(MemLevel::Dram));
+        assert_eq!(MemLevel::parse("bogus"), None);
+    }
+
+    #[test]
+    fn outer_chain() {
+        assert_eq!(MemLevel::PeBuffer.outer(), Some(MemLevel::RegisterFile));
+        assert_eq!(MemLevel::RegisterFile.outer(), Some(MemLevel::Smem));
+        assert_eq!(MemLevel::Smem.outer(), Some(MemLevel::Dram));
+        assert_eq!(MemLevel::Dram.outer(), None);
+    }
+
+    #[test]
+    fn display_matches_short_name() {
+        assert_eq!(MemLevel::Smem.to_string(), "SMEM");
+    }
+
+    #[test]
+    fn dram_is_unbounded() {
+        assert_eq!(MemoryLevelSpec::dram().capacity_bytes, u64::MAX);
+    }
+}

@@ -1,0 +1,244 @@
+//! Architecture model: the tensor-core-like streaming multiprocessor
+//! (SM) of the paper's §V-A, its memory hierarchy, and the description
+//! of a CiM-integrated variant ([`CimSystem`]).
+//!
+//! Baseline (paper §V-A): one SM with 4 sub-cores, each a 16×16 PE
+//! tensor-core-like grid; register file 4×4 KB, shared memory 256 KB;
+//! SMEM bandwidth 42 B/cycle, DRAM 32 B/cycle; INT-8 precision, 45 nm,
+//! 1 GHz. Energy per access from Table III (Accelergy).
+
+pub mod baseline;
+pub mod energy;
+pub mod interconnect;
+pub mod memory;
+pub mod multi_sm;
+
+pub use baseline::TensorCore;
+pub use interconnect::Interconnect;
+pub use multi_sm::MultiSm;
+pub use energy::EnergyTable;
+pub use memory::{MemLevel, MemoryLevelSpec};
+
+use crate::cim::{isoarea, CimPrimitive};
+
+/// Operating frequency of the modelled SM (cycles <-> ns conversion).
+pub const FREQ_GHZ: f64 = 1.0;
+
+/// Bytes per INT-8 element; the whole evaluation is INT-8 (§V-A).
+pub const BYTES_PER_ELEM: u64 = 1;
+
+/// The modelled architecture: memory hierarchy + baseline compute.
+#[derive(Debug, Clone)]
+pub struct Architecture {
+    /// Hierarchy ordered outer -> inner: DRAM, SMEM, RF, PE buffer.
+    pub levels: Vec<MemoryLevelSpec>,
+    pub energy: EnergyTable,
+    pub tensor_core: TensorCore,
+}
+
+impl Architecture {
+    /// The paper's baseline SM (§V-A, Table III).
+    pub fn default_sm() -> Self {
+        Architecture {
+            levels: vec![
+                MemoryLevelSpec::dram(),
+                MemoryLevelSpec::smem(),
+                MemoryLevelSpec::rf(),
+                MemoryLevelSpec::pe_buffer(),
+            ],
+            energy: EnergyTable::table_iii(),
+            tensor_core: TensorCore::default_sm(),
+        }
+    }
+
+    /// Spec of a given hierarchy level.
+    pub fn level(&self, lvl: MemLevel) -> &MemoryLevelSpec {
+        self.levels
+            .iter()
+            .find(|l| l.level == lvl)
+            .expect("level missing from architecture")
+    }
+
+    /// Capacity of `lvl` in bytes.
+    pub fn capacity(&self, lvl: MemLevel) -> u64 {
+        self.level(lvl).capacity_bytes
+    }
+}
+
+/// SMEM integration configurations of §VI-C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SmemConfig {
+    /// configA: same number of CiM primitives as the RF integration
+    /// (compute parity), remaining SMEM capacity stays plain storage.
+    ConfigA,
+    /// configB: all CiM primitives that fit in SMEM under iso-area.
+    ConfigB,
+}
+
+/// A CiM-integrated SM: `count` copies of `primitive` replace the
+/// storage of `level` under iso-area constraints (§VI intro).
+#[derive(Debug, Clone)]
+pub struct CimSystem {
+    pub arch: Architecture,
+    pub primitive: CimPrimitive,
+    pub level: MemLevel,
+    /// Number of CiM primitives integrated (iso-area rule).
+    pub count: u64,
+    pub smem_config: Option<SmemConfig>,
+}
+
+impl CimSystem {
+    /// Integrate `primitive` at `level` with the iso-area primitive count.
+    /// For SMEM, defaults to configB (all that fit).
+    pub fn at_level(arch: &Architecture, primitive: CimPrimitive, level: MemLevel) -> Self {
+        match level {
+            MemLevel::RegisterFile => {
+                let count = isoarea::primitives_fitting(arch.capacity(level), &primitive);
+                CimSystem {
+                    arch: arch.clone(),
+                    primitive,
+                    level,
+                    count,
+                    smem_config: None,
+                }
+            }
+            MemLevel::Smem => Self::at_smem(arch, primitive, SmemConfig::ConfigB),
+            other => panic!("CiM integration modelled at RF/SMEM only, got {other:?}"),
+        }
+    }
+
+    /// Integrate at SMEM with an explicit §VI-C configuration.
+    pub fn at_smem(arch: &Architecture, primitive: CimPrimitive, cfg: SmemConfig) -> Self {
+        let count = match cfg {
+            SmemConfig::ConfigA => {
+                isoarea::primitives_fitting(arch.capacity(MemLevel::RegisterFile), &primitive)
+            }
+            SmemConfig::ConfigB => {
+                isoarea::primitives_fitting(arch.capacity(MemLevel::Smem), &primitive)
+            }
+        };
+        CimSystem {
+            arch: arch.clone(),
+            primitive,
+            level: MemLevel::Smem,
+            count,
+            smem_config: Some(cfg),
+        }
+    }
+
+    /// Total weight-storage capacity across all integrated primitives,
+    /// in INT-8 elements.
+    pub fn weight_capacity_elems(&self) -> u64 {
+        self.count * self.primitive.weight_rows() * self.primitive.weight_cols()
+    }
+
+    /// Peak compute throughput in GOPS (Appendix B):
+    /// `2 * Rp * Cp * count / latency_ns`.
+    pub fn peak_gops(&self) -> f64 {
+        let p = &self.primitive;
+        2.0 * (p.rp * p.cp * self.count) as f64 / p.latency_ns
+    }
+
+    /// The staging level that feeds the CiM level (inputs held there for
+    /// reuse): SMEM when CiM sits in the RF, DRAM when CiM sits in SMEM.
+    pub fn staging_level(&self) -> MemLevel {
+        match self.level {
+            MemLevel::RegisterFile => MemLevel::Smem,
+            MemLevel::Smem => MemLevel::Dram,
+            other => panic!("no staging level for {other:?}"),
+        }
+    }
+
+    /// Human-readable system name for reports.
+    pub fn label(&self) -> String {
+        let cfg = match self.smem_config {
+            Some(SmemConfig::ConfigA) => "/configA",
+            Some(SmemConfig::ConfigB) => "/configB",
+            None => "",
+        };
+        format!(
+            "{}@{}{} x{}",
+            self.primitive.name,
+            self.level.short_name(),
+            cfg,
+            self.count
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::CimPrimitive;
+
+    #[test]
+    fn default_sm_matches_paper_constants() {
+        let a = Architecture::default_sm();
+        assert_eq!(a.capacity(MemLevel::RegisterFile), 4 * 4 * 1024);
+        assert_eq!(a.capacity(MemLevel::Smem), 256 * 1024);
+        assert_eq!(a.level(MemLevel::Smem).bandwidth_bytes_per_cycle, 42.0);
+        assert_eq!(a.level(MemLevel::Dram).bandwidth_bytes_per_cycle, 32.0);
+        // SMEM capacity is 16x the RF capacity (§VI-C).
+        assert_eq!(
+            a.capacity(MemLevel::Smem),
+            16 * a.capacity(MemLevel::RegisterFile)
+        );
+    }
+
+    #[test]
+    fn rf_digital6t_fits_three_primitives() {
+        // Appendix B: "3 instances of Digital6T ... at register file level".
+        let sys = CimSystem::at_level(
+            &Architecture::default_sm(),
+            CimPrimitive::digital_6t(),
+            MemLevel::RegisterFile,
+        );
+        assert_eq!(sys.count, 3);
+    }
+
+    #[test]
+    fn rf_digital6t_peak_matches_appendix_b() {
+        // peak = 2*256*16*3/18ns = 1365 GOPS.
+        let sys = CimSystem::at_level(
+            &Architecture::default_sm(),
+            CimPrimitive::digital_6t(),
+            MemLevel::RegisterFile,
+        );
+        assert!((sys.peak_gops() - 1365.33).abs() < 1.0, "{}", sys.peak_gops());
+    }
+
+    #[test]
+    fn smem_configs() {
+        let arch = Architecture::default_sm();
+        let a = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigA);
+        let b = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        assert_eq!(a.count, 3); // parity with RF
+        // §VI-C: configB has 16x the primitives of configA.
+        assert_eq!(b.count, 46); // round(256/(4*1.4)) — ≈16x configA
+    }
+
+    #[test]
+    fn staging_levels() {
+        let arch = Architecture::default_sm();
+        let rf = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        assert_eq!(rf.staging_level(), MemLevel::Smem);
+        let sm = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        assert_eq!(sm.staging_level(), MemLevel::Dram);
+    }
+
+    #[test]
+    fn weight_capacity() {
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        // 3 primitives x 256 rows x 16 cols = 12288 INT8 weights.
+        assert_eq!(sys.weight_capacity_elems(), 3 * 256 * 16);
+    }
+
+    #[test]
+    fn label_is_informative() {
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        let l = sys.label();
+        assert!(l.contains("Digital-6T") && l.contains("RF") && l.contains("x3"), "{l}");
+    }
+}

@@ -1,0 +1,13 @@
+//! CiM primitive model (paper §IV-A, Table IV).
+//!
+//! A *CiM primitive* is an SRAM array modified for in-situ MAC. The
+//! dataflow-centric representation decomposes it into `Rp × Cp` parallel
+//! *CiM units*, each sequentially covering `Rh × Ch` MAC positions (row
+//! hold / column hold — time-multiplexed wordlines/bitlines forced by
+//! read-disturb, ADC sharing, or bit-serial operation).
+
+pub mod isoarea;
+pub mod primitive;
+pub mod scaling;
+
+pub use primitive::{CellType, CimPrimitive, ComputeType};

@@ -1,0 +1,262 @@
+//! The four evaluated CiM prototypes (paper Table IV + §V-B), plus the
+//! constructor for user-defined primitives.
+
+/// Analog (charge/current-domain MAC + ADC) vs digital (bit-serial
+/// logic + adder trees) computation (§III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputeType {
+    Analog,
+    Digital,
+}
+
+/// SRAM bit-cell variant (§III-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellType {
+    Sram6T,
+    Sram8T,
+}
+
+/// One CiM primitive: a 4 KB SRAM array with in-situ MAC capability.
+///
+/// * `rp × cp` — CiM units operating fully in parallel,
+/// * `rh × ch` — sequential MAC positions per unit (row/column hold),
+/// * `latency_ns` — time of one primitive pass (all `rp × cp` parallel
+///   MACs), Table IV "Latency",
+/// * `mac_energy_pj` — 8b×8b MAC energy, already scaled to 45 nm / 1 V
+///   via [`crate::cim::scaling`],
+/// * `area_overhead` — array area relative to an iso-capacity plain
+///   SRAM (eq. 7); determines how many primitives fit iso-area.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CimPrimitive {
+    pub name: &'static str,
+    pub compute: ComputeType,
+    pub cell: CellType,
+    pub rp: u64,
+    pub cp: u64,
+    pub rh: u64,
+    pub ch: u64,
+    pub capacity_bytes: u64,
+    pub latency_ns: f64,
+    pub mac_energy_pj: f64,
+    pub area_overhead: f64,
+}
+
+impl CimPrimitive {
+    /// Table IV row 1 — SRAM-6T analog with local computing cells
+    /// (Si et al., JSSC 2021 [14]).
+    pub fn analog_6t() -> Self {
+        CimPrimitive {
+            name: "Analog-6T",
+            compute: ComputeType::Analog,
+            cell: CellType::Sram6T,
+            rp: 64,
+            cp: 4,
+            rh: 1,
+            ch: 16,
+            capacity_bytes: 4 * 1024,
+            latency_ns: 9.0,
+            mac_energy_pj: 0.15,
+            area_overhead: 1.34,
+        }
+    }
+
+    /// Table IV row 2 — SRAM-8T analog with reconfigurable-SNR ADC
+    /// (Ali et al., CICC 2023 [15]).
+    pub fn analog_8t() -> Self {
+        CimPrimitive {
+            name: "Analog-8T",
+            compute: ComputeType::Analog,
+            cell: CellType::Sram8T,
+            rp: 64,
+            cp: 4,
+            rh: 1,
+            ch: 16,
+            capacity_bytes: 4 * 1024,
+            latency_ns: 144.0,
+            mac_energy_pj: 0.09,
+            area_overhead: 2.1,
+        }
+    }
+
+    /// Table IV row 3 — SRAM-6T all-digital with adder trees
+    /// (Chih et al., ISSCC 2021 [16]). The paper's "typical digital CiM
+    /// primitive" used for Figs 7 and 10–12.
+    pub fn digital_6t() -> Self {
+        CimPrimitive {
+            name: "Digital-6T",
+            compute: ComputeType::Digital,
+            cell: CellType::Sram6T,
+            rp: 256,
+            cp: 16,
+            rh: 1,
+            ch: 1,
+            capacity_bytes: 4 * 1024,
+            latency_ns: 18.0,
+            mac_energy_pj: 0.34,
+            area_overhead: 1.4,
+        }
+    }
+
+    /// Table IV row 4 — SRAM-8T digital with bit-serial bitwise logic
+    /// (Wang et al., JSSC 2020 [13]); inputs and weights share columns,
+    /// only two rows active at a time.
+    pub fn digital_8t() -> Self {
+        CimPrimitive {
+            name: "Digital-8T",
+            compute: ComputeType::Digital,
+            cell: CellType::Sram8T,
+            rp: 1,
+            cp: 128,
+            rh: 10,
+            ch: 1,
+            capacity_bytes: 4 * 1024,
+            latency_ns: 233.0,
+            mac_energy_pj: 0.84,
+            area_overhead: 1.1,
+        }
+    }
+
+    /// All four Table IV prototypes, in table order.
+    pub fn all() -> Vec<CimPrimitive> {
+        vec![
+            Self::analog_6t(),
+            Self::analog_8t(),
+            Self::digital_6t(),
+            Self::digital_8t(),
+        ]
+    }
+
+    /// Parse a user-facing primitive name (CLI).
+    pub fn parse(s: &str) -> Option<CimPrimitive> {
+        match s
+            .to_ascii_lowercase()
+            .replace(['-', '_'], "")
+            .as_str()
+        {
+            "analog6t" | "a1" => Some(Self::analog_6t()),
+            "analog8t" | "a2" => Some(Self::analog_8t()),
+            "digital6t" | "d1" => Some(Self::digital_6t()),
+            "digital8t" | "d2" => Some(Self::digital_8t()),
+            _ => None,
+        }
+    }
+
+    /// Short label used in the appendix figures (A-1, A-2, D-1, D-2).
+    pub fn short_label(&self) -> &'static str {
+        match (self.compute, self.cell) {
+            (ComputeType::Analog, CellType::Sram6T) => "A-1",
+            (ComputeType::Analog, CellType::Sram8T) => "A-2",
+            (ComputeType::Digital, CellType::Sram6T) => "D-1",
+            (ComputeType::Digital, CellType::Sram8T) => "D-2",
+        }
+    }
+
+    /// Weight rows of the primitive's stationary grid: the reduction
+    /// dimension K maps here (`Rp × Rh` wordline positions).
+    pub fn weight_rows(&self) -> u64 {
+        self.rp * self.rh
+    }
+
+    /// Weight columns (`Cp × Ch` bitline positions): output dimension N
+    /// maps here.
+    pub fn weight_cols(&self) -> u64 {
+        self.cp * self.ch
+    }
+
+    /// MACs retired by one primitive pass (all parallel CiM units).
+    pub fn macs_per_pass(&self) -> u64 {
+        self.rp * self.cp
+    }
+
+    /// Sequential passes needed to cover the full stationary grid.
+    pub fn passes_per_grid(&self) -> u64 {
+        self.rh * self.ch
+    }
+
+    /// Latency of one pass in cycles at the given SM frequency (eq. 6
+    /// with the 1 GHz normalization folded in).
+    pub fn latency_cycles(&self) -> u64 {
+        (self.latency_ns * super::super::arch::FREQ_GHZ).ceil() as u64
+    }
+
+    /// Peak GOPS of a single primitive (Appendix B formula, 1 array).
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.macs_per_pass() as f64 / self.latency_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iv_constants() {
+        let a1 = CimPrimitive::analog_6t();
+        assert_eq!((a1.rp, a1.cp, a1.rh, a1.ch), (64, 4, 1, 16));
+        assert_eq!(a1.latency_ns, 9.0);
+        assert_eq!(a1.mac_energy_pj, 0.15);
+        assert_eq!(a1.area_overhead, 1.34);
+
+        let a2 = CimPrimitive::analog_8t();
+        assert_eq!((a2.rp, a2.cp, a2.rh, a2.ch), (64, 4, 1, 16));
+        assert_eq!(a2.latency_ns, 144.0);
+
+        let d1 = CimPrimitive::digital_6t();
+        assert_eq!((d1.rp, d1.cp, d1.rh, d1.ch), (256, 16, 1, 1));
+        assert_eq!(d1.latency_ns, 18.0);
+        assert_eq!(d1.mac_energy_pj, 0.34);
+
+        let d2 = CimPrimitive::digital_8t();
+        assert_eq!((d2.rp, d2.cp, d2.rh, d2.ch), (1, 128, 10, 1));
+        assert_eq!(d2.mac_energy_pj, 0.84);
+        assert_eq!(d2.area_overhead, 1.1);
+    }
+
+    #[test]
+    fn full_parallel_primitives_fill_4kb() {
+        // A-1, A-2, D-1 dedicate the whole 4 KB array to weights:
+        // (Rp*Rh) x (Cp*Ch) x 8 bit = 4096 bytes.
+        for p in [
+            CimPrimitive::analog_6t(),
+            CimPrimitive::analog_8t(),
+            CimPrimitive::digital_6t(),
+        ] {
+            assert_eq!(
+                p.weight_rows() * p.weight_cols(),
+                p.capacity_bytes,
+                "{} grid does not fill the array",
+                p.name
+            );
+        }
+        // D-2 shares columns between inputs and weights, so its weight
+        // grid is smaller than the array.
+        let d2 = CimPrimitive::digital_8t();
+        assert!(d2.weight_rows() * d2.weight_cols() < d2.capacity_bytes);
+    }
+
+    #[test]
+    fn peak_gops_digital6t() {
+        // 2*256*16/18 = 455.1 GOPS per array (Appendix B).
+        assert!((CimPrimitive::digital_6t().peak_gops() - 455.11).abs() < 0.1);
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(CimPrimitive::parse("digital-6t").unwrap().name, "Digital-6T");
+        assert_eq!(CimPrimitive::parse("D1").unwrap().name, "Digital-6T");
+        assert_eq!(CimPrimitive::parse("analog_8t").unwrap().name, "Analog-8T");
+        assert!(CimPrimitive::parse("quantum").is_none());
+    }
+
+    #[test]
+    fn short_labels() {
+        let labels: Vec<&str> = CimPrimitive::all().iter().map(|p| p.short_label()).collect();
+        assert_eq!(labels, vec!["A-1", "A-2", "D-1", "D-2"]);
+    }
+
+    #[test]
+    fn latency_cycles_at_1ghz() {
+        assert_eq!(CimPrimitive::digital_6t().latency_cycles(), 18);
+        assert_eq!(CimPrimitive::analog_8t().latency_cycles(), 144);
+    }
+}

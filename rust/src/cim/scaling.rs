@@ -1,0 +1,109 @@
+//! Technology/voltage normalization of prototype energy numbers
+//! (paper §IV-A.1, eqs. 2–5, after Stillmaker & Baas, "Scaling equations
+//! for the accurate prediction of CMOS device performance from 180 nm
+//! to 7 nm", Integration 2017 [35]).
+//!
+//! Prototypes are published at different nodes and supply voltages; the
+//! paper scales each to 45 nm / 1 V:
+//!
+//! ```text
+//! energy (pJ/MAC) = 2 / (TOPS/W) * T_ratio            (eq. 2)
+//! T_ratio         = f_45nm / f_ref                    (eq. 3)
+//! f_45nm          = a2_45 + a1_45 + a0_45             (eq. 4: V = 1)
+//! f_ref           = a2·V² + a1·V + a0                 (eq. 5)
+//! ```
+//!
+//! The 45 nm coefficients are given in the paper's footnote; reference
+//! designs supply their own node coefficients (from [35]) and voltage.
+
+/// Quadratic energy-scaling coefficients `(a2, a1, a0)` for one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeCoeffs {
+    pub a2: f64,
+    pub a1: f64,
+    pub a0: f64,
+}
+
+impl NodeCoeffs {
+    /// 45 nm coefficients from the paper's footnote 1.
+    pub fn nm45() -> Self {
+        NodeCoeffs {
+            a2: 1.103,
+            a1: -0.362,
+            a0: 0.2767,
+        }
+    }
+
+    /// Evaluate `f(V) = a2·V² + a1·V + a0` (eq. 5).
+    pub fn eval(&self, v: f64) -> f64 {
+        self.a2 * v * v + self.a1 * v + self.a0
+    }
+}
+
+/// `f_45nm` at the normalized 1 V supply (eq. 4).
+pub fn f_45nm() -> f64 {
+    let c = NodeCoeffs::nm45();
+    c.a2 + c.a1 + c.a0
+}
+
+/// Scaling ratio `T_ratio = f_45nm / f_ref` (eq. 3).
+pub fn t_ratio(ref_coeffs: NodeCoeffs, ref_voltage: f64) -> f64 {
+    f_45nm() / ref_coeffs.eval(ref_voltage)
+}
+
+/// Scale a reference design's published efficiency to a 45 nm / 1 V
+/// MAC energy (eq. 2). `tops_per_w_ref` is the prototype's published
+/// 8b-8b efficiency at (`ref_coeffs`, `ref_voltage`).
+pub fn mac_energy_pj(tops_per_w_ref: f64, ref_coeffs: NodeCoeffs, ref_voltage: f64) -> f64 {
+    assert!(tops_per_w_ref > 0.0, "TOPS/W must be positive");
+    2.0 / tops_per_w_ref * t_ratio(ref_coeffs, ref_voltage)
+}
+
+/// Convenience: energy of a design already characterized at 45 nm / 1 V
+/// (T_ratio = 1).
+pub fn mac_energy_pj_at_45nm(tops_per_w: f64) -> f64 {
+    2.0 / tops_per_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f_45nm_value() {
+        // 1.103 - 0.362 + 0.2767 = 1.0177
+        assert!((f_45nm() - 1.0177).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_scaling_at_45nm_1v() {
+        // A design already at 45nm/1V must scale by exactly 1.
+        let r = t_ratio(NodeCoeffs::nm45(), 1.0);
+        assert!((r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_inverts_tops_per_watt() {
+        // 2 TOPS/W at 45nm/1V -> 1 pJ/MAC (2 ops per MAC).
+        assert!((mac_energy_pj_at_45nm(2.0) - 1.0).abs() < 1e-12);
+        // Chih et al. [16] 89 TOPS/W would be ~0.022 pJ/MAC before
+        // voltage/node correction.
+        assert!((mac_energy_pj_at_45nm(89.0) - 0.02247).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lower_reference_voltage_increases_scaled_energy() {
+        // A prototype measured at a lower voltage got "free" efficiency;
+        // normalizing to 1 V must raise its energy (T_ratio > 1 when
+        // f_ref < f_45nm).
+        let lo = mac_energy_pj(10.0, NodeCoeffs::nm45(), 0.6);
+        let hi = mac_energy_pj(10.0, NodeCoeffs::nm45(), 1.0);
+        assert!(lo > hi, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_efficiency_rejected() {
+        mac_energy_pj(0.0, NodeCoeffs::nm45(), 1.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Hybrid CiM + tensor-core scheduling (extension).
+//!
+//! The paper's When-question is answered statically per GEMM shape; a
+//! real SM that integrates CiM *keeps its tensor cores*. This router
+//! makes the paper's Table V actionable: for each layer of a workload
+//! it places the GEMM on the CiM primitives or the tensor cores by an
+//! objective, yielding a hybrid schedule that dominates either engine
+//! alone (e.g. GEMV layers go to the cores, §VI-C's pathology; large
+//! regular layers go to CiM for energy).
+
+use crate::arch::{Architecture, CimSystem};
+use crate::cost::{BaselineModel, CostModel, Metrics};
+use crate::mapping::PriorityMapper;
+use crate::workload::{Gemm, Workload};
+
+/// Placement target for one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Cim,
+    TensorCore,
+}
+
+/// Routing objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Minimize energy per layer.
+    MinEnergy,
+    /// Minimize latency (cycles) per layer.
+    MinLatency,
+    /// Minimize energy-delay product per layer.
+    MinEdp,
+}
+
+impl RoutePolicy {
+    fn score(self, m: &Metrics) -> f64 {
+        match self {
+            RoutePolicy::MinEnergy => m.energy_pj,
+            RoutePolicy::MinLatency => m.total_cycles as f64,
+            RoutePolicy::MinEdp => m.energy_pj * m.total_cycles as f64,
+        }
+    }
+}
+
+/// One routed layer.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub gemm: Gemm,
+    pub engine: Engine,
+    pub metrics: Metrics,
+}
+
+/// A routed workload schedule with totals.
+#[derive(Debug, Clone)]
+pub struct HybridSchedule {
+    pub placements: Vec<Placement>,
+    pub total_energy_pj: f64,
+    pub total_cycles: u64,
+}
+
+impl HybridSchedule {
+    pub fn cim_layers(&self) -> usize {
+        self.placements
+            .iter()
+            .filter(|p| p.engine == Engine::Cim)
+            .count()
+    }
+
+    /// Workload-level TOPS/W.
+    pub fn tops_per_watt(&self) -> f64 {
+        let ops: u64 = self.placements.iter().map(|p| p.metrics.ops).sum();
+        ops as f64 / self.total_energy_pj
+    }
+
+    /// Workload-level GFLOPS (layers execute back-to-back).
+    pub fn gflops(&self) -> f64 {
+        let ops: u64 = self.placements.iter().map(|p| p.metrics.ops).sum();
+        ops as f64 / self.total_cycles as f64
+    }
+}
+
+/// The hybrid router.
+pub struct HybridRouter<'a> {
+    pub sys: &'a CimSystem,
+    pub arch: &'a Architecture,
+    pub policy: RoutePolicy,
+}
+
+impl<'a> HybridRouter<'a> {
+    pub fn new(sys: &'a CimSystem, arch: &'a Architecture, policy: RoutePolicy) -> Self {
+        HybridRouter { sys, arch, policy }
+    }
+
+    /// Evaluate one layer on both engines and place it.
+    pub fn place(&self, gemm: &Gemm) -> Placement {
+        let cim = CostModel::new(self.sys)
+            .evaluate(gemm, &PriorityMapper::new(self.sys).map(gemm));
+        let tc = BaselineModel::new(self.arch).evaluate(gemm);
+        if self.policy.score(&cim) <= self.policy.score(&tc) {
+            Placement {
+                gemm: *gemm,
+                engine: Engine::Cim,
+                metrics: cim,
+            }
+        } else {
+            Placement {
+                gemm: *gemm,
+                engine: Engine::TensorCore,
+                metrics: tc,
+            }
+        }
+    }
+
+    /// Route a whole workload (every layer, duplicates included — the
+    /// schedule covers one full forward pass).
+    pub fn route(&self, wl: &Workload) -> HybridSchedule {
+        let placements: Vec<Placement> = wl.gemms().iter().map(|g| self.place(g)).collect();
+        let total_energy_pj = placements.iter().map(|p| p.metrics.energy_pj).sum();
+        let total_cycles = placements.iter().map(|p| p.metrics.total_cycles).sum();
+        HybridSchedule {
+            placements,
+            total_energy_pj,
+            total_cycles,
+        }
+    }
+
+    /// Pure single-engine schedules for comparison.
+    pub fn route_pure(&self, wl: &Workload, engine: Engine) -> HybridSchedule {
+        let placements: Vec<Placement> = wl
+            .gemms()
+            .iter()
+            .map(|g| {
+                let metrics = match engine {
+                    Engine::Cim => CostModel::new(self.sys)
+                        .evaluate(g, &PriorityMapper::new(self.sys).map(g)),
+                    Engine::TensorCore => BaselineModel::new(self.arch).evaluate(g),
+                };
+                Placement {
+                    gemm: *g,
+                    engine,
+                    metrics,
+                }
+            })
+            .collect();
+        let total_energy_pj = placements.iter().map(|p| p.metrics.energy_pj).sum();
+        let total_cycles = placements.iter().map(|p| p.metrics.total_cycles).sum();
+        HybridSchedule {
+            placements,
+            total_energy_pj,
+            total_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemLevel;
+    use crate::cim::CimPrimitive;
+    use crate::workload::models;
+
+    fn setup() -> (Architecture, CimSystem) {
+        let arch = Architecture::default_sm();
+        let sys =
+            CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        (arch, sys)
+    }
+
+    #[test]
+    fn hybrid_energy_never_worse_than_pure() {
+        let (arch, sys) = setup();
+        let router = HybridRouter::new(&sys, &arch, RoutePolicy::MinEnergy);
+        for wl in models::real_dataset() {
+            let hybrid = router.route(&wl);
+            let cim = router.route_pure(&wl, Engine::Cim);
+            let tc = router.route_pure(&wl, Engine::TensorCore);
+            assert!(
+                hybrid.total_energy_pj <= cim.total_energy_pj * 1.0001,
+                "{}",
+                wl.name
+            );
+            assert!(
+                hybrid.total_energy_pj <= tc.total_energy_pj * 1.0001,
+                "{}",
+                wl.name
+            );
+        }
+    }
+
+    #[test]
+    fn gemv_layers_avoid_cim_under_latency_policy() {
+        // §VI-C: at RF, CiM loses to the baseline on M=1 throughput.
+        let (arch, sys) = setup();
+        let router = HybridRouter::new(&sys, &arch, RoutePolicy::MinLatency);
+        let sched = router.route(&models::dlrm());
+        for p in &sched.placements {
+            assert_eq!(p.engine, Engine::TensorCore, "{}", p.gemm);
+        }
+    }
+
+    #[test]
+    fn bert_layers_prefer_cim_for_energy() {
+        let (arch, sys) = setup();
+        let router = HybridRouter::new(&sys, &arch, RoutePolicy::MinEnergy);
+        let sched = router.route(&models::bert_large());
+        assert_eq!(sched.cim_layers(), sched.placements.len());
+    }
+
+    #[test]
+    fn mixed_workload_actually_splits() {
+        // GPT-J decode with CiM at SMEM/configB under a latency
+        // objective: the big context GEMM exploits the 46-primitive
+        // pool's throughput (CiM), while the GEMV layers stay on the
+        // tensor cores — the hybrid does something neither pure engine
+        // does.
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_smem(
+            &arch,
+            CimPrimitive::digital_6t(),
+            crate::arch::SmemConfig::ConfigB,
+        );
+        let router = HybridRouter::new(&sys, &arch, RoutePolicy::MinLatency);
+        let sched = router.route(&models::gpt_j());
+        let n_cim = sched.cim_layers();
+        assert!(n_cim > 0 && n_cim < sched.placements.len(), "n_cim={n_cim}");
+    }
+
+    #[test]
+    fn workload_metrics_consistent() {
+        let (arch, sys) = setup();
+        let router = HybridRouter::new(&sys, &arch, RoutePolicy::MinEdp);
+        let sched = router.route(&models::bert_large());
+        assert!(sched.tops_per_watt() > 0.0);
+        assert!(sched.gflops() > 0.0);
+        assert_eq!(
+            sched.total_cycles,
+            sched.placements.iter().map(|p| p.metrics.total_cycles).sum::<u64>()
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! Evaluation jobs and the parallel grid runner.
+
+use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use crate::cim::CimPrimitive;
+use crate::cost::{BaselineModel, CostModel, Metrics};
+use crate::mapping::PriorityMapper;
+use crate::util::pool;
+use crate::workload::Gemm;
+
+/// A system under evaluation: a CiM integration point or the baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SystemSpec {
+    /// Baseline tensor-core SM.
+    Baseline,
+    /// CiM primitive at the register file (iso-area count).
+    CimAtRf(CimPrimitive),
+    /// CiM primitive at shared memory with a §VI-C configuration.
+    CimAtSmem(CimPrimitive, SmemConfig),
+}
+
+impl SystemSpec {
+    pub fn label(&self, arch: &Architecture) -> String {
+        match self {
+            SystemSpec::Baseline => "Tensor-core".to_string(),
+            SystemSpec::CimAtRf(p) => {
+                CimSystem::at_level(arch, p.clone(), MemLevel::RegisterFile).label()
+            }
+            SystemSpec::CimAtSmem(p, cfg) => CimSystem::at_smem(arch, p.clone(), *cfg).label(),
+        }
+    }
+
+    /// Instantiate the CiM system (None for the baseline).
+    pub fn system(&self, arch: &Architecture) -> Option<CimSystem> {
+        match self {
+            SystemSpec::Baseline => None,
+            SystemSpec::CimAtRf(p) => {
+                Some(CimSystem::at_level(arch, p.clone(), MemLevel::RegisterFile))
+            }
+            SystemSpec::CimAtSmem(p, cfg) => Some(CimSystem::at_smem(arch, p.clone(), *cfg)),
+        }
+    }
+}
+
+/// One evaluation: a GEMM on a system.
+#[derive(Debug, Clone)]
+pub struct EvalJob {
+    /// Workload the GEMM came from (reporting key).
+    pub workload: String,
+    pub gemm: Gemm,
+    pub spec: SystemSpec,
+}
+
+/// Result of one evaluation.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub workload: String,
+    pub gemm: Gemm,
+    pub system: String,
+    pub metrics: Metrics,
+}
+
+/// The evaluation grid: jobs × worker pool.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub arch: Architecture,
+    pub threads: usize,
+}
+
+impl Default for Grid {
+    fn default() -> Self {
+        Grid {
+            arch: Architecture::default_sm(),
+            threads: pool::default_threads(),
+        }
+    }
+}
+
+impl Grid {
+    pub fn new(arch: Architecture) -> Self {
+        Grid {
+            arch,
+            threads: pool::default_threads(),
+        }
+    }
+
+    /// Evaluate one job.
+    pub fn evaluate(&self, job: &EvalJob) -> EvalResult {
+        let metrics = match job.spec.system(&self.arch) {
+            None => BaselineModel::new(&self.arch).evaluate(&job.gemm),
+            Some(sys) => {
+                let mapping = PriorityMapper::new(&sys).map(&job.gemm);
+                CostModel::new(&sys).evaluate(&job.gemm, &mapping)
+            }
+        };
+        EvalResult {
+            workload: job.workload.clone(),
+            gemm: job.gemm,
+            system: job.spec.label(&self.arch),
+            metrics,
+        }
+    }
+
+    /// Evaluate a batch in parallel, preserving order.
+    pub fn run(&self, jobs: &[EvalJob]) -> Vec<EvalResult> {
+        pool::map_parallel(jobs, self.threads, |job| self.evaluate(job))
+    }
+
+    /// Cross product: every GEMM of every (name, gemms) workload on
+    /// every system spec.
+    pub fn cross(
+        &self,
+        workloads: &[(String, Vec<Gemm>)],
+        specs: &[SystemSpec],
+    ) -> Vec<EvalJob> {
+        let mut jobs = Vec::new();
+        for (name, gemms) in workloads {
+            for gemm in gemms {
+                for spec in specs {
+                    jobs.push(EvalJob {
+                        workload: name.clone(),
+                        gemm: *gemm,
+                        spec: spec.clone(),
+                    });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jobs() -> Vec<EvalJob> {
+        vec![
+            EvalJob {
+                workload: "t".into(),
+                gemm: Gemm::new(512, 1024, 1024),
+                spec: SystemSpec::Baseline,
+            },
+            EvalJob {
+                workload: "t".into(),
+                gemm: Gemm::new(512, 1024, 1024),
+                spec: SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            },
+            EvalJob {
+                workload: "t".into(),
+                gemm: Gemm::new(1, 256, 512),
+                spec: SystemSpec::CimAtSmem(CimPrimitive::analog_8t(), SmemConfig::ConfigB),
+            },
+        ]
+    }
+
+    #[test]
+    fn grid_runs_all_jobs_in_order() {
+        let grid = Grid::default();
+        let results = grid.run(&jobs());
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].system, "Tensor-core");
+        assert!(results[1].system.contains("Digital-6T@RF"));
+        assert!(results[2].system.contains("Analog-8T@SMEM/configB"));
+        for r in &results {
+            assert!(r.metrics.energy_pj > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let mut grid = Grid::default();
+        let js = jobs();
+        grid.threads = 4;
+        let par = grid.run(&js);
+        grid.threads = 1;
+        let ser = grid.run(&js);
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.metrics, b.metrics);
+        }
+    }
+
+    #[test]
+    fn cross_product_size() {
+        let grid = Grid::default();
+        let wl = vec![
+            ("a".to_string(), vec![Gemm::new(16, 16, 16), Gemm::new(32, 32, 32)]),
+            ("b".to_string(), vec![Gemm::new(64, 64, 64)]),
+        ];
+        let specs = vec![SystemSpec::Baseline, SystemSpec::CimAtRf(CimPrimitive::digital_6t())];
+        assert_eq!(grid.cross(&wl, &specs).len(), 6);
+    }
+}

@@ -1,0 +1,19 @@
+//! Evaluation coordinator: fans (workload × system) evaluation jobs out
+//! over the worker pool, aggregates per-workload statistics, and runs
+//! the PJRT functional-validation pipeline.
+//!
+//! This is the L3 "leader" role: the CLI and examples drive everything
+//! through this module rather than touching mappers/cost models
+//! directly.
+
+pub mod hybrid;
+pub mod jobs;
+pub mod report;
+pub mod trace;
+pub mod validate;
+
+pub use hybrid::{Engine as HybridEngine, HybridRouter, HybridSchedule, RoutePolicy};
+pub use jobs::{EvalJob, EvalResult, Grid, SystemSpec};
+pub use report::WorkloadReport;
+pub use trace::{synthetic_trace, EnginePool, Request, ServingReport, TraceSimulator};
+pub use validate::{validate_mappings, ValidationReport};

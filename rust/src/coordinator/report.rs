@@ -1,0 +1,119 @@
+//! Per-workload aggregation: the mean ± σ "change vs baseline" series
+//! of Figs 7 and 12.
+
+use super::jobs::EvalResult;
+use crate::util::stats::{self, Summary};
+
+/// Aggregated change of one system vs a reference system over the
+/// GEMMs of one workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub workload: String,
+    pub system: String,
+    pub reference: String,
+    pub n_gemms: usize,
+    pub tops_per_watt_change: Summary,
+    pub gflops_change: Summary,
+    pub utilization_change: Summary,
+}
+
+impl WorkloadReport {
+    /// Build the change report for `system` relative to `reference`
+    /// within one workload's results. Results must contain both
+    /// systems evaluated on the same GEMMs (any order).
+    pub fn compare(
+        workload: &str,
+        results: &[EvalResult],
+        system: &str,
+        reference: &str,
+    ) -> WorkloadReport {
+        let of = |sys: &str| -> Vec<&EvalResult> {
+            results
+                .iter()
+                .filter(|r| r.workload == workload && r.system == sys)
+                .collect()
+        };
+        let a = of(system);
+        let b = of(reference);
+        assert_eq!(
+            a.len(),
+            b.len(),
+            "mismatched result sets for {system} vs {reference}"
+        );
+        let paired: Vec<(&EvalResult, &EvalResult)> = a
+            .iter()
+            .map(|ra| {
+                let rb = b
+                    .iter()
+                    .find(|rb| rb.gemm == ra.gemm)
+                    .expect("reference missing a GEMM");
+                (*ra, *rb)
+            })
+            .collect();
+
+        let ratio_series = |f: fn(&EvalResult) -> f64| -> Vec<f64> {
+            let xs: Vec<f64> = paired.iter().map(|(ra, _)| f(ra)).collect();
+            let ys: Vec<f64> = paired.iter().map(|(_, rb)| f(rb)).collect();
+            stats::ratios(&xs, &ys)
+        };
+
+        WorkloadReport {
+            workload: workload.to_string(),
+            system: system.to_string(),
+            reference: reference.to_string(),
+            n_gemms: paired.len(),
+            tops_per_watt_change: Summary::of(&ratio_series(|r| r.metrics.tops_per_watt)),
+            gflops_change: Summary::of(&ratio_series(|r| r.metrics.gflops)),
+            utilization_change: Summary::of(&ratio_series(|r| r.metrics.utilization)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::CimPrimitive;
+    use crate::coordinator::jobs::{Grid, SystemSpec};
+    use crate::workload::Gemm;
+
+    #[test]
+    fn compare_bert_vs_baseline() {
+        let grid = Grid::default();
+        let gemms = crate::workload::models::bert_large().gemms().to_vec();
+        let jobs = grid.cross(
+            &[("BERT-Large".to_string(), gemms)],
+            &[
+                SystemSpec::Baseline,
+                SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            ],
+        );
+        let results = grid.run(&jobs);
+        let cim_label = results
+            .iter()
+            .find(|r| r.system != "Tensor-core")
+            .unwrap()
+            .system
+            .clone();
+        let rep = WorkloadReport::compare(&"BERT-Large", &results, &cim_label, "Tensor-core");
+        assert_eq!(rep.n_gemms, 5);
+        // §VI-C: BERT derives ~3x TOPS/W from CiM at RF.
+        assert!(
+            rep.tops_per_watt_change.mean > 1.5,
+            "mean change {}",
+            rep.tops_per_watt_change.mean
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn mismatched_sets_panic() {
+        let grid = Grid::default();
+        let jobs = vec![crate::coordinator::jobs::EvalJob {
+            workload: "x".into(),
+            gemm: Gemm::new(16, 16, 16),
+            spec: SystemSpec::Baseline,
+        }];
+        let results = grid.run(&jobs);
+        WorkloadReport::compare("x", &results, "A", "Tensor-core");
+    }
+}

@@ -1,0 +1,288 @@
+//! Trace-driven inference serving simulation (extension).
+//!
+//! A CiM-integrated SM keeps its tensor cores, so the two engines can
+//! execute *different requests concurrently*. This event-driven
+//! simulator replays a request trace (arrival cycle + layer sequence)
+//! against the hybrid placement of [`super::hybrid`]: layers within a
+//! request are dependent (sequential), requests overlap across the two
+//! engines. Output: per-request latency percentiles, sustained
+//! throughput, and per-engine busy fractions — the serving-side view
+//! of the paper's When-question.
+
+use super::hybrid::{Engine, HybridRouter};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use crate::workload::{Gemm, Workload};
+
+/// One inference request: a layer sequence arriving at a cycle.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_cycle: u64,
+    pub layers: Vec<Gemm>,
+}
+
+/// Simulation result for one request.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub arrival_cycle: u64,
+    pub finish_cycle: u64,
+    pub cim_layers: usize,
+}
+
+impl RequestResult {
+    pub fn latency(&self) -> u64 {
+        self.finish_cycle - self.arrival_cycle
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub results: Vec<RequestResult>,
+    pub makespan_cycles: u64,
+    pub cim_busy_cycles: u64,
+    pub tc_busy_cycles: u64,
+    pub total_energy_pj: f64,
+}
+
+impl ServingReport {
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let lat: Vec<f64> = self.results.iter().map(|r| r.latency() as f64).collect();
+        percentile(&lat, p)
+    }
+
+    /// Requests per second at 1 GHz.
+    pub fn requests_per_second(&self) -> f64 {
+        self.results.len() as f64 / (self.makespan_cycles as f64 * 1e-9)
+    }
+
+    pub fn cim_utilization(&self) -> f64 {
+        self.cim_busy_cycles as f64 / self.makespan_cycles.max(1) as f64
+    }
+
+    pub fn tc_utilization(&self) -> f64 {
+        self.tc_busy_cycles as f64 / self.makespan_cycles.max(1) as f64
+    }
+}
+
+/// Engine restriction for baseline comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnginePool {
+    HybridBoth,
+    CimOnly,
+    TensorCoreOnly,
+}
+
+/// Event-driven simulator over a fixed placement policy.
+pub struct TraceSimulator<'a> {
+    pub router: HybridRouter<'a>,
+    pub pool: EnginePool,
+}
+
+impl<'a> TraceSimulator<'a> {
+    pub fn new(router: HybridRouter<'a>, pool: EnginePool) -> Self {
+        TraceSimulator { router, pool }
+    }
+
+    /// Replay `trace` (must be sorted by arrival). Requests are
+    /// admitted FIFO; each layer runs on its placed engine as soon as
+    /// both its predecessor layer and the engine are free.
+    pub fn run(&self, trace: &[Request]) -> ServingReport {
+        debug_assert!(trace.windows(2).all(|w| w[0].arrival_cycle <= w[1].arrival_cycle));
+        let mut cim_free: u64 = 0;
+        let mut tc_free: u64 = 0;
+        let mut cim_busy: u64 = 0;
+        let mut tc_busy: u64 = 0;
+        let mut energy = 0.0f64;
+        let mut results = Vec::with_capacity(trace.len());
+
+        for req in trace {
+            let mut ready = req.arrival_cycle;
+            let mut cim_layers = 0usize;
+            for g in &req.layers {
+                let placement = self.router.place(g);
+                let engine = match self.pool {
+                    EnginePool::HybridBoth => placement.engine,
+                    EnginePool::CimOnly => Engine::Cim,
+                    EnginePool::TensorCoreOnly => Engine::TensorCore,
+                };
+                // Re-price if the pool forced the other engine.
+                let metrics = if engine == placement.engine {
+                    placement.metrics
+                } else {
+                    match engine {
+                        Engine::Cim => crate::cost::CostModel::new(self.router.sys).evaluate(
+                            g,
+                            &crate::mapping::PriorityMapper::new(self.router.sys).map(g),
+                        ),
+                        Engine::TensorCore => {
+                            crate::cost::BaselineModel::new(self.router.arch).evaluate(g)
+                        }
+                    }
+                };
+                let dur = metrics.total_cycles;
+                energy += metrics.energy_pj;
+                let (free, busy) = match engine {
+                    Engine::Cim => (&mut cim_free, &mut cim_busy),
+                    Engine::TensorCore => (&mut tc_free, &mut tc_busy),
+                };
+                let start = ready.max(*free);
+                *free = start + dur;
+                *busy += dur;
+                ready = start + dur;
+                if engine == Engine::Cim {
+                    cim_layers += 1;
+                }
+            }
+            results.push(RequestResult {
+                id: req.id,
+                arrival_cycle: req.arrival_cycle,
+                finish_cycle: ready,
+                cim_layers,
+            });
+        }
+
+        let makespan = results
+            .iter()
+            .map(|r| r.finish_cycle)
+            .max()
+            .unwrap_or(0)
+            .saturating_sub(trace.first().map_or(0, |r| r.arrival_cycle));
+        ServingReport {
+            results,
+            makespan_cycles: makespan.max(1),
+            cim_busy_cycles: cim_busy,
+            tc_busy_cycles: tc_busy,
+            total_energy_pj: energy,
+        }
+    }
+}
+
+/// Generate a mixed trace: requests drawn from `mix` with
+/// exponential(ish) inter-arrival times of mean `mean_gap_cycles`.
+pub fn synthetic_trace(
+    mix: &[Workload],
+    n_requests: usize,
+    mean_gap_cycles: f64,
+    rng: &mut Rng,
+) -> Vec<Request> {
+    let mut t = 0u64;
+    (0..n_requests as u64)
+        .map(|id| {
+            let wl = &mix[rng.index(mix.len())];
+            // inverse-CDF exponential sampling
+            let gap = -mean_gap_cycles * (1.0 - rng.next_f64()).ln();
+            t += gap as u64;
+            Request {
+                id,
+                arrival_cycle: t,
+                layers: wl.gemms().to_vec(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Architecture, CimSystem, SmemConfig};
+    use crate::cim::CimPrimitive;
+    use crate::coordinator::hybrid::RoutePolicy;
+    use crate::workload::models;
+
+    fn setup() -> (Architecture, CimSystem) {
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        (arch, sys)
+    }
+
+    fn trace(n: usize) -> Vec<Request> {
+        let mut rng = Rng::new(42);
+        synthetic_trace(
+            &[models::bert_large(), models::dlrm()],
+            n,
+            500_000.0,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn latencies_are_causal() {
+        let (arch, sys) = setup();
+        let sim = TraceSimulator::new(
+            HybridRouter::new(&sys, &arch, RoutePolicy::MinLatency),
+            EnginePool::HybridBoth,
+        );
+        let report = sim.run(&trace(30));
+        assert_eq!(report.results.len(), 30);
+        for r in &report.results {
+            assert!(r.finish_cycle > r.arrival_cycle, "request {}", r.id);
+        }
+        assert!(report.latency_percentile(99.0) >= report.latency_percentile(50.0));
+    }
+
+    #[test]
+    fn hybrid_not_slower_than_single_engine_pools() {
+        let (arch, sys) = setup();
+        let t = trace(40);
+        let run = |pool| {
+            TraceSimulator::new(HybridRouter::new(&sys, &arch, RoutePolicy::MinLatency), pool)
+                .run(&t)
+        };
+        let hybrid = run(EnginePool::HybridBoth);
+        let cim = run(EnginePool::CimOnly);
+        let tc = run(EnginePool::TensorCoreOnly);
+        // Overlapping two engines can't hurt the makespan under the
+        // latency policy.
+        assert!(hybrid.makespan_cycles <= cim.makespan_cycles);
+        assert!(hybrid.makespan_cycles <= tc.makespan_cycles);
+    }
+
+    #[test]
+    fn hybrid_uses_both_engines_on_mixed_traffic() {
+        let (arch, sys) = setup();
+        let sim = TraceSimulator::new(
+            HybridRouter::new(&sys, &arch, RoutePolicy::MinLatency),
+            EnginePool::HybridBoth,
+        );
+        let report = sim.run(&trace(40));
+        assert!(report.cim_busy_cycles > 0, "CiM never used");
+        assert!(report.tc_busy_cycles > 0, "tensor cores never used");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (arch, sys) = setup();
+        let sim = TraceSimulator::new(
+            HybridRouter::new(&sys, &arch, RoutePolicy::MinEnergy),
+            EnginePool::HybridBoth,
+        );
+        let r = sim.run(&trace(20));
+        assert!(r.cim_utilization() <= 1.0 + 1e-9);
+        assert!(r.tc_utilization() <= 1.0 + 1e-9);
+        assert!(r.requests_per_second() > 0.0);
+    }
+
+    #[test]
+    fn trace_generation_sorted_and_sized() {
+        let t = trace(50);
+        assert_eq!(t.len(), 50);
+        assert!(t.windows(2).all(|w| w[0].arrival_cycle <= w[1].arrival_cycle));
+        assert!(t.iter().any(|r| r.layers.len() == 5)); // bert
+        assert!(t.iter().any(|r| r.layers.len() == 2)); // dlrm
+    }
+
+    #[test]
+    fn energy_pool_tradeoff() {
+        // CiM-only burns less energy than TC-only on this mix.
+        let (arch, sys) = setup();
+        let t = trace(20);
+        let run = |pool| {
+            TraceSimulator::new(HybridRouter::new(&sys, &arch, RoutePolicy::MinEnergy), pool)
+                .run(&t)
+        };
+        assert!(run(EnginePool::CimOnly).total_energy_pj < run(EnginePool::TensorCoreOnly).total_energy_pj);
+    }
+}

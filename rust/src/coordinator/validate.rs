@@ -1,0 +1,75 @@
+//! Functional validation pipeline: prove that the mappings the
+//! analytical framework prices are *numerically real* by replaying them
+//! tile-by-tile through the PJRT artifacts and checking against both
+//! the rust oracle and (when available) a whole-GEMM artifact.
+
+use anyhow::Result;
+
+use crate::arch::CimSystem;
+use crate::mapping::PriorityMapper;
+use crate::runtime::matrix::{gemm_ref, MatI8};
+use crate::runtime::{Engine, TiledExecutor};
+use crate::util::rng::Rng;
+use crate::workload::Gemm;
+
+/// Outcome of validating one GEMM's mapping.
+#[derive(Debug, Clone)]
+pub struct ValidationCase {
+    pub gemm: Gemm,
+    pub kernel_calls: u64,
+    pub diff_vs_oracle: i64,
+    pub diff_vs_full_artifact: Option<i64>,
+}
+
+/// Aggregate validation report.
+#[derive(Debug, Clone, Default)]
+pub struct ValidationReport {
+    pub cases: Vec<ValidationCase>,
+}
+
+impl ValidationReport {
+    pub fn all_exact(&self) -> bool {
+        self.cases
+            .iter()
+            .all(|c| c.diff_vs_oracle == 0 && c.diff_vs_full_artifact.unwrap_or(0) == 0)
+    }
+}
+
+/// Validate the priority mapper's dataflows for `gemms` on `sys`,
+/// executing every tile through the PJRT engine.
+pub fn validate_mappings(
+    engine: &Engine,
+    sys: &CimSystem,
+    gemms: &[Gemm],
+    seed: u64,
+) -> Result<ValidationReport> {
+    let mut rng = Rng::new(seed);
+    let mapper = PriorityMapper::new(sys);
+    let exec = TiledExecutor::new(engine);
+    let mut report = ValidationReport::default();
+
+    for &gemm in gemms {
+        let x = MatI8::random(gemm.m as usize, gemm.k as usize, &mut rng);
+        let w = MatI8::random(gemm.k as usize, gemm.n as usize, &mut rng);
+        let mapping = mapper.map(&gemm);
+        let run = exec.run(&mapping, &x, &w)?;
+
+        // If the catalog holds a whole-GEMM artifact of this exact
+        // shape, cross-check the one-shot execution too.
+        let full_name = format!("gemm_{}x{}x{}", gemm.m, gemm.n, gemm.k);
+        let diff_full = if engine.manifest().get(&full_name).is_some() {
+            let full = engine.execute_i8(&full_name, &[&x, &w])?.remove(0);
+            Some(full.max_abs_diff(&gemm_ref(&x, &w)).max(run.output.max_abs_diff(&full)))
+        } else {
+            None
+        };
+
+        report.cases.push(ValidationCase {
+            gemm,
+            kernel_calls: run.kernel_calls,
+            diff_vs_oracle: run.diff_vs_oracle,
+            diff_vs_full_artifact: diff_full,
+        });
+    }
+    Ok(report)
+}

@@ -1,0 +1,182 @@
+//! Memory-access counting over a tiled loop nest.
+//!
+//! For each tensor we know its *residency chain*: the block indices at
+//! which a tile of the tensor is buffered (always starting at block 0,
+//! DRAM). The traffic filling each residency follows the Fig 4
+//! semantics implemented in [`crate::mapping::loopnest::refetches`]:
+//! `visits × tile` elements cross into the residency, of which
+//! `distinct × tile` are first-time fetches. For the output tensor the
+//! difference is exactly the partial-sum reload traffic.
+
+use crate::mapping::loopnest::{distinct_at, refetches_at, LoopNest, Tensor};
+
+/// Traffic filling one residency of one tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fill {
+    /// Block index of the residency being filled.
+    pub boundary: usize,
+    /// Tile size at this residency, elements.
+    pub tile: u64,
+    /// Times the residency is (re)filled.
+    pub visits: u64,
+    /// Distinct tiles among those visits.
+    pub distinct: u64,
+}
+
+impl Fill {
+    /// Total elements crossing into the residency.
+    pub fn elems(&self) -> u64 {
+        self.tile.saturating_mul(self.visits)
+    }
+
+    /// Re-fetched elements (for outputs: partial-sum reloads).
+    pub fn partial_elems(&self) -> u64 {
+        self.tile.saturating_mul(self.visits - self.distinct)
+    }
+
+    /// First-time elements (distinct data volume through this boundary).
+    pub fn distinct_elems(&self) -> u64 {
+        self.tile.saturating_mul(self.distinct)
+    }
+}
+
+/// Fill at a single residency boundary (allocation-free — the
+/// cost-model hot path uses this directly).
+pub fn fill_at(nest: &LoopNest, tensor: Tensor, b: usize) -> Fill {
+    debug_assert!(b > 0 && b < nest.blocks.len());
+    Fill {
+        boundary: b,
+        tile: nest.tile_elems(b, tensor),
+        visits: refetches_at(nest, b, tensor),
+        distinct: distinct_at(nest, b, tensor),
+    }
+}
+
+/// Compute the fills for `tensor` along its residency `chain` (block
+/// indices, ascending, starting at 0). Returns one [`Fill`] per chain
+/// entry after the first.
+pub fn fills(nest: &LoopNest, tensor: Tensor, chain: &[usize]) -> Vec<Fill> {
+    assert!(!chain.is_empty() && chain[0] == 0, "chain must start at DRAM (block 0)");
+    assert!(
+        chain.windows(2).all(|w| w[0] < w[1]),
+        "chain must be strictly ascending"
+    );
+    assert!(
+        *chain.last().unwrap() < nest.blocks.len(),
+        "chain index out of range"
+    );
+    chain[1..].iter().map(|&b| fill_at(nest, tensor, b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemLevel;
+    use crate::mapping::loopnest::{Block, Dim, Loop};
+    use crate::workload::Gemm;
+
+    /// GEMM(64, 32, 128): DRAM[K2=2, M2=4] / SMEM[N1=2] / CiM[N16 K64 M16].
+    fn nest() -> LoopNest {
+        LoopNest::new(
+            Gemm::new(64, 32, 128),
+            vec![
+                Block::new(
+                    MemLevel::Dram,
+                    vec![Loop::new(Dim::K, 2), Loop::new(Dim::M, 4)],
+                ),
+                Block::new(MemLevel::Smem, vec![Loop::new(Dim::N, 2)]),
+                Block::new(
+                    MemLevel::RegisterFile,
+                    vec![
+                        Loop::new(Dim::N, 16),
+                        Loop::new(Dim::K, 64),
+                        Loop::new(Dim::M, 16),
+                    ],
+                ),
+            ],
+        )
+    }
+
+    #[test]
+    fn input_fills() {
+        let n = nest();
+        let f = fills(&n, Tensor::Input, &[0, 1, 2]);
+        assert_eq!(f.len(), 2);
+        // SMEM residency: tile = 16m x 64k = 1024; prefix [K2, M4]:
+        // both relevant -> 8 visits, 8 distinct (A fetched exactly once).
+        assert_eq!(f[0], Fill { boundary: 1, tile: 1024, visits: 8, distinct: 8 });
+        // CiM boundary: same tile (no A dims in block 1); prefix adds
+        // N1=2 (irrelevant, no relevant deeper) -> still 8 visits.
+        assert_eq!(f[1].visits, 8);
+        // Total A traffic into CiM = the full matrix once.
+        assert_eq!(f[1].elems(), 64 * 128);
+    }
+
+    #[test]
+    fn weight_fills_reload_per_m_tile() {
+        let n = nest();
+        let f = fills(&n, Tensor::Weight, &[0, 2]);
+        assert_eq!(f.len(), 1);
+        // W tile = 64k x 16n = 1024. Prefix [K2, M4, N1]: K relevant x2,
+        // M irrelevant but N deeper -> x4, N relevant x2 => 16 visits of
+        // 4 distinct tiles (weights reload for every M tile).
+        assert_eq!(f[0].tile, 1024);
+        assert_eq!(f[0].visits, 16);
+        assert_eq!(f[0].distinct, 4);
+        assert_eq!(f[0].partial_elems(), 12 * 1024);
+    }
+
+    #[test]
+    fn output_partial_sums() {
+        let n = nest();
+        let f = fills(&n, Tensor::Output, &[0, 1, 2]);
+        // SMEM Z tile = 16m x 32n = 512. Prefix [K2, M4]: K outermost
+        // irrelevant with M deeper -> x2; M relevant x4 => 8 visits of
+        // 4 distinct tiles -> half the traffic is partial reloads.
+        assert_eq!(f[0].tile, 512);
+        assert_eq!(f[0].visits, 8);
+        assert_eq!(f[0].distinct, 4);
+        assert_eq!(f[0].partial_elems(), 4 * 512);
+        // CiM outbuf tile = 16m x 16n = 256; prefix adds N1=2 (relevant).
+        assert_eq!(f[1].tile, 256);
+        assert_eq!(f[1].visits, 16);
+        assert_eq!(f[1].distinct, 8);
+    }
+
+    #[test]
+    fn chain_skipping_intermediate_level() {
+        let n = nest();
+        // W direct DRAM -> CiM equals W with chain [0,2].
+        let f = fills(&n, Tensor::Weight, &[0, 2]);
+        assert_eq!(f[0].boundary, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn non_ascending_chain_rejected() {
+        let n = nest();
+        fills(&n, Tensor::Input, &[0, 2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "DRAM")]
+    fn chain_must_start_at_zero() {
+        let n = nest();
+        fills(&n, Tensor::Input, &[1, 2]);
+    }
+
+    #[test]
+    fn conservation_distinct_volume_is_matrix_size() {
+        // The distinct volume through the outermost boundary equals the
+        // tensor size (every element enters the chip at least once,
+        // exactly once when counted distinctly) for exact tilings.
+        let n = nest();
+        let g = n.gemm;
+        let a = fills(&n, Tensor::Input, &[0, 1, 2]);
+        assert_eq!(a[0].distinct_elems(), g.m * g.k);
+        let w = fills(&n, Tensor::Weight, &[0, 2]);
+        assert_eq!(w[0].distinct_elems(), g.k * g.n);
+        let z = fills(&n, Tensor::Output, &[0, 1, 2]);
+        assert_eq!(z[0].distinct_elems(), g.m * g.n);
+    }
+}

@@ -1,0 +1,311 @@
+//! Baseline tensor-core cost model (paper §V-A, §VI-C "Comparison with
+//! baseline").
+//!
+//! The baseline SM computes GEMMs on 4 sub-cores of 16×16 PEs with a
+//! conventional DRAM → SMEM → RF → PE-buffer hierarchy. Unlike CiM it
+//! is *not* weight-stationary constrained: the mapper blocks all three
+//! dimensions at RF and SMEM (cuBLAS-style tiling, §III-B) and keeps
+//! outputs stationary in the PE accumulators, which is why small-M
+//! GEMMs still utilize the hardware well (§VI-C).
+
+use super::access::fills;
+use super::{EnergyBreakdown, Metrics};
+use crate::arch::{Architecture, MemLevel};
+use crate::mapping::loopnest::{Block, Dim, Loop, LoopNest, Tensor};
+use crate::mapping::priority::greedy_order;
+use crate::workload::Gemm;
+
+/// Tile extents chosen by the baseline mapper at one level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl Tile {
+    /// Operand + accumulator footprint in INT-8 elements.
+    pub fn footprint(&self) -> u64 {
+        self.m * self.k + self.k * self.n + self.m * self.n
+    }
+}
+
+/// Analytical model of the baseline SM.
+#[derive(Debug, Clone)]
+pub struct BaselineModel<'a> {
+    arch: &'a Architecture,
+}
+
+impl<'a> BaselineModel<'a> {
+    pub fn new(arch: &'a Architecture) -> Self {
+        BaselineModel { arch }
+    }
+
+    /// Greedily grow a blocked tile (doubling one dimension at a time,
+    /// round-robin) until the capacity or the GEMM extents stop it.
+    fn block_tile(gemm: &Gemm, start: Tile, capacity: u64) -> Tile {
+        let mut t = Tile {
+            m: start.m.min(gemm.m),
+            n: start.n.min(gemm.n),
+            k: start.k.min(gemm.k),
+        };
+        // If even the seed tile does not fit, shrink it (tiny caches).
+        while t.footprint() > capacity {
+            let max = [t.m, t.n, t.k].into_iter().max().unwrap();
+            if max == 1 {
+                break;
+            }
+            if t.m == max {
+                t.m = (t.m / 2).max(1);
+            } else if t.n == max {
+                t.n = (t.n / 2).max(1);
+            } else {
+                t.k = (t.k / 2).max(1);
+            }
+        }
+        loop {
+            let mut grew = false;
+            for dim in 0..3 {
+                let cand = match dim {
+                    0 => Tile { m: (t.m * 2).min(gemm.m), ..t },
+                    1 => Tile { n: (t.n * 2).min(gemm.n), ..t },
+                    _ => Tile { k: (t.k * 2).min(gemm.k), ..t },
+                };
+                if cand != t && cand.footprint() <= capacity {
+                    t = cand;
+                    grew = true;
+                }
+            }
+            if !grew {
+                break;
+            }
+        }
+        t
+    }
+
+    /// Build the baseline's blocked loop nest for a GEMM.
+    pub fn nest(&self, gemm: &Gemm) -> LoopNest {
+        let tc = &self.arch.tensor_core;
+        let rf_cap = self.arch.capacity(MemLevel::RegisterFile);
+        let smem_cap = self.arch.capacity(MemLevel::Smem);
+
+        let seed = Tile {
+            m: tc.tile_m(),
+            n: tc.tile_n(),
+            k: 64,
+        };
+        let rf = Self::block_tile(gemm, seed, rf_cap);
+        let smem = Self::block_tile(gemm, rf, smem_cap);
+
+        // K streams innermost at every temporal level (cuBLAS-style
+        // "split-K last"): output tiles stay resident in the inner
+        // levels across the reduction, so partial sums never bounce
+        // through SMEM/DRAM. M and N are greedy-ordered among
+        // themselves (smallest factor outermost).
+        let mut block0_loops = greedy_order(vec![
+            Loop::new(Dim::M, gemm.m.div_ceil(smem.m)),
+            Loop::new(Dim::N, gemm.n.div_ceil(smem.n)),
+        ]);
+        block0_loops.push(Loop::new(Dim::K, gemm.k.div_ceil(smem.k)));
+        let block0 = Block::new(MemLevel::Dram, block0_loops);
+        let mut block1_loops = greedy_order(vec![
+            Loop::new(Dim::M, smem.m.div_ceil(rf.m)),
+            Loop::new(Dim::N, smem.n.div_ceil(rf.n)),
+        ]);
+        block1_loops.push(Loop::new(Dim::K, smem.k.div_ceil(rf.k)));
+        let block1 = Block::new(MemLevel::Smem, block1_loops);
+        // RF block iterates PE-array passes; K innermost keeps the
+        // output tile stationary in the PE accumulators.
+        let block2 = Block::new(
+            MemLevel::RegisterFile,
+            vec![
+                Loop::new(Dim::N, rf.n.div_ceil(tc.tile_n())),
+                Loop::new(Dim::M, rf.m.div_ceil(tc.tile_m())),
+                Loop::new(Dim::K, rf.k),
+            ],
+        );
+        // PE-buffer residency: the spatial tile broadcast across the
+        // PE grid each cycle.
+        let block3 = Block::new(
+            MemLevel::PeBuffer,
+            vec![
+                Loop::new(Dim::M, tc.tile_m().min(gemm.m)),
+                Loop::new(Dim::N, tc.tile_n().min(gemm.n)),
+            ],
+        );
+
+        LoopNest::new(*gemm, vec![block0, block1, block2, block3])
+    }
+
+    /// Evaluate a GEMM on the baseline SM.
+    pub fn evaluate(&self, gemm: &Gemm) -> Metrics {
+        let e = &self.arch.energy;
+        let tc = &self.arch.tensor_core;
+        let nest = self.nest(gemm);
+        let macs = gemm.macs();
+        let ops = gemm.ops();
+
+        let chain = [0usize, 1, 2, 3];
+        let a = fills(&nest, Tensor::Input, &chain);
+        let w = fills(&nest, Tensor::Weight, &chain);
+        let z = fills(&nest, Tensor::Output, &chain);
+
+        let mut bd = EnergyBreakdown::default();
+        let mut dram_bytes: u64 = 0;
+        let mut smem_bytes: u64 = 0;
+
+        // Operand tensors: each boundary crossing reads the outer level
+        // and writes the inner one.
+        let boundary_mems = [
+            (MemLevel::Dram, MemLevel::Smem),
+            (MemLevel::Smem, MemLevel::RegisterFile),
+            (MemLevel::RegisterFile, MemLevel::PeBuffer),
+        ];
+        for fl in a.iter().chain(w.iter()) {
+            let (src, dst) = boundary_mems[fl.boundary - 1];
+            let elems = fl.elems() as f64;
+            bd.add_level(src, elems * e.elem_pj(src));
+            bd.add_level(dst, elems * e.elem_pj(dst));
+            match src {
+                MemLevel::Dram => dram_bytes += fl.elems(),
+                MemLevel::Smem => smem_bytes += fl.elems(),
+                _ => {}
+            }
+        }
+        // Output tensor: evictions write outward, revisits reload
+        // partial sums and merge them.
+        let mut reductions: u64 = 0;
+        for fl in &z {
+            let (outer, inner) = boundary_mems[fl.boundary - 1];
+            let evict = fl.elems() as f64;
+            let partial = fl.partial_elems() as f64;
+            bd.add_level(outer, (evict + partial) * e.elem_pj(outer));
+            bd.add_level(inner, (evict + partial) * e.elem_pj(inner));
+            match outer {
+                MemLevel::Dram => dram_bytes += fl.elems() + fl.partial_elems(),
+                MemLevel::Smem => smem_bytes += fl.elems() + fl.partial_elems(),
+                _ => {}
+            }
+            reductions += fl.partial_elems();
+        }
+
+        // Per-MAC operand reads from the PE buffer (two operands; the
+        // accumulator lives in the PE registers).
+        bd.add_level(MemLevel::PeBuffer, 2.0 * macs as f64 * e.elem_pj(MemLevel::PeBuffer));
+        bd.mac_pj = macs as f64 * e.mac_pj;
+        bd.reduction_pj = reductions as f64 * e.reduction_pj;
+        let energy_pj = bd.total_pj();
+
+        // Cycles: the PE grid retires tile_m x tile_n MACs per cycle.
+        let compute_cycles =
+            gemm.m.div_ceil(tc.tile_m()) * gemm.n.div_ceil(tc.tile_n()) * gemm.k;
+        let dram_bw = self.arch.level(MemLevel::Dram).bandwidth_bytes_per_cycle;
+        let smem_bw = self.arch.level(MemLevel::Smem).bandwidth_bytes_per_cycle;
+        let dram_cycles = (dram_bytes as f64 / dram_bw).ceil() as u64;
+        let smem_cycles = (smem_bytes as f64 / smem_bw).ceil() as u64;
+        let total_cycles = compute_cycles.max(dram_cycles).max(smem_cycles).max(1);
+
+        Metrics {
+            macs,
+            ops,
+            energy_pj,
+            breakdown: bd,
+            tops_per_watt: ops as f64 / energy_pj,
+            compute_cycles,
+            dram_cycles,
+            smem_cycles,
+            total_cycles,
+            gflops: ops as f64 / total_cycles as f64,
+            utilization: macs as f64 / (compute_cycles * tc.macs_per_cycle()) as f64,
+            dram_bytes,
+            smem_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> Architecture {
+        Architecture::default_sm()
+    }
+
+    #[test]
+    fn tile_growth_respects_capacity() {
+        let g = Gemm::new(8192, 8192, 8192);
+        let t = BaselineModel::block_tile(&g, Tile { m: 16, n: 64, k: 64 }, 16 * 1024);
+        assert!(t.footprint() <= 16 * 1024);
+        assert!(t.m >= 16 && t.n >= 64);
+    }
+
+    #[test]
+    fn tile_clamped_to_gemm() {
+        let g = Gemm::new(8, 8, 8);
+        let t = BaselineModel::block_tile(&g, Tile { m: 16, n: 64, k: 64 }, 16 * 1024);
+        assert_eq!(t, Tile { m: 8, n: 8, k: 8 });
+    }
+
+    #[test]
+    fn nest_valid_for_odd_shapes() {
+        let arch = model();
+        let bm = BaselineModel::new(&arch);
+        for g in [
+            Gemm::new(12544, 64, 147),
+            Gemm::new(1, 1000, 2048),
+            Gemm::new(512, 1024, 1024),
+            Gemm::new(3, 5, 7),
+        ] {
+            assert!(bm.nest(&g).validate().is_ok(), "{g}");
+        }
+    }
+
+    #[test]
+    fn peak_throughput_for_large_gemms() {
+        let arch = model();
+        let bm = BaselineModel::new(&arch);
+        let m = bm.evaluate(&Gemm::new(4096, 4096, 4096));
+        assert!(m.gflops <= arch.tensor_core.peak_gops() * 1.001);
+        assert!(m.gflops > 0.8 * arch.tensor_core.peak_gops(), "{}", m.gflops);
+        assert!(m.utilization > 0.9);
+    }
+
+    #[test]
+    fn small_m_still_utilizes_partially() {
+        // §VI-C: flexible mapping keeps baseline competitive at small M
+        // (it loses parallelism only on the PE rows).
+        let arch = model();
+        let bm = BaselineModel::new(&arch);
+        let m = bm.evaluate(&Gemm::new(1, 4096, 4096));
+        assert!(m.utilization >= 1.0 / 16.0 - 1e-9, "{}", m.utilization);
+    }
+
+    #[test]
+    fn energy_scales_with_work() {
+        let arch = model();
+        let bm = BaselineModel::new(&arch);
+        let small = bm.evaluate(&Gemm::new(256, 256, 256));
+        let large = bm.evaluate(&Gemm::new(1024, 1024, 1024));
+        assert!(large.energy_pj > small.energy_pj);
+        // but energy *per MAC* improves or holds with amortization
+        assert!(large.fj_per_mac() <= small.fj_per_mac() * 1.5);
+    }
+
+    #[test]
+    fn baseline_pays_rf_and_pebuf_energy() {
+        // The costs CiM integration eliminates must be present here.
+        let arch = model();
+        let bm = BaselineModel::new(&arch);
+        let m = bm.evaluate(&Gemm::new(512, 1024, 1024));
+        assert!(m.breakdown.rf_pj > 0.0);
+        assert!(m.breakdown.pe_buf_pj > 0.0);
+    }
+
+    #[test]
+    fn memory_bound_gemv() {
+        let arch = model();
+        let bm = BaselineModel::new(&arch);
+        let m = bm.evaluate(&Gemm::new(1, 256, 512));
+        assert!(m.memory_bound());
+    }
+}

@@ -1,0 +1,401 @@
+//! Analytical cost model (paper §V-D).
+//!
+//! Total energy = MAC energy + weighted memory accesses + temporal
+//! reductions. Throughput assumes a fully pipelined system: total
+//! cycles = max(compute cycles, per-level memory cycles). TOPS/W is
+//! ops per pJ; GFLOPS is ops per ns at 1 GHz.
+
+pub mod access;
+pub mod baseline;
+
+pub use baseline::BaselineModel;
+
+use crate::arch::{CimSystem, MemLevel};
+use crate::cost::access::fill_at;
+use crate::mapping::loopnest::{Dim, Tensor};
+use crate::mapping::Mapping;
+use crate::workload::Gemm;
+
+/// Energy breakdown in pJ (Fig 13's stacked bars).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub dram_pj: f64,
+    pub smem_pj: f64,
+    pub rf_pj: f64,
+    pub pe_buf_pj: f64,
+    pub mac_pj: f64,
+    pub reduction_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.dram_pj + self.smem_pj + self.rf_pj + self.pe_buf_pj + self.mac_pj + self.reduction_pj
+    }
+
+    pub fn add_level(&mut self, lvl: MemLevel, pj: f64) {
+        match lvl {
+            MemLevel::Dram => self.dram_pj += pj,
+            MemLevel::Smem => self.smem_pj += pj,
+            MemLevel::RegisterFile => self.rf_pj += pj,
+            MemLevel::PeBuffer => self.pe_buf_pj += pj,
+        }
+    }
+}
+
+/// Evaluation result for one GEMM on one system (§V-D metrics).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    pub macs: u64,
+    pub ops: u64,
+    pub energy_pj: f64,
+    pub breakdown: EnergyBreakdown,
+    /// Tera-operations per second per watt = ops / pJ.
+    pub tops_per_watt: f64,
+    pub compute_cycles: u64,
+    pub dram_cycles: u64,
+    pub smem_cycles: u64,
+    /// max(compute, dram, smem) — fully pipelined overlap.
+    pub total_cycles: u64,
+    /// Giga-ops per second at 1 GHz.
+    pub gflops: f64,
+    /// Fraction of MAC positions occupied (CiM) or PE-cycles used
+    /// (baseline).
+    pub utilization: f64,
+    /// Bytes moved at the DRAM boundary (roofline analysis).
+    pub dram_bytes: u64,
+    /// Bytes moved at the SMEM boundary.
+    pub smem_bytes: u64,
+}
+
+impl Metrics {
+    /// Energy per MAC in femtojoules (Fig 13's y-axis).
+    pub fn fj_per_mac(&self) -> f64 {
+        1000.0 * self.energy_pj / self.macs as f64
+    }
+
+    /// Whether the run is memory-bound (bandwidth throttled).
+    pub fn memory_bound(&self) -> bool {
+        self.total_cycles > self.compute_cycles
+    }
+}
+
+/// Analytical cost model for a CiM-integrated system.
+#[derive(Debug, Clone)]
+pub struct CostModel<'a> {
+    sys: &'a CimSystem,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(sys: &'a CimSystem) -> Self {
+        CostModel { sys }
+    }
+
+    /// Evaluate a mapping of `gemm` on the system.
+    pub fn evaluate(&self, gemm: &Gemm, mapping: &Mapping) -> Metrics {
+        assert_eq!(*gemm, mapping.gemm, "mapping was built for a different GEMM");
+        let sys = self.sys;
+        let e = &sys.arch.energy;
+        let nest = &mapping.nest;
+        let macs = gemm.macs();
+        let ops = gemm.ops();
+
+        // Residency chains (see DESIGN.md "Model notes"): with an
+        // on-chip staging level (CiM at RF stages tiles in SMEM) the
+        // input/output chains pass through it; CiM at SMEM streams
+        // directly from DRAM. Weights always load straight into the
+        // CiM arrays.
+        let staging = sys.staging_level();
+        let has_staging = staging != MemLevel::Dram;
+
+        let mut bd = EnergyBreakdown::default();
+        let mut dram_bytes: u64 = 0;
+        let mut smem_bytes: u64 = 0;
+        let mut track = |lvl: MemLevel, elems: u64| match lvl {
+            MemLevel::Dram => dram_bytes += elems,
+            MemLevel::Smem => smem_bytes += elems,
+            _ => {}
+        };
+
+        // --- Inputs (A) ---
+        // Innermost fill streams into the primitive's input driver,
+        // whose energy is folded into the per-MAC cost (Fig 5); we pay
+        // the read at the source level.
+        let a_inner = fill_at(nest, Tensor::Input, 2);
+        if has_staging {
+            let a_stage = fill_at(nest, Tensor::Input, 1);
+            bd.add_level(MemLevel::Dram, a_stage.elems() as f64 * e.elem_pj(MemLevel::Dram));
+            track(MemLevel::Dram, a_stage.elems());
+            bd.add_level(staging, a_stage.elems() as f64 * e.elem_pj(staging)); // write
+            bd.add_level(staging, a_inner.elems() as f64 * e.elem_pj(staging)); // read
+            track(staging, a_stage.elems() + a_inner.elems());
+        } else {
+            bd.add_level(MemLevel::Dram, a_inner.elems() as f64 * e.elem_pj(MemLevel::Dram));
+            track(MemLevel::Dram, a_inner.elems());
+        }
+
+        // --- Weights (W) ---
+        // DRAM read + write into the CiM host level per (re)load.
+        // Weight duplication loads every replica (m_prims copies).
+        let w_load = fill_at(nest, Tensor::Weight, 2);
+        let w_elems = w_load.elems().saturating_mul(mapping.spatial.m_prims);
+        bd.add_level(MemLevel::Dram, w_elems as f64 * e.elem_pj(MemLevel::Dram));
+        track(MemLevel::Dram, w_elems);
+        bd.add_level(sys.level, w_elems as f64 * e.elem_pj(sys.level));
+        if sys.level == MemLevel::Smem {
+            track(MemLevel::Smem, 0); // host writes are in-array, not SMEM port traffic
+        }
+
+        // --- Outputs (Z) ---
+        // Each residency eviction writes outward; each revisit reloads
+        // partial sums (read) and merges them (temporal reduction).
+        let mut reductions: u64 = 0;
+        let z_inner = fill_at(nest, Tensor::Output, 2);
+        let outer_of_inner = if has_staging { staging } else { MemLevel::Dram };
+        bd.add_level(outer_of_inner, z_inner.elems() as f64 * e.elem_pj(outer_of_inner));
+        bd.add_level(outer_of_inner, z_inner.partial_elems() as f64 * e.elem_pj(outer_of_inner));
+        track(outer_of_inner, z_inner.elems() + z_inner.partial_elems());
+        reductions += z_inner.partial_elems();
+        if has_staging {
+            let z_stage = fill_at(nest, Tensor::Output, 1);
+            // SMEM tile evictions to DRAM (write) + partial refills (read).
+            bd.add_level(MemLevel::Dram, z_stage.elems() as f64 * e.elem_pj(MemLevel::Dram));
+            bd.add_level(
+                MemLevel::Dram,
+                z_stage.partial_elems() as f64 * e.elem_pj(MemLevel::Dram),
+            );
+            track(MemLevel::Dram, z_stage.elems() + z_stage.partial_elems());
+            // SMEM side of those transfers.
+            bd.add_level(staging, z_stage.elems() as f64 * e.elem_pj(staging));
+            bd.add_level(staging, z_stage.partial_elems() as f64 * e.elem_pj(staging));
+            track(staging, z_stage.elems() + z_stage.partial_elems());
+            reductions += z_stage.partial_elems();
+        }
+
+        // --- Compute ---
+        bd.mac_pj = macs as f64 * sys.primitive.mac_energy_pj;
+        bd.reduction_pj = reductions as f64 * e.reduction_pj;
+
+        let energy_pj = bd.total_pj();
+
+        // --- Cycles ---
+        let inner_sweeps: u64 = nest.blocks[..2]
+            .iter()
+            .flat_map(|b| b.loops.iter())
+            .map(|l| l.factor)
+            .product();
+        // Weight duplication splits the streamed M rows across the
+        // replica groups, dividing the sequential row count.
+        let m1 = nest.blocks[2]
+            .dim_factor(Dim::M)
+            .div_ceil(mapping.spatial.m_prims);
+        let compute_cycles = inner_sweeps
+            * m1
+            * mapping.spatial.passes_per_row(sys)
+            * sys.primitive.latency_cycles();
+        let dram_bw = sys.arch.level(MemLevel::Dram).bandwidth_bytes_per_cycle;
+        let smem_bw = sys.arch.level(MemLevel::Smem).bandwidth_bytes_per_cycle;
+        let dram_cycles = (dram_bytes as f64 / dram_bw).ceil() as u64;
+        let smem_cycles = if sys.level == MemLevel::Smem {
+            0 // CiM arrays are the SMEM; its port bandwidth is not on the path
+        } else {
+            (smem_bytes as f64 / smem_bw).ceil() as u64
+        };
+        let total_cycles = compute_cycles.max(dram_cycles).max(smem_cycles).max(1);
+
+        Metrics {
+            macs,
+            ops,
+            energy_pj,
+            breakdown: bd,
+            tops_per_watt: ops as f64 / energy_pj,
+            compute_cycles,
+            dram_cycles,
+            smem_cycles,
+            total_cycles,
+            gflops: ops as f64 / total_cycles as f64,
+            utilization: mapping.spatial.utilization(sys),
+            dram_bytes,
+            smem_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Architecture, SmemConfig};
+    use crate::cim::CimPrimitive;
+    use crate::mapping::PriorityMapper;
+
+    fn rf_sys(p: CimPrimitive) -> CimSystem {
+        CimSystem::at_level(&Architecture::default_sm(), p, MemLevel::RegisterFile)
+    }
+
+    fn eval(sys: &CimSystem, g: Gemm) -> Metrics {
+        let m = PriorityMapper::new(sys).map(&g);
+        CostModel::new(sys).evaluate(&g, &m)
+    }
+
+    #[test]
+    fn energy_positive_and_consistent() {
+        let sys = rf_sys(CimPrimitive::digital_6t());
+        let m = eval(&sys, Gemm::new(512, 1024, 1024));
+        assert!(m.energy_pj > 0.0);
+        assert!((m.breakdown.total_pj() - m.energy_pj).abs() < 1e-6);
+        assert!(m.tops_per_watt > 0.0);
+        assert!(m.gflops > 0.0);
+    }
+
+    #[test]
+    fn large_regular_gemm_hits_paper_magnitudes() {
+        // §VI-A: CiM at RF reaches roughly 1.7-2 TOPS/W for large
+        // regular shapes with D-1, bounded by ~3 TOPS/W overall.
+        let sys = rf_sys(CimPrimitive::digital_6t());
+        let m = eval(&sys, Gemm::new(512, 1024, 1024));
+        assert!(
+            m.tops_per_watt > 0.8 && m.tops_per_watt < 4.0,
+            "TOPS/W = {}",
+            m.tops_per_watt
+        );
+    }
+
+    #[test]
+    fn gemv_is_memory_bound_and_inefficient() {
+        // §VI-C: M=1 layers collapse to ~0.03 TOPS/W, dominated by DRAM.
+        let sys = rf_sys(CimPrimitive::digital_6t());
+        let gemv = eval(&sys, Gemm::new(1, 4096, 4096));
+        let gemm = eval(&sys, Gemm::new(512, 4096, 4096));
+        assert!(gemv.tops_per_watt < 0.1, "{}", gemv.tops_per_watt);
+        assert!(gemv.memory_bound());
+        assert!(gemm.tops_per_watt > 10.0 * gemv.tops_per_watt);
+    }
+
+    #[test]
+    fn throughput_capped_by_peak() {
+        let sys = rf_sys(CimPrimitive::digital_6t());
+        for g in [
+            Gemm::new(512, 1024, 1024),
+            Gemm::new(4096, 4096, 4096),
+            Gemm::new(64, 64, 64),
+        ] {
+            let m = eval(&sys, g);
+            assert!(
+                m.gflops <= sys.peak_gops() * 1.001,
+                "{g}: {} > peak {}",
+                m.gflops,
+                sys.peak_gops()
+            );
+        }
+    }
+
+    #[test]
+    fn large_gemm_approaches_peak() {
+        let sys = rf_sys(CimPrimitive::digital_6t());
+        let m = eval(&sys, Gemm::new(1024, 4096, 4096));
+        assert!(
+            m.gflops > 0.6 * sys.peak_gops(),
+            "{} vs peak {}",
+            m.gflops,
+            sys.peak_gops()
+        );
+    }
+
+    #[test]
+    fn analog8t_lowest_energy_for_amortized_shapes() {
+        // Table V "What": Analog-8T achieves the highest energy
+        // efficiency once memory costs amortize — i.e. when the
+        // reduction dimension fits the primitives' in-situ capability
+        // (the paper's own qualifier: "the size of CiM primitive based
+        // accelerators should be tailored to accommodate
+        // workload-specific reductions in dimension K").
+        let g = Gemm::new(4096, 4096, 128);
+        let a2 = eval(&rf_sys(CimPrimitive::analog_8t()), g);
+        let d1 = eval(&rf_sys(CimPrimitive::digital_6t()), g);
+        let d2 = eval(&rf_sys(CimPrimitive::digital_8t()), g);
+        assert!(a2.tops_per_watt > d1.tops_per_watt, "{} vs {}", a2.tops_per_watt, d1.tops_per_watt);
+        assert!(a2.tops_per_watt > d2.tops_per_watt);
+    }
+
+    #[test]
+    fn large_k_erodes_analog_advantage() {
+        // Counterpart: when K far exceeds the reduction capability,
+        // partial-sum traffic penalizes the narrow-K0 analog macro
+        // (Fig 10(c) mechanism).
+        let small_k = Gemm::new(4096, 4096, 128);
+        let large_k = Gemm::new(4096, 4096, 8192);
+        let ratio = |g: Gemm| {
+            eval(&rf_sys(CimPrimitive::analog_8t()), g).tops_per_watt
+                / eval(&rf_sys(CimPrimitive::digital_6t()), g).tops_per_watt
+        };
+        assert!(ratio(large_k) < ratio(small_k));
+    }
+
+    #[test]
+    fn digital6t_highest_throughput() {
+        // Table V "What": D-1's full row/column parallelism wins
+        // throughput for medium/large shapes.
+        let g = Gemm::new(1024, 1024, 1024);
+        let d1 = eval(&rf_sys(CimPrimitive::digital_6t()), g);
+        for p in [
+            CimPrimitive::analog_6t(),
+            CimPrimitive::analog_8t(),
+            CimPrimitive::digital_8t(),
+        ] {
+            let other = eval(&rf_sys(p.clone()), g);
+            assert!(
+                d1.gflops >= other.gflops,
+                "D-1 {} vs {} {}",
+                d1.gflops,
+                p.name,
+                other.gflops
+            );
+        }
+    }
+
+    #[test]
+    fn smem_configb_outperforms_rf_throughput() {
+        // §VI-C: configB exceeds RF throughput ~10x via 16x primitives.
+        let arch = Architecture::default_sm();
+        let rf = rf_sys(CimPrimitive::digital_6t());
+        let smem = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        let g = Gemm::new(2048, 4096, 4096);
+        let m_rf = eval(&rf, g);
+        let m_smem = eval(&smem, g);
+        assert!(
+            m_smem.gflops > 5.0 * m_rf.gflops,
+            "smem {} vs rf {}",
+            m_smem.gflops,
+            m_rf.gflops
+        );
+    }
+
+    #[test]
+    fn smem_configa_worse_energy_than_rf() {
+        // §VI-C: same primitive count at SMEM loses the intermediate
+        // staging level -> more DRAM accesses -> lower TOPS/W.
+        let arch = Architecture::default_sm();
+        let rf = rf_sys(CimPrimitive::digital_6t());
+        let smem_a = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigA);
+        let g = Gemm::new(2048, 1024, 1024);
+        assert!(eval(&rf, g).tops_per_watt > eval(&smem_a, g).tops_per_watt);
+    }
+
+    #[test]
+    fn k_beyond_reduction_capacity_raises_partial_traffic() {
+        // Fig 10(c): K past the in-CiM reduction capability costs
+        // partial-sum accesses -> fj/mac rises.
+        let sys = rf_sys(CimPrimitive::digital_6t());
+        let small_k = eval(&sys, Gemm::new(512, 512, 256));
+        let big_k = eval(&sys, Gemm::new(512, 512, 8192));
+        assert!(big_k.breakdown.reduction_pj > small_k.breakdown.reduction_pj);
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let sys = rf_sys(CimPrimitive::digital_6t());
+        for g in [Gemm::new(16, 16, 16), Gemm::new(512, 1024, 1024)] {
+            let m = eval(&sys, g);
+            assert!((0.0..=1.0).contains(&m.utilization), "{g}: {}", m.utilization);
+        }
+    }
+}

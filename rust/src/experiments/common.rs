@@ -1,0 +1,71 @@
+//! Shared experiment context and output plumbing.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::arch::Architecture;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// Experiment execution context.
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    pub arch: Architecture,
+    /// Output directory for CSV mirrors (`results/` by default).
+    pub out_dir: PathBuf,
+    /// Quick mode: shrink dataset sizes / search budgets so the full
+    /// suite runs in seconds (used by tests and CI).
+    pub quick: bool,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx {
+            arch: Architecture::default_sm(),
+            out_dir: PathBuf::from("results"),
+            quick: false,
+            threads: crate::util::pool::default_threads(),
+            seed: crate::workload::synthetic::DEFAULT_SEED,
+        }
+    }
+}
+
+impl Ctx {
+    pub fn quick() -> Self {
+        Ctx {
+            quick: true,
+            ..Ctx::default()
+        }
+    }
+
+    /// Synthetic dataset size honouring quick mode.
+    pub fn synthetic_size(&self) -> usize {
+        if self.quick {
+            120
+        } else {
+            crate::workload::synthetic::DATASET_SIZE
+        }
+    }
+
+    /// Heuristic-search valid-sample budget honouring quick mode.
+    pub fn heuristic_budget(&self) -> u64 {
+        if self.quick {
+            60
+        } else {
+            500
+        }
+    }
+
+    /// Print a titled table and mirror it to `results/<id>.csv`.
+    pub fn emit(&self, id: &str, title: &str, table: &Table, csv: &Csv) -> Result<()> {
+        println!("\n== {title} ==");
+        print!("{table}");
+        let path = self.out_dir.join(format!("{id}.csv"));
+        csv.write(&path)?;
+        println!("[csv] {} rows -> {}", csv.n_rows(), path.display());
+        Ok(())
+    }
+}

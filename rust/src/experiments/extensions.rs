@@ -1,0 +1,392 @@
+//! Extension experiments beyond the paper's figures (DESIGN.md
+//! §Ablations + the §VI-D future-work items implemented here):
+//!
+//! * `scaling`   — multi-SM scaling (the "GPU has hundreds of SMs"
+//!   note of §V-A): throughput vs SM count until the memory wall.
+//! * `hybrid`    — the hybrid CiM + tensor-core router vs pure engines.
+//! * `optimality`— priority mapper vs exhaustive optimum (the gap the
+//!   paper never measures).
+//! * `ablation-duplication` — weight duplication (§IV-B future work).
+//! * `ablation-interconnect` — NoC cost sensitivity (§VI-D).
+//! * `zoo`       — the extended model zoo under the Table V questions.
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::arch::{CimSystem, Interconnect, MemLevel, MultiSm, SmemConfig};
+use crate::cim::CimPrimitive;
+use crate::coordinator::hybrid::{Engine, HybridRouter, RoutePolicy};
+use crate::cost::CostModel;
+use crate::mapping::{ExhaustiveMapper, Objective, PriorityMapper};
+use crate::util::csv::Csv;
+use crate::util::pool;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::workload::{models, synthetic, Gemm};
+
+pub fn run_scaling(ctx: &Ctx) -> Result<()> {
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let cost = CostModel::new(&sys);
+    let base = crate::cost::BaselineModel::new(&ctx.arch);
+    let g = Gemm::new(2048, 4096, 4096);
+    let cim_one = cost.evaluate(&g, &PriorityMapper::new(&sys).map(&g));
+    let tc_one = base.evaluate(&g);
+
+    let mut table = Table::new(vec![
+        "SMs", "CiM GFLOPS", "CiM bound", "Tcore GFLOPS", "Tcore bound",
+    ]);
+    let mut csv = Csv::new(vec!["sms", "cim_gflops", "cim_bound", "tc_gflops", "tc_bound"]);
+    for e in 0..=10 {
+        let n = 1u64 << e;
+        let ms = MultiSm::new(n);
+        let c = ms.scale(&cim_one);
+        let t = ms.scale(&tc_one);
+        let bound = |m: &crate::cost::Metrics| if m.memory_bound() { "memory" } else { "compute" };
+        table.row(vec![
+            n.to_string(),
+            format!("{:.0}", c.gflops),
+            bound(&c).to_string(),
+            format!("{:.0}", t.gflops),
+            bound(&t).to_string(),
+        ]);
+        csv.row(vec![
+            n.to_string(),
+            format!("{:.1}", c.gflops),
+            bound(&c).to_string(),
+            format!("{:.1}", t.gflops),
+            bound(&t).to_string(),
+        ]);
+    }
+    ctx.emit(
+        "scaling",
+        "Extension: multi-SM scaling on GEMM(2048,4096,4096), DRAM bandwidth ∝ SMs^0.5",
+        &table,
+        &csv,
+    )?;
+    println!(
+        "scaling knee (last compute-bound SM count): CiM = {}, Tcore = {}",
+        MultiSm::new(1).scaling_knee(&cim_one),
+        MultiSm::new(1).scaling_knee(&tc_one)
+    );
+    Ok(())
+}
+
+pub fn run_hybrid(ctx: &Ctx) -> Result<()> {
+    let sys = CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+    let mut table = Table::new(vec![
+        "workload",
+        "policy",
+        "CiM layers",
+        "hybrid TOPS/W",
+        "pure-CiM TOPS/W",
+        "pure-TC TOPS/W",
+        "hybrid GFLOPS",
+    ]);
+    let mut csv = Csv::new(vec![
+        "workload", "policy", "cim_layers", "total_layers", "hybrid_topsw", "cim_topsw",
+        "tc_topsw", "hybrid_gflops",
+    ]);
+    for wl in models::extended_dataset() {
+        for (pname, policy) in [
+            ("energy", RoutePolicy::MinEnergy),
+            ("latency", RoutePolicy::MinLatency),
+            ("edp", RoutePolicy::MinEdp),
+        ] {
+            let router = HybridRouter::new(&sys, &ctx.arch, policy);
+            let hybrid = router.route(&wl);
+            let cim = router.route_pure(&wl, Engine::Cim);
+            let tc = router.route_pure(&wl, Engine::TensorCore);
+            table.row(vec![
+                wl.name.clone(),
+                pname.to_string(),
+                format!("{}/{}", hybrid.cim_layers(), hybrid.placements.len()),
+                format!("{:.3}", hybrid.tops_per_watt()),
+                format!("{:.3}", cim.tops_per_watt()),
+                format!("{:.3}", tc.tops_per_watt()),
+                format!("{:.0}", hybrid.gflops()),
+            ]);
+            csv.row(vec![
+                wl.name.clone(),
+                pname.to_string(),
+                hybrid.cim_layers().to_string(),
+                hybrid.placements.len().to_string(),
+                format!("{:.4}", hybrid.tops_per_watt()),
+                format!("{:.4}", cim.tops_per_watt()),
+                format!("{:.4}", tc.tops_per_watt()),
+                format!("{:.1}", hybrid.gflops()),
+            ]);
+        }
+    }
+    ctx.emit(
+        "hybrid",
+        "Extension: hybrid CiM+tensor-core routing (D-1 @ SMEM/configB) vs pure engines",
+        &table,
+        &csv,
+    )
+}
+
+pub fn run_optimality(ctx: &Ctx) -> Result<()> {
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    // Keep the exhaustive space tractable: modest shapes.
+    let shapes = if ctx.quick {
+        vec![Gemm::new(64, 128, 256), Gemm::new(256, 512, 512)]
+    } else {
+        vec![
+            Gemm::new(64, 128, 256),
+            Gemm::new(256, 512, 512),
+            Gemm::new(512, 512, 1024),
+            Gemm::new(1, 512, 512),
+            Gemm::new(196, 256, 1024),
+        ]
+    };
+    let mut table = Table::new(vec![
+        "GEMM", "candidates", "optimal pJ", "priority pJ", "gap", "optimal cycles",
+        "priority cycles",
+    ]);
+    let mut csv = Csv::new(vec![
+        "m", "n", "k", "candidates", "opt_pj", "ours_pj", "gap", "opt_cycles", "ours_cycles",
+    ]);
+    let cost = CostModel::new(&sys);
+    let rows = pool::map_parallel(&shapes, ctx.threads, |g| {
+        let exact = ExhaustiveMapper::new(&sys, Objective::Energy).map(g);
+        let ours = cost.evaluate(g, &PriorityMapper::new(&sys).map(g));
+        (*g, exact, ours)
+    });
+    for (g, exact, ours) in rows {
+        let gap = ours.energy_pj / exact.metrics.energy_pj;
+        table.row(vec![
+            g.to_string(),
+            exact.candidates.to_string(),
+            format!("{:.3e}", exact.metrics.energy_pj),
+            format!("{:.3e}", ours.energy_pj),
+            format!("{gap:.3}x"),
+            exact.metrics.total_cycles.to_string(),
+            ours.total_cycles.to_string(),
+        ]);
+        csv.row(vec![
+            g.m.to_string(),
+            g.n.to_string(),
+            g.k.to_string(),
+            exact.candidates.to_string(),
+            format!("{:.1}", exact.metrics.energy_pj),
+            format!("{:.1}", ours.energy_pj),
+            format!("{gap:.4}"),
+            exact.metrics.total_cycles.to_string(),
+            ours.total_cycles.to_string(),
+        ]);
+    }
+    ctx.emit(
+        "optimality",
+        "Extension: priority mapper vs exhaustive optimum (energy objective)",
+        &table,
+        &csv,
+    )
+}
+
+pub fn run_duplication(ctx: &Ctx) -> Result<()> {
+    // Weight duplication matters when primitives outnumber the weight
+    // tiles: small weights, large M.
+    let sys = CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+    let cost = CostModel::new(&sys);
+    let shapes = [
+        Gemm::new(8192, 16, 256),
+        Gemm::new(4096, 32, 256),
+        Gemm::new(12544, 64, 147),
+        Gemm::new(2048, 64, 512),
+        Gemm::new(512, 1024, 1024), // big weights: duplication ~off
+    ];
+    let mut table = Table::new(vec![
+        "GEMM", "dup factor", "GFLOPS off", "GFLOPS on", "TOPS/W off", "TOPS/W on",
+    ]);
+    let mut csv = Csv::new(vec![
+        "m", "n", "k", "dup", "gflops_off", "gflops_on", "topsw_off", "topsw_on",
+    ]);
+    for g in shapes {
+        let off = cost.evaluate(&g, &PriorityMapper::new(&sys).map(&g));
+        let dup_mapping = PriorityMapper::new(&sys).with_weight_duplication().map(&g);
+        let on = cost.evaluate(&g, &dup_mapping);
+        table.row(vec![
+            g.to_string(),
+            dup_mapping.spatial.m_prims.to_string(),
+            format!("{:.0}", off.gflops),
+            format!("{:.0}", on.gflops),
+            format!("{:.3}", off.tops_per_watt),
+            format!("{:.3}", on.tops_per_watt),
+        ]);
+        csv.row(vec![
+            g.m.to_string(),
+            g.n.to_string(),
+            g.k.to_string(),
+            dup_mapping.spatial.m_prims.to_string(),
+            format!("{:.1}", off.gflops),
+            format!("{:.1}", on.gflops),
+            format!("{:.4}", off.tops_per_watt),
+            format!("{:.4}", on.tops_per_watt),
+        ]);
+    }
+    ctx.emit(
+        "ablation-duplication",
+        "Extension (§IV-B future work): weight duplication across idle primitives (D-1 @ SMEM/configB)",
+        &table,
+        &csv,
+    )
+}
+
+pub fn run_interconnect(ctx: &Ctx) -> Result<()> {
+    let dataset = synthetic::dataset(ctx.seed, ctx.synthetic_size().min(200));
+    let mut table = Table::new(vec![
+        "system", "hop pJ", "geomean TOPS/W (no NoC)", "with NoC", "overhead",
+    ]);
+    let mut csv = Csv::new(vec!["system", "hop_pj", "topsw_base", "topsw_noc", "overhead_pct"]);
+    for (label, sys) in [
+        (
+            "D-1 @ RF",
+            CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile),
+        ),
+        (
+            "D-1 @ SMEM/B",
+            CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB),
+        ),
+    ] {
+        for hop in [0.03, 0.06, 0.12] {
+            let noc = Interconnect { hop_pj: hop };
+            let rows = pool::map_parallel(&dataset, ctx.threads, |g| {
+                let m = PriorityMapper::new(&sys).map(g);
+                let base = CostModel::new(&sys).evaluate(g, &m);
+                let with = base.energy_pj + noc.energy_pj(&m);
+                (base.ops as f64 / base.energy_pj, base.ops as f64 / with)
+            });
+            let base: Vec<f64> = rows.iter().map(|r| r.0).collect();
+            let with: Vec<f64> = rows.iter().map(|r| r.1).collect();
+            let (gb, gw) = (geomean(&base), geomean(&with));
+            table.row(vec![
+                label.to_string(),
+                format!("{hop}"),
+                format!("{gb:.3}"),
+                format!("{gw:.3}"),
+                format!("{:.1}%", 100.0 * (gb / gw - 1.0)),
+            ]);
+            csv.row(vec![
+                label.to_string(),
+                format!("{hop}"),
+                format!("{gb:.4}"),
+                format!("{gw:.4}"),
+                format!("{:.2}", 100.0 * (gb / gw - 1.0)),
+            ]);
+        }
+    }
+    ctx.emit(
+        "ablation-interconnect",
+        "Extension (§VI-D): NoC reduction/multicast cost sensitivity",
+        &table,
+        &csv,
+    )
+}
+
+pub fn run_zoo(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(vec![
+        "workload", "layers", "best system (energy)", "TOPS/W", "vs Tcore",
+    ]);
+    let mut csv = Csv::new(vec!["workload", "layers", "best_system", "topsw", "vs_tcore"]);
+    let base = crate::cost::BaselineModel::new(&ctx.arch);
+    for wl in models::extended_dataset() {
+        let gemms: Vec<Gemm> = wl.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+        let mut best: Option<(f64, String)> = None;
+        for p in CimPrimitive::all() {
+            for sys in [
+                CimSystem::at_level(&ctx.arch, p.clone(), MemLevel::RegisterFile),
+                CimSystem::at_smem(&ctx.arch, p.clone(), SmemConfig::ConfigB),
+            ] {
+                let cost = CostModel::new(&sys);
+                let t: Vec<f64> = pool::map_parallel(&gemms, ctx.threads, |g| {
+                    cost.evaluate(g, &PriorityMapper::new(&sys).map(g)).tops_per_watt
+                });
+                let g = geomean(&t);
+                if best.as_ref().map_or(true, |(b, _)| g > *b) {
+                    best = Some((g, sys.label()));
+                }
+            }
+        }
+        let tc: Vec<f64> = gemms.iter().map(|g| base.evaluate(g).tops_per_watt).collect();
+        let (score, label) = best.unwrap();
+        let ratio = score / geomean(&tc);
+        table.row(vec![
+            wl.name.clone(),
+            gemms.len().to_string(),
+            label.clone(),
+            format!("{score:.3}"),
+            format!("{ratio:.2}x"),
+        ]);
+        csv.row(vec![
+            wl.name.clone(),
+            gemms.len().to_string(),
+            label,
+            format!("{score:.4}"),
+            format!("{ratio:.4}"),
+        ]);
+    }
+    ctx.emit(
+        "zoo",
+        "Extension: What/Where recommendation over the extended model zoo",
+        &table,
+        &csv,
+    )
+}
+
+pub fn run_serving(ctx: &Ctx) -> Result<()> {
+    use crate::coordinator::trace::{synthetic_trace, EnginePool, TraceSimulator};
+    use crate::coordinator::hybrid::HybridRouter;
+    use crate::util::rng::Rng;
+
+    let sys = CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+    let mut rng = Rng::new(ctx.seed);
+    let n = if ctx.quick { 30 } else { 200 };
+    let trace = synthetic_trace(
+        &[models::bert_large(), models::dlrm(), models::gpt_j()],
+        n,
+        1_000_000.0,
+        &mut rng,
+    );
+
+    let mut table = Table::new(vec![
+        "pool", "p50 latency (kcyc)", "p99 (kcyc)", "req/s", "CiM util", "TC util", "energy (mJ)",
+    ]);
+    let mut csv = Csv::new(vec![
+        "pool", "p50_cycles", "p99_cycles", "req_per_s", "cim_util", "tc_util", "energy_mj",
+    ]);
+    for (name, pool) in [
+        ("hybrid", EnginePool::HybridBoth),
+        ("cim-only", EnginePool::CimOnly),
+        ("tcore-only", EnginePool::TensorCoreOnly),
+    ] {
+        let sim = TraceSimulator::new(
+            HybridRouter::new(&sys, &ctx.arch, RoutePolicy::MinLatency),
+            pool,
+        );
+        let r = sim.run(&trace);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.0}", r.latency_percentile(50.0) / 1e3),
+            format!("{:.0}", r.latency_percentile(99.0) / 1e3),
+            format!("{:.0}", r.requests_per_second()),
+            format!("{:.2}", r.cim_utilization()),
+            format!("{:.2}", r.tc_utilization()),
+            format!("{:.2}", r.total_energy_pj / 1e9),
+        ]);
+        csv.row(vec![
+            name.to_string(),
+            format!("{:.0}", r.latency_percentile(50.0)),
+            format!("{:.0}", r.latency_percentile(99.0)),
+            format!("{:.1}", r.requests_per_second()),
+            format!("{:.4}", r.cim_utilization()),
+            format!("{:.4}", r.tc_utilization()),
+            format!("{:.4}", r.total_energy_pj / 1e9),
+        ]);
+    }
+    ctx.emit(
+        "serving",
+        "Extension: trace-driven serving on the hybrid SM (200 mixed requests, Poisson arrivals)",
+        &table,
+        &csv,
+    )
+}

@@ -1,0 +1,78 @@
+//! Fig 10 — how GEMM dimensions shape the metrics for Digital-6T @ RF:
+//! (a) weight matrix (N = K) sweeping M, (b) input matrix (M = K)
+//! sweeping N, (c) output matrix (M = N) sweeping K.
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::arch::{CimSystem, MemLevel};
+use crate::cim::CimPrimitive;
+use crate::cost::{CostModel, Metrics};
+use crate::mapping::PriorityMapper;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workload::Gemm;
+
+fn grid(ctx: &Ctx) -> Vec<u64> {
+    let full: Vec<u64> = (4..=13).map(|e| 1u64 << e).collect();
+    if ctx.quick {
+        full.into_iter().step_by(2).collect()
+    } else {
+        full
+    }
+}
+
+fn eval(sys: &CimSystem, g: Gemm) -> Metrics {
+    CostModel::new(sys).evaluate(&g, &PriorityMapper::new(sys).map(&g))
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let dims = grid(ctx);
+
+    let panels: [(&str, &str, fn(u64, u64) -> Gemm); 3] = [
+        ("a", "weight (N=K=X), vary M", |x, v| Gemm::new(v, x, x)),
+        ("b", "input (M=K=X), vary N", |x, v| Gemm::new(x, v, x)),
+        ("c", "output (M=N=X), vary K", |x, v| Gemm::new(x, x, v)),
+    ];
+
+    let mut csv = Csv::new(vec![
+        "panel", "x", "varied", "m", "n", "k", "tops_w", "gflops", "utilization",
+    ]);
+    for (panel, title, make) in panels {
+        let mut table = Table::new(vec!["X", "varied dim", "TOPS/W", "GFLOPS", "util"]);
+        for &x in &dims {
+            for &v in &dims {
+                let g = make(x, v);
+                let m = eval(&sys, g);
+                // Print a readable subset; CSV carries the full grid.
+                if v == x || v == 16 || v == 8192 || (v == 256 && !ctx.quick) {
+                    table.row(vec![
+                        x.to_string(),
+                        v.to_string(),
+                        format!("{:.3}", m.tops_per_watt),
+                        format!("{:.0}", m.gflops),
+                        format!("{:.2}", m.utilization),
+                    ]);
+                }
+                csv.row(vec![
+                    panel.to_string(),
+                    x.to_string(),
+                    v.to_string(),
+                    g.m.to_string(),
+                    g.n.to_string(),
+                    g.k.to_string(),
+                    format!("{:.4}", m.tops_per_watt),
+                    format!("{:.1}", m.gflops),
+                    format!("{:.4}", m.utilization),
+                ]);
+            }
+        }
+        println!("\n-- Fig 10({panel}): {title} --");
+        print!("{table}");
+    }
+    let path = ctx.out_dir.join("fig10.csv");
+    csv.write(&path)?;
+    println!("[csv] {} rows -> {}", csv.n_rows(), path.display());
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Fig 12 — change relative to the tensor-core baseline when
+//! integrating Digital-6T CiM at (a) RF and (b) SMEM (configB):
+//! mean ± σ of per-GEMM ratios per workload. Also prints the headline
+//! "up to" numbers (the paper quotes up to 3.4× TOPS/W and 15.6×
+//! throughput).
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::arch::SmemConfig;
+use crate::cim::CimPrimitive;
+use crate::coordinator::jobs::{Grid, SystemSpec};
+use crate::coordinator::report::WorkloadReport;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let grid = Grid {
+        arch: ctx.arch.clone(),
+        threads: ctx.threads,
+    };
+    let specs = [
+        SystemSpec::Baseline,
+        SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+        SystemSpec::CimAtSmem(CimPrimitive::digital_6t(), SmemConfig::ConfigB),
+    ];
+    let workloads: Vec<(String, Vec<crate::workload::Gemm>)> = models::real_dataset()
+        .into_iter()
+        .map(|w| {
+            let gemms = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+            (w.name, gemms)
+        })
+        .collect();
+    let jobs = grid.cross(&workloads, &specs);
+    let results = grid.run(&jobs);
+
+    let rf_label = specs[1].label(&ctx.arch);
+    let smem_label = specs[2].label(&ctx.arch);
+
+    let mut table = Table::new(vec![
+        "panel",
+        "workload",
+        "ΔTOPS/W mean",
+        "σ",
+        "ΔGFLOPS mean",
+        "σ",
+        "Δutil mean",
+        "σ",
+    ]);
+    let mut csv = Csv::new(vec![
+        "panel",
+        "workload",
+        "d_topsw_mean",
+        "d_topsw_std",
+        "d_gflops_mean",
+        "d_gflops_std",
+        "d_util_mean",
+        "d_util_std",
+        "d_topsw_max",
+        "d_gflops_max",
+    ]);
+
+    let mut headline_t = 0.0f64;
+    let mut headline_f = 0.0f64;
+    for (panel, label) in [("a:RF", &rf_label), ("b:SMEM", &smem_label)] {
+        for (name, _) in &workloads {
+            let rep = WorkloadReport::compare(name, &results, label, "Tensor-core");
+            headline_t = headline_t.max(rep.tops_per_watt_change.max);
+            headline_f = headline_f.max(rep.gflops_change.max);
+            table.row(vec![
+                panel.to_string(),
+                name.clone(),
+                format!("{:.2}x", rep.tops_per_watt_change.mean),
+                format!("{:.2}", rep.tops_per_watt_change.std_dev),
+                format!("{:.2}x", rep.gflops_change.mean),
+                format!("{:.2}", rep.gflops_change.std_dev),
+                format!("{:.2}x", rep.utilization_change.mean),
+                format!("{:.2}", rep.utilization_change.std_dev),
+            ]);
+            csv.row(vec![
+                panel.to_string(),
+                name.clone(),
+                format!("{:.4}", rep.tops_per_watt_change.mean),
+                format!("{:.4}", rep.tops_per_watt_change.std_dev),
+                format!("{:.4}", rep.gflops_change.mean),
+                format!("{:.4}", rep.gflops_change.std_dev),
+                format!("{:.4}", rep.utilization_change.mean),
+                format!("{:.4}", rep.utilization_change.std_dev),
+                format!("{:.4}", rep.tops_per_watt_change.max),
+                format!("{:.4}", rep.gflops_change.max),
+            ]);
+        }
+    }
+    ctx.emit(
+        "fig12",
+        "Fig 12: change vs tensor-core baseline (change > 1 = CiM wins)",
+        &table,
+        &csv,
+    )?;
+    println!(
+        "headline: up to {headline_t:.1}x energy efficiency, up to {headline_f:.1}x throughput \
+         (paper: up to 3.4x and 15.6x)"
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Fig 13 (appendix) — energy breakdown (fJ/compute) and throughput
+//! (GOPS) for square GEMMs 64..8192 across the tensor-core baseline and
+//! all four CiM primitives, at RF and at SMEM (configB), iso-area.
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::arch::{CimSystem, MemLevel, SmemConfig};
+use crate::cim::CimPrimitive;
+use crate::cost::{BaselineModel, CostModel, Metrics};
+use crate::mapping::PriorityMapper;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workload::{synthetic, Gemm};
+
+fn breakdown_row(g: &Gemm, system: &str, m: &Metrics) -> Vec<String> {
+    let per = |pj: f64| format!("{:.0}", 1000.0 * pj / m.macs as f64);
+    vec![
+        g.m.to_string(),
+        system.to_string(),
+        per(m.breakdown.dram_pj),
+        per(m.breakdown.smem_pj),
+        per(m.breakdown.rf_pj + m.breakdown.pe_buf_pj),
+        per(m.breakdown.mac_pj + m.breakdown.reduction_pj),
+        format!("{:.0}", m.fj_per_mac()),
+        format!("{:.0}", m.gflops),
+    ]
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let squares: Vec<Gemm> = if ctx.quick {
+        synthetic::square_series().into_iter().step_by(2).collect()
+    } else {
+        synthetic::square_series()
+    };
+
+    let mut csv = Csv::new(vec![
+        "level", "x", "system", "dram_fj", "smem_fj", "rf_pebuf_fj", "mac_fj", "total_fj_per_mac",
+        "gops",
+    ]);
+
+    for (level_name, level) in [("RF", MemLevel::RegisterFile), ("SMEM", MemLevel::Smem)] {
+        let mut table = Table::new(vec![
+            "X", "system", "DRAM fJ", "SMEM fJ", "RF+PE fJ", "MAC fJ", "total fJ/MAC", "GOPS",
+        ]);
+        for g in &squares {
+            // Baseline tensor core.
+            let base = BaselineModel::new(&ctx.arch).evaluate(g);
+            table.row(breakdown_row(g, "Tcore", &base));
+            let mut row = vec![level_name.to_string()];
+            row.extend(breakdown_row(g, "Tcore", &base));
+            csv.row(row);
+            // All four primitives.
+            for prim in CimPrimitive::all() {
+                let label = prim.short_label();
+                let sys = match level {
+                    MemLevel::RegisterFile => {
+                        CimSystem::at_level(&ctx.arch, prim.clone(), level)
+                    }
+                    _ => CimSystem::at_smem(&ctx.arch, prim.clone(), SmemConfig::ConfigB),
+                };
+                let m = CostModel::new(&sys).evaluate(g, &PriorityMapper::new(&sys).map(g));
+                table.row(breakdown_row(g, label, &m));
+                let mut row = vec![level_name.to_string()];
+                row.extend(breakdown_row(g, label, &m));
+                csv.row(row);
+            }
+        }
+        println!("\n-- Fig 13 ({level_name} integration) --");
+        print!("{table}");
+    }
+
+    let path = ctx.out_dir.join("fig13.csv");
+    csv.write(&path)?;
+    println!("[csv] {} rows -> {}", csv.n_rows(), path.display());
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Fig 2 — operations vs algorithmic reuse for the GEMMs of ML
+//! inference workloads (the memory- vs compute-intensive scatter).
+//! Shade (frequency) is reported as the occurrence count.
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(vec!["workload", "GEMM", "ops", "reuse (ops/B)", "count"]);
+    let mut csv = Csv::new(vec!["workload", "m", "n", "k", "ops", "algorithmic_reuse", "count"]);
+
+    for wl in models::real_dataset() {
+        for (g, count) in wl.unique_with_counts() {
+            table.row(vec![
+                wl.name.clone(),
+                g.to_string(),
+                format!("{:.3e}", g.ops() as f64),
+                format!("{:.1}", g.algorithmic_reuse()),
+                count.to_string(),
+            ]);
+            csv.row(vec![
+                wl.name.clone(),
+                g.m.to_string(),
+                g.n.to_string(),
+                g.k.to_string(),
+                g.ops().to_string(),
+                format!("{:.4}", g.algorithmic_reuse()),
+                count.to_string(),
+            ]);
+        }
+    }
+    ctx.emit(
+        "fig2",
+        "Fig 2: GEMM operations vs algorithmic reuse (INT8, batch 1)",
+        &table,
+        &csv,
+    )
+}

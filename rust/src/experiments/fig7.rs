@@ -1,0 +1,159 @@
+//! Fig 7 — priority mapper vs heuristic search: change in TOPS/W,
+//! GFLOPS and utilization (error bars: mean ± σ per workload family).
+//! Table II — user runtime of both mappers over 5/10/50 runs.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::arch::{CimSystem, MemLevel};
+use crate::cim::CimPrimitive;
+use crate::cost::CostModel;
+use crate::mapping::{HeuristicMapper, PriorityMapper};
+use crate::util::csv::Csv;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+use crate::workload::{models, synthetic, Gemm};
+
+/// The evaluation suite: real workloads plus a synthetic slice.
+fn suite(ctx: &Ctx) -> Vec<(String, Vec<Gemm>)> {
+    let mut out: Vec<(String, Vec<Gemm>)> = models::real_dataset()
+        .into_iter()
+        .map(|w| {
+            let gemms = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+            (w.name, gemms)
+        })
+        .collect();
+    let n_synth = if ctx.quick { 12 } else { 60 };
+    out.push((
+        "Synthetic".to_string(),
+        synthetic::dataset(ctx.seed, n_synth),
+    ));
+    out
+}
+
+struct Change {
+    tops_w: f64,
+    gflops: f64,
+    util: f64,
+}
+
+fn compare_one(sys: &CimSystem, gemm: &Gemm, budget: u64, seed: u64) -> Change {
+    let cost = CostModel::new(sys);
+    let ours = cost.evaluate(gemm, &PriorityMapper::new(sys).map(gemm));
+    let mut h = HeuristicMapper::new(sys);
+    h.valid_budget = budget;
+    let (hm, _) = h.map(gemm, &mut Rng::new(seed ^ gemm.m ^ gemm.n ^ gemm.k));
+    let base = cost.evaluate(gemm, &hm);
+    Change {
+        tops_w: ours.tops_per_watt / base.tops_per_watt,
+        gflops: ours.gflops / base.gflops,
+        util: ours.utilization / base.utilization.max(1e-12),
+    }
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let mut table = Table::new(vec![
+        "workload",
+        "n",
+        "ΔTOPS/W mean",
+        "σ",
+        "ΔGFLOPS mean",
+        "σ",
+        "Δutil mean",
+        "σ",
+    ]);
+    let mut csv = Csv::new(vec![
+        "workload", "m", "n", "k", "d_topsw", "d_gflops", "d_util",
+    ]);
+
+    for (name, gemms) in suite(ctx) {
+        let budget = ctx.heuristic_budget();
+        let seed = ctx.seed;
+        let changes = pool::map_parallel(&gemms, ctx.threads, |g| {
+            (*g, compare_one(&sys, g, budget, seed))
+        });
+        let t: Vec<f64> = changes.iter().map(|(_, c)| c.tops_w).collect();
+        let f: Vec<f64> = changes.iter().map(|(_, c)| c.gflops).collect();
+        let u: Vec<f64> = changes.iter().map(|(_, c)| c.util).collect();
+        let (st, sf, su) = (Summary::of(&t), Summary::of(&f), Summary::of(&u));
+        table.row(vec![
+            name.clone(),
+            t.len().to_string(),
+            format!("{:.2}x", st.mean),
+            format!("{:.2}", st.std_dev),
+            format!("{:.2}x", sf.mean),
+            format!("{:.2}", sf.std_dev),
+            format!("{:.2}x", su.mean),
+            format!("{:.2}", su.std_dev),
+        ]);
+        for (g, c) in &changes {
+            csv.row(vec![
+                name.clone(),
+                g.m.to_string(),
+                g.n.to_string(),
+                g.k.to_string(),
+                format!("{:.4}", c.tops_w),
+                format!("{:.4}", c.gflops),
+                format!("{:.4}", c.util),
+            ]);
+        }
+    }
+    ctx.emit(
+        "fig7",
+        "Fig 7: priority mapper vs heuristic search (Digital-6T @ RF), change > 1 means ours wins",
+        &table,
+        &csv,
+    )
+}
+
+/// Table II: wall-clock of generating mappings for 5/10/50 runs.
+/// One "run" = mapping the whole real GEMM suite once.
+pub fn run_table2(ctx: &Ctx) -> Result<()> {
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let gemms: Vec<Gemm> = suite(ctx).into_iter().flat_map(|(_, g)| g).collect();
+    let runs = if ctx.quick {
+        vec![2usize, 5]
+    } else {
+        vec![5, 10, 50]
+    };
+
+    let mut table = Table::new(vec!["runs", "our algorithm (s)", "heuristic search (s)"]);
+    let mut csv = Csv::new(vec!["runs", "ours_s", "heuristic_s"]);
+    for &n in &runs {
+        let t0 = Instant::now();
+        for _ in 0..n {
+            for g in &gemms {
+                std::hint::black_box(PriorityMapper::new(&sys).map(g));
+            }
+        }
+        let ours = t0.elapsed().as_secs_f64();
+
+        let budget = ctx.heuristic_budget();
+        let t0 = Instant::now();
+        for run in 0..n {
+            for g in &gemms {
+                let mut h = HeuristicMapper::new(&sys);
+                h.valid_budget = budget;
+                std::hint::black_box(h.map(g, &mut Rng::new(ctx.seed + run as u64)));
+            }
+        }
+        let heur = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            n.to_string(),
+            format!("{ours:.3}"),
+            format!("{heur:.3}"),
+        ]);
+        csv.row(vec![n.to_string(), format!("{ours:.6}"), format!("{heur:.6}")]);
+    }
+    ctx.emit(
+        "table2",
+        "Table II: mapping-generation user runtime (seconds)",
+        &table,
+        &csv,
+    )
+}

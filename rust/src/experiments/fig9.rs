@@ -1,0 +1,69 @@
+//! Fig 9 — energy-efficiency vs throughput scatter for the four CiM
+//! primitives at the register file under iso-area constraints, over the
+//! synthetic GEMM dataset (M, N, K ∈ [16, 8192]).
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::arch::{CimSystem, MemLevel};
+use crate::cim::CimPrimitive;
+use crate::cost::CostModel;
+use crate::mapping::PriorityMapper;
+use crate::util::csv::Csv;
+use crate::util::pool;
+use crate::util::stats::{percentile, Summary};
+use crate::util::table::Table;
+use crate::workload::synthetic;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let dataset = synthetic::dataset(ctx.seed, ctx.synthetic_size());
+    let mut table = Table::new(vec![
+        "primitive",
+        "count@RF",
+        "TOPS/W p50",
+        "TOPS/W max",
+        "GFLOPS p50",
+        "GFLOPS max",
+        "util mean",
+    ]);
+    let mut csv = Csv::new(vec![
+        "primitive", "m", "n", "k", "tops_w", "gflops", "utilization",
+    ]);
+
+    for prim in CimPrimitive::all() {
+        let sys = CimSystem::at_level(&ctx.arch, prim.clone(), MemLevel::RegisterFile);
+        let rows = pool::map_parallel(&dataset, ctx.threads, |g| {
+            let m = CostModel::new(&sys).evaluate(g, &PriorityMapper::new(&sys).map(g));
+            (*g, m)
+        });
+        let t: Vec<f64> = rows.iter().map(|(_, m)| m.tops_per_watt).collect();
+        let f: Vec<f64> = rows.iter().map(|(_, m)| m.gflops).collect();
+        let u: Vec<f64> = rows.iter().map(|(_, m)| m.utilization).collect();
+        table.row(vec![
+            prim.name.to_string(),
+            sys.count.to_string(),
+            format!("{:.2}", percentile(&t, 50.0)),
+            format!("{:.2}", Summary::of(&t).max),
+            format!("{:.0}", percentile(&f, 50.0)),
+            format!("{:.0}", Summary::of(&f).max),
+            format!("{:.2}", Summary::of(&u).mean),
+        ]);
+        for (g, m) in &rows {
+            csv.row(vec![
+                prim.name.to_string(),
+                g.m.to_string(),
+                g.n.to_string(),
+                g.k.to_string(),
+                format!("{:.4}", m.tops_per_watt),
+                format!("{:.1}", m.gflops),
+                format!("{:.4}", m.utilization),
+            ]);
+        }
+    }
+    ctx.emit(
+        "fig9",
+        "Fig 9: TOPS/W vs GFLOPS per CiM primitive @ RF (iso-area), synthetic dataset",
+        &table,
+        &csv,
+    )
+}

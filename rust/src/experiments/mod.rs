@@ -1,0 +1,63 @@
+//! Paper-artifact regenerators: one module per table/figure in the
+//! evaluation (see DESIGN.md §Per-experiment index).
+//!
+//! Every regenerator prints the paper's rows/series as an ASCII table
+//! and mirrors the full series into `results/<id>.csv`. Run via
+//! `repro experiment <id|all>`.
+
+pub mod ablations;
+pub mod common;
+pub mod extensions;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig2;
+pub mod fig7;
+pub mod fig9;
+pub mod ridge;
+pub mod table6;
+
+pub use common::Ctx;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig2", "fig7", "table2", "fig9", "fig10", "fig11", "fig12", "fig13", "table6", "roofline",
+    "ablation-threshold", "ablation-order", "ablation-duplication", "ablation-interconnect",
+    "scaling", "hybrid", "optimality", "zoo", "serving",
+];
+
+/// Dispatch one experiment id (or "all").
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    match id {
+        "all" => {
+            for id in ALL {
+                println!("\n################ {id} ################");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        "fig2" => fig2::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "table2" => fig7::run_table2(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "fig11" => fig11::run(ctx),
+        "fig12" => fig12::run(ctx),
+        "fig13" => fig13::run(ctx),
+        "table6" => table6::run(ctx),
+        "roofline" => ridge::run(ctx),
+        "ablation-threshold" => ablations::run_threshold(ctx),
+        "ablation-order" => ablations::run_order(ctx),
+        "ablation-duplication" => extensions::run_duplication(ctx),
+        "ablation-interconnect" => extensions::run_interconnect(ctx),
+        "scaling" => extensions::run_scaling(ctx),
+        "hybrid" => extensions::run_hybrid(ctx),
+        "optimality" => extensions::run_optimality(ctx),
+        "zoo" => extensions::run_zoo(ctx),
+        "serving" => extensions::run_serving(ctx),
+        other => bail!("unknown experiment {other:?}; options: {}", ALL.join(", ")),
+    }
+}

@@ -1,0 +1,68 @@
+//! Appendix B — roofline ridge points and the memory-bound
+//! classification of the real workloads.
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::arch::{CimSystem, MemLevel};
+use crate::cim::CimPrimitive;
+use crate::roofline::Roofline;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(vec![
+        "primitive", "level", "peak GOPS", "ridge SMEM", "ridge DRAM",
+    ]);
+    let mut csv = Csv::new(vec![
+        "primitive", "level", "peak_gops", "ridge_smem", "ridge_dram",
+    ]);
+    for prim in CimPrimitive::all() {
+        let sys = CimSystem::at_level(&ctx.arch, prim.clone(), MemLevel::RegisterFile);
+        let smem = Roofline::of(&sys, MemLevel::Smem);
+        let dram = Roofline::of(&sys, MemLevel::Dram);
+        table.row(vec![
+            prim.name.to_string(),
+            "RF".to_string(),
+            format!("{:.0}", sys.peak_gops()),
+            format!("{:.1}", smem.ridge_point()),
+            format!("{:.1}", dram.ridge_point()),
+        ]);
+        csv.row(vec![
+            prim.name.to_string(),
+            "RF".to_string(),
+            format!("{:.1}", sys.peak_gops()),
+            format!("{:.2}", smem.ridge_point()),
+            format!("{:.2}", dram.ridge_point()),
+        ]);
+    }
+    ctx.emit(
+        "roofline",
+        "Appendix B: ridge points (paper: 32.5 SMEM / 42.6 DRAM for 3x Digital-6T @ RF)",
+        &table,
+        &csv,
+    )?;
+
+    // Memory-bound classification of the real dataset under D-1 @ RF.
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let dram = Roofline::of(&sys, MemLevel::Dram);
+    let mut table = Table::new(vec!["workload", "GEMM", "reuse", "class"]);
+    for wl in models::real_dataset() {
+        for (g, _) in wl.unique_with_counts() {
+            table.row(vec![
+                wl.name.clone(),
+                g.to_string(),
+                format!("{:.1}", g.algorithmic_reuse()),
+                if dram.memory_bound(&g) {
+                    "memory-bound".to_string()
+                } else {
+                    "compute-bound".to_string()
+                },
+            ]);
+        }
+    }
+    println!("\n-- workload classification vs DRAM roofline --");
+    print!("{table}");
+    Ok(())
+}

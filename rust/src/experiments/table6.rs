@@ -1,0 +1,61 @@
+//! Table VI — machine-learning workload characteristics: every layer's
+//! (M, N, K), MAC count and algorithmic reuse.
+
+use anyhow::Result;
+
+use super::common::Ctx;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workload::models;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(vec!["workload", "M", "N", "K", "#MACs", "algorithmic reuse"]);
+    let mut csv = Csv::new(vec!["workload", "m", "n", "k", "macs", "algorithmic_reuse"]);
+    for wl in models::real_dataset() {
+        for g in wl.gemms() {
+            table.row(vec![
+                wl.name.clone(),
+                g.m.to_string(),
+                g.n.to_string(),
+                g.k.to_string(),
+                g.macs().to_string(),
+                format!("{:.3}", g.algorithmic_reuse()),
+            ]);
+            csv.row(vec![
+                wl.name.clone(),
+                g.m.to_string(),
+                g.n.to_string(),
+                g.k.to_string(),
+                g.macs().to_string(),
+                format!("{:.4}", g.algorithmic_reuse()),
+            ]);
+        }
+    }
+    ctx.emit("table6", "Table VI: ML workload characteristics", &table, &csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::workload::Gemm;
+
+    #[test]
+    fn reuse_column_matches_paper_rows() {
+        // Spot-check the reuse values printed for Table VI.
+        let checks = [
+            ((512u64, 1024u64, 1024u64), 512.0),
+            ((512, 4096, 1024), 630.154),
+            ((1, 4096, 4096), 1.999),
+            ((12544, 64, 147), 88.860),
+            ((196, 256, 2304), 211.812),
+            ((49, 2048, 512), 87.529),
+            ((1, 1000, 2048), 1.997),
+        ];
+        for ((m, n, k), want) in checks {
+            let got = Gemm::new(m, n, k).algorithmic_reuse();
+            assert!(
+                (got - want).abs() < 0.01,
+                "GEMM({m},{n},{k}): {got} vs paper {want}"
+            );
+        }
+    }
+}

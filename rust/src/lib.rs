@@ -1,0 +1,61 @@
+//! # www-cim — What, When, Where to Compute-in-Memory
+//!
+//! Reproduction of *"WWW: What, When, Where to Compute-in-Memory"*
+//! (Sharma, Ali, Chakraborty, Roy — cs.AR 2023): an analytical
+//! architecture-evaluation framework that integrates SRAM
+//! compute-in-memory (CiM) primitives into the cache levels of a
+//! tensor-core-like GPU streaming multiprocessor and evaluates
+//! energy-efficiency (TOPS/W), throughput (GFLOPS) and utilization for
+//! the GEMM shapes found in ML inference.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the CiM
+//!   primitive model ([`cim`]), the memory-hierarchy/architecture model
+//!   ([`arch`]), the workload substrate ([`workload`]), the
+//!   priority-based dataflow mapper and its heuristic-search comparator
+//!   ([`mapping`]), the analytical cost model ([`cost`]), roofline
+//!   analysis ([`roofline`]), the evaluation coordinator
+//!   ([`coordinator`]) and one regenerator per paper table/figure
+//!   ([`experiments`]).
+//! * **L2/L1 (python, build-time)** — a JAX model whose hot loop is a
+//!   Pallas weight-stationary int8 GEMM kernel mirroring the paper's CiM
+//!   decomposition, AOT-lowered to HLO text under `artifacts/`.
+//! * **[`runtime`]** — loads those artifacts through the PJRT C API
+//!   (`xla` crate) and replays mapped dataflows tile-by-tile to validate
+//!   mappings numerically. Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use www_cim::prelude::*;
+//!
+//! let arch = Architecture::default_sm();
+//! let prim = CimPrimitive::digital_6t();
+//! let gemm = Gemm::new(512, 1024, 1024);
+//! let system = CimSystem::at_level(&arch, prim, MemLevel::RegisterFile);
+//! let mapping = PriorityMapper::new(&system).map(&gemm);
+//! let metrics = CostModel::new(&system).evaluate(&gemm, &mapping);
+//! println!("{:.2} TOPS/W, {:.0} GFLOPS, util {:.1}%",
+//!          metrics.tops_per_watt, metrics.gflops, 100.0 * metrics.utilization);
+//! ```
+
+pub mod arch;
+pub mod cim;
+pub mod coordinator;
+pub mod cost;
+pub mod experiments;
+pub mod mapping;
+pub mod roofline;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports of the most common public types.
+pub mod prelude {
+    pub use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+    pub use crate::cim::{CimPrimitive, CellType, ComputeType};
+    pub use crate::cost::{CostModel, Metrics};
+    pub use crate::mapping::{HeuristicMapper, Mapping, PriorityMapper};
+    pub use crate::workload::{Gemm, Workload};
+}

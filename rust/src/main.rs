@@ -1,0 +1,294 @@
+//! `repro` — the www-cim command-line leader.
+//!
+//! Subcommands:
+//! * `evaluate`   — one GEMM on one system, full metric breakdown
+//! * `compare`    — one GEMM across baseline + all primitives
+//! * `sweep`      — a workload across systems (per-layer table)
+//! * `experiment` — regenerate a paper table/figure (`all` for every one)
+//! * `validate`   — replay mappings through the PJRT artifacts
+//! * `roofline`   — ridge-point analysis
+//! * `list`       — available primitives / workloads / experiments
+
+use anyhow::{bail, Context, Result};
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::coordinator::jobs::{Grid, SystemSpec};
+use www_cim::coordinator::validate::validate_mappings;
+use www_cim::cost::{BaselineModel, CostModel, Metrics};
+use www_cim::experiments::{self, Ctx};
+use www_cim::mapping::PriorityMapper;
+use www_cim::roofline::Roofline;
+use www_cim::runtime::{default_artifacts_dir, Engine};
+use www_cim::util::cli::Args;
+use www_cim::util::table::Table;
+use www_cim::workload::{models, Gemm};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("evaluate") => cmd_evaluate(args),
+        Some("compare") => cmd_compare(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("validate") => cmd_validate(args),
+        Some("roofline") => cmd_roofline(),
+        Some("list") => cmd_list(),
+        Some(other) => bail!("unknown subcommand {other:?} — try `repro list`"),
+        None => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+repro — WWW: What, When, Where to Compute-in-Memory (reproduction)
+
+usage: repro <subcommand> [options]
+
+  evaluate   --gemm MxNxK [--prim d1|d2|a1|a2] [--level rf|smem] [--smem-config a|b]
+  compare    --gemm MxNxK
+  sweep      --workload bert|gptj|resnet50|dlrm [--prim d1] [--level rf|smem]
+  experiment <fig2|fig7|table2|fig9|fig10|fig11|fig12|fig13|table6|roofline|
+              ablation-threshold|ablation-order|all> [--quick] [--out results]
+  validate   [--artifacts artifacts] [--seed N]
+  roofline
+  list";
+
+fn parse_gemm(s: &str) -> Result<Gemm> {
+    let dims: Vec<u64> = s
+        .split(['x', 'X', ','])
+        .map(|d| d.parse().context("GEMM dims must be integers"))
+        .collect::<Result<Vec<_>>>()?;
+    if dims.len() != 3 {
+        bail!("--gemm wants MxNxK, got {s:?}");
+    }
+    Ok(Gemm::new(dims[0], dims[1], dims[2]))
+}
+
+fn parse_system(args: &Args, arch: &Architecture) -> Result<Option<CimSystem>> {
+    let prim_name = args.get_or("prim", "d1");
+    if prim_name == "baseline" || prim_name == "tcore" {
+        return Ok(None);
+    }
+    let prim = CimPrimitive::parse(prim_name)
+        .with_context(|| format!("unknown primitive {prim_name:?} (d1,d2,a1,a2)"))?;
+    let level = MemLevel::parse(args.get_or("level", "rf"))
+        .context("--level must be rf or smem")?;
+    let sys = match level {
+        MemLevel::Smem => {
+            let cfg = match args.get_or("smem-config", "b") {
+                "a" | "A" => SmemConfig::ConfigA,
+                "b" | "B" => SmemConfig::ConfigB,
+                other => bail!("--smem-config must be a or b, got {other:?}"),
+            };
+            CimSystem::at_smem(arch, prim, cfg)
+        }
+        MemLevel::RegisterFile => CimSystem::at_level(arch, prim, level),
+        other => bail!("CiM integrates at rf or smem, not {other}"),
+    };
+    Ok(Some(sys))
+}
+
+fn metrics_table(rows: &[(String, Metrics)]) -> Table {
+    let mut t = Table::new(vec![
+        "system", "TOPS/W", "GFLOPS", "util", "fJ/MAC", "cycles", "bound",
+    ]);
+    for (name, m) in rows {
+        t.row(vec![
+            name.clone(),
+            format!("{:.3}", m.tops_per_watt),
+            format!("{:.0}", m.gflops),
+            format!("{:.2}", m.utilization),
+            format!("{:.0}", m.fj_per_mac()),
+            m.total_cycles.to_string(),
+            if m.memory_bound() { "memory" } else { "compute" }.to_string(),
+        ]);
+    }
+    t
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    if let Some(err) =
+        args.unknown_flags(&["gemm", "prim", "level", "smem-config", "verbose"])
+    {
+        bail!(err);
+    }
+    let arch = Architecture::default_sm();
+    let gemm = parse_gemm(args.get("gemm").context("--gemm MxNxK required")?)?;
+    match parse_system(args, &arch)? {
+        None => {
+            let m = BaselineModel::new(&arch).evaluate(&gemm);
+            print!("{}", metrics_table(&[("Tensor-core".into(), m)]));
+        }
+        Some(sys) => {
+            let mapping = PriorityMapper::new(&sys).map(&gemm);
+            let m = CostModel::new(&sys).evaluate(&gemm, &mapping);
+            print!("{}", metrics_table(&[(sys.label(), m)]));
+            if args.flag("verbose") {
+                println!("mapping: {}", mapping.describe());
+                let b = &m.breakdown;
+                println!(
+                    "energy pJ: dram={:.0} smem={:.0} rf={:.0} mac={:.0} red={:.0}",
+                    b.dram_pj, b.smem_pj, b.rf_pj, b.mac_pj, b.reduction_pj
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let arch = Architecture::default_sm();
+    let gemm = parse_gemm(args.get("gemm").context("--gemm MxNxK required")?)?;
+    let mut rows = vec![(
+        "Tensor-core".to_string(),
+        BaselineModel::new(&arch).evaluate(&gemm),
+    )];
+    for prim in CimPrimitive::all() {
+        let sys = CimSystem::at_level(&arch, prim, MemLevel::RegisterFile);
+        let m = CostModel::new(&sys).evaluate(&gemm, &PriorityMapper::new(&sys).map(&gemm));
+        rows.push((sys.label(), m));
+    }
+    println!("{gemm} across systems (RF, iso-area):");
+    print!("{}", metrics_table(&rows));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let arch = Architecture::default_sm();
+    let name = args.get_or("workload", "bert");
+    let wl = match name.to_ascii_lowercase().as_str() {
+        "bert" | "bert-large" => models::bert_large(),
+        "gptj" | "gpt-j" => models::gpt_j(),
+        "resnet" | "resnet50" => models::resnet50(),
+        "dlrm" => models::dlrm(),
+        other => bail!("unknown workload {other:?} (bert, gptj, resnet50, dlrm)"),
+    };
+    let grid = Grid::new(arch.clone());
+    let spec = match parse_system(args, &arch)? {
+        None => SystemSpec::Baseline,
+        Some(sys) => match (sys.level, sys.smem_config) {
+            (MemLevel::RegisterFile, _) => SystemSpec::CimAtRf(sys.primitive),
+            (MemLevel::Smem, Some(cfg)) => SystemSpec::CimAtSmem(sys.primitive, cfg),
+            _ => unreachable!(),
+        },
+    };
+    let gemms: Vec<Gemm> = wl.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+    let jobs = grid.cross(&[(wl.name.clone(), gemms)], &[spec]);
+    let results = grid.run(&jobs);
+    let rows: Vec<(String, Metrics)> = results
+        .iter()
+        .map(|r| (r.gemm.to_string(), r.metrics))
+        .collect();
+    println!("{} on {}:", wl.name, results[0].system);
+    print!("{}", metrics_table(&rows));
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut ctx = Ctx::default();
+    ctx.quick = args.flag("quick");
+    ctx.out_dir = args.get_or("out", "results").into();
+    ctx.threads = args.get_parsed_or("threads", ctx.threads);
+    ctx.seed = args.get_parsed_or("seed", ctx.seed);
+    experiments::run(id, &ctx)
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let engine = Engine::load(&dir)?;
+    println!(
+        "PJRT platform: {}, {} artifacts",
+        engine.platform(),
+        engine.manifest().len()
+    );
+    let arch = Architecture::default_sm();
+    let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let gemms = [
+        Gemm::new(64, 32, 256),
+        Gemm::new(128, 32, 512),
+        Gemm::new(16, 64, 64),
+        Gemm::new(100, 48, 300), // awkward non-divisible shape
+        Gemm::new(1, 64, 256),   // GEMV
+    ];
+    let seed = args.get_parsed_or("seed", 7u64);
+    let report = validate_mappings(&engine, &sys, &gemms, seed)?;
+    let mut t = Table::new(vec!["GEMM", "kernel calls", "|diff| oracle", "|diff| artifact"]);
+    for c in &report.cases {
+        t.row(vec![
+            c.gemm.to_string(),
+            c.kernel_calls.to_string(),
+            c.diff_vs_oracle.to_string(),
+            c.diff_vs_full_artifact
+                .map(|d| d.to_string())
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{t}");
+    if report.all_exact() {
+        println!("validation OK: every mapped dataflow is bit-exact");
+        Ok(())
+    } else {
+        bail!("validation FAILED: mapped execution diverges from the oracle")
+    }
+}
+
+fn cmd_roofline() -> Result<()> {
+    let arch = Architecture::default_sm();
+    let mut t = Table::new(vec!["system", "peak GOPS", "ridge SMEM", "ridge DRAM"]);
+    t.row(vec![
+        "Tensor-core".to_string(),
+        format!("{:.0}", arch.tensor_core.peak_gops()),
+        format!("{:.1}", arch.tensor_core.peak_gops() / 42.0),
+        format!("{:.1}", arch.tensor_core.peak_gops() / 32.0),
+    ]);
+    for prim in CimPrimitive::all() {
+        let sys = CimSystem::at_level(&arch, prim, MemLevel::RegisterFile);
+        t.row(vec![
+            sys.label(),
+            format!("{:.0}", sys.peak_gops()),
+            format!("{:.1}", Roofline::of(&sys, MemLevel::Smem).ridge_point()),
+            format!("{:.1}", Roofline::of(&sys, MemLevel::Dram).ridge_point()),
+        ]);
+    }
+    print!("{t}");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("primitives (Table IV):");
+    for p in CimPrimitive::all() {
+        println!(
+            "  {:11} ({}) Rp={} Cp={} Rh={} Ch={} latency={}ns mac={}pJ area={}x",
+            p.name,
+            p.short_label(),
+            p.rp,
+            p.cp,
+            p.rh,
+            p.ch,
+            p.latency_ns,
+            p.mac_energy_pj,
+            p.area_overhead
+        );
+    }
+    println!("\nworkloads: BERT-Large, GPT-J, ResNet50, DLRM, synthetic");
+    println!("\nexperiments: {}", experiments::ALL.join(", "));
+    Ok(())
+}

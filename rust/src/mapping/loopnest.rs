@@ -1,0 +1,385 @@
+//! Loop-nest dataflow IR (paper §III-B, Fig 4).
+//!
+//! A GEMM dataflow is a tiled loop nest: per memory level a list of
+//! loops (dimension + trip count), outermost level first, outermost
+//! loop first within a level. The nest determines *observed* reuse —
+//! how many times each tensor tile is (re)fetched at each level — which
+//! can be far below the *algorithmic* reuse of eq. 1.
+
+use crate::arch::MemLevel;
+use crate::workload::Gemm;
+
+/// GEMM iteration dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    M,
+    N,
+    K,
+}
+
+impl Dim {
+    pub fn all() -> [Dim; 3] {
+        [Dim::M, Dim::N, Dim::K]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::M => "M",
+            Dim::N => "N",
+            Dim::K => "K",
+        }
+    }
+}
+
+/// The three GEMM operand tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tensor {
+    /// Input activations, `M×K`.
+    Input,
+    /// Weights, `K×N`.
+    Weight,
+    /// Outputs / partial sums, `M×N`.
+    Output,
+}
+
+impl Tensor {
+    pub fn all() -> [Tensor; 3] {
+        [Tensor::Input, Tensor::Weight, Tensor::Output]
+    }
+
+    /// The dimensions this tensor is indexed by ("relevant" dims).
+    pub fn dims(self) -> [Dim; 2] {
+        match self {
+            Tensor::Input => [Dim::M, Dim::K],
+            Tensor::Weight => [Dim::K, Dim::N],
+            Tensor::Output => [Dim::M, Dim::N],
+        }
+    }
+
+    pub fn relevant(self, d: Dim) -> bool {
+        self.dims().contains(&d)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tensor::Input => "A",
+            Tensor::Weight => "W",
+            Tensor::Output => "Z",
+        }
+    }
+}
+
+/// One tiling loop: `factor` iterations over dimension `dim`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Loop {
+    pub dim: Dim,
+    pub factor: u64,
+}
+
+impl Loop {
+    pub fn new(dim: Dim, factor: u64) -> Self {
+        assert!(factor >= 1, "loop factor must be >= 1");
+        Loop { dim, factor }
+    }
+}
+
+/// The loops bound to one memory level ("block"): they iterate over the
+/// tiles resident in the *next inner* level. Ordered outermost first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    /// Memory the tiles enumerated by the *outer* blocks live in; costs
+    /// of traffic crossing into this block's residency land here.
+    pub mem: MemLevel,
+    pub loops: Vec<Loop>,
+}
+
+impl Block {
+    pub fn new(mem: MemLevel, loops: Vec<Loop>) -> Self {
+        // factor-1 loops are identities; dropping them keeps the
+        // stationarity analysis exact (a trip-count-1 "loop" never
+        // evicts anything).
+        Block {
+            mem,
+            loops: loops.into_iter().filter(|l| l.factor > 1).collect(),
+        }
+    }
+
+    /// Product of this block's factors over `dim`.
+    pub fn dim_factor(&self, dim: Dim) -> u64 {
+        self.loops
+            .iter()
+            .filter(|l| l.dim == dim)
+            .map(|l| l.factor)
+            .product()
+    }
+}
+
+/// A complete tiled dataflow for one GEMM.
+///
+/// `blocks[0]` is the outermost (DRAM) level; the last block is the
+/// innermost residency (e.g. the loops executed while one weight tile
+/// is held stationary in the CiM primitives).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopNest {
+    pub gemm: Gemm,
+    pub blocks: Vec<Block>,
+}
+
+impl LoopNest {
+    pub fn new(gemm: Gemm, blocks: Vec<Block>) -> Self {
+        let nest = LoopNest { gemm, blocks };
+        debug_assert!(nest.validate().is_ok(), "{:?}", nest.validate());
+        nest
+    }
+
+    /// Total trip count over `dim` across all blocks. With ceiling
+    /// tiling this is >= the GEMM dimension.
+    pub fn total_factor(&self, dim: Dim) -> u64 {
+        self.blocks.iter().map(|b| b.dim_factor(dim)).product()
+    }
+
+    /// Tile extent of `dim` inside block `b` (product of factors in
+    /// blocks strictly deeper than `b`).
+    pub fn tile_extent(&self, b: usize, dim: Dim) -> u64 {
+        self.blocks[b + 1..]
+            .iter()
+            .map(|blk| blk.dim_factor(dim))
+            .product()
+    }
+
+    /// Tile size (elements) of `tensor` resident at block `b`: the
+    /// extents of its two dims inside `b`, *including* block `b`'s own
+    /// loops? No — the residency at block `b` covers block `b`'s loops
+    /// and everything deeper, so the tile spans blocks `b..`.
+    pub fn tile_elems(&self, b: usize, tensor: Tensor) -> u64 {
+        let [d0, d1] = tensor.dims();
+        let e0: u64 = self.blocks[b..].iter().map(|blk| blk.dim_factor(d0)).product();
+        let e1: u64 = self.blocks[b..].iter().map(|blk| blk.dim_factor(d1)).product();
+        e0 * e1
+    }
+
+    /// The flattened loops strictly outside block `b` (the "prefix"):
+    /// everything that iterates while a block-`b` resident tile lives.
+    pub fn prefix(&self, b: usize) -> Vec<Loop> {
+        self.blocks[..b]
+            .iter()
+            .flat_map(|blk| blk.loops.iter().copied())
+            .collect()
+    }
+
+    /// Coverage check: factors must tile each dimension (ceiling
+    /// semantics: product of trip counts >= dim, and no dimension
+    /// over-tiled by more than one partial tile per level).
+    pub fn validate(&self) -> Result<(), String> {
+        for dim in Dim::all() {
+            let total = self.total_factor(dim);
+            let need = match dim {
+                Dim::M => self.gemm.m,
+                Dim::N => self.gemm.n,
+                Dim::K => self.gemm.k,
+            };
+            if total < need {
+                return Err(format!(
+                    "{} under-tiled: product of factors {} < {}",
+                    dim.name(),
+                    total,
+                    need
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Number of times the block-`b` resident tile of `tensor` is
+/// (re)fetched, per the Fig 4 semantics:
+///
+/// * every *relevant* loop in the prefix enumerates distinct tiles —
+///   always multiplies;
+/// * an *irrelevant* prefix loop evicts-and-refetches **iff** some
+///   relevant loop sits deeper than it *within the prefix* (the buffer
+///   held other tiles in between); trailing irrelevant loops leave the
+///   tile stationary (temporal reuse).
+pub fn refetches(prefix: &[Loop], tensor: Tensor) -> u64 {
+    let mut mult: u64 = 1;
+    for (i, lp) in prefix.iter().enumerate() {
+        if tensor.relevant(lp.dim) {
+            mult = mult.saturating_mul(lp.factor);
+        } else if prefix[i + 1..].iter().any(|l2| tensor.relevant(l2.dim)) {
+            mult = mult.saturating_mul(lp.factor);
+        }
+    }
+    mult
+}
+
+/// Number of *distinct* block-`b` tiles of `tensor` enumerated by the
+/// prefix (product of relevant factors only). `refetches - distinct`
+/// is the pure re-fetch overhead; for outputs it is the number of
+/// partial-sum reloads.
+pub fn distinct_tiles(prefix: &[Loop], tensor: Tensor) -> u64 {
+    prefix
+        .iter()
+        .filter(|l| tensor.relevant(l.dim))
+        .map(|l| l.factor)
+        .product()
+}
+
+/// Allocation-free variants over a nest: equivalent to flattening
+/// `nest.prefix(b)` and calling [`refetches`]/[`distinct_tiles`], but
+/// walking the blocks in place (the cost-model hot path — §Perf).
+pub fn refetches_at(nest: &LoopNest, b: usize, tensor: Tensor) -> u64 {
+    // Position (block, loop index) of the deepest relevant loop in the
+    // prefix; irrelevant loops at or after it never force refetch.
+    let mut deepest: Option<(usize, usize)> = None;
+    for (bi, blk) in nest.blocks[..b].iter().enumerate() {
+        for (li, lp) in blk.loops.iter().enumerate() {
+            if tensor.relevant(lp.dim) {
+                deepest = Some((bi, li));
+            }
+        }
+    }
+    let mut mult: u64 = 1;
+    for (bi, blk) in nest.blocks[..b].iter().enumerate() {
+        for (li, lp) in blk.loops.iter().enumerate() {
+            let relevant = tensor.relevant(lp.dim);
+            let before_deepest = deepest.map_or(false, |d| (bi, li) < d);
+            if relevant || before_deepest {
+                mult = mult.saturating_mul(lp.factor);
+            }
+        }
+    }
+    mult
+}
+
+/// Allocation-free distinct-tile count at a boundary.
+pub fn distinct_at(nest: &LoopNest, b: usize, tensor: Tensor) -> u64 {
+    nest.blocks[..b]
+        .iter()
+        .flat_map(|blk| blk.loops.iter())
+        .filter(|l| tensor.relevant(l.dim))
+        .map(|l| l.factor)
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemLevel;
+
+    fn lp(dim: Dim, f: u64) -> Loop {
+        Loop::new(dim, f)
+    }
+
+    /// Fig 4 semantics: the outermost loop multiplies every tensor's
+    /// access factor (its dimension is relevant to two tensors and
+    /// forces refetch of the third).
+    #[test]
+    fn fig4_outer_loop_multiplies_all() {
+        // (a) M1=3 outermost, then K1=2, N1=2.
+        let prefix = [lp(Dim::M, 3), lp(Dim::K, 2), lp(Dim::N, 2)];
+        // A(M,K): M,K relevant = 6; trailing N irrelevant -> no evict.
+        assert_eq!(refetches(&prefix, Tensor::Input), 6);
+        // W(K,N): K,N relevant = 4; M outermost has relevant deeper -> x3.
+        assert_eq!(refetches(&prefix, Tensor::Weight), 12);
+        // Z(M,N): M,N relevant = 6; K in middle has N deeper -> x2.
+        assert_eq!(refetches(&prefix, Tensor::Output), 12);
+    }
+
+    #[test]
+    fn fig4_k_outermost_variant() {
+        // (b) K1=2 outermost, then M1=3, N1=2: "all access factors have
+        // 2 as the common factor".
+        let prefix = [lp(Dim::K, 2), lp(Dim::M, 3), lp(Dim::N, 2)];
+        assert_eq!(refetches(&prefix, Tensor::Input), 6); // K,M relevant
+        assert_eq!(refetches(&prefix, Tensor::Weight), 4 * 3); // M mid evicts
+        assert_eq!(refetches(&prefix, Tensor::Output), 6 * 2); // K outer evicts
+    }
+
+    #[test]
+    fn trailing_irrelevant_is_stationary() {
+        // Weight-stationary: M innermost leaves W resident.
+        let prefix = [lp(Dim::K, 4), lp(Dim::N, 4), lp(Dim::M, 8)];
+        assert_eq!(refetches(&prefix, Tensor::Weight), 16); // not x8
+        // Output-stationary: trailing K accumulates in place.
+        let prefix = [lp(Dim::M, 2), lp(Dim::N, 2), lp(Dim::K, 16)];
+        assert_eq!(refetches(&prefix, Tensor::Output), 4); // not x16
+    }
+
+    #[test]
+    fn distinct_vs_refetch() {
+        let prefix = [lp(Dim::M, 3), lp(Dim::K, 2), lp(Dim::N, 2)];
+        assert_eq!(distinct_tiles(&prefix, Tensor::Weight), 4);
+        // 12 fetches of 4 distinct tiles -> 8 redundant refetches.
+        assert_eq!(refetches(&prefix, Tensor::Weight) - 4, 8);
+    }
+
+    #[test]
+    fn empty_prefix_fetches_once() {
+        assert_eq!(refetches(&[], Tensor::Input), 1);
+        assert_eq!(distinct_tiles(&[], Tensor::Input), 1);
+    }
+
+    fn sample_nest() -> LoopNest {
+        // GEMM(64, 32, 128) tiled: DRAM[M2=4, K2=2] / SMEM[N1=2] /
+        // inner[M=16, K=64, N=16].
+        LoopNest::new(
+            Gemm::new(64, 32, 128),
+            vec![
+                Block::new(MemLevel::Dram, vec![lp(Dim::M, 4), lp(Dim::K, 2)]),
+                Block::new(MemLevel::Smem, vec![lp(Dim::N, 2)]),
+                Block::new(
+                    MemLevel::RegisterFile,
+                    vec![lp(Dim::N, 16), lp(Dim::K, 64), lp(Dim::M, 16)],
+                ),
+            ],
+        )
+    }
+
+    #[test]
+    fn tile_sizes() {
+        let nest = sample_nest();
+        // Innermost residency (block 2): W tile = 64 x 16.
+        assert_eq!(nest.tile_elems(2, Tensor::Weight), 64 * 16);
+        // SMEM residency (block 1): A tile = (16 m) x (64 k) = 1024;
+        // N1 loop does not touch A.
+        assert_eq!(nest.tile_elems(1, Tensor::Input), 16 * 64);
+        // SMEM Z tile = 16 x (2*16).
+        assert_eq!(nest.tile_elems(1, Tensor::Output), 16 * 32);
+    }
+
+    #[test]
+    fn total_factors_cover_gemm() {
+        let nest = sample_nest();
+        assert_eq!(nest.total_factor(Dim::M), 64);
+        assert_eq!(nest.total_factor(Dim::N), 32);
+        assert_eq!(nest.total_factor(Dim::K), 128);
+        assert!(nest.validate().is_ok());
+    }
+
+    #[test]
+    fn under_tiled_nest_invalid() {
+        let nest = LoopNest {
+            gemm: Gemm::new(64, 32, 128),
+            blocks: vec![Block::new(MemLevel::Dram, vec![lp(Dim::M, 2)])],
+        };
+        assert!(nest.validate().is_err());
+    }
+
+    #[test]
+    fn factor_one_loops_dropped() {
+        let b = Block::new(MemLevel::Dram, vec![lp(Dim::M, 1), lp(Dim::K, 3)]);
+        assert_eq!(b.loops.len(), 1);
+        assert_eq!(b.dim_factor(Dim::K), 3);
+        assert_eq!(b.dim_factor(Dim::M), 1);
+    }
+
+    #[test]
+    fn prefix_flattens_outer_blocks() {
+        let nest = sample_nest();
+        let p = nest.prefix(2);
+        assert_eq!(p.len(), 3); // M4, K2, N2
+        assert_eq!(p[0], lp(Dim::M, 4));
+        assert_eq!(p[2], lp(Dim::N, 2));
+        assert!(nest.prefix(0).is_empty());
+    }
+}

@@ -1,0 +1,68 @@
+//! GEMM-to-CiM mapping (paper §IV-B).
+//!
+//! A [`Mapping`] = a spatial assignment of the weight matrix onto the
+//! CiM primitives ([`CimSpatial`]) + a temporal [`LoopNest`] describing
+//! the tiled dataflow across DRAM / staging memory / the CiM level.
+//!
+//! Two mappers are provided:
+//! * [`PriorityMapper`] — the paper's contribution: weight-stationary,
+//!   utilization-first, then reuse (Algo 1), greedy loop order.
+//! * [`HeuristicMapper`] — the comparator: random search that stops
+//!   after 100 000 consecutive invalid samples (Fig 7, Table II).
+
+pub mod exhaustive;
+pub mod heuristic;
+pub mod loopnest;
+pub mod priority;
+pub mod spatial;
+
+pub use exhaustive::{ExhaustiveMapper, Objective};
+pub use heuristic::HeuristicMapper;
+pub use loopnest::{distinct_tiles, refetches, Block, Dim, Loop, LoopNest, Tensor};
+pub use priority::PriorityMapper;
+pub use spatial::CimSpatial;
+
+use crate::workload::Gemm;
+
+/// A complete schedule of one GEMM onto a CiM-integrated system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mapping {
+    pub gemm: Gemm,
+    pub spatial: CimSpatial,
+    pub nest: LoopNest,
+}
+
+impl Mapping {
+    /// Mapped weight-tile extent along K (rows across primitives).
+    pub fn k0(&self) -> u64 {
+        self.spatial.k0(self.gemm.k)
+    }
+
+    /// Mapped weight-tile extent along N (columns across primitives).
+    pub fn n0(&self) -> u64 {
+        self.spatial.n0(self.gemm.n)
+    }
+
+    /// Short human-readable description for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} -> prims {}x{} (K0={} N0={}), nest {:?}",
+            self.gemm,
+            self.spatial.k_prims,
+            self.spatial.n_prims,
+            self.k0(),
+            self.n0(),
+            self.nest
+                .blocks
+                .iter()
+                .map(|b| {
+                    b.loops
+                        .iter()
+                        .map(|l| format!("{}{}", l.dim.name(), l.factor))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                })
+                .collect::<Vec<_>>()
+        )
+    }
+}

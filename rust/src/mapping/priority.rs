@@ -1,0 +1,431 @@
+//! The paper's priority-based mapping algorithm (§IV-B, Algo 1).
+//!
+//! Priorities, in order:
+//! 1. **Weight-stationary**: K maps to primitive rows, N to columns;
+//!    hold factors fill only after the parallel positions.
+//! 2. **Parallelism first**: weights spread across primitives before
+//!    using a primitive's sequential (`Rh×Ch`) positions, with the
+//!    balance threshold (K:N primitive-expansion ratio ≤ 4) of Fig 6.
+//! 3. **Input reuse**: the largest `M1` input tile that fits the
+//!    staging memory (SMEM when CiM sits in the RF), then Algo-1-style
+//!    incremental growth of the K and N factors at that level.
+//! 4. **Greedy loop order**: per level, the dimension with the
+//!    *smallest* loop factor goes outermost, minimizing the product of
+//!    access multipliers (the Fig 4 rule).
+
+use super::loopnest::{Block, Dim, Loop, LoopNest};
+use super::spatial::CimSpatial;
+use super::Mapping;
+use crate::arch::{CimSystem, MemLevel};
+use crate::workload::Gemm;
+
+/// Balance threshold for expanding across primitives (§IV-B: "the
+/// ratio of larger dimension to smaller dimension should be less than
+/// a threshold (= 4 for our experiments)").
+pub const BALANCE_THRESHOLD: u64 = 4;
+
+/// The priority-based mapper for a given CiM system.
+#[derive(Debug, Clone)]
+pub struct PriorityMapper<'a> {
+    sys: &'a CimSystem,
+    threshold: u64,
+    weight_duplication: bool,
+}
+
+impl<'a> PriorityMapper<'a> {
+    pub fn new(sys: &'a CimSystem) -> Self {
+        PriorityMapper {
+            sys,
+            threshold: BALANCE_THRESHOLD,
+            weight_duplication: false,
+        }
+    }
+
+    /// Enable the weight-duplication extension (map M across idle
+    /// primitives by replicating the stationary weight tile).
+    pub fn with_weight_duplication(mut self) -> Self {
+        self.weight_duplication = true;
+        self
+    }
+
+    /// Override the balance threshold (ablation experiments).
+    pub fn with_threshold(sys: &'a CimSystem, threshold: u64) -> Self {
+        assert!(threshold >= 1);
+        PriorityMapper {
+            sys,
+            threshold,
+            weight_duplication: false,
+        }
+    }
+
+    /// Map a GEMM. Always returns a valid mapping (§IV-B: "our
+    /// algorithm always provides a valid mapping").
+    pub fn map(&self, gemm: &Gemm) -> Mapping {
+        let spatial = self.spatial(gemm);
+        let nest = self.temporal(gemm, &spatial);
+        Mapping {
+            gemm: *gemm,
+            spatial,
+            nest,
+        }
+    }
+
+    /// Priority 1+2: weight placement across primitives.
+    fn spatial(&self, gemm: &Gemm) -> CimSpatial {
+        let p = &self.sys.primitive;
+        // Fill one primitive's grid first (K rows, N columns).
+        let ku = gemm.k.min(p.weight_rows());
+        let nu = gemm.n.min(p.weight_cols());
+        // Tiles still needed to cover the weight matrix.
+        let k_tiles = gemm.k.div_ceil(ku);
+        let n_tiles = gemm.n.div_ceil(nu);
+
+        // Parallelism first: expand across primitives greedily toward
+        // the direction with the larger remaining deficit, keeping the
+        // expansion balanced (ratio of primitive counts ≤ threshold).
+        let (mut kp, mut np) = (1u64, 1u64);
+        loop {
+            let can_k = kp < k_tiles && (kp + 1) * np <= self.sys.count;
+            let can_n = np < n_tiles && kp * (np + 1) <= self.sys.count;
+            if !can_k && !can_n {
+                break;
+            }
+            let deficit_k = k_tiles.div_ceil(kp);
+            let deficit_n = n_tiles.div_ceil(np);
+            // ratio after the candidate expansion
+            let ratio = |a: u64, b: u64| a.max(b) / a.min(b).max(1);
+            let k_ok = can_k && ratio(kp + 1, np) <= self.threshold;
+            let n_ok = can_n && ratio(kp, np + 1) <= self.threshold;
+            match (k_ok, n_ok) {
+                (true, true) => {
+                    if deficit_k >= deficit_n {
+                        kp += 1;
+                    } else {
+                        np += 1;
+                    }
+                }
+                (true, false) => kp += 1,
+                (false, true) => np += 1,
+                (false, false) => break, // any expansion would skew past the threshold
+            }
+        }
+        // Weight duplication (§IV-B future work, implemented as an
+        // opt-in extension): when the weight matrix is fully spread and
+        // primitives remain idle, replicate the stationary tile across
+        // groups that each process a disjoint slice of M in parallel.
+        let mut m_prims = 1u64;
+        if self.weight_duplication {
+            let used = kp * np;
+            let idle_groups = self.sys.count / used;
+            m_prims = idle_groups.min(gemm.m).max(1);
+        }
+        CimSpatial {
+            k_prims: kp,
+            n_prims: np,
+            ku,
+            nu,
+            m_prims,
+        }
+    }
+
+    /// Priority 3+4: staging-level factors (Algo 1) and greedy orders.
+    fn temporal(&self, gemm: &Gemm, spatial: &CimSpatial) -> LoopNest {
+        let k0 = spatial.k0(gemm.k);
+        let n0 = spatial.n0(gemm.n);
+        let k_tiles = gemm.k.div_ceil(k0); // weight residencies along K
+        let n_tiles = gemm.n.div_ceil(n0);
+
+        // Staging capacity in INT-8 elements. CiM at SMEM has no
+        // intermediate on-chip staging level: tiles come from DRAM
+        // ("absence of an intermediate on-chip memory level", §VI-C).
+        let staging = self.sys.staging_level();
+        let capacity = match staging {
+            MemLevel::Dram => u64::MAX,
+            lvl => self.sys.arch.capacity(lvl),
+        };
+
+        // Largest M1 input tile that fits: A(M1×K0) + Z(M1×N0) —
+        // then balanced across the M iterations so a near-miss does
+        // not leave a nearly-empty trailing tile (e.g. M=1024 with
+        // M1max=862 becomes 2×512 rather than 862+162).
+        let m1 = if capacity == u64::MAX {
+            gemm.m
+        } else {
+            let m1_max = (capacity / (k0 + n0)).clamp(1, gemm.m);
+            gemm.m.div_ceil(gemm.m.div_ceil(m1_max))
+        };
+
+        // Algo 1: incrementally grow the K then N factors held at the
+        // staging level while A + Z fit. Growth is by the smallest
+        // prime factor of the remaining tile count so the final factor
+        // divides it exactly.
+        let fits = |k1: u64, n1: u64| m1 * (k1 * k0 + n1 * n0) <= capacity;
+        let mut k1 = 1u64;
+        // Input-reuse priority: grow the A tile (K) before the Z tile (N).
+        while k1 < k_tiles {
+            let f = min_factor(k_tiles / k1);
+            match f {
+                Some(f) if fits(k1 * f, 1) => k1 *= f,
+                _ => break,
+            }
+        }
+        let mut n1 = 1u64;
+        while n1 < n_tiles {
+            let f = min_factor(n_tiles / n1);
+            match f {
+                Some(f) if fits(k1, n1 * f) => n1 *= f,
+                _ => break,
+            }
+        }
+
+        // DRAM-level remainders.
+        let m2 = gemm.m.div_ceil(m1);
+        let k2 = k_tiles / k1;
+        let n2 = n_tiles / n1;
+
+        // Staging block order is fixed N-outer / K-inner: "by changing
+        // K faster than N, we prioritize reducing the output partial
+        // sums in the CiM primitive before moving to a different
+        // partial sum" (§IV-B) — K1-inner lets the output buffer
+        // accumulate across weight reloads, at the price of re-reading
+        // the staged input tile per N1 iteration.
+        let block1 = Block::new(
+            staging,
+            vec![Loop::new(Dim::N, n1), Loop::new(Dim::K, k1)],
+        );
+        // Innermost (CiM residency) block: fixed compute order
+        // M < K < N, M innermost (§IV-B "Deciding loop order").
+        let block2 = Block::new(
+            self.sys.level,
+            vec![
+                Loop::new(Dim::N, n0),
+                Loop::new(Dim::K, k0),
+                Loop::new(Dim::M, m1),
+            ],
+        );
+
+        // DRAM-level loop order: greedy access minimization (§IV-B).
+        // The outermost level has at most three loops, so the local
+        // optimum is found exactly: evaluate every permutation with
+        // the full cost model and keep the cheapest.
+        let dram_loops = [
+            Loop::new(Dim::M, m2),
+            Loop::new(Dim::K, k2),
+            Loop::new(Dim::N, n2),
+        ];
+        // Unit-factor loops are dropped by `Block::new`, so
+        // permutations that only reorder them are identical; skip the
+        // duplicates (the common m2=1 case needs 2 evaluations, fully
+        // tiled cases need 1 — §Perf).
+        let n_nontrivial = dram_loops.iter().filter(|l| l.factor > 1).count();
+        let perms: &[[usize; 3]] = match n_nontrivial {
+            0 | 1 => &[[0, 1, 2]],
+            _ => &permutations3(),
+        };
+        let mut best: Option<(f64, Mapping)> = None;
+        let mut seen: Vec<Vec<Loop>> = Vec::with_capacity(perms.len());
+        for perm in perms {
+            let ordered: Vec<Loop> = perm
+                .iter()
+                .map(|&i| dram_loops[i])
+                .filter(|l| l.factor > 1)
+                .collect();
+            if seen.contains(&ordered) {
+                continue;
+            }
+            seen.push(ordered.clone());
+            let block0 = Block {
+                mem: MemLevel::Dram,
+                loops: ordered,
+            };
+            let nest = LoopNest::new(*gemm, vec![block0, block1.clone(), block2.clone()]);
+            let mapping = Mapping {
+                gemm: *gemm,
+                spatial: *spatial,
+                nest,
+            };
+            let e = crate::cost::CostModel::new(self.sys)
+                .evaluate(gemm, &mapping)
+                .energy_pj;
+            if best.as_ref().map_or(true, |(b, _)| e < *b) {
+                best = Some((e, mapping));
+            }
+        }
+        best.expect("at least one permutation").1.nest
+    }
+}
+
+/// The six permutations of three loop slots.
+fn permutations3() -> [[usize; 3]; 6] {
+    [
+        [0, 1, 2],
+        [0, 2, 1],
+        [1, 0, 2],
+        [1, 2, 0],
+        [2, 0, 1],
+        [2, 1, 0],
+    ]
+}
+
+/// Greedy loop order (§IV-B): smallest factor outermost minimizes the
+/// access multipliers at the level (the paper's own Fig 4 example —
+/// the outermost factor multiplies every tensor's accesses). Ties are
+/// broken M-before-K-before-N for determinism.
+pub fn greedy_order(mut loops: Vec<Loop>) -> Vec<Loop> {
+    let rank = |d: Dim| match d {
+        Dim::M => 0u8,
+        Dim::K => 1,
+        Dim::N => 2,
+    };
+    loops.sort_by_key(|l| (l.factor, rank(l.dim)));
+    loops
+}
+
+/// Smallest prime factor of `x` (`None` for x <= 1). Trial division is
+/// ample: tile counts are small.
+pub fn min_factor(x: u64) -> Option<u64> {
+    if x <= 1 {
+        return None;
+    }
+    if x % 2 == 0 {
+        return Some(2);
+    }
+    let mut f = 3;
+    while f * f <= x {
+        if x % f == 0 {
+            return Some(f);
+        }
+        f += 2;
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Architecture, SmemConfig};
+    use crate::cim::CimPrimitive;
+
+    fn d1_rf() -> CimSystem {
+        CimSystem::at_level(
+            &Architecture::default_sm(),
+            CimPrimitive::digital_6t(),
+            MemLevel::RegisterFile,
+        )
+    }
+
+    #[test]
+    fn min_factor_basics() {
+        assert_eq!(min_factor(1), None);
+        assert_eq!(min_factor(2), Some(2));
+        assert_eq!(min_factor(15), Some(3));
+        assert_eq!(min_factor(49), Some(7));
+        assert_eq!(min_factor(97), Some(97)); // prime
+    }
+
+    #[test]
+    fn greedy_puts_smallest_outermost() {
+        let ordered = greedy_order(vec![
+            Loop::new(Dim::M, 8),
+            Loop::new(Dim::K, 2),
+            Loop::new(Dim::N, 4),
+        ]);
+        let factors: Vec<u64> = ordered.iter().map(|l| l.factor).collect();
+        assert_eq!(factors, vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn mapping_is_always_valid() {
+        let sys = d1_rf();
+        let mapper = PriorityMapper::new(&sys);
+        for gemm in [
+            Gemm::new(512, 1024, 1024),
+            Gemm::new(1, 4096, 4096),
+            Gemm::new(12544, 64, 147),
+            Gemm::new(16, 16, 16),
+            Gemm::new(8192, 8192, 8192),
+            Gemm::new(1, 64, 256),
+            Gemm::new(3, 5, 7),
+        ] {
+            let m = mapper.map(&gemm);
+            assert!(m.nest.validate().is_ok(), "{gemm}: {:?}", m.nest.validate());
+            assert!(m.spatial.validate(&sys).is_ok(), "{gemm}");
+        }
+    }
+
+    #[test]
+    fn small_weights_fill_one_primitive() {
+        let sys = d1_rf();
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(64, 16, 128));
+        assert_eq!(m.spatial.prims_used(), 1);
+        assert_eq!(m.spatial.ku, 128);
+        assert_eq!(m.spatial.nu, 16);
+    }
+
+    #[test]
+    fn fig10_k256_n32_uses_two_primitives() {
+        // Fig 10(a) narrative: K=256, N=32 engages "2 out of 3" D-1
+        // primitives (one full K tile, two N tiles).
+        let sys = d1_rf();
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(512, 32, 256));
+        assert_eq!(m.spatial.k_prims, 1);
+        assert_eq!(m.spatial.n_prims, 2);
+        assert_eq!(m.k0(), 256);
+        assert_eq!(m.n0(), 32);
+    }
+
+    #[test]
+    fn large_weights_use_all_primitives() {
+        let sys = d1_rf();
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(512, 1024, 1024));
+        assert_eq!(m.spatial.prims_used(), 3);
+    }
+
+    #[test]
+    fn smem_m_sweet_spot_fig10a() {
+        // Fig 10(a): for a 512x512 weight matrix, TOPS/W drops as M
+        // grows 256 -> 512. Mechanism: at M=256 the whole reduction
+        // dimension K is staged in SMEM (no DRAM partial-sum traffic);
+        // at M=512 the input tile crowds SMEM, K splits at the DRAM
+        // level and partial sums spill.
+        let sys = d1_rf();
+        let mapper = PriorityMapper::new(&sys);
+        let m256 = mapper.map(&Gemm::new(256, 512, 512));
+        let m512 = mapper.map(&Gemm::new(512, 512, 512));
+        let k_at_dram = |m: &Mapping| m.nest.blocks[0].dim_factor(Dim::K);
+        assert_eq!(k_at_dram(&m256), 1, "{}", m256.describe());
+        assert!(k_at_dram(&m512) > 1, "{}", m512.describe());
+    }
+
+    #[test]
+    fn balance_threshold_limits_skew() {
+        // With a huge primitive pool (SMEM configB), expansion must stay
+        // balanced within the threshold.
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(512, 8192, 8192));
+        let (kp, np) = (m.spatial.k_prims, m.spatial.n_prims);
+        assert!(kp.max(np) / kp.min(np) <= BALANCE_THRESHOLD, "kp={kp} np={np}");
+        assert!(m.spatial.prims_used() <= sys.count);
+        // and it should use most of the pool for a huge GEMM
+        assert!(m.spatial.prims_used() >= sys.count / 2, "{}", m.spatial.prims_used());
+    }
+
+    #[test]
+    fn gemv_maps_single_input_row() {
+        let sys = d1_rf();
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(1, 4096, 4096));
+        assert_eq!(m.nest.blocks[2].dim_factor(Dim::M), 1);
+        assert!(m.nest.validate().is_ok());
+    }
+
+    #[test]
+    fn cim_at_smem_stages_everything() {
+        // No intermediate level: M1 covers all of M.
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(4096, 512, 512));
+        assert_eq!(m.nest.blocks[2].dim_factor(Dim::M), 4096);
+        assert_eq!(m.nest.blocks[0].loops.len(), 0, "no DRAM-level remainder loops");
+    }
+}

@@ -1,0 +1,192 @@
+//! Spatial assignment of the weight matrix across CiM primitives.
+//!
+//! The stationary weight tile spans `k_prims × n_prims` primitives;
+//! within each primitive, `ku × nu` weight positions are occupied
+//! (`ku ≤ Rp·Rh` rows, `nu ≤ Cp·Ch` columns). The paper's §IV-B gives
+//! priority to *parallelism* — weights spread across primitives before
+//! filling a primitive's sequential (hold) positions.
+
+use crate::arch::CimSystem;
+
+/// Spatial weight placement across the integrated primitives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CimSpatial {
+    /// Primitives tiled along the reduction dimension K.
+    pub k_prims: u64,
+    /// Primitives tiled along the output dimension N.
+    pub n_prims: u64,
+    /// Weight rows used per primitive (K direction, ≤ Rp·Rh).
+    pub ku: u64,
+    /// Weight columns used per primitive (N direction, ≤ Cp·Ch).
+    pub nu: u64,
+    /// Weight-duplication factor: copies of the stationary tile across
+    /// primitive groups, each processing a disjoint slice of M in
+    /// parallel (the paper's §IV-B future-work extension; 1 = off).
+    pub m_prims: u64,
+}
+
+impl CimSpatial {
+    /// Primitives actually holding weights (duplication included).
+    pub fn prims_used(&self) -> u64 {
+        self.k_prims * self.n_prims * self.m_prims
+    }
+
+    /// Stationary tile extent along K (clamped to the GEMM's K).
+    pub fn k0(&self, k: u64) -> u64 {
+        (self.k_prims * self.ku).min(k)
+    }
+
+    /// Stationary tile extent along N (clamped to the GEMM's N).
+    pub fn n0(&self, n: u64) -> u64 {
+        (self.n_prims * self.nu).min(n)
+    }
+
+    /// Sequential primitive passes needed per input row: each pass
+    /// covers `Rp × Cp` parallel MACs; the held (sequential) positions
+    /// multiply passes (§IV-A).
+    pub fn passes_per_row(&self, sys: &CimSystem) -> u64 {
+        let p = &sys.primitive;
+        self.ku.div_ceil(p.rp) * self.nu.div_ceil(p.cp)
+    }
+
+    /// Compute-hardware utilization (§V-D): occupied MAC positions over
+    /// the total positions of all integrated primitives (each CiM unit
+    /// contributes `Rh × Ch` MAC units).
+    pub fn utilization(&self, sys: &CimSystem) -> f64 {
+        let p = &sys.primitive;
+        let total = (sys.count * p.weight_rows() * p.weight_cols()) as f64;
+        (self.prims_used() * self.ku * self.nu) as f64 / total
+    }
+
+    /// Validity against the system: fits the primitive grid and the
+    /// integrated primitive count.
+    pub fn validate(&self, sys: &CimSystem) -> Result<(), String> {
+        let p = &sys.primitive;
+        if self.ku == 0
+            || self.nu == 0
+            || self.k_prims == 0
+            || self.n_prims == 0
+            || self.m_prims == 0
+        {
+            return Err("spatial extents must be positive".into());
+        }
+        if self.ku > p.weight_rows() {
+            return Err(format!("ku {} > rows {}", self.ku, p.weight_rows()));
+        }
+        if self.nu > p.weight_cols() {
+            return Err(format!("nu {} > cols {}", self.nu, p.weight_cols()));
+        }
+        if self.prims_used() > sys.count {
+            return Err(format!(
+                "uses {} primitives > integrated {}",
+                self.prims_used(),
+                sys.count
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Architecture, MemLevel};
+    use crate::cim::CimPrimitive;
+
+    fn d1_rf() -> CimSystem {
+        CimSystem::at_level(
+            &Architecture::default_sm(),
+            CimPrimitive::digital_6t(),
+            MemLevel::RegisterFile,
+        )
+    }
+
+    #[test]
+    fn extents_and_clamping() {
+        let s = CimSpatial {
+            k_prims: 2,
+            n_prims: 1,
+            ku: 256,
+            nu: 16,
+            m_prims: 1,
+        };
+        assert_eq!(s.k0(1024), 512);
+        assert_eq!(s.k0(300), 300); // clamped to GEMM K
+        assert_eq!(s.n0(1024), 16);
+        assert_eq!(s.prims_used(), 2);
+    }
+
+    #[test]
+    fn passes_fully_parallel_primitive() {
+        // Digital-6T has Rh=Ch=1: a full grid is one pass.
+        let sys = d1_rf();
+        let s = CimSpatial {
+            k_prims: 1,
+            n_prims: 1,
+            ku: 256,
+            nu: 16,
+            m_prims: 1,
+        };
+        assert_eq!(s.passes_per_row(&sys), 1);
+    }
+
+    #[test]
+    fn passes_with_holds() {
+        // Analog-6T: Rp=64, Cp=4, Ch=16 -> full 64x64 grid takes 16
+        // column-hold passes.
+        let sys = CimSystem::at_level(
+            &Architecture::default_sm(),
+            CimPrimitive::analog_6t(),
+            MemLevel::RegisterFile,
+        );
+        let s = CimSpatial {
+            k_prims: 1,
+            n_prims: 1,
+            ku: 64,
+            nu: 64,
+            m_prims: 1,
+        };
+        assert_eq!(s.passes_per_row(&sys), 16);
+        // Half the columns -> half the passes.
+        let s = CimSpatial { nu: 32, ..s };
+        assert_eq!(s.passes_per_row(&sys), 8);
+    }
+
+    #[test]
+    fn utilization_full_and_partial() {
+        let sys = d1_rf(); // 3 primitives of 256x16
+        let full = CimSpatial {
+            k_prims: 3,
+            n_prims: 1,
+            ku: 256,
+            nu: 16,
+            m_prims: 1,
+        };
+        assert!((full.utilization(&sys) - 1.0).abs() < 1e-12);
+        let third = CimSpatial {
+            k_prims: 1,
+            n_prims: 1,
+            ku: 256,
+            nu: 16,
+            m_prims: 1,
+        };
+        assert!((third.utilization(&sys) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation() {
+        let sys = d1_rf();
+        let ok = CimSpatial {
+            k_prims: 1,
+            n_prims: 3,
+            ku: 256,
+            nu: 16,
+            m_prims: 1,
+        };
+        assert!(ok.validate(&sys).is_ok());
+        let too_many = CimSpatial { n_prims: 4, ..ok };
+        assert!(too_many.validate(&sys).is_err());
+        let too_tall = CimSpatial { ku: 257, ..ok };
+        assert!(too_tall.validate(&sys).is_err());
+    }
+}

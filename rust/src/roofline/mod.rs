@@ -1,0 +1,90 @@
+//! Roofline / ridge-point analysis (paper Appendix B, after Williams
+//! et al. [46]).
+//!
+//! The ridge point of a (peak GOPS, bandwidth) pair is the arithmetic
+//! intensity below which a workload is bandwidth-bound:
+//! `ridge = peak / bandwidth` (ops per byte). The paper quotes ridge
+//! points of 32.5 (SMEM, 42 B/cycle) and 42.6 (DRAM, 32 B/cycle) for
+//! the 3×Digital-6T register-file integration.
+
+use crate::arch::{CimSystem, MemLevel};
+use crate::workload::Gemm;
+
+/// Roofline of one system against one bandwidth-limited level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Roofline {
+    /// Peak compute throughput, GOPS.
+    pub peak_gops: f64,
+    /// Sustained bandwidth, GB/s (= bytes/cycle at 1 GHz).
+    pub bandwidth_gbs: f64,
+}
+
+impl Roofline {
+    pub fn of(sys: &CimSystem, level: MemLevel) -> Self {
+        Roofline {
+            peak_gops: sys.peak_gops(),
+            bandwidth_gbs: sys.arch.level(level).bandwidth_bytes_per_cycle,
+        }
+    }
+
+    /// Arithmetic intensity (ops/byte) where compute and bandwidth
+    /// bounds intersect.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_gops / self.bandwidth_gbs
+    }
+
+    /// Attainable GOPS at a given arithmetic intensity.
+    pub fn attainable_gops(&self, intensity: f64) -> f64 {
+        self.peak_gops.min(self.bandwidth_gbs * intensity)
+    }
+
+    /// Whether a GEMM's *algorithmic* reuse puts it under the ridge
+    /// (memory-bound in the ideal case).
+    pub fn memory_bound(&self, gemm: &Gemm) -> bool {
+        gemm.algorithmic_reuse() < self.ridge_point()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Architecture;
+    use crate::cim::CimPrimitive;
+
+    fn d1_rf() -> CimSystem {
+        CimSystem::at_level(
+            &Architecture::default_sm(),
+            CimPrimitive::digital_6t(),
+            MemLevel::RegisterFile,
+        )
+    }
+
+    #[test]
+    fn appendix_b_ridge_points() {
+        let sys = d1_rf();
+        let smem = Roofline::of(&sys, MemLevel::Smem);
+        let dram = Roofline::of(&sys, MemLevel::Dram);
+        // Paper: 32.5 for SMEM (42 B/cycle), 42.6 for DRAM (32 B/cycle).
+        assert!((smem.ridge_point() - 32.5).abs() < 0.1, "{}", smem.ridge_point());
+        assert!((dram.ridge_point() - 42.6).abs() < 0.1, "{}", dram.ridge_point());
+    }
+
+    #[test]
+    fn attainable_is_min_of_bounds() {
+        let r = Roofline {
+            peak_gops: 1000.0,
+            bandwidth_gbs: 10.0,
+        };
+        assert_eq!(r.attainable_gops(1.0), 10.0);
+        assert_eq!(r.attainable_gops(1000.0), 1000.0);
+        assert_eq!(r.attainable_gops(r.ridge_point()), 1000.0);
+    }
+
+    #[test]
+    fn gemv_under_ridge_gemm_above() {
+        let sys = d1_rf();
+        let dram = Roofline::of(&sys, MemLevel::Dram);
+        assert!(dram.memory_bound(&Gemm::new(1, 4096, 4096)));
+        assert!(!dram.memory_bound(&Gemm::new(512, 1024, 1024)));
+    }
+}

@@ -1,0 +1,229 @@
+//! Artifact manifest: the TSV written by `python/compile/aot.py`
+//! describing every compiled HLO module's signature.
+//!
+//! Line format: `name \t file \t in=i8:16x64,i8:64x32 \t out=i32:16x64`
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element dtype of a tensor in a signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    I8,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "i8" => Ok(Dtype::I8),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    fn parse(s: &str) -> Result<TensorSig> {
+        let (dt, dims) = s
+            .split_once(':')
+            .with_context(|| format!("malformed tensor sig {s:?}"))?;
+        let shape = dims
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSig {
+            dtype: Dtype::parse(dt)?,
+            shape,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Full signature of one artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl Signature {
+    /// For the `gemm_MxNxK` artifacts: the (m, n, k) this kernel
+    /// computes, derived from the input shapes.
+    pub fn gemm_dims(&self) -> Option<(usize, usize, usize)> {
+        if self.inputs.len() != 2 {
+            return None;
+        }
+        let (x, w) = (&self.inputs[0], &self.inputs[1]);
+        if x.shape.len() != 2 || w.shape.len() != 2 || x.shape[1] != w.shape[0] {
+            return None;
+        }
+        Some((x.shape[0], w.shape[1], x.shape[1]))
+    }
+}
+
+/// Parsed manifest with name lookup.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, Signature>,
+}
+
+impl Manifest {
+    /// Parse `manifest.tsv` inside `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {}: expected 4 columns, got {}", lineno + 1, cols.len());
+            }
+            let name = cols[0].to_string();
+            let file = dir.join(cols[1]);
+            let in_sig = cols[2]
+                .strip_prefix("in=")
+                .with_context(|| format!("line {}: missing in=", lineno + 1))?;
+            let out_sig = cols[3]
+                .strip_prefix("out=")
+                .with_context(|| format!("line {}: missing out=", lineno + 1))?;
+            let inputs = in_sig
+                .split(',')
+                .map(TensorSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = out_sig
+                .split(',')
+                .map(TensorSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                Signature {
+                    name,
+                    file,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Signature> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All plain GEMM kernels as (name, (m, n, k)).
+    pub fn gemm_kernels(&self) -> Vec<(&str, (usize, usize, usize))> {
+        self.entries
+            .values()
+            .filter(|s| s.name.starts_with("gemm_"))
+            .filter_map(|s| s.gemm_dims().map(|d| (s.name.as_str(), d)))
+            .collect()
+    }
+
+    /// Smallest GEMM kernel that can host an `(m, n, k)` tile by
+    /// zero-padding (exact for integer GEMM).
+    pub fn kernel_for_tile(&self, m: usize, n: usize, k: usize) -> Option<&str> {
+        self.gemm_kernels()
+            .into_iter()
+            .filter(|&(_, (km, kn, kk))| km >= m && kn >= n && kk >= k)
+            .min_by_key(|&(_, (km, kn, kk))| km * kn * kk)
+            .map(|(name, _)| name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "gemm_16x64x64\tgemm_16x64x64.hlo.txt\tin=i8:16x64,i8:64x64\tout=i32:16x64\n\
+gemm_128x64x512\tgemm_128x64x512.hlo.txt\tin=i8:128x512,i8:512x64\tout=i32:128x64\n\
+mlp_16x64x256\tmlp_16x64x256.hlo.txt\tin=i8:16x64,i8:64x256,i8:256x64\tout=i32:16x64\n";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = manifest();
+        assert_eq!(m.len(), 3);
+        let sig = m.get("gemm_16x64x64").unwrap();
+        assert_eq!(sig.inputs.len(), 2);
+        assert_eq!(sig.inputs[0].shape, vec![16, 64]);
+        assert_eq!(sig.inputs[0].dtype, Dtype::I8);
+        assert_eq!(sig.outputs[0].dtype, Dtype::I32);
+        assert!(sig.file.ends_with("gemm_16x64x64.hlo.txt"));
+    }
+
+    #[test]
+    fn gemm_dims_derivation() {
+        let m = manifest();
+        assert_eq!(m.get("gemm_128x64x512").unwrap().gemm_dims(), Some((128, 64, 512)));
+        // 3-input mlp is not a plain GEMM
+        assert_eq!(m.get("mlp_16x64x256").unwrap().gemm_dims(), None);
+    }
+
+    #[test]
+    fn kernel_for_tile_picks_smallest_fitting() {
+        let m = manifest();
+        assert_eq!(m.kernel_for_tile(16, 16, 64), Some("gemm_16x64x64"));
+        assert_eq!(m.kernel_for_tile(64, 16, 256), Some("gemm_128x64x512"));
+        assert_eq!(m.kernel_for_tile(999, 1, 1), None);
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("only\tthree\tcolumns", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("a\tb\tc\td", Path::new("/tmp")).is_err()); // no in=/out=
+        assert!(
+            Manifest::parse("n\tf\tin=f64:2x2\tout=i32:2", Path::new("/tmp")).is_err(),
+            "unknown dtype must be rejected"
+        );
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-lite: if `make artifacts` has run, the real
+        // manifest must parse and contain the workhorse kernel.
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("gemm_128x64x512").is_some());
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Row-major host matrices for the runtime path, plus the rust-native
+//! reference GEMM used to cross-check PJRT results.
+
+use crate::util::rng::Rng;
+
+/// Row-major INT8 matrix (operands).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI8 {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// Deterministic random matrix over the full INT8 range.
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| (rng.gen_range(0, 256) as i64 - 128) as i8)
+            .collect();
+        MatI8 { rows, cols, data }
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Copy the sub-block `[r0, r0+h) x [c0, c0+w)` (clamped at the
+    /// matrix edge) into a zero-padded `h x w` matrix — the tile
+    /// extraction used by the tiled executor (zero padding is exact
+    /// identity for integer GEMM).
+    pub fn tile_padded(&self, r0: usize, c0: usize, h: usize, w: usize) -> MatI8 {
+        let mut out = MatI8::zeros(h, w);
+        let h_real = h.min(self.rows.saturating_sub(r0));
+        let w_real = w.min(self.cols.saturating_sub(c0));
+        for r in 0..h_real {
+            let src = (r0 + r) * self.cols + c0;
+            let dst = r * w;
+            out.data[dst..dst + w_real].copy_from_slice(&self.data[src..src + w_real]);
+        }
+        out
+    }
+
+    /// Raw bytes (two's complement), for PJRT literal creation.
+    pub fn bytes(&self) -> &[u8] {
+        // i8 and u8 have identical layout.
+        unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len()) }
+    }
+}
+
+/// Row-major INT32 matrix (accumulators / outputs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        MatI32 { rows, cols, data }
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Accumulate `tile` into this matrix at offset `(r0, c0)`,
+    /// dropping any part that falls outside (padding rows/cols).
+    pub fn accumulate(&mut self, r0: usize, c0: usize, tile: &MatI32) {
+        for r in 0..tile.rows.min(self.rows.saturating_sub(r0)) {
+            for c in 0..tile.cols.min(self.cols.saturating_sub(c0)) {
+                self.data[(r0 + r) * self.cols + (c0 + c)] += tile.get(r, c);
+            }
+        }
+    }
+
+    /// Largest absolute difference against another matrix.
+    pub fn max_abs_diff(&self, other: &MatI32) -> i64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as i64 - *b as i64).abs())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Reference INT8 GEMM with INT32 accumulation — the rust-side oracle
+/// mirroring `python/compile/kernels/ref.py`.
+pub fn gemm_ref(x: &MatI8, w: &MatI8) -> MatI32 {
+    assert_eq!(x.cols, w.rows, "reduction mismatch");
+    let mut out = MatI32::zeros(x.rows, w.cols);
+    for r in 0..x.rows {
+        for k in 0..x.cols {
+            let xv = x.get(r, k) as i32;
+            if xv == 0 {
+                continue;
+            }
+            for c in 0..w.cols {
+                out.data[r * w.cols + c] += xv * w.get(k, c) as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic INT32 -> INT8 requantization matching
+/// `ref.requant_ref`: arithmetic shift right then truncating cast.
+pub fn requant(acc: &MatI32, shift: u32) -> MatI8 {
+    MatI8 {
+        rows: acc.rows,
+        cols: acc.cols,
+        data: acc.data.iter().map(|&v| (v >> shift) as i8).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_ref_small_known() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = identity passthrough
+        let x = MatI8 {
+            rows: 2,
+            cols: 2,
+            data: vec![1, 2, 3, 4],
+        };
+        let id = MatI8 {
+            rows: 2,
+            cols: 2,
+            data: vec![1, 0, 0, 1],
+        };
+        let out = gemm_ref(&x, &id);
+        assert_eq!(out.data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn gemm_ref_accumulates_negative() {
+        let x = MatI8 {
+            rows: 1,
+            cols: 3,
+            data: vec![-128, 127, -1],
+        };
+        let w = MatI8 {
+            rows: 3,
+            cols: 1,
+            data: vec![127, 127, 127],
+        };
+        assert_eq!(gemm_ref(&x, &w).data, vec![(-128 + 127 - 1) * 127]);
+    }
+
+    #[test]
+    fn tile_padding_zero_fills() {
+        let m = MatI8 {
+            rows: 2,
+            cols: 2,
+            data: vec![1, 2, 3, 4],
+        };
+        let t = m.tile_padded(1, 1, 2, 3);
+        assert_eq!(t.data, vec![4, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn tiled_gemm_equals_full() {
+        // Manual 2x2-tiling of a GEMM must reproduce the full result —
+        // the core invariant behind the tiled executor.
+        let mut rng = Rng::new(42);
+        let x = MatI8::random(7, 13, &mut rng);
+        let w = MatI8::random(13, 9, &mut rng);
+        let want = gemm_ref(&x, &w);
+        let (tk, tn, tm) = (5, 4, 3);
+        let mut got = MatI32::zeros(7, 9);
+        for k0 in (0..13).step_by(tk) {
+            for n0 in (0..9).step_by(tn) {
+                for m0 in (0..7).step_by(tm) {
+                    let xt = x.tile_padded(m0, k0, tm, tk);
+                    let wt = w.tile_padded(k0, n0, tk, tn);
+                    got.accumulate(m0, n0, &gemm_ref(&xt, &wt));
+                }
+            }
+        }
+        assert_eq!(got.max_abs_diff(&want), 0);
+    }
+
+    #[test]
+    fn requant_matches_python_semantics() {
+        let acc = MatI32::from_vec(1, 4, vec![-256, 256, 130 << 8, -130 << 8]);
+        let q = requant(&acc, 8);
+        assert_eq!(q.data, vec![-1, 1, -126, 126]);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_full_range() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = MatI8::random(32, 32, &mut r1);
+        let b = MatI8::random(32, 32, &mut r2);
+        assert_eq!(a, b);
+        assert!(a.data.iter().any(|&v| v < -100));
+        assert!(a.data.iter().any(|&v| v > 100));
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let m = MatI8 {
+            rows: 1,
+            cols: 2,
+            data: vec![-1, 1],
+        };
+        assert_eq!(m.bytes(), &[0xFF, 0x01]);
+    }
+}

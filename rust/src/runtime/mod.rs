@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/`
+//! and executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Python never runs here — the artifacts are HLO text compiled once at
+//! build time (`make artifacts`); this module is the only bridge
+//! between the analytical framework and real numerics. The
+//! [`tiled::TiledExecutor`] replays an analytical [`crate::mapping::Mapping`]
+//! tile-by-tile through the compiled kernels and proves it computes the
+//! same result as the whole-GEMM execution.
+
+pub mod artifacts;
+pub mod matrix;
+pub mod pjrt;
+pub mod tiled;
+
+pub use artifacts::{Manifest, Signature, TensorSig};
+pub use matrix::{MatI32, MatI8};
+pub use pjrt::Engine;
+pub use tiled::TiledExecutor;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$WWW_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("WWW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,168 @@
+//! The PJRT execution engine: compile-once, execute-many host for the
+//! AOT artifacts (pattern from /opt/xla-example/load_hlo.rs).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{Dtype, Manifest};
+use super::matrix::{MatI32, MatI8};
+
+/// CPU PJRT engine with an executable cache.
+///
+/// Not `Sync` (PJRT handles are raw pointers); the coordinator owns one
+/// engine on the validation path. The analytical evaluation grid never
+/// touches it.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let sig = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest at {:?}", self.dir))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            sig.file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", sig.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on INT8 matrix inputs; returns the INT32
+    /// outputs (jax lowers with `return_tuple=True`, so the result is
+    /// always a tuple).
+    pub fn execute_i8(&self, name: &str, inputs: &[&MatI8]) -> Result<Vec<MatI32>> {
+        let sig = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        if sig.inputs.len() != inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (ts, m) in sig.inputs.iter().zip(inputs) {
+            if ts.dtype != Dtype::I8 {
+                bail!("{name}: non-i8 input in signature");
+            }
+            if ts.shape != [m.rows, m.cols] {
+                bail!(
+                    "{name}: input shape mismatch: artifact wants {:?}, got {}x{}",
+                    ts.shape,
+                    m.rows,
+                    m.cols
+                );
+            }
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S8,
+                &[m.rows, m.cols],
+                m.bytes(),
+            )
+            .context("creating input literal")?;
+            literals.push(lit);
+        }
+
+        self.executable(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = result.to_tuple().context("untupling result")?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                sig.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (ts, lit) in sig.outputs.iter().zip(parts) {
+            if ts.dtype != Dtype::I32 || ts.shape.len() != 2 {
+                bail!("{name}: unsupported output signature {ts:?}");
+            }
+            let data = lit.to_vec::<i32>().context("reading i32 output")?;
+            outs.push(MatI32::from_vec(ts.shape[0], ts.shape[1], data));
+        }
+        Ok(outs)
+    }
+
+    /// Execute a plain GEMM artifact, zero-padding the operands up to
+    /// the kernel's shape and slicing the result back. Exact for
+    /// integer GEMM — this is how the tiled executor reuses one
+    /// workhorse kernel for every tile shape.
+    pub fn gemm_padded(&self, kernel: &str, x: &MatI8, w: &MatI8) -> Result<MatI32> {
+        let sig = self
+            .manifest
+            .get(kernel)
+            .with_context(|| format!("kernel {kernel:?} not in manifest"))?;
+        let (km, kn, kk) = sig
+            .gemm_dims()
+            .with_context(|| format!("{kernel} is not a plain GEMM artifact"))?;
+        if x.rows > km || x.cols > kk || w.cols > kn {
+            bail!(
+                "tile {}x{}x{} exceeds kernel {kernel} ({km}x{kn}x{kk})",
+                x.rows,
+                w.cols,
+                x.cols
+            );
+        }
+        let xp = x.tile_padded(0, 0, km, kk);
+        let wp = w.tile_padded(0, 0, kk, kn);
+        let full = self.execute_i8(kernel, &[&xp, &wp])?.remove(0);
+        // Slice back to the true tile shape.
+        let mut out = MatI32::zeros(x.rows, w.cols);
+        for r in 0..x.rows {
+            for c in 0..w.cols {
+                out.data[r * w.cols + c] = full.get(r, c);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,181 @@
+//! Timing harness used by the `cargo bench` targets (criterion is
+//! unavailable offline; the bench targets set `harness = false` and call
+//! into this module).
+//!
+//! Methodology: warmup runs, then `samples` timed runs of the closure;
+//! report mean / σ / min, and optionally a derived throughput. A
+//! `black_box` equivalent prevents the optimizer from deleting work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-style name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    /// items per iteration, for throughput reporting (0 = none)
+    pub items_per_iter: u64,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+
+    pub fn std_dev(&self) -> Duration {
+        if self.samples.len() < 2 {
+            return Duration::ZERO;
+        }
+        let mean = self.mean().as_secs_f64();
+        let var = self
+            .samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean).powi(2))
+            .sum::<f64>()
+            / self.samples.len() as f64;
+        Duration::from_secs_f64(var.sqrt())
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} mean {:>12?}  σ {:>10?}  min {:>12?}  n={}",
+            self.name,
+            self.mean(),
+            self.std_dev(),
+            self.min(),
+            self.samples.len()
+        );
+        if self.items_per_iter > 0 {
+            let per_sec = self.items_per_iter as f64 / self.mean().as_secs_f64();
+            s.push_str(&format!("  ({per_sec:.0} items/s)"));
+        }
+        s
+    }
+}
+
+/// Bench runner: collects measurements, prints a criterion-like report.
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+    measurements: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // WWW_BENCH_SAMPLES / WWW_BENCH_WARMUP tune without rebuilds;
+        // keep defaults small enough that `cargo bench` finishes quickly.
+        Bencher {
+            warmup: env_usize("WWW_BENCH_WARMUP", 2),
+            samples: env_usize("WWW_BENCH_SAMPLES", 10),
+            measurements: Vec::new(),
+        }
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` (its return value is black-boxed) and record under `name`.
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.bench_with_items(name, 0, &mut f)
+    }
+
+    /// Like [`Bencher::bench`] but also reports `items`/iteration
+    /// throughput.
+    pub fn bench_with_items<R, F: FnMut() -> R>(
+        &mut self,
+        name: &str,
+        items: u64,
+        f: &mut F,
+    ) -> &Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples,
+            items_per_iter: items,
+        };
+        println!("{}", m.report());
+        self.measurements.push(m);
+        self.measurements.last().expect("just pushed")
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Final summary block, printed by each bench main.
+    pub fn finish(&self, suite: &str) {
+        println!("\n== bench suite '{suite}': {} measurements ==", self.measurements.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_records() {
+        let mut b = Bencher {
+            warmup: 1,
+            samples: 3,
+            measurements: Vec::new(),
+        };
+        b.bench("noop", || 42);
+        assert_eq!(b.measurements().len(), 1);
+        assert_eq!(b.measurements()[0].samples.len(), 3);
+    }
+
+    #[test]
+    fn mean_min_ordering() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![
+                Duration::from_micros(10),
+                Duration::from_micros(20),
+                Duration::from_micros(30),
+            ],
+            items_per_iter: 0,
+        };
+        assert_eq!(m.min(), Duration::from_micros(10));
+        assert_eq!(m.mean(), Duration::from_micros(20));
+        assert!(m.std_dev() > Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_in_report() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![Duration::from_millis(1)],
+            items_per_iter: 1000,
+        };
+        assert!(m.report().contains("items/s"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Provides the subset this repo needs: seeded random generation of
+//! structured inputs, a configurable number of cases, and clear failure
+//! reporting including the seed to reproduce. Greedy scalar shrinking is
+//! applied to `Vec<u64>`-encoded inputs (each failing component is
+//! bisected toward its minimum while the property still fails).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this image)
+//! use www_cim::util::check::{check, Config};
+//! check(Config::default().cases(64), "add commutes", |rng| {
+//!     let (a, b) = (rng.gen_range(0, 1000), rng.gen_range(0, 1000));
+//!     if a + b != b + a { return Err(format!("{a}+{b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // WWW_CHECK_CASES / WWW_SEED allow widening runs without code edits.
+        let cases = std::env::var("WWW_CHECK_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        let seed = std::env::var("WWW_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC1A0_5EED);
+        Config { cases, seed }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` against `cfg.cases` seeded RNG streams; panic with the
+/// case index + seed + message on the first failure.
+pub fn check<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (WWW_SEED={} reproduces): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Run a property over explicitly-encoded `Vec<u64>` inputs, with greedy
+/// per-component shrinking on failure. `gen` draws an input; `prop`
+/// returns `Err` on failure.
+pub fn check_shrink<G, F>(cfg: Config, name: &str, mut gen: G, mut prop: F)
+where
+    G: FnMut(&mut Rng) -> Vec<u64>,
+    F: FnMut(&[u64]) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let (shrunk, msg) = shrink(&input, &mut prop, first_msg);
+            panic!(
+                "property '{name}' failed at case {case} (WWW_SEED={} reproduces)\n  \
+                 original input: {input:?}\n  shrunk input:   {shrunk:?}\n  error: {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Greedily bisect each component toward 0 while the property keeps
+/// failing; returns the minimized input and its failure message.
+fn shrink<F>(input: &[u64], prop: &mut F, mut msg: String) -> (Vec<u64>, String)
+where
+    F: FnMut(&[u64]) -> Result<(), String>,
+{
+    let mut cur = input.to_vec();
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for i in 0..cur.len() {
+            let mut lo = 0u64;
+            let mut hi = cur[i];
+            // find the smallest value of component i that still fails
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                let mut cand = cur.clone();
+                cand[i] = mid;
+                match prop(&cand) {
+                    Err(e) => {
+                        hi = mid;
+                        msg = e;
+                    }
+                    Ok(()) => lo = mid + 1,
+                }
+            }
+            if hi < cur[i] {
+                cur[i] = hi;
+                progress = true;
+            }
+        }
+    }
+    (cur, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default().cases(32), "u64 add is monotone", |rng| {
+            let a = rng.gen_range(0, 1 << 20);
+            let b = rng.gen_range(0, 1 << 20);
+            if a + b >= a {
+                Ok(())
+            } else {
+                Err("overflow".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        check(Config::default().cases(4), "always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Property: all components < 10. Failure is minimized to exactly 10.
+        let input = vec![500u64, 3, 77];
+        let mut prop = |xs: &[u64]| {
+            if xs.iter().all(|&x| x < 10) {
+                Ok(())
+            } else {
+                Err(format!("{xs:?} has component >= 10"))
+            }
+        };
+        let (shrunk, _) = shrink(&input, &mut prop, "seed".into());
+        assert_eq!(shrunk, vec![0, 0, 10]); // earlier components zeroed first, last pinned at the bound
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn check_shrink_reports_minimized() {
+        check_shrink(
+            Config::default().cases(8),
+            "component bound",
+            |rng| vec![rng.gen_range(0, 1000), rng.gen_range(0, 1000)],
+            |xs| {
+                if xs[0] < 900 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! Hand-rolled command-line parsing (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [positional ...] [--flag] [--key value]`
+//! with `--key=value` also accepted. Unknown-flag detection and simple
+//! typed getters cover everything the `repro` CLI needs.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+/// Marker value for boolean flags given without a value.
+const PRESENT: &str = "\u{1}true";
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I, S>(argv: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().map(Into::into).peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(stripped.to_string(), PRESENT.to_string());
+                        }
+                    }
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the current process's arguments.
+    pub fn from_env() -> Self {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag: present (with or without a truthy value)?
+    pub fn flag(&self, name: &str) -> bool {
+        match self.flags.get(name) {
+            None => false,
+            Some(v) => v == PRESENT || matches!(v.as_str(), "true" | "1" | "yes"),
+        }
+    }
+
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|v| {
+            if v == PRESENT {
+                "true"
+            } else {
+                v.as_str()
+            }
+        })
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a helpful message on a
+    /// malformed value (user error, not programmer error).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{name}: cannot parse {v:?} as {}", std::any::type_name::<T>())
+            }),
+        }
+    }
+
+    /// All provided flag names (for unknown-flag validation).
+    pub fn flag_names(&self) -> impl Iterator<Item = &str> {
+        self.flags.keys().map(String::as_str)
+    }
+
+    /// Error message listing any flags outside `known`, or None if clean.
+    pub fn unknown_flags(&self, known: &[&str]) -> Option<String> {
+        let unknown: Vec<&str> = self
+            .flag_names()
+            .filter(|n| !known.contains(n))
+            .collect();
+        if unknown.is_empty() {
+            None
+        } else {
+            Some(format!(
+                "unknown flag(s): {}; known: {}",
+                unknown.join(", "),
+                known.join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace())
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("experiment fig9 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig9", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("run --level smem --seed=42");
+        assert_eq!(a.get("level"), Some("smem"));
+        assert_eq!(a.get_parsed_or::<u64>("seed", 0), 42);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("run --verbose --out file.csv");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("out"), Some("file.csv"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("run --fast --level rf");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("level"), Some("rf"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("level", "rf"), "rf");
+        assert_eq!(a.get_parsed_or::<usize>("n", 10), 10);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("run --levle rf");
+        let err = a.unknown_flags(&["level"]).unwrap();
+        assert!(err.contains("levle"));
+        assert!(parse("run --level rf").unknown_flags(&["level"]).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn malformed_typed_flag_panics() {
+        let a = parse("run --n abc");
+        let _: usize = a.get_parsed_or("n", 0);
+    }
+}

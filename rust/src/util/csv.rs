@@ -1,0 +1,155 @@
+//! Minimal CSV output (serde/csv crates unavailable offline).
+//!
+//! Every experiment regenerator mirrors its printed table into
+//! `results/<id>.csv` with this writer so figures can be re-plotted.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// In-memory CSV document with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Csv {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// RFC-4180-style encoding: quote fields containing `,`, `"` or
+    /// newlines; double embedded quotes.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&encode_row(&self.header));
+        for r in &self.rows {
+            out.push_str(&encode_row(r));
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.encode().as_bytes())
+    }
+}
+
+fn encode_row(cells: &[String]) -> String {
+    let mut line = cells
+        .iter()
+        .map(|c| encode_field(c))
+        .collect::<Vec<_>>()
+        .join(",");
+    line.push('\n');
+    line
+}
+
+fn encode_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Parse a simple CSV document (no embedded newlines) — used by tests
+/// and the artifact-manifest reader.
+pub fn parse(text: &str) -> Vec<Vec<String>> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(parse_line)
+        .collect()
+}
+
+fn parse_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_basic() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1", "2"]);
+        assert_eq!(c.encode(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(encode_field("plain"), "plain");
+        assert_eq!(encode_field("a,b"), "\"a,b\"");
+        assert_eq!(encode_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Csv::new(vec!["x", "y"]);
+        c.row(vec!["with,comma", "with \"quote\""]);
+        let parsed = parse(&c.encode());
+        assert_eq!(parsed[0], vec!["x", "y"]);
+        assert_eq!(parsed[1], vec!["with,comma", "with \"quote\""]);
+    }
+
+    #[test]
+    fn write_creates_dirs() {
+        let dir = std::env::temp_dir().join("www_cim_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/out.csv");
+        let mut c = Csv::new(vec!["a"]);
+        c.row(vec!["1"]);
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1"]);
+    }
+}

@@ -1,0 +1,21 @@
+//! Utility substrates built in-tree because the offline toolchain only
+//! carries the `xla` dependency closure (see DESIGN.md §Substitutions).
+//!
+//! * [`rng`] — SplitMix64 deterministic PRNG (rand replacement).
+//! * [`stats`] — summary statistics used by the experiment harnesses.
+//! * [`table`] — ASCII table rendering for paper-style output.
+//! * [`csv`] — CSV writers for `results/`.
+//! * [`check`] — mini property-testing harness (proptest replacement).
+//! * [`cli`] — subcommand/flag parser (clap replacement).
+//! * [`pool`] — scoped worker pool (tokio/rayon replacement).
+//! * [`bench`] — timing harness used by `cargo bench` targets
+//!   (criterion replacement).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod csv;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod table;

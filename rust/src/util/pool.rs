@@ -1,0 +1,123 @@
+//! Scoped worker pool (tokio/rayon are unavailable offline).
+//!
+//! The coordinator fans evaluation jobs (workload × primitive × level
+//! grid cells) out over OS threads. Jobs are CPU-bound and independent,
+//! so a shared atomic cursor over the job list (self-balancing: fast
+//! workers simply take more items) is all that is needed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: `WWW_THREADS` env var or
+/// available parallelism (min 1).
+pub fn default_threads() -> usize {
+    std::env::var("WWW_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Apply `f` to every item of `items` in parallel, preserving order of
+/// results. `f` must be `Sync` (shared across workers by reference).
+pub fn map_parallel<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> =
+        (0..items.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("worker skipped an item")
+        })
+        .collect()
+}
+
+/// `map_parallel` with indices — handy when the closure needs to know
+/// which grid cell it is computing.
+pub fn map_parallel_indexed<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let indexed: Vec<usize> = (0..items.len()).collect();
+    map_parallel(&indexed, threads, |&i| f(i, &items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = map_parallel(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn each_item_processed_once() {
+        let items: Vec<usize> = (0..500).collect();
+        let counter = AtomicU64::new(0);
+        let _ = map_parallel(&items, 4, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        assert_eq!(map_parallel(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        let out: Vec<u32> = map_parallel(&items, 4, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn indexed_variant() {
+        let items = vec![10, 20, 30];
+        let out = map_parallel_indexed(&items, 2, |i, &x| i as i32 + x);
+        assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

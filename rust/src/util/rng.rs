@@ -1,0 +1,180 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! SplitMix64 (Steele, Lea, Flood — "Fast Splittable Pseudorandom Number
+//! Generators", OOPSLA 2014) is used everywhere randomness is needed:
+//! the synthetic GEMM dataset, the heuristic mapping search, and the
+//! property-test harness. It is tiny, passes BigCrush when used as a
+//! 64-bit generator, and — critically for reproducibility of the paper's
+//! experiments — fully deterministic from a seed.
+
+/// SplitMix64 PRNG. `Clone` so search states can be forked.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Equal seeds yield equal streams.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Seed from the `WWW_SEED` environment variable, falling back to a
+    /// fixed default so test runs are reproducible by default.
+    pub fn from_env(default: u64) -> Self {
+        let seed = std::env::var("WWW_SEED")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(default);
+        Rng::new(seed)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)` (empty ranges panic).
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "gen_range: empty range [{lo}, {hi})");
+        let span = hi - lo;
+        // Lemire's nearly-divisionless bounded rejection sampling.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (span as u128);
+        let mut l = m as u64;
+        if l < span {
+            let t = span.wrapping_neg() % span;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (span as u128);
+                l = m as u64;
+            }
+        }
+        lo + (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[0, n)`.
+    pub fn index(&mut self, n: usize) -> usize {
+        self.gen_range(0, n as u64) as usize
+    }
+
+    /// Uniformly choose an element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+
+    /// Log-uniform integer in `[lo, hi]` — used for the synthetic GEMM
+    /// dataset so small and large shapes are equally represented, as in
+    /// the paper's 16..8192 sweep.
+    pub fn log_uniform(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(0 < lo && lo <= hi);
+        let (llo, lhi) = ((lo as f64).ln(), (hi as f64).ln());
+        let v = (llo + self.next_f64() * (lhi - llo)).exp();
+        (v.round() as u64).clamp(lo, hi)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v), "{v} out of [0,1)");
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let v = r.gen_range(5, 15);
+            assert!((5..15).contains(&v));
+            seen[(v - 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all values in range should occur");
+    }
+
+    #[test]
+    fn log_uniform_within_bounds() {
+        let mut r = Rng::new(11);
+        for _ in 0..10_000 {
+            let v = r.log_uniform(16, 8192);
+            assert!((16..=8192).contains(&v));
+        }
+    }
+
+    #[test]
+    fn log_uniform_covers_decades() {
+        // Small values must not be starved: that's the point of log sampling.
+        let mut r = Rng::new(13);
+        let (mut small, mut large) = (0, 0);
+        for _ in 0..10_000 {
+            let v = r.log_uniform(16, 8192);
+            if v < 128 {
+                small += 1;
+            }
+            if v >= 1024 {
+                large += 1;
+            }
+        }
+        assert!(small > 1_000, "small shapes starved: {small}");
+        assert!(large > 1_000, "large shapes starved: {large}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mean_is_roughly_half() {
+        let mut r = Rng::new(17);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.next_f64()).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+}

@@ -1,0 +1,146 @@
+//! ASCII table rendering — the experiment regenerators print the paper's
+//! tables/series in this format (and mirror them to CSV via [`crate::util::csv`]).
+
+/// A simple left/right-aligned ASCII table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; must match the header arity.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with column auto-sizing. Numeric-looking cells are
+    /// right-aligned, text cells left-aligned.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncols)
+            .map(|i| {
+                !self.rows.is_empty()
+                    && self.rows.iter().all(|r| looks_numeric(&r[i]))
+            })
+            .collect();
+
+        let mut out = String::new();
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+\n";
+        out.push_str(&sep);
+        out.push_str(&render_row(&self.header, &widths, &vec![false; ncols]));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&render_row(row, &widths, &numeric));
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+fn looks_numeric(s: &str) -> bool {
+    !s.is_empty() && s.trim_end_matches(['x', '%']).trim().parse::<f64>().is_ok()
+}
+
+fn render_row(cells: &[String], widths: &[usize], right: &[bool]) -> String {
+    let mut line = String::new();
+    for ((cell, &w), &r) in cells.iter().zip(widths).zip(right) {
+        if r {
+            line.push_str(&format!("| {cell:>w$} "));
+        } else {
+            line.push_str(&format!("| {cell:<w$} "));
+        }
+    }
+    line.push_str("|\n");
+    line
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["alpha", "1.5"]).row(vec!["bb", "22"]);
+        let s = t.render();
+        assert!(s.contains("| name "));
+        assert!(s.contains("| alpha "));
+        // numeric column right-aligned
+        assert!(s.contains("|   1.5 |") || s.contains("| 1.5 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn numeric_detection() {
+        assert!(looks_numeric("1.25"));
+        assert!(looks_numeric("3.4x"));
+        assert!(looks_numeric("85%"));
+        assert!(!looks_numeric("BERT-Large"));
+        assert!(!looks_numeric(""));
+    }
+
+    #[test]
+    fn widths_fit_longest_cell() {
+        let mut t = Table::new(vec!["h"]);
+        t.row(vec!["a-much-longer-cell"]);
+        let s = t.render();
+        for line in s.lines().filter(|l| l.starts_with('|')) {
+            assert_eq!(line.len(), "| a-much-longer-cell |".len());
+        }
+    }
+
+    #[test]
+    fn counts() {
+        let mut t = Table::new(vec!["a"]);
+        assert!(t.is_empty());
+        t.row(vec!["1"]);
+        assert_eq!(t.n_rows(), 1);
+    }
+}

@@ -1,0 +1,120 @@
+//! Transformer attention/FC GEMM shape derivations (paper Table I).
+//!
+//! Assuming single batch and fused attention-score computation:
+//!
+//! | layer            | M        | N       | K        |
+//! |------------------|----------|---------|----------|
+//! | Q/K/V projection | embed    | seq     | embed    |
+//! | logits (QKᵀ)     | seq      | seq     | embed    |
+//! | attention (QKᵀV) | embed    | seq     | seq      |
+//! | FC layer         | out-dim  | batch   | in-dim   |
+//!
+//! The table's (M, N) convention for projections is output-row = embed;
+//! reported model datasets (Table VI) list the equivalent transposed
+//! form with M = seq — both describe the same multiplication, and
+//! [`TransformerConfig::encoder_gemms`] emits the Table VI orientation
+//! so the derivations cross-check against the hardcoded dataset.
+
+use super::gemm::Gemm;
+
+/// Transformer encoder/decoder layer dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerConfig {
+    /// Sequence length processed per forward pass (1 in decode phase).
+    pub seq: u64,
+    /// Embedding (hidden) size.
+    pub embed: u64,
+    /// Feed-forward inner size (typically 4×embed).
+    pub ff: u64,
+}
+
+impl TransformerConfig {
+    /// BERT-Large: embed 1024, ff 4096, evaluated at seq = 512 (§V-C).
+    pub fn bert_large(seq: u64) -> Self {
+        TransformerConfig {
+            seq,
+            embed: 1024,
+            ff: 4096,
+        }
+    }
+
+    /// GPT-J 6B: embed 4096, ff 16384; decode phase processes 1 token.
+    pub fn gpt_j_decode() -> Self {
+        TransformerConfig {
+            seq: 1,
+            embed: 4096,
+            ff: 16384,
+        }
+    }
+
+    /// Q/K/V/output projection: activations `seq×embed` times weights
+    /// `embed×embed`.
+    pub fn projection(&self) -> Gemm {
+        Gemm::new(self.seq, self.embed, self.embed)
+    }
+
+    /// Attention logits QKᵀ: `seq×embed` times `embed×seq`.
+    pub fn logits(&self) -> Gemm {
+        Gemm::new(self.seq, self.seq, self.embed)
+    }
+
+    /// Attention output QKᵀV: `seq×seq` times `seq×embed`.
+    pub fn attention_v(&self) -> Gemm {
+        Gemm::new(self.seq, self.embed, self.seq)
+    }
+
+    /// First FC of the MLP block: expand embed -> ff.
+    pub fn ffn_expand(&self) -> Gemm {
+        Gemm::new(self.seq, self.ff, self.embed)
+    }
+
+    /// Second FC of the MLP block: contract ff -> embed.
+    pub fn ffn_contract(&self) -> Gemm {
+        Gemm::new(self.seq, self.embed, self.ff)
+    }
+
+    /// The unique GEMMs of one encoder layer, Table VI orientation.
+    pub fn encoder_gemms(&self) -> Vec<Gemm> {
+        vec![
+            self.projection(),
+            self.logits(),
+            self.attention_v(),
+            self.ffn_expand(),
+            self.ffn_contract(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_large_matches_table_vi() {
+        let cfg = TransformerConfig::bert_large(512);
+        let shapes = cfg.encoder_gemms();
+        let expect = [
+            Gemm::new(512, 1024, 1024),
+            Gemm::new(512, 512, 1024),
+            Gemm::new(512, 1024, 512),
+            Gemm::new(512, 4096, 1024),
+            Gemm::new(512, 1024, 4096),
+        ];
+        assert_eq!(shapes, expect);
+    }
+
+    #[test]
+    fn gpt_j_decode_is_gemv() {
+        let cfg = TransformerConfig::gpt_j_decode();
+        assert_eq!(cfg.projection(), Gemm::new(1, 4096, 4096));
+        assert_eq!(cfg.ffn_expand(), Gemm::new(1, 16384, 4096));
+        assert!(cfg.projection().is_gemv());
+    }
+
+    #[test]
+    fn logits_reduce_over_embed() {
+        let cfg = TransformerConfig::bert_large(128);
+        assert_eq!(cfg.logits().k, cfg.embed);
+        assert_eq!(cfg.attention_v().k, cfg.seq);
+    }
+}

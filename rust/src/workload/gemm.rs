@@ -1,0 +1,129 @@
+//! GEMM(M, N, K) — the unit of work throughout the paper.
+//!
+//! Input matrix `M×K` times weight matrix `K×N` gives output `M×N`
+//! (§III-A legacy naming). All matrices are INT-8 (1 byte/element).
+
+use crate::arch::BYTES_PER_ELEM;
+
+/// A general matrix-matrix multiplication shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl Gemm {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        assert!(m > 0 && n > 0 && k > 0, "GEMM dims must be positive");
+        Gemm { m, n, k }
+    }
+
+    /// Arithmetic operations: `2·M·N·K` (multiply + accumulate).
+    pub fn ops(&self) -> u64 {
+        2 * self.m * self.n * self.k
+    }
+
+    /// MAC operations: `M·N·K`.
+    pub fn macs(&self) -> u64 {
+        self.m * self.n * self.k
+    }
+
+    /// Input matrix (A, `M×K`) size in elements.
+    pub fn input_elems(&self) -> u64 {
+        self.m * self.k
+    }
+
+    /// Weight matrix (B, `K×N`) size in elements.
+    pub fn weight_elems(&self) -> u64 {
+        self.k * self.n
+    }
+
+    /// Output matrix (Z, `M×N`) size in elements.
+    pub fn output_elems(&self) -> u64 {
+        self.m * self.n
+    }
+
+    /// Total footprint of all three matrices in bytes.
+    pub fn total_bytes(&self) -> u64 {
+        (self.input_elems() + self.weight_elems() + self.output_elems()) * BYTES_PER_ELEM
+    }
+
+    /// Algorithmic reuse (arithmetic intensity), eq. 1:
+    /// `2MNK / (BP·(MN + NK + MK))` — each matrix fetched exactly once.
+    pub fn algorithmic_reuse(&self) -> f64 {
+        self.ops() as f64 / self.total_bytes() as f64
+    }
+
+    /// Matrix-vector multiplication (`M = 1`): the degenerate case that
+    /// defeats CiM weight reuse (§VI-C).
+    pub fn is_gemv(&self) -> bool {
+        self.m == 1
+    }
+
+    /// "Irregular" shape per §VI-B: one dimension much smaller than the
+    /// others (ratio ≥ `threshold`).
+    pub fn is_irregular(&self, threshold: f64) -> bool {
+        let dims = [self.m as f64, self.n as f64, self.k as f64];
+        let max = dims.iter().cloned().fold(f64::MIN, f64::max);
+        let min = dims.iter().cloned().fold(f64::MAX, f64::min);
+        max / min >= threshold
+    }
+}
+
+impl std::fmt::Display for Gemm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GEMM({}, {}, {})", self.m, self.n, self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_and_macs() {
+        let g = Gemm::new(512, 1024, 1024);
+        assert_eq!(g.macs(), 536_870_912); // Table VI row 1
+        assert_eq!(g.ops(), 2 * 536_870_912);
+    }
+
+    #[test]
+    fn algorithmic_reuse_matches_table_vi() {
+        // Table VI: BERT-Large (512,1024,1024) -> reuse 512.
+        let g = Gemm::new(512, 1024, 1024);
+        assert!((g.algorithmic_reuse() - 512.0).abs() < 0.5);
+        // (512,512,1024) -> 409.6
+        let g = Gemm::new(512, 512, 1024);
+        assert!((g.algorithmic_reuse() - 409.6).abs() < 0.1);
+        // GPT-J decode GEMV (1,4096,4096) -> 1.999
+        let g = Gemm::new(1, 4096, 4096);
+        assert!((g.algorithmic_reuse() - 1.999).abs() < 0.01);
+        // ResNet50 first layer (12544,64,147) -> 88.86
+        let g = Gemm::new(12544, 64, 147);
+        assert!((g.algorithmic_reuse() - 88.860).abs() < 0.01);
+    }
+
+    #[test]
+    fn gemv_detection() {
+        assert!(Gemm::new(1, 256, 512).is_gemv());
+        assert!(!Gemm::new(2, 256, 512).is_gemv());
+    }
+
+    #[test]
+    fn irregularity() {
+        assert!(Gemm::new(1, 4096, 4096).is_irregular(4.0));
+        assert!(!Gemm::new(512, 1024, 1024).is_irregular(4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_dim_rejected() {
+        Gemm::new(0, 1, 1);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Gemm::new(1, 2, 3).to_string(), "GEMM(1, 2, 3)");
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload substrate: the GEMM shapes of ML inference (paper §III-A,
+//! Table I, Table VI) plus the synthetic sweep dataset (§V-C).
+
+pub mod attention;
+pub mod gemm;
+pub mod models;
+pub mod resnet;
+pub mod synthetic;
+
+pub use gemm::Gemm;
+pub use models::{Workload, WorkloadKind};

@@ -1,0 +1,303 @@
+//! The real-model GEMM dataset (paper §V-C, Appendix B Table VI):
+//! ResNet-50 (ImageNet), BERT-Large (seq 512), DLRM, and the GPT-J
+//! decoding phase, all at batch 1.
+
+use super::gemm::Gemm;
+
+/// Workload family, used for grouping in the per-workload figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    Cnn,
+    TransformerEncoder,
+    TransformerDecoder,
+    Recommendation,
+    Synthetic,
+}
+
+impl WorkloadKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Cnn => "CNN",
+            WorkloadKind::TransformerEncoder => "Transformer-Encoder",
+            WorkloadKind::TransformerDecoder => "Transformer-Decoder",
+            WorkloadKind::Recommendation => "Recommendation",
+            WorkloadKind::Synthetic => "Synthetic",
+        }
+    }
+}
+
+/// A named ML workload: an ordered list of GEMM layers.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub kind: WorkloadKind,
+    layers: Vec<Gemm>,
+}
+
+impl Workload {
+    pub fn new(name: &str, kind: WorkloadKind, layers: Vec<Gemm>) -> Self {
+        assert!(!layers.is_empty(), "workload needs at least one layer");
+        Workload {
+            name: name.to_string(),
+            kind,
+            layers,
+        }
+    }
+
+    /// All layers in network order (duplicates kept — repeated blocks
+    /// matter for whole-network totals and Fig 2's frequency shading).
+    pub fn gemms(&self) -> &[Gemm] {
+        &self.layers
+    }
+
+    /// Deduplicated shapes with occurrence counts (Fig 2 shading).
+    pub fn unique_with_counts(&self) -> Vec<(Gemm, usize)> {
+        let mut out: Vec<(Gemm, usize)> = Vec::new();
+        for &g in &self.layers {
+            match out.iter_mut().find(|(u, _)| *u == g) {
+                Some((_, c)) => *c += 1,
+                None => out.push((g, 1)),
+            }
+        }
+        out
+    }
+
+    /// Total MACs of a full forward pass.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|g| g.macs()).sum()
+    }
+}
+
+/// BERT-Large encoder layer at sequence length 512 (Table VI).
+pub fn bert_large() -> Workload {
+    Workload::new(
+        "BERT-Large",
+        WorkloadKind::TransformerEncoder,
+        vec![
+            Gemm::new(512, 1024, 1024),
+            Gemm::new(512, 512, 1024),
+            Gemm::new(512, 1024, 512),
+            Gemm::new(512, 4096, 1024),
+            Gemm::new(512, 1024, 4096),
+        ],
+    )
+}
+
+/// GPT-J 6B decoding phase (Table VI): token-at-a-time GEMVs plus the
+/// large context feed-forward GEMM.
+pub fn gpt_j() -> Workload {
+    Workload::new(
+        "GPT-J",
+        WorkloadKind::TransformerDecoder,
+        vec![
+            Gemm::new(1, 4096, 4096),
+            Gemm::new(2048, 4096, 4096),
+            Gemm::new(1, 2048, 4096),
+            Gemm::new(1, 4096, 2048),
+            Gemm::new(1, 16384, 4096),
+        ],
+    )
+}
+
+/// DLRM MLP layers (Table VI).
+pub fn dlrm() -> Workload {
+    Workload::new(
+        "DLRM",
+        WorkloadKind::Recommendation,
+        vec![Gemm::new(1, 256, 512), Gemm::new(1, 64, 256)],
+    )
+}
+
+/// ResNet-50 with ImageNet at batch 1 — the Table VI listing verbatim
+/// (duplicate rows are repeated blocks; the table's one "40" is the
+/// obvious 49 typo). Cross-checked against the im2col generator in
+/// [`super::resnet`].
+pub fn resnet50() -> Workload {
+    let rows: [(u64, u64, u64); 53] = [
+        (12544, 64, 147),
+        (3136, 64, 64),
+        (3136, 64, 576),
+        (3136, 256, 64),
+        (3136, 64, 256),
+        (3136, 64, 576),
+        (3136, 256, 64),
+        (3136, 64, 256),
+        (3136, 64, 576),
+        (3136, 256, 64),
+        (3136, 128, 256),
+        (784, 128, 1152),
+        (784, 512, 128),
+        (784, 128, 512),
+        (784, 128, 1152),
+        (784, 512, 128),
+        (784, 128, 512),
+        (784, 128, 1152),
+        (784, 512, 128),
+        (784, 128, 512),
+        (784, 128, 1152),
+        (784, 512, 128),
+        (784, 128, 512),
+        (784, 256, 512),
+        (196, 256, 2304),
+        (196, 1024, 256),
+        (196, 256, 1024),
+        (196, 256, 2304),
+        (196, 1024, 256),
+        (196, 256, 1024),
+        (196, 256, 2304),
+        (196, 1024, 256),
+        (196, 256, 1024),
+        (196, 256, 2304),
+        (196, 1024, 256),
+        (196, 256, 1024),
+        (196, 256, 2304),
+        (196, 1024, 256),
+        (196, 256, 1024),
+        (196, 256, 2304),
+        (196, 1024, 256),
+        (196, 256, 1024),
+        (196, 512, 1024),
+        (49, 512, 4608),
+        (49, 2048, 512),
+        (49, 512, 2048),
+        (49, 512, 4608),
+        (49, 2048, 512),
+        (49, 512, 2048),
+        (49, 512, 4608),
+        (49, 2048, 512),
+        (49, 512, 2048),
+        (1, 1000, 2048),
+    ];
+    Workload::new(
+        "ResNet50",
+        WorkloadKind::Cnn,
+        rows.iter().map(|&(m, n, k)| Gemm::new(m, n, k)).collect(),
+    )
+}
+
+/// The full real dataset of §V-C, in the order the paper reports it.
+pub fn real_dataset() -> Vec<Workload> {
+    vec![bert_large(), gpt_j(), resnet50(), dlrm()]
+}
+
+// ---------------------------------------------------------------------
+// Zoo extensions beyond the paper's four models (framework feature):
+// derived with the same Table I rules, batch 1.
+// ---------------------------------------------------------------------
+
+/// ViT-Base/16 on 224×224: seq 197 (196 patches + CLS), embed 768,
+/// ff 3072 — an encoder whose shapes sit between BERT and ResNet.
+pub fn vit_base() -> Workload {
+    let cfg = super::attention::TransformerConfig {
+        seq: 197,
+        embed: 768,
+        ff: 3072,
+    };
+    Workload::new("ViT-Base", WorkloadKind::TransformerEncoder, cfg.encoder_gemms())
+}
+
+/// Llama-2-7B decode phase (token-at-a-time): embed 4096, ff 11008
+/// (gate/up/down projections) — GEMV-dominated like GPT-J decode.
+pub fn llama2_7b_decode() -> Workload {
+    Workload::new(
+        "Llama2-7B-decode",
+        WorkloadKind::TransformerDecoder,
+        vec![
+            Gemm::new(1, 4096, 4096),  // q/k/v/o projections
+            Gemm::new(1, 11008, 4096), // gate + up
+            Gemm::new(1, 4096, 11008), // down
+        ],
+    )
+}
+
+/// Llama-2-7B prefill at a given prompt length: the same layers with
+/// M = seq — the regular-shape regime where CiM shines.
+pub fn llama2_7b_prefill(seq: u64) -> Workload {
+    let cfg = super::attention::TransformerConfig {
+        seq,
+        embed: 4096,
+        ff: 11008,
+    };
+    Workload::new(
+        "Llama2-7B-prefill",
+        WorkloadKind::TransformerDecoder,
+        cfg.encoder_gemms(),
+    )
+}
+
+/// Everything: the paper's dataset plus the zoo extensions.
+pub fn extended_dataset() -> Vec<Workload> {
+    let mut v = real_dataset();
+    v.push(vit_base());
+    v.push(llama2_7b_decode());
+    v.push(llama2_7b_prefill(2048));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_vi_macs_spotchecks() {
+        // #MACs column of Table VI.
+        assert_eq!(Gemm::new(512, 1024, 1024).macs(), 536_870_912);
+        assert_eq!(Gemm::new(2048, 4096, 4096).macs(), 34_359_738_368);
+        assert_eq!(Gemm::new(1, 256, 512).macs(), 131_072);
+        assert_eq!(Gemm::new(12544, 64, 147).macs(), 118_013_952);
+        assert_eq!(Gemm::new(1, 1000, 2048).macs(), 2_048_000);
+    }
+
+    #[test]
+    fn dataset_composition() {
+        let ds = real_dataset();
+        assert_eq!(ds.len(), 4);
+        let names: Vec<&str> = ds.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(names, vec!["BERT-Large", "GPT-J", "ResNet50", "DLRM"]);
+    }
+
+    #[test]
+    fn gemv_layers_present_in_gptj_and_dlrm() {
+        assert!(gpt_j().gemms().iter().filter(|g| g.is_gemv()).count() >= 4);
+        assert!(dlrm().gemms().iter().all(|g| g.is_gemv()));
+    }
+
+    #[test]
+    fn unique_with_counts_resnet() {
+        let r = resnet50();
+        let uniq = r.unique_with_counts();
+        assert!(uniq.len() < r.gemms().len(), "resnet has repeated blocks");
+        let total: usize = uniq.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, r.gemms().len());
+        // (196,256,2304) occurs 6 times (one per stage-3 block).
+        let (_, c) = uniq
+            .iter()
+            .find(|(g, _)| *g == Gemm::new(196, 256, 2304))
+            .unwrap();
+        assert_eq!(*c, 6);
+    }
+
+    #[test]
+    fn bert_shapes_are_regular_resnet_tail_is_gemv() {
+        assert!(bert_large().gemms().iter().all(|g| !g.is_gemv()));
+        assert!(resnet50().gemms().last().unwrap().is_gemv());
+    }
+
+    #[test]
+    fn total_macs_positive() {
+        for w in real_dataset() {
+            assert!(w.total_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn zoo_extensions_well_formed() {
+        let ext = extended_dataset();
+        assert_eq!(ext.len(), 7);
+        // ViT-Base attention logits: (197, 197, 768).
+        assert!(vit_base().gemms().contains(&Gemm::new(197, 197, 768)));
+        // Llama decode is all GEMVs; prefill is all regular.
+        assert!(llama2_7b_decode().gemms().iter().all(|g| g.is_gemv()));
+        assert!(llama2_7b_prefill(2048).gemms().iter().all(|g| !g.is_gemv()));
+    }
+}

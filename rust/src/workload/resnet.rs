@@ -1,0 +1,207 @@
+//! Convolution-to-GEMM extraction via im2col (paper §III-A) and the
+//! ResNet-50 layer generator used to derive the Table VI dataset.
+//!
+//! im2col maps Conv2D(Ci→Co, Kh×Kw, stride s, pad p) on an `Hi×Wi`
+//! input to GEMM(M, N, K) with `M = Ho·Wo`, `N = Co`, `K = Kh·Kw·Ci`
+//! (Table I row 1).
+
+use super::gemm::Gemm;
+
+/// A 2-D convolution layer (square kernels/strides as in ResNet).
+#[derive(Debug, Clone, Copy)]
+pub struct Conv2d {
+    pub h_in: u64,
+    pub w_in: u64,
+    pub c_in: u64,
+    pub c_out: u64,
+    pub kernel: u64,
+    pub stride: u64,
+    pub pad: u64,
+}
+
+impl Conv2d {
+    pub fn output_hw(&self) -> (u64, u64) {
+        let ho = (self.h_in + 2 * self.pad - self.kernel) / self.stride + 1;
+        let wo = (self.w_in + 2 * self.pad - self.kernel) / self.stride + 1;
+        (ho, wo)
+    }
+
+    /// im2col transformation (Table I).
+    pub fn to_gemm(&self) -> Gemm {
+        let (ho, wo) = self.output_hw();
+        Gemm::new(ho * wo, self.c_out, self.kernel * self.kernel * self.c_in)
+    }
+}
+
+/// ResNet-50 for 224×224 ImageNet inference at batch 1: the stem conv,
+/// 16 bottleneck blocks in stages of [3, 4, 6, 3], and the classifier.
+///
+/// Matches the paper's Appendix B listing, which excludes the
+/// stride-matching *downsample* (projection shortcut) convolutions;
+/// pass `include_downsample` to also generate those.
+pub fn resnet50_gemms(include_downsample: bool) -> Vec<Gemm> {
+    let mut out = Vec::new();
+
+    // Stem: 7x7/2, 3->64, 224x224 -> 112x112.
+    let stem = Conv2d {
+        h_in: 224,
+        w_in: 224,
+        c_in: 3,
+        c_out: 64,
+        kernel: 7,
+        stride: 2,
+        pad: 3,
+    };
+    out.push(stem.to_gemm());
+    // 3x3/2 max-pool: 112x112 -> 56x56 (no GEMM).
+
+    // (input hw, mid channels, out channels, blocks, first-block stride)
+    let stages: [(u64, u64, u64, u64, u64); 4] = [
+        (56, 64, 256, 3, 1),
+        (56, 128, 512, 4, 2),
+        (28, 256, 1024, 6, 2),
+        (14, 512, 2048, 3, 2),
+    ];
+
+    let mut c_in = 64u64;
+    for (hw_in, mid, c_out, blocks, first_stride) in stages {
+        let mut hw = hw_in;
+        for b in 0..blocks {
+            let stride = if b == 0 { first_stride } else { 1 };
+            // 1x1 reduce (operates at the incoming resolution).
+            out.push(
+                Conv2d {
+                    h_in: hw,
+                    w_in: hw,
+                    c_in,
+                    c_out: mid,
+                    kernel: 1,
+                    stride: 1,
+                    pad: 0,
+                }
+                .to_gemm(),
+            );
+            // 3x3 (carries the stride).
+            let hw_out = hw / stride;
+            out.push(
+                Conv2d {
+                    h_in: hw,
+                    w_in: hw,
+                    c_in: mid,
+                    c_out: mid,
+                    kernel: 3,
+                    stride,
+                    pad: 1,
+                }
+                .to_gemm(),
+            );
+            // 1x1 expand.
+            out.push(
+                Conv2d {
+                    h_in: hw_out,
+                    w_in: hw_out,
+                    c_in: mid,
+                    c_out,
+                    kernel: 1,
+                    stride: 1,
+                    pad: 0,
+                }
+                .to_gemm(),
+            );
+            if b == 0 && include_downsample {
+                out.push(
+                    Conv2d {
+                        h_in: hw,
+                        w_in: hw,
+                        c_in,
+                        c_out,
+                        kernel: 1,
+                        stride,
+                        pad: 0,
+                    }
+                    .to_gemm(),
+                );
+            }
+            hw = hw_out;
+            c_in = c_out;
+        }
+    }
+
+    // Global average pool -> FC 2048 -> 1000 (a GEMV at batch 1).
+    out.push(Gemm::new(1, 1000, 2048));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn im2col_first_layer() {
+        // Table VI row: ResNet50 (12544, 64, 147).
+        let stem = Conv2d {
+            h_in: 224,
+            w_in: 224,
+            c_in: 3,
+            c_out: 64,
+            kernel: 7,
+            stride: 2,
+            pad: 3,
+        };
+        assert_eq!(stem.output_hw(), (112, 112));
+        assert_eq!(stem.to_gemm(), Gemm::new(12544, 64, 147));
+    }
+
+    #[test]
+    fn im2col_3x3_same_padding() {
+        let c = Conv2d {
+            h_in: 56,
+            w_in: 56,
+            c_in: 64,
+            c_out: 64,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+        };
+        assert_eq!(c.to_gemm(), Gemm::new(3136, 64, 576));
+    }
+
+    #[test]
+    fn layer_count_without_downsample() {
+        // stem + 16 blocks x 3 convs + fc = 50 GEMMs ("all the 50
+        // layers of ResNet", Appendix B).
+        assert_eq!(resnet50_gemms(false).len(), 50);
+        // + 4 projection shortcuts
+        assert_eq!(resnet50_gemms(true).len(), 54);
+    }
+
+    #[test]
+    fn generated_unique_shapes_match_table_vi_unique_shapes() {
+        let generated: BTreeSet<(u64, u64, u64)> = resnet50_gemms(false)
+            .iter()
+            .map(|g| (g.m, g.n, g.k))
+            .collect();
+        let table: BTreeSet<(u64, u64, u64)> = super::super::models::resnet50()
+            .gemms()
+            .iter()
+            .map(|g| (g.m, g.n, g.k))
+            .collect();
+        for shape in &table {
+            assert!(generated.contains(shape), "table shape {shape:?} not generated");
+        }
+        for shape in &generated {
+            assert!(table.contains(shape), "generated {shape:?} missing from table");
+        }
+    }
+
+    #[test]
+    fn resolutions_shrink_monotonically() {
+        let gemms = resnet50_gemms(false);
+        // M (= Ho*Wo) never grows as we go deeper, until the FC layer.
+        let ms: Vec<u64> = gemms.iter().map(|g| g.m).collect();
+        for w in ms.windows(2).take(ms.len() - 2) {
+            assert!(w[1] <= w[0], "M grew mid-network: {w:?}");
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Synthetic GEMM dataset (paper §V-C): 1000 shapes with M, N, K
+//! varying from 16 to 8192, used for the What-question sweeps (Fig 9).
+//!
+//! Dimensions are sampled as powers of two over [16, 8192] (log-uniform
+//! over exponents 4..=13) so small and large shapes are equally
+//! represented and the CiM capacity sweet spots (K = 256, N = 16·c, ...)
+//! are exercised exactly, matching the paper's gridded scatter plots.
+
+use super::gemm::Gemm;
+use crate::util::rng::Rng;
+
+/// Default dataset size (§V-C).
+pub const DATASET_SIZE: usize = 1000;
+
+/// Dimension bounds (§V-C).
+pub const DIM_MIN: u64 = 16;
+pub const DIM_MAX: u64 = 8192;
+
+/// Sample one power-of-two dimension in [16, 8192].
+fn sample_dim(rng: &mut Rng) -> u64 {
+    1u64 << rng.gen_range(4, 14)
+}
+
+/// Generate the synthetic dataset. Deterministic for a given seed.
+pub fn dataset(seed: u64, size: usize) -> Vec<Gemm> {
+    let mut rng = Rng::new(seed);
+    (0..size)
+        .map(|_| Gemm::new(sample_dim(&mut rng), sample_dim(&mut rng), sample_dim(&mut rng)))
+        .collect()
+}
+
+/// Default seed for the paper-configuration dataset.
+pub const DEFAULT_SEED: u64 = 0x57_57_57; // "WWW"
+
+/// The paper's configuration: 1000 points, default seed.
+pub fn default_dataset() -> Vec<Gemm> {
+    dataset(DEFAULT_SEED, DATASET_SIZE)
+}
+
+/// Square GEMM(X, X, X) series used by the appendix (Fig 13):
+/// X ∈ {64, 128, ..., 8192}.
+pub fn square_series() -> Vec<Gemm> {
+    (6..=13).map(|e| 1u64 << e).map(|x| Gemm::new(x, x, x)).collect()
+}
+
+/// Sweep helper for Fig 10: vary one dimension over the power-of-two
+/// grid while the others stay fixed.
+pub fn sweep_dim<F: Fn(u64) -> Gemm>(make: F) -> Vec<Gemm> {
+    (4..=13).map(|e| make(1u64 << e)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_size_and_bounds() {
+        let ds = default_dataset();
+        assert_eq!(ds.len(), DATASET_SIZE);
+        for g in &ds {
+            for d in [g.m, g.n, g.k] {
+                assert!((DIM_MIN..=DIM_MAX).contains(&d));
+                assert!(d.is_power_of_two());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(dataset(7, 100), dataset(7, 100));
+        assert_ne!(dataset(7, 100), dataset(8, 100));
+    }
+
+    #[test]
+    fn covers_small_and_large() {
+        let ds = default_dataset();
+        assert!(ds.iter().any(|g| g.m == DIM_MIN || g.n == DIM_MIN || g.k == DIM_MIN));
+        assert!(ds.iter().any(|g| g.m == DIM_MAX || g.n == DIM_MAX || g.k == DIM_MAX));
+    }
+
+    #[test]
+    fn square_series_shape() {
+        let s = square_series();
+        assert_eq!(s.first().unwrap().m, 64);
+        assert_eq!(s.last().unwrap().m, 8192);
+        assert!(s.iter().all(|g| g.m == g.n && g.n == g.k));
+    }
+
+    #[test]
+    fn sweep_grid() {
+        let s = sweep_dim(|x| Gemm::new(x, 32, 32));
+        assert_eq!(s.len(), 10);
+        assert_eq!(s[0].m, 16);
+        assert_eq!(s[9].m, 8192);
+    }
+}

@@ -1,0 +1,84 @@
+//! Integration: the coordinator's grid scheduler and reports over the
+//! full real dataset and the full system matrix.
+
+use www_cim::arch::{Architecture, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::coordinator::jobs::{Grid, SystemSpec};
+use www_cim::coordinator::report::WorkloadReport;
+use www_cim::workload::{models, Gemm};
+
+fn full_matrix() -> Vec<SystemSpec> {
+    let mut specs = vec![SystemSpec::Baseline];
+    for p in CimPrimitive::all() {
+        specs.push(SystemSpec::CimAtRf(p.clone()));
+        specs.push(SystemSpec::CimAtSmem(p.clone(), SmemConfig::ConfigA));
+        specs.push(SystemSpec::CimAtSmem(p, SmemConfig::ConfigB));
+    }
+    specs
+}
+
+#[test]
+fn full_grid_over_real_dataset() {
+    let grid = Grid::default();
+    let workloads: Vec<(String, Vec<Gemm>)> = models::real_dataset()
+        .into_iter()
+        .map(|w| {
+            let g = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+            (w.name, g)
+        })
+        .collect();
+    let specs = full_matrix();
+    let jobs = grid.cross(&workloads, &specs);
+    let n_gemms: usize = workloads.iter().map(|(_, g)| g.len()).sum();
+    assert_eq!(jobs.len(), n_gemms * specs.len());
+
+    let results = grid.run(&jobs);
+    assert_eq!(results.len(), jobs.len());
+    for r in &results {
+        assert!(r.metrics.energy_pj > 0.0, "{} on {}", r.gemm, r.system);
+        assert!(r.metrics.gflops > 0.0);
+        assert!((0.0..=1.0001).contains(&r.metrics.utilization));
+    }
+}
+
+#[test]
+fn reports_for_every_workload_and_system() {
+    let grid = Grid::default();
+    let arch = Architecture::default_sm();
+    let workloads: Vec<(String, Vec<Gemm>)> = models::real_dataset()
+        .into_iter()
+        .map(|w| {
+            let g = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+            (w.name, g)
+        })
+        .collect();
+    let specs = vec![
+        SystemSpec::Baseline,
+        SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+    ];
+    let results = grid.run(&grid.cross(&workloads, &specs));
+    let cim_label = specs[1].label(&arch);
+    for (name, gemms) in &workloads {
+        let rep = WorkloadReport::compare(name, &results, &cim_label, "Tensor-core");
+        assert_eq!(rep.n_gemms, gemms.len());
+        assert!(rep.tops_per_watt_change.mean > 0.0);
+    }
+}
+
+#[test]
+fn determinism_across_thread_counts() {
+    let workloads = vec![(
+        "synthetic".to_string(),
+        www_cim::workload::synthetic::dataset(5, 60),
+    )];
+    let specs = vec![SystemSpec::CimAtRf(CimPrimitive::analog_6t())];
+    let mut grid = Grid::default();
+    let jobs = grid.cross(&workloads, &specs);
+    grid.threads = 1;
+    let a = grid.run(&jobs);
+    grid.threads = 8;
+    let b = grid.run(&jobs);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.metrics, y.metrics, "{}", x.gemm);
+    }
+}

@@ -1,0 +1,166 @@
+//! Integration: cost model trends that the paper's evaluation depends
+//! on (the When/Where answers), exercised across systems and workloads.
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::cost::{BaselineModel, CostModel, Metrics};
+use www_cim::mapping::PriorityMapper;
+use www_cim::workload::{models, Gemm};
+
+fn eval(sys: &CimSystem, g: Gemm) -> Metrics {
+    CostModel::new(sys).evaluate(&g, &PriorityMapper::new(sys).map(&g))
+}
+
+fn rf(p: CimPrimitive) -> CimSystem {
+    CimSystem::at_level(&Architecture::default_sm(), p, MemLevel::RegisterFile)
+}
+
+#[test]
+fn bert_layers_high_efficiency_at_rf() {
+    // §VI-C: BERT-Large layers achieve > 1.67 TOPS/W at RF (D-1).
+    let sys = rf(CimPrimitive::digital_6t());
+    for g in models::bert_large().gemms() {
+        let m = eval(&sys, *g);
+        assert!(m.tops_per_watt > 1.0, "{g}: {}", m.tops_per_watt);
+    }
+}
+
+#[test]
+fn gemv_layers_match_paper_pathology() {
+    // §VI-C: M=1 layers fall to ~0.03 TOPS/W with low throughput.
+    let sys = rf(CimPrimitive::digital_6t());
+    for g in [Gemm::new(1, 4096, 4096), Gemm::new(1, 16384, 4096)] {
+        let m = eval(&sys, g);
+        assert!(m.tops_per_watt < 0.05, "{g}: {}", m.tops_per_watt);
+        assert!(m.memory_bound(), "{g} must be DRAM-throttled");
+    }
+}
+
+#[test]
+fn cim_beats_baseline_on_energy_for_regular_shapes() {
+    // Table V "When": consistent TOPS/W advantage on regular GEMMs.
+    let arch = Architecture::default_sm();
+    let sys = rf(CimPrimitive::digital_6t());
+    let base = BaselineModel::new(&arch);
+    for g in models::bert_large().gemms() {
+        let c = eval(&sys, *g);
+        let b = base.evaluate(g);
+        assert!(
+            c.tops_per_watt > b.tops_per_watt,
+            "{g}: cim {} vs base {}",
+            c.tops_per_watt,
+            b.tops_per_watt
+        );
+    }
+}
+
+#[test]
+fn baseline_beats_cim_rf_on_gemv_throughput() {
+    // Table V "Where": at RF, CiM underperforms the baseline for pure
+    // matrix-vector workloads (DLRM/GPT-J decode).
+    let arch = Architecture::default_sm();
+    let sys = rf(CimPrimitive::digital_6t());
+    let base = BaselineModel::new(&arch);
+    let g = Gemm::new(1, 256, 512);
+    assert!(base.evaluate(&g).gflops >= eval(&sys, g).gflops);
+}
+
+#[test]
+fn smem_configb_highest_throughput_across_primitives() {
+    // Table V "Where": the biggest memory level gives the biggest
+    // parallelism; configB beats RF throughput for every primitive on
+    // large shapes.
+    let arch = Architecture::default_sm();
+    let g = Gemm::new(2048, 4096, 4096);
+    for p in CimPrimitive::all() {
+        let rf_m = eval(&rf(p.clone()), g);
+        let smem = CimSystem::at_smem(&arch, p.clone(), SmemConfig::ConfigB);
+        let sm_m = eval(&smem, g);
+        assert!(
+            sm_m.gflops > rf_m.gflops,
+            "{}: smem {} vs rf {}",
+            p.name,
+            sm_m.gflops,
+            rf_m.gflops
+        );
+    }
+}
+
+#[test]
+fn energy_efficiency_saturates_with_weight_size() {
+    // Fig 10(a): TOPS/W stabilizes once K exceeds on-chip capacity.
+    let sys = rf(CimPrimitive::digital_6t());
+    let t1 = eval(&sys, Gemm::new(512, 2048, 2048)).tops_per_watt;
+    let t2 = eval(&sys, Gemm::new(512, 4096, 4096)).tops_per_watt;
+    let rel = (t1 - t2).abs() / t1;
+    assert!(rel < 0.35, "plateau violated: {t1} vs {t2}");
+}
+
+#[test]
+fn n_growth_helps_energy() {
+    // Fig 10(b): increasing N monotonically (weakly) improves TOPS/W.
+    let sys = rf(CimPrimitive::digital_6t());
+    let t16 = eval(&sys, Gemm::new(512, 16, 512)).tops_per_watt;
+    let t512 = eval(&sys, Gemm::new(512, 512, 512)).tops_per_watt;
+    let t4096 = eval(&sys, Gemm::new(512, 4096, 512)).tops_per_watt;
+    assert!(t512 > t16);
+    assert!(t4096 >= t512 * 0.9);
+}
+
+#[test]
+fn throughput_grows_with_n_until_primitives_exhaust() {
+    // Fig 10(b): N engages more primitives in parallel.
+    let sys = rf(CimPrimitive::digital_6t());
+    let f16 = eval(&sys, Gemm::new(512, 16, 512)).gflops;
+    let f48 = eval(&sys, Gemm::new(512, 48, 512)).gflops;
+    assert!(f48 > 1.5 * f16, "{f48} vs {f16}");
+}
+
+#[test]
+fn fig13_energy_plateaus_for_large_squares() {
+    let sys = rf(CimPrimitive::digital_6t());
+    let e2k = eval(&sys, Gemm::new(2048, 2048, 2048)).fj_per_mac();
+    let e8k = eval(&sys, Gemm::new(8192, 8192, 8192)).fj_per_mac();
+    assert!(
+        (e2k - e8k).abs() / e2k < 0.5,
+        "fJ/MAC should plateau: {e2k} vs {e8k}"
+    );
+}
+
+#[test]
+fn tcore_pays_more_than_cim_for_large_squares() {
+    // Fig 13: the baseline's RF/PE-buffer traffic keeps it above the
+    // CiM configurations once DRAM amortizes.
+    let arch = Architecture::default_sm();
+    let g = Gemm::new(4096, 4096, 4096);
+    let tc = BaselineModel::new(&arch).evaluate(&g).fj_per_mac();
+    let d1 = eval(&rf(CimPrimitive::digital_6t()), g).fj_per_mac();
+    assert!(tc > d1, "tcore {tc} vs d1 {d1}");
+}
+
+#[test]
+fn dram_bytes_lower_bounded_by_matrix_sizes() {
+    // Conservation: at least one pass of every matrix must cross DRAM.
+    let sys = rf(CimPrimitive::digital_6t());
+    for g in models::bert_large().gemms() {
+        let m = eval(&sys, *g);
+        assert!(m.dram_bytes >= g.total_bytes(), "{g}");
+    }
+}
+
+#[test]
+fn memory_bound_iff_bandwidth_cycles_dominate() {
+    let sys = rf(CimPrimitive::digital_6t());
+    for g in models::real_dataset().iter().flat_map(|w| w.gemms().to_vec()) {
+        let m = eval(&sys, g);
+        assert_eq!(
+            m.memory_bound(),
+            m.total_cycles > m.compute_cycles,
+            "{g}"
+        );
+        assert_eq!(
+            m.total_cycles,
+            m.compute_cycles.max(m.dram_cycles).max(m.smem_cycles).max(1)
+        );
+    }
+}

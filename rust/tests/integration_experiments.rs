@@ -1,0 +1,70 @@
+//! Integration: every experiment regenerator runs end-to-end in quick
+//! mode and produces its CSV mirror.
+
+use www_cim::experiments::{self, Ctx};
+
+fn quick_ctx(tag: &str) -> Ctx {
+    let mut ctx = Ctx::quick();
+    ctx.out_dir = std::env::temp_dir().join(format!("www_cim_test_results_{tag}"));
+    let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    ctx
+}
+
+#[test]
+fn every_experiment_runs_quick() {
+    let ctx = quick_ctx("all");
+    for id in experiments::ALL {
+        experiments::run(id, &ctx).unwrap_or_else(|e| panic!("{id} failed: {e:#}"));
+    }
+}
+
+#[test]
+fn csv_outputs_created_with_content() {
+    let ctx = quick_ctx("csv");
+    for id in ["fig2", "fig9", "fig12", "table6", "roofline"] {
+        experiments::run(id, &ctx).unwrap();
+        let path = ctx.out_dir.join(format!("{id}.csv"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{id}: missing csv: {e}"));
+        assert!(text.lines().count() > 2, "{id}: csv nearly empty");
+    }
+}
+
+#[test]
+fn fig9_csv_covers_all_primitives() {
+    let ctx = quick_ctx("fig9");
+    experiments::run("fig9", &ctx).unwrap();
+    let text = std::fs::read_to_string(ctx.out_dir.join("fig9.csv")).unwrap();
+    for prim in ["Analog-6T", "Analog-8T", "Digital-6T", "Digital-8T"] {
+        assert!(text.contains(prim), "fig9.csv missing {prim}");
+    }
+}
+
+#[test]
+fn fig12_reports_cim_energy_win_for_bert() {
+    let ctx = quick_ctx("fig12");
+    experiments::run("fig12", &ctx).unwrap();
+    let text = std::fs::read_to_string(ctx.out_dir.join("fig12.csv")).unwrap();
+    let bert_rf: Vec<&str> = text
+        .lines()
+        .filter(|l| l.starts_with("a:RF,BERT-Large"))
+        .collect();
+    assert_eq!(bert_rf.len(), 1);
+    let mean: f64 = bert_rf[0].split(',').nth(2).unwrap().parse().unwrap();
+    assert!(mean > 1.5, "BERT RF TOPS/W change {mean} should be >1.5x");
+}
+
+#[test]
+fn table6_lists_all_real_layers() {
+    let ctx = quick_ctx("table6");
+    experiments::run("table6", &ctx).unwrap();
+    let text = std::fs::read_to_string(ctx.out_dir.join("table6.csv")).unwrap();
+    // 5 BERT + 5 GPT-J + 53 ResNet + 2 DLRM + header
+    assert_eq!(text.lines().count(), 1 + 5 + 5 + 53 + 2);
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    let ctx = quick_ctx("unknown");
+    assert!(experiments::run("fig99", &ctx).is_err());
+}

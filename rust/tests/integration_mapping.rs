@@ -1,0 +1,128 @@
+//! Integration: mapping algorithms against full systems and workloads.
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::mapping::loopnest::Dim;
+use www_cim::mapping::{HeuristicMapper, PriorityMapper};
+use www_cim::util::rng::Rng;
+use www_cim::workload::{models, synthetic, Gemm};
+
+fn all_systems() -> Vec<CimSystem> {
+    let arch = Architecture::default_sm();
+    let mut out = Vec::new();
+    for p in CimPrimitive::all() {
+        out.push(CimSystem::at_level(&arch, p.clone(), MemLevel::RegisterFile));
+        out.push(CimSystem::at_smem(&arch, p.clone(), SmemConfig::ConfigA));
+        out.push(CimSystem::at_smem(&arch, p, SmemConfig::ConfigB));
+    }
+    out
+}
+
+#[test]
+fn priority_mapper_valid_on_every_real_layer_and_system() {
+    for sys in all_systems() {
+        let mapper = PriorityMapper::new(&sys);
+        for wl in models::real_dataset() {
+            for g in wl.gemms() {
+                let m = mapper.map(g);
+                assert!(
+                    m.nest.validate().is_ok(),
+                    "{} on {}: {:?}",
+                    g,
+                    sys.label(),
+                    m.nest.validate()
+                );
+                assert!(m.spatial.validate(&sys).is_ok(), "{} on {}", g, sys.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn priority_mapper_valid_on_synthetic_sweep() {
+    let arch = Architecture::default_sm();
+    let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let mapper = PriorityMapper::new(&sys);
+    for g in synthetic::dataset(123, 400) {
+        let m = mapper.map(&g);
+        assert!(m.nest.validate().is_ok(), "{g}");
+    }
+}
+
+#[test]
+fn weight_capacity_never_exceeded() {
+    // The stationary weight tile must fit the integrated arrays.
+    for sys in all_systems() {
+        let mapper = PriorityMapper::new(&sys);
+        for g in synthetic::dataset(9, 100) {
+            let m = mapper.map(&g);
+            let tile = m.k0() * m.n0();
+            assert!(
+                tile <= sys.weight_capacity_elems(),
+                "{} on {}: tile {} > capacity {}",
+                g,
+                sys.label(),
+                tile,
+                sys.weight_capacity_elems()
+            );
+        }
+    }
+}
+
+#[test]
+fn staging_capacity_respected_at_rf() {
+    let arch = Architecture::default_sm();
+    let smem = arch.capacity(MemLevel::Smem);
+    for p in CimPrimitive::all() {
+        let sys = CimSystem::at_level(&arch, p, MemLevel::RegisterFile);
+        let mapper = PriorityMapper::new(&sys);
+        for g in synthetic::dataset(11, 100) {
+            let m = mapper.map(&g);
+            let m1 = m.nest.blocks[2].dim_factor(Dim::M);
+            let k_staged: u64 = m.nest.blocks[1].dim_factor(Dim::K) * m.k0();
+            let n_staged: u64 = m.nest.blocks[1].dim_factor(Dim::N) * m.n0();
+            assert!(
+                m1 * (k_staged + n_staged) <= smem,
+                "{} on {}: staged {} bytes > SMEM",
+                g,
+                sys.label(),
+                m1 * (k_staged + n_staged)
+            );
+        }
+    }
+}
+
+#[test]
+fn heuristic_search_stops_and_reports_stats() {
+    let arch = Architecture::default_sm();
+    let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let mut h = HeuristicMapper::new(&sys);
+    h.valid_budget = 50;
+    let (m, stats) = h.map(&Gemm::new(512, 512, 512), &mut Rng::new(3));
+    assert!(m.nest.validate().is_ok());
+    assert_eq!(stats.valid, 50);
+    assert_eq!(stats.sampled, stats.valid + stats.invalid);
+}
+
+#[test]
+fn gemv_mappings_use_single_input_row() {
+    for sys in all_systems() {
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(1, 4096, 4096));
+        assert_eq!(m.nest.total_factor(Dim::M), 1, "{}", sys.label());
+    }
+}
+
+#[test]
+fn bigger_pool_never_maps_fewer_primitives() {
+    // SMEM configB (16x pool) should engage at least as many primitives
+    // as configA for large GEMMs.
+    let arch = Architecture::default_sm();
+    let g = Gemm::new(2048, 4096, 4096);
+    for p in CimPrimitive::all() {
+        let a = CimSystem::at_smem(&arch, p.clone(), SmemConfig::ConfigA);
+        let b = CimSystem::at_smem(&arch, p, SmemConfig::ConfigB);
+        let ma = PriorityMapper::new(&a).map(&g);
+        let mb = PriorityMapper::new(&b).map(&g);
+        assert!(mb.spatial.prims_used() >= ma.spatial.prims_used());
+    }
+}

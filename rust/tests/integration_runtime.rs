@@ -1,0 +1,112 @@
+//! Integration: the PJRT runtime against the built artifacts.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a loud message) when the artifacts directory is absent so
+//! `cargo test` stays runnable on a fresh checkout.
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel};
+use www_cim::cim::CimPrimitive;
+use www_cim::coordinator::validate::validate_mappings;
+use www_cim::mapping::PriorityMapper;
+use www_cim::runtime::matrix::{gemm_ref, MatI8};
+use www_cim::runtime::{default_artifacts_dir, Engine, TiledExecutor};
+use www_cim::util::rng::Rng;
+use www_cim::workload::Gemm;
+
+fn engine() -> Option<Engine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine loads"))
+}
+
+#[test]
+fn artifact_gemm_matches_rust_oracle() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(1);
+    for (name, (m, n, k)) in engine.manifest().gemm_kernels() {
+        let x = MatI8::random(m, k, &mut rng);
+        let w = MatI8::random(k, n, &mut rng);
+        let got = engine.execute_i8(name, &[&x, &w]).unwrap().remove(0);
+        assert_eq!(got.max_abs_diff(&gemm_ref(&x, &w)), 0, "{name}");
+    }
+}
+
+#[test]
+fn padded_execution_exact_for_any_subtile() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(2);
+    for (m, n, k) in [(1usize, 1usize, 1usize), (17, 5, 33), (128, 64, 512), (100, 48, 300)] {
+        let x = MatI8::random(m, k, &mut rng);
+        let w = MatI8::random(k, n, &mut rng);
+        let got = engine.gemm_padded("gemm_128x64x512", &x, &w).unwrap();
+        assert_eq!(got.max_abs_diff(&gemm_ref(&x, &w)), 0, "{m}x{n}x{k}");
+    }
+}
+
+#[test]
+fn tiled_replay_exact_for_every_primitive() {
+    let Some(engine) = engine() else { return };
+    let arch = Architecture::default_sm();
+    let mut rng = Rng::new(3);
+    let g = Gemm::new(96, 48, 320);
+    let x = MatI8::random(96, 320, &mut rng);
+    let w = MatI8::random(320, 48, &mut rng);
+    for p in CimPrimitive::all() {
+        let sys = CimSystem::at_level(&arch, p.clone(), MemLevel::RegisterFile);
+        let mapping = PriorityMapper::new(&sys).map(&g);
+        let run = TiledExecutor::new(&engine).run(&mapping, &x, &w).unwrap();
+        assert_eq!(run.diff_vs_oracle, 0, "{}", p.name);
+        assert!(run.kernel_calls >= 1);
+    }
+}
+
+#[test]
+fn validation_pipeline_reports_exact() {
+    let Some(engine) = engine() else { return };
+    let arch = Architecture::default_sm();
+    let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let gemms = [Gemm::new(64, 32, 256), Gemm::new(16, 64, 64), Gemm::new(1, 64, 256)];
+    let report = validate_mappings(&engine, &sys, &gemms, 99).unwrap();
+    assert_eq!(report.cases.len(), 3);
+    assert!(report.all_exact());
+}
+
+#[test]
+fn composed_graphs_match_oracles() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(4);
+    // mlp_16x64x256: gemm -> requant(>>8) -> gemm
+    let x = MatI8::random(16, 64, &mut rng);
+    let w1 = MatI8::random(64, 256, &mut rng);
+    let w2 = MatI8::random(256, 64, &mut rng);
+    let got = engine.execute_i8("mlp_16x64x256", &[&x, &w1, &w2]).unwrap().remove(0);
+    let h = www_cim::runtime::matrix::requant(&gemm_ref(&x, &w1), 8);
+    let want = gemm_ref(&h, &w2);
+    assert_eq!(got.max_abs_diff(&want), 0, "mlp graph");
+}
+
+#[test]
+fn engine_caches_compiled_executables() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let x = MatI8::random(16, 64, &mut rng);
+    let w = MatI8::random(64, 64, &mut rng);
+    assert_eq!(engine.cached(), 0);
+    engine.execute_i8("gemm_16x64x64", &[&x, &w]).unwrap();
+    assert_eq!(engine.cached(), 1);
+    engine.execute_i8("gemm_16x64x64", &[&x, &w]).unwrap();
+    assert_eq!(engine.cached(), 1, "recompilation would be a perf bug");
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(6);
+    let x = MatI8::random(8, 8, &mut rng);
+    let w = MatI8::random(8, 8, &mut rng);
+    assert!(engine.execute_i8("gemm_16x64x64", &[&x, &w]).is_err());
+    assert!(engine.execute_i8("nonexistent", &[&x, &w]).is_err());
+}

@@ -1,0 +1,211 @@
+//! Property-based tests over the mapping + cost invariants, using the
+//! in-tree harness (`util::check`, the proptest substitute).
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::cost::{BaselineModel, CostModel};
+use www_cim::mapping::loopnest::{distinct_tiles, refetches, Dim, Loop, Tensor};
+use www_cim::mapping::PriorityMapper;
+use www_cim::util::check::{check, Config};
+use www_cim::util::rng::Rng;
+use www_cim::workload::Gemm;
+
+fn random_gemm(rng: &mut Rng) -> Gemm {
+    // Mix of power-of-two and awkward shapes, spanning GEMV to huge.
+    let dim = |rng: &mut Rng| -> u64 {
+        match rng.gen_range(0, 3) {
+            0 => 1 << rng.gen_range(0, 14),
+            1 => rng.gen_range(1, 8193),
+            _ => rng.gen_range(1, 64),
+        }
+    };
+    Gemm::new(dim(rng), dim(rng), dim(rng))
+}
+
+fn random_system(rng: &mut Rng) -> CimSystem {
+    let arch = Architecture::default_sm();
+    let prim = CimPrimitive::all()[rng.index(4)].clone();
+    match rng.gen_range(0, 3) {
+        0 => CimSystem::at_level(&arch, prim, MemLevel::RegisterFile),
+        1 => CimSystem::at_smem(&arch, prim, SmemConfig::ConfigA),
+        _ => CimSystem::at_smem(&arch, prim, SmemConfig::ConfigB),
+    }
+}
+
+#[test]
+fn prop_mapping_always_valid() {
+    check(Config::default().cases(300), "mapping valid", |rng| {
+        let gemm = random_gemm(rng);
+        let sys = random_system(rng);
+        let m = PriorityMapper::new(&sys).map(&gemm);
+        m.nest
+            .validate()
+            .map_err(|e| format!("{gemm} on {}: {e}", sys.label()))?;
+        m.spatial
+            .validate(&sys)
+            .map_err(|e| format!("{gemm} on {}: {e}", sys.label()))
+    });
+}
+
+#[test]
+fn prop_metrics_well_formed() {
+    check(Config::default().cases(200), "metrics well-formed", |rng| {
+        let gemm = random_gemm(rng);
+        let sys = random_system(rng);
+        let m = CostModel::new(&sys).evaluate(&gemm, &PriorityMapper::new(&sys).map(&gemm));
+        if !(m.energy_pj.is_finite() && m.energy_pj > 0.0) {
+            return Err(format!("{gemm}: energy {}", m.energy_pj));
+        }
+        if !(0.0..=1.0 + 1e-9).contains(&m.utilization) {
+            return Err(format!("{gemm}: util {}", m.utilization));
+        }
+        if m.gflops > sys.peak_gops() * 1.001 {
+            return Err(format!("{gemm}: {} > peak {}", m.gflops, sys.peak_gops()));
+        }
+        if m.total_cycles < m.compute_cycles {
+            return Err(format!("{gemm}: total < compute cycles"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dram_traffic_conservation() {
+    // Every byte of all three matrices must cross DRAM at least once;
+    // refetches only add.
+    check(Config::default().cases(200), "dram conservation", |rng| {
+        let gemm = random_gemm(rng);
+        let sys = random_system(rng);
+        let m = CostModel::new(&sys).evaluate(&gemm, &PriorityMapper::new(&sys).map(&gemm));
+        if m.dram_bytes < gemm.total_bytes() {
+            return Err(format!(
+                "{gemm}: dram {} < matrices {}",
+                m.dram_bytes,
+                gemm.total_bytes()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_work() {
+    // Growing any single dimension never reduces total energy.
+    check(Config::default().cases(120), "energy monotone", |rng| {
+        let g = random_gemm(rng);
+        let sys = random_system(rng);
+        let cost = CostModel::new(&sys);
+        let e = |g: Gemm| cost.evaluate(&g, &PriorityMapper::new(&sys).map(&g)).energy_pj;
+        let base = e(g);
+        let grown = [
+            Gemm::new(g.m * 2, g.n, g.k),
+            Gemm::new(g.m, g.n * 2, g.k),
+            Gemm::new(g.m, g.n, g.k * 2),
+        ];
+        for gg in grown {
+            if e(gg) < base * 0.999 {
+                return Err(format!("{g} -> {gg} reduced energy"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refetches_bounds() {
+    // distinct <= refetches <= product of all factors, for any prefix.
+    check(Config::default().cases(400), "refetch bounds", |rng| {
+        let n = rng.index(6);
+        let dims = [Dim::M, Dim::N, Dim::K];
+        let prefix: Vec<Loop> = (0..n)
+            .map(|_| Loop::new(dims[rng.index(3)], rng.gen_range(1, 64)))
+            .collect();
+        let product: u64 = prefix.iter().map(|l| l.factor).product();
+        for t in Tensor::all() {
+            let r = refetches(&prefix, t);
+            let d = distinct_tiles(&prefix, t);
+            if !(d <= r && r <= product) {
+                return Err(format!("{prefix:?} {t:?}: d={d} r={r} p={product}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refetches_order_invariant_lower_bound() {
+    // Reordering loops never drops refetches below the distinct count,
+    // and the relevant-dim product is order-invariant.
+    check(Config::default().cases(200), "order invariance", |rng| {
+        let dims = [Dim::M, Dim::N, Dim::K];
+        let mut prefix: Vec<Loop> = (0..4)
+            .map(|_| Loop::new(dims[rng.index(3)], rng.gen_range(1, 16)))
+            .collect();
+        let d0: Vec<u64> = Tensor::all()
+            .iter()
+            .map(|t| distinct_tiles(&prefix, *t))
+            .collect();
+        rng.shuffle(&mut prefix);
+        for (i, t) in Tensor::all().iter().enumerate() {
+            if distinct_tiles(&prefix, *t) != d0[i] {
+                return Err("distinct count changed with order".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baseline_metrics_well_formed() {
+    check(Config::default().cases(150), "baseline well-formed", |rng| {
+        let gemm = random_gemm(rng);
+        let arch = Architecture::default_sm();
+        let m = BaselineModel::new(&arch).evaluate(&gemm);
+        if !(m.energy_pj.is_finite() && m.energy_pj > 0.0) {
+            return Err(format!("{gemm}: energy {}", m.energy_pj));
+        }
+        if m.gflops > arch.tensor_core.peak_gops() * 1.001 {
+            return Err(format!("{gemm}: above peak"));
+        }
+        if !(0.0..=1.0 + 1e-9).contains(&m.utilization) {
+            return Err(format!("{gemm}: util {}", m.utilization));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_cpu_replay_matches_oracle() {
+    // Pure-rust property over the tiling identity the runtime relies
+    // on: mapping-shaped tiling + accumulation reproduces the GEMM for
+    // arbitrary shapes (no PJRT needed here; integration_runtime.rs
+    // covers the PJRT path).
+    use www_cim::runtime::matrix::{gemm_ref, MatI32, MatI8};
+    check(Config::default().cases(60), "tiled replay", |rng| {
+        let m = rng.gen_range(1, 65) as usize;
+        let n = rng.gen_range(1, 65) as usize;
+        let k = rng.gen_range(1, 129) as usize;
+        let x = MatI8::random(m, k, rng);
+        let w = MatI8::random(k, n, rng);
+        let want = gemm_ref(&x, &w);
+        let (tm, tn, tk) = (
+            rng.gen_range(1, 65) as usize,
+            rng.gen_range(1, 65) as usize,
+            rng.gen_range(1, 129) as usize,
+        );
+        let mut got = MatI32::zeros(m, n);
+        for k0 in (0..k).step_by(tk) {
+            for n0 in (0..n).step_by(tn) {
+                for m0 in (0..m).step_by(tm) {
+                    let xt = x.tile_padded(m0, k0, tm, tk);
+                    let wt = w.tile_padded(k0, n0, tk, tn);
+                    got.accumulate(m0, n0, &gemm_ref(&xt, &wt));
+                }
+            }
+        }
+        if got.max_abs_diff(&want) != 0 {
+            return Err(format!("{m}x{n}x{k} tiles {tm}/{tn}/{tk} diverged"));
+        }
+        Ok(())
+    });
+}
