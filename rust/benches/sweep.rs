@@ -1,0 +1,81 @@
+//! Sweep-engine benchmark: a ≥500-point design-space grid evaluated
+//! (a) cold on one thread, (b) cold on the full worker pool, and
+//! (c) warm (fully memoized) — the acceptance numbers for the DSE
+//! subsystem: parallelism and the memo cache must both be measurable
+//! wins over the cold single-threaded run.
+
+use www_cim::arch::Architecture;
+use www_cim::cim::CimPrimitive;
+use www_cim::coordinator::jobs::SystemSpec;
+use www_cim::sweep::{SweepEngine, SweepSpec};
+use www_cim::util::bench::{black_box, Bencher};
+use www_cim::util::pool;
+use www_cim::workload::synthetic;
+
+fn grid_spec() -> SweepSpec {
+    // 50 synthetic GEMMs x (1 baseline + 4 primitives x 3 integration
+    // points) = 650 grid points.
+    let mut systems = vec![SystemSpec::Baseline];
+    for p in CimPrimitive::all() {
+        systems.push(SystemSpec::CimAtRf(p.clone()));
+        systems.push(SystemSpec::CimAtSmem(p.clone(), www_cim::arch::SmemConfig::ConfigA));
+        systems.push(SystemSpec::CimAtSmem(p, www_cim::arch::SmemConfig::ConfigB));
+    }
+    SweepSpec::new("bench-grid")
+        .workload("synthetic", synthetic::dataset(7, 50))
+        .systems(systems)
+}
+
+fn main() {
+    let arch = Architecture::default_sm();
+    let spec = grid_spec();
+    let jobs = spec.jobs();
+    let n = jobs.len() as u64;
+    let threads = pool::default_threads();
+    println!(
+        "sweep bench: {} grid points, pool = {} threads",
+        n, threads
+    );
+
+    let mut b = Bencher::new();
+
+    // (a) cold, single-threaded: fresh engine (and cache) per iteration.
+    let cold_1 = b
+        .bench_with_items(&format!("sweep/{n}pts/cold/threads=1"), n, &mut || {
+            let engine = SweepEngine::new(arch.clone()).threads(1);
+            black_box(engine.run(&jobs));
+        })
+        .mean();
+
+    // (b) cold, parallel: fresh engine per iteration, full pool.
+    let cold_n = b
+        .bench_with_items(
+            &format!("sweep/{n}pts/cold/threads={threads}"),
+            n,
+            &mut || {
+                let engine = SweepEngine::new(arch.clone());
+                black_box(engine.run(&jobs));
+            },
+        )
+        .mean();
+
+    // (c) warm: one engine primed once, every point a cache hit.
+    let warm_engine = SweepEngine::new(arch.clone());
+    warm_engine.run(&jobs);
+    let warm = b
+        .bench_with_items(&format!("sweep/{n}pts/warm/threads={threads}"), n, &mut || {
+            black_box(warm_engine.run(&jobs));
+        })
+        .mean();
+
+    println!(
+        "\nspeedup vs cold single-thread: cold x{} = {:.2}x, warm = {:.2}x",
+        threads,
+        cold_1.as_secs_f64() / cold_n.as_secs_f64().max(1e-12),
+        cold_1.as_secs_f64() / warm.as_secs_f64().max(1e-12),
+    );
+    if warm >= cold_1 {
+        println!("WARNING: warm memoized run was not faster than the cold single-threaded run");
+    }
+    b.finish("sweep");
+}

@@ -8,9 +8,15 @@
 //! alone (e.g. GEMV layers go to the cores, §VI-C's pathology; large
 //! regular layers go to CiM for energy).
 
+use std::sync::Arc;
+
 use crate::arch::{Architecture, CimSystem};
 use crate::cost::{BaselineModel, CostModel, Metrics};
 use crate::mapping::PriorityMapper;
+use crate::sweep::{
+    arch_fingerprint, point_key, spec_fingerprint, system_fingerprint, EvalCache, MapperChoice,
+    BASELINE_MAPPER_FP,
+};
 use crate::workload::{Gemm, Workload};
 
 /// Placement target for one layer.
@@ -83,18 +89,88 @@ pub struct HybridRouter<'a> {
     pub sys: &'a CimSystem,
     pub arch: &'a Architecture,
     pub policy: RoutePolicy,
+    /// Optional shared design-point cache plus the precomputed key
+    /// prefixes: routing a trace revisits the same layer shapes
+    /// constantly, and the keys are built from the same fingerprint
+    /// helpers as the sweep engine's, so placements reuse grid
+    /// evaluations (and vice versa).
+    cache: Option<RouterCache>,
+}
+
+/// Attached cache with the key prefixes computed once at construction.
+struct RouterCache {
+    cache: Arc<EvalCache>,
+    cim_point: String,
+    tc_point: String,
 }
 
 impl<'a> HybridRouter<'a> {
     pub fn new(sys: &'a CimSystem, arch: &'a Architecture, policy: RoutePolicy) -> Self {
-        HybridRouter { sys, arch, policy }
+        HybridRouter {
+            sys,
+            arch,
+            policy,
+            cache: None,
+        }
+    }
+
+    /// Router sharing a design-point memoization cache.
+    pub fn with_cache(
+        sys: &'a CimSystem,
+        arch: &'a Architecture,
+        policy: RoutePolicy,
+        cache: Arc<EvalCache>,
+    ) -> Self {
+        // CiM metrics are computed against the system's own embedded
+        // architecture; baseline metrics against `arch`. Each key uses
+        // the fingerprint of the architecture that actually priced it.
+        let cim_point = point_key(
+            &arch_fingerprint(&sys.arch),
+            &system_fingerprint(sys),
+            &MapperChoice::Priority.fingerprint(),
+        );
+        let tc_point = point_key(
+            &arch_fingerprint(arch),
+            &spec_fingerprint(&super::jobs::SystemSpec::Baseline),
+            BASELINE_MAPPER_FP,
+        );
+        HybridRouter {
+            sys,
+            arch,
+            policy,
+            cache: Some(RouterCache {
+                cache,
+                cim_point,
+                tc_point,
+            }),
+        }
+    }
+
+    /// Price one layer on the CiM engine (memoized when a cache is
+    /// attached; key-compatible with [`crate::sweep::SweepEngine`]).
+    pub fn eval_cim(&self, gemm: &Gemm) -> Metrics {
+        let compute = || {
+            CostModel::new(self.sys).evaluate(gemm, &PriorityMapper::new(self.sys).map(gemm))
+        };
+        match &self.cache {
+            None => compute(),
+            Some(rc) => rc.cache.get_or_compute(rc.cim_point.clone(), *gemm, compute),
+        }
+    }
+
+    /// Price one layer on the tensor-core baseline (memoized likewise).
+    pub fn eval_tc(&self, gemm: &Gemm) -> Metrics {
+        let compute = || BaselineModel::new(self.arch).evaluate(gemm);
+        match &self.cache {
+            None => compute(),
+            Some(rc) => rc.cache.get_or_compute(rc.tc_point.clone(), *gemm, compute),
+        }
     }
 
     /// Evaluate one layer on both engines and place it.
     pub fn place(&self, gemm: &Gemm) -> Placement {
-        let cim = CostModel::new(self.sys)
-            .evaluate(gemm, &PriorityMapper::new(self.sys).map(gemm));
-        let tc = BaselineModel::new(self.arch).evaluate(gemm);
+        let cim = self.eval_cim(gemm);
+        let tc = self.eval_tc(gemm);
         if self.policy.score(&cim) <= self.policy.score(&tc) {
             Placement {
                 gemm: *gemm,
@@ -130,9 +206,8 @@ impl<'a> HybridRouter<'a> {
             .iter()
             .map(|g| {
                 let metrics = match engine {
-                    Engine::Cim => CostModel::new(self.sys)
-                        .evaluate(g, &PriorityMapper::new(self.sys).map(g)),
-                    Engine::TensorCore => BaselineModel::new(self.arch).evaluate(g),
+                    Engine::Cim => self.eval_cim(g),
+                    Engine::TensorCore => self.eval_tc(g),
                 };
                 Placement {
                     gemm: *g,

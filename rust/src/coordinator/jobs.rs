@@ -1,9 +1,18 @@
 //! Evaluation jobs and the parallel grid runner.
+//!
+//! [`Grid`] is the coordinator-facing façade over the design-space
+//! sweep engine ([`crate::sweep`]): it keeps the historical
+//! `EvalJob`/`EvalResult` shapes that the workload reports consume,
+//! while the actual evaluation is parallel and memoized — a `Grid`
+//! bound to a shared [`EvalCache`] scores each (system, GEMM) point at
+//! most once per process.
+
+use std::sync::Arc;
 
 use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
 use crate::cim::CimPrimitive;
-use crate::cost::{BaselineModel, CostModel, Metrics};
-use crate::mapping::PriorityMapper;
+use crate::cost::Metrics;
+use crate::sweep::{EvalCache, MapperChoice, SweepEngine, SweepJob};
 use crate::util::pool;
 use crate::workload::Gemm;
 
@@ -19,14 +28,11 @@ pub enum SystemSpec {
 }
 
 impl SystemSpec {
+    /// Human-readable label, identical to `CimSystem::label()` of the
+    /// instantiated system (delegates to the sweep cache's cheap
+    /// implementation — no system construction).
     pub fn label(&self, arch: &Architecture) -> String {
-        match self {
-            SystemSpec::Baseline => "Tensor-core".to_string(),
-            SystemSpec::CimAtRf(p) => {
-                CimSystem::at_level(arch, p.clone(), MemLevel::RegisterFile).label()
-            }
-            SystemSpec::CimAtSmem(p, cfg) => CimSystem::at_smem(arch, p.clone(), *cfg).label(),
-        }
+        crate::sweep::cache::spec_label(self, arch)
     }
 
     /// Instantiate the CiM system (None for the baseline).
@@ -50,6 +56,18 @@ pub struct EvalJob {
     pub spec: SystemSpec,
 }
 
+impl EvalJob {
+    fn to_sweep_job(&self) -> SweepJob {
+        SweepJob {
+            workload: self.workload.clone(),
+            gemm: self.gemm,
+            spec: self.spec.clone(),
+            sms: 1,
+            mapper: MapperChoice::Priority,
+        }
+    }
+}
+
 /// Result of one evaluation.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
@@ -59,50 +77,63 @@ pub struct EvalResult {
     pub metrics: Metrics,
 }
 
-/// The evaluation grid: jobs × worker pool.
+impl From<crate::sweep::SweepResult> for EvalResult {
+    fn from(r: crate::sweep::SweepResult) -> Self {
+        EvalResult {
+            workload: r.workload,
+            gemm: r.gemm,
+            system: r.system,
+            metrics: r.metrics,
+        }
+    }
+}
+
+/// The evaluation grid: jobs × worker pool × memo cache.
 #[derive(Debug, Clone)]
 pub struct Grid {
     pub arch: Architecture,
     pub threads: usize,
+    cache: Arc<EvalCache>,
 }
 
 impl Default for Grid {
     fn default() -> Self {
-        Grid {
-            arch: Architecture::default_sm(),
-            threads: pool::default_threads(),
-        }
+        Self::new(Architecture::default_sm())
     }
 }
 
 impl Grid {
+    /// Grid with a private cache.
     pub fn new(arch: Architecture) -> Self {
+        Self::with_cache(arch, pool::default_threads(), Arc::new(EvalCache::new()))
+    }
+
+    /// Grid sharing an existing memoization cache.
+    pub fn with_cache(arch: Architecture, threads: usize, cache: Arc<EvalCache>) -> Self {
         Grid {
             arch,
-            threads: pool::default_threads(),
+            threads,
+            cache,
         }
     }
 
-    /// Evaluate one job.
+    fn engine(&self) -> SweepEngine {
+        SweepEngine::with_cache(self.arch.clone(), Arc::clone(&self.cache))
+            .threads(self.threads)
+    }
+
+    /// Evaluate one job (memoized).
     pub fn evaluate(&self, job: &EvalJob) -> EvalResult {
-        let metrics = match job.spec.system(&self.arch) {
-            None => BaselineModel::new(&self.arch).evaluate(&job.gemm),
-            Some(sys) => {
-                let mapping = PriorityMapper::new(&sys).map(&job.gemm);
-                CostModel::new(&sys).evaluate(&job.gemm, &mapping)
-            }
-        };
-        EvalResult {
-            workload: job.workload.clone(),
-            gemm: job.gemm,
-            system: job.spec.label(&self.arch),
-            metrics,
-        }
+        self.run(std::slice::from_ref(job))
+            .pop()
+            .expect("one result per job")
     }
 
     /// Evaluate a batch in parallel, preserving order.
     pub fn run(&self, jobs: &[EvalJob]) -> Vec<EvalResult> {
-        pool::map_parallel(jobs, self.threads, |job| self.evaluate(job))
+        let engine = self.engine();
+        let sweep_jobs: Vec<SweepJob> = jobs.iter().map(EvalJob::to_sweep_job).collect();
+        engine.run(&sweep_jobs).into_iter().map(Into::into).collect()
     }
 
     /// Cross product: every GEMM of every (name, gemms) workload on
@@ -187,5 +218,19 @@ mod tests {
         ];
         let specs = vec![SystemSpec::Baseline, SystemSpec::CimAtRf(CimPrimitive::digital_6t())];
         assert_eq!(grid.cross(&wl, &specs).len(), 6);
+    }
+
+    #[test]
+    fn duplicate_jobs_hit_the_cache() {
+        let grid = Grid::default();
+        let js = jobs();
+        let first = grid.run(&js);
+        let again = grid.run(&js);
+        for (a, b) in first.iter().zip(&again) {
+            assert_eq!(a.metrics, b.metrics);
+        }
+        // second run is answered entirely from the cache
+        assert_eq!(grid.cache.misses(), 3);
+        assert_eq!(grid.cache.hits(), 3);
     }
 }

@@ -108,18 +108,14 @@ impl<'a> TraceSimulator<'a> {
                     EnginePool::CimOnly => Engine::Cim,
                     EnginePool::TensorCoreOnly => Engine::TensorCore,
                 };
-                // Re-price if the pool forced the other engine.
+                // Re-price if the pool forced the other engine (served
+                // from the router's design-point cache when attached).
                 let metrics = if engine == placement.engine {
                     placement.metrics
                 } else {
                     match engine {
-                        Engine::Cim => crate::cost::CostModel::new(self.router.sys).evaluate(
-                            g,
-                            &crate::mapping::PriorityMapper::new(self.router.sys).map(g),
-                        ),
-                        Engine::TensorCore => {
-                            crate::cost::BaselineModel::new(self.router.arch).evaluate(g)
-                        }
+                        Engine::Cim => self.router.eval_cim(g),
+                        Engine::TensorCore => self.router.eval_tc(g),
                     }
                 };
                 let dur = metrics.total_cycles;

@@ -53,7 +53,7 @@ pub fn run_threshold(ctx: &Ctx) -> Result<()> {
             format!("{:.4}", geomean(&t)),
             format!("{:.2}", geomean(&f)),
             format!("{:.4}", u),
-        ]);
+        ])?;
     }
     ctx.emit(
         "ablation-threshold",
@@ -113,7 +113,7 @@ pub fn run_order(ctx: &Ctx) -> Result<()> {
             name.to_string(),
             format!("{:.4}", geomean(&t)),
             format!("{:.2}", geomean(&f)),
-        ]);
+        ])?;
     }
     ctx.emit(
         "ablation-order",

@@ -1,10 +1,13 @@
 //! Shared experiment context and output plumbing.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::arch::Architecture;
+use crate::coordinator::jobs::Grid;
+use crate::sweep::{EvalCache, SweepEngine};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 
@@ -19,6 +22,9 @@ pub struct Ctx {
     pub quick: bool,
     pub threads: usize,
     pub seed: u64,
+    /// Shared design-point memoization cache: duplicate (system, GEMM)
+    /// points across the experiments of one run are scored once.
+    pub cache: Arc<EvalCache>,
 }
 
 impl Default for Ctx {
@@ -29,6 +35,7 @@ impl Default for Ctx {
             quick: false,
             threads: crate::util::pool::default_threads(),
             seed: crate::workload::synthetic::DEFAULT_SEED,
+            cache: Arc::new(EvalCache::new()),
         }
     }
 }
@@ -39,6 +46,18 @@ impl Ctx {
             quick: true,
             ..Ctx::default()
         }
+    }
+
+    /// Sweep engine over this context's architecture, thread count and
+    /// shared cache — the way experiments evaluate their grids.
+    pub fn engine(&self) -> SweepEngine {
+        SweepEngine::with_cache(self.arch.clone(), Arc::clone(&self.cache)).threads(self.threads)
+    }
+
+    /// Coordinator grid bound to the shared cache (for experiments that
+    /// consume `EvalResult`-shaped output, e.g. the workload reports).
+    pub fn grid(&self) -> Grid {
+        Grid::with_cache(self.arch.clone(), self.threads, Arc::clone(&self.cache))
     }
 
     /// Synthetic dataset size honouring quick mode.

@@ -9,6 +9,13 @@
 //! * `ablation-duplication` — weight duplication (§IV-B future work).
 //! * `ablation-interconnect` — NoC cost sensitivity (§VI-D).
 //! * `zoo`       — the extended model zoo under the Table V questions.
+//!
+//! The grid-shaped experiments (`scaling`, `zoo`) and the routed ones
+//! (`hybrid`, `serving`) evaluate through the sweep engine / its shared
+//! memo cache; the mapping-level ablations need the mapping object
+//! itself and stay on the direct path.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -16,8 +23,10 @@ use super::common::Ctx;
 use crate::arch::{CimSystem, Interconnect, MemLevel, MultiSm, SmemConfig};
 use crate::cim::CimPrimitive;
 use crate::coordinator::hybrid::{Engine, HybridRouter, RoutePolicy};
+use crate::coordinator::jobs::SystemSpec;
 use crate::cost::CostModel;
 use crate::mapping::{ExhaustiveMapper, Objective, PriorityMapper};
+use crate::sweep::{MapperChoice, SweepJob};
 use crate::util::csv::Csv;
 use crate::util::pool;
 use crate::util::stats::geomean;
@@ -25,37 +34,48 @@ use crate::util::table::Table;
 use crate::workload::{models, synthetic, Gemm};
 
 pub fn run_scaling(ctx: &Ctx) -> Result<()> {
-    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
-    let cost = CostModel::new(&sys);
-    let base = crate::cost::BaselineModel::new(&ctx.arch);
     let g = Gemm::new(2048, 4096, 4096);
-    let cim_one = cost.evaluate(&g, &PriorityMapper::new(&sys).map(&g));
-    let tc_one = base.evaluate(&g);
+    let cim_spec = SystemSpec::CimAtRf(CimPrimitive::digital_6t());
+
+    // SM-count axis through the sweep engine: (2 systems × 11 counts),
+    // cim/tcore paired per row.
+    let mut jobs = Vec::new();
+    for e in 0..=10 {
+        let n = 1u64 << e;
+        for spec in [cim_spec.clone(), SystemSpec::Baseline] {
+            jobs.push(SweepJob {
+                workload: "scaling".to_string(),
+                gemm: g,
+                spec,
+                sms: n,
+                mapper: MapperChoice::Priority,
+            });
+        }
+    }
+    let results = ctx.engine().run(&jobs);
 
     let mut table = Table::new(vec![
         "SMs", "CiM GFLOPS", "CiM bound", "Tcore GFLOPS", "Tcore bound",
     ]);
     let mut csv = Csv::new(vec!["sms", "cim_gflops", "cim_bound", "tc_gflops", "tc_bound"]);
-    for e in 0..=10 {
+    let bound = |m: &crate::cost::Metrics| if m.memory_bound() { "memory" } else { "compute" };
+    for (e, pair) in results.chunks(2).enumerate() {
         let n = 1u64 << e;
-        let ms = MultiSm::new(n);
-        let c = ms.scale(&cim_one);
-        let t = ms.scale(&tc_one);
-        let bound = |m: &crate::cost::Metrics| if m.memory_bound() { "memory" } else { "compute" };
+        let (c, t) = (&pair[0].metrics, &pair[1].metrics);
         table.row(vec![
             n.to_string(),
             format!("{:.0}", c.gflops),
-            bound(&c).to_string(),
+            bound(c).to_string(),
             format!("{:.0}", t.gflops),
-            bound(&t).to_string(),
+            bound(t).to_string(),
         ]);
         csv.row(vec![
             n.to_string(),
             format!("{:.1}", c.gflops),
-            bound(&c).to_string(),
+            bound(c).to_string(),
             format!("{:.1}", t.gflops),
-            bound(&t).to_string(),
-        ]);
+            bound(t).to_string(),
+        ])?;
     }
     ctx.emit(
         "scaling",
@@ -63,6 +83,9 @@ pub fn run_scaling(ctx: &Ctx) -> Result<()> {
         &table,
         &csv,
     )?;
+    // The sms=1 results are the unscaled single-SM metrics.
+    let cim_one = results[0].metrics;
+    let tc_one = results[1].metrics;
     println!(
         "scaling knee (last compute-bound SM count): CiM = {}, Tcore = {}",
         MultiSm::new(1).scaling_knee(&cim_one),
@@ -92,7 +115,9 @@ pub fn run_hybrid(ctx: &Ctx) -> Result<()> {
             ("latency", RoutePolicy::MinLatency),
             ("edp", RoutePolicy::MinEdp),
         ] {
-            let router = HybridRouter::new(&sys, &ctx.arch, policy);
+            // Per-layer prices come from the shared design-point cache.
+            let router =
+                HybridRouter::with_cache(&sys, &ctx.arch, policy, Arc::clone(&ctx.cache));
             let hybrid = router.route(&wl);
             let cim = router.route_pure(&wl, Engine::Cim);
             let tc = router.route_pure(&wl, Engine::TensorCore);
@@ -114,7 +139,7 @@ pub fn run_hybrid(ctx: &Ctx) -> Result<()> {
                 format!("{:.4}", cim.tops_per_watt()),
                 format!("{:.4}", tc.tops_per_watt()),
                 format!("{:.1}", hybrid.gflops()),
-            ]);
+            ])?;
         }
     }
     ctx.emit(
@@ -173,7 +198,7 @@ pub fn run_optimality(ctx: &Ctx) -> Result<()> {
             format!("{gap:.4}"),
             exact.metrics.total_cycles.to_string(),
             ours.total_cycles.to_string(),
-        ]);
+        ])?;
     }
     ctx.emit(
         "optimality",
@@ -222,7 +247,7 @@ pub fn run_duplication(ctx: &Ctx) -> Result<()> {
             format!("{:.1}", on.gflops),
             format!("{:.4}", off.tops_per_watt),
             format!("{:.4}", on.tops_per_watt),
-        ]);
+        ])?;
     }
     ctx.emit(
         "ablation-duplication",
@@ -272,7 +297,7 @@ pub fn run_interconnect(ctx: &Ctx) -> Result<()> {
                 format!("{gb:.4}"),
                 format!("{gw:.4}"),
                 format!("{:.2}", 100.0 * (gb / gw - 1.0)),
-            ]);
+            ])?;
         }
     }
     ctx.emit(
@@ -288,27 +313,38 @@ pub fn run_zoo(ctx: &Ctx) -> Result<()> {
         "workload", "layers", "best system (energy)", "TOPS/W", "vs Tcore",
     ]);
     let mut csv = Csv::new(vec!["workload", "layers", "best_system", "topsw", "vs_tcore"]);
-    let base = crate::cost::BaselineModel::new(&ctx.arch);
+    let engine = ctx.engine();
+    let jobs_for = |wl_name: &str, gemms: &[Gemm], spec: &SystemSpec| -> Vec<SweepJob> {
+        gemms
+            .iter()
+            .map(|g| SweepJob {
+                workload: wl_name.to_string(),
+                gemm: *g,
+                spec: spec.clone(),
+                sms: 1,
+                mapper: MapperChoice::Priority,
+            })
+            .collect()
+    };
     for wl in models::extended_dataset() {
         let gemms: Vec<Gemm> = wl.unique_with_counts().into_iter().map(|(g, _)| g).collect();
         let mut best: Option<(f64, String)> = None;
         for p in CimPrimitive::all() {
-            for sys in [
-                CimSystem::at_level(&ctx.arch, p.clone(), MemLevel::RegisterFile),
-                CimSystem::at_smem(&ctx.arch, p.clone(), SmemConfig::ConfigB),
+            for spec in [
+                SystemSpec::CimAtRf(p.clone()),
+                SystemSpec::CimAtSmem(p.clone(), SmemConfig::ConfigB),
             ] {
-                let cost = CostModel::new(&sys);
-                let t: Vec<f64> = pool::map_parallel(&gemms, ctx.threads, |g| {
-                    cost.evaluate(g, &PriorityMapper::new(&sys).map(g)).tops_per_watt
-                });
+                let rows = engine.run(&jobs_for(&wl.name, &gemms, &spec));
+                let t: Vec<f64> = rows.iter().map(|r| r.metrics.tops_per_watt).collect();
                 let g = geomean(&t);
                 if best.as_ref().map_or(true, |(b, _)| g > *b) {
-                    best = Some((g, sys.label()));
+                    best = Some((g, rows[0].system.clone()));
                 }
             }
         }
-        let tc: Vec<f64> = gemms.iter().map(|g| base.evaluate(g).tops_per_watt).collect();
-        let (score, label) = best.unwrap();
+        let tc_rows = engine.run(&jobs_for(&wl.name, &gemms, &SystemSpec::Baseline));
+        let tc: Vec<f64> = tc_rows.iter().map(|r| r.metrics.tops_per_watt).collect();
+        let (score, label) = best.expect("at least one system evaluated");
         let ratio = score / geomean(&tc);
         table.row(vec![
             wl.name.clone(),
@@ -323,7 +359,7 @@ pub fn run_zoo(ctx: &Ctx) -> Result<()> {
             label,
             format!("{score:.4}"),
             format!("{ratio:.4}"),
-        ]);
+        ])?;
     }
     ctx.emit(
         "zoo",
@@ -335,7 +371,6 @@ pub fn run_zoo(ctx: &Ctx) -> Result<()> {
 
 pub fn run_serving(ctx: &Ctx) -> Result<()> {
     use crate::coordinator::trace::{synthetic_trace, EnginePool, TraceSimulator};
-    use crate::coordinator::hybrid::HybridRouter;
     use crate::util::rng::Rng;
 
     let sys = CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
@@ -359,8 +394,16 @@ pub fn run_serving(ctx: &Ctx) -> Result<()> {
         ("cim-only", EnginePool::CimOnly),
         ("tcore-only", EnginePool::TensorCoreOnly),
     ] {
+        // Each routed layer shape is priced once via the shared cache
+        // (the trace revisits the same few dozen shapes thousands of
+        // times).
         let sim = TraceSimulator::new(
-            HybridRouter::new(&sys, &ctx.arch, RoutePolicy::MinLatency),
+            HybridRouter::with_cache(
+                &sys,
+                &ctx.arch,
+                RoutePolicy::MinLatency,
+                Arc::clone(&ctx.cache),
+            ),
             pool,
         );
         let r = sim.run(&trace);
@@ -381,7 +424,7 @@ pub fn run_serving(ctx: &Ctx) -> Result<()> {
             format!("{:.4}", r.cim_utilization()),
             format!("{:.4}", r.tc_utilization()),
             format!("{:.4}", r.total_energy_pj / 1e9),
-        ]);
+        ])?;
     }
     ctx.emit(
         "serving",

@@ -1,14 +1,17 @@
 //! Fig 10 — how GEMM dimensions shape the metrics for Digital-6T @ RF:
 //! (a) weight matrix (N = K) sweeping M, (b) input matrix (M = K)
 //! sweeping N, (c) output matrix (M = N) sweeping K.
+//!
+//! All three panels are one flat job list through the sweep engine —
+//! panels overlap on the square shapes (x == v appears in every panel),
+//! which the memo cache scores once.
 
 use anyhow::Result;
 
 use super::common::Ctx;
-use crate::arch::{CimSystem, MemLevel};
 use crate::cim::CimPrimitive;
-use crate::cost::{CostModel, Metrics};
-use crate::mapping::PriorityMapper;
+use crate::coordinator::jobs::SystemSpec;
+use crate::sweep::{MapperChoice, SweepJob};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workload::Gemm;
@@ -22,12 +25,7 @@ fn grid(ctx: &Ctx) -> Vec<u64> {
     }
 }
 
-fn eval(sys: &CimSystem, g: Gemm) -> Metrics {
-    CostModel::new(sys).evaluate(&g, &PriorityMapper::new(sys).map(&g))
-}
-
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
     let dims = grid(ctx);
 
     let panels: [(&str, &str, fn(u64, u64) -> Gemm); 3] = [
@@ -35,6 +33,25 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         ("b", "input (M=K=X), vary N", |x, v| Gemm::new(x, v, x)),
         ("c", "output (M=N=X), vary K", |x, v| Gemm::new(x, x, v)),
     ];
+
+    // One flat grid over all panels, evaluated in parallel.
+    let spec = SystemSpec::CimAtRf(CimPrimitive::digital_6t());
+    let mut jobs = Vec::with_capacity(3 * dims.len() * dims.len());
+    for (panel, _, make) in panels {
+        for &x in &dims {
+            for &v in &dims {
+                jobs.push(SweepJob {
+                    workload: format!("fig10-{panel}"),
+                    gemm: make(x, v),
+                    spec: spec.clone(),
+                    sms: 1,
+                    mapper: MapperChoice::Priority,
+                });
+            }
+        }
+    }
+    let results = ctx.engine().run(&jobs);
+    let mut next = results.iter();
 
     let mut csv = Csv::new(vec![
         "panel", "x", "varied", "m", "n", "k", "tops_w", "gflops", "utilization",
@@ -44,7 +61,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         for &x in &dims {
             for &v in &dims {
                 let g = make(x, v);
-                let m = eval(&sys, g);
+                let r = next.next().expect("one result per job");
+                assert_eq!(r.gemm, g, "job/result iteration drifted out of lockstep");
+                let m = r.metrics;
                 // Print a readable subset; CSV carries the full grid.
                 if v == x || v == 16 || v == 8192 || (v == 256 && !ctx.quick) {
                     table.row(vec![
@@ -65,7 +84,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                     format!("{:.4}", m.tops_per_watt),
                     format!("{:.1}", m.gflops),
                     format!("{:.4}", m.utilization),
-                ]);
+                ])?;
             }
         }
         println!("\n-- Fig 10({panel}): {title} --");

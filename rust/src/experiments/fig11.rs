@@ -6,18 +6,18 @@
 use anyhow::Result;
 
 use super::common::Ctx;
-use crate::cim::CimPrimitive;
-use crate::coordinator::jobs::{Grid, SystemSpec};
 use crate::arch::SmemConfig;
+use crate::cim::CimPrimitive;
+use crate::coordinator::jobs::SystemSpec;
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workload::models;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let grid = Grid {
-        arch: ctx.arch.clone(),
-        threads: ctx.threads,
-    };
+    // The (workload × system) grid runs through the shared sweep
+    // engine: fig12 revisits two of these three systems and is served
+    // from the cache.
+    let grid = ctx.grid();
     let specs = [
         SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
         SystemSpec::CimAtSmem(CimPrimitive::digital_6t(), SmemConfig::ConfigA),
@@ -66,7 +66,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             format!("{:.4}", r.metrics.tops_per_watt),
             format!("{:.1}", r.metrics.gflops),
             format!("{:.4}", r.metrics.utilization),
-        ]);
+        ])?;
     }
     ctx.emit(
         "fig11",

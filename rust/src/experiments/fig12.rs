@@ -9,17 +9,16 @@ use anyhow::Result;
 use super::common::Ctx;
 use crate::arch::SmemConfig;
 use crate::cim::CimPrimitive;
-use crate::coordinator::jobs::{Grid, SystemSpec};
+use crate::coordinator::jobs::SystemSpec;
 use crate::coordinator::report::WorkloadReport;
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workload::models;
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let grid = Grid {
-        arch: ctx.arch.clone(),
-        threads: ctx.threads,
-    };
+    // Shares the sweep engine's memo cache: the RF and SMEM/configB
+    // points were already scored if fig11 ran in this process.
+    let grid = ctx.grid();
     let specs = [
         SystemSpec::Baseline,
         SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
@@ -89,7 +88,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 format!("{:.4}", rep.utilization_change.std_dev),
                 format!("{:.4}", rep.tops_per_watt_change.max),
                 format!("{:.4}", rep.gflops_change.max),
-            ]);
+            ])?;
         }
     }
     ctx.emit(

@@ -1,14 +1,20 @@
 //! Fig 13 (appendix) — energy breakdown (fJ/compute) and throughput
 //! (GOPS) for square GEMMs 64..8192 across the tensor-core baseline and
 //! all four CiM primitives, at RF and at SMEM (configB), iso-area.
+//!
+//! The (level × square × system) grid is one flat job list through the
+//! sweep engine; the baseline column repeats identically under both
+//! level sections, so its points are scored once and replayed from the
+//! cache.
 
 use anyhow::Result;
 
 use super::common::Ctx;
-use crate::arch::{CimSystem, MemLevel, SmemConfig};
+use crate::arch::{MemLevel, SmemConfig};
 use crate::cim::CimPrimitive;
-use crate::cost::{BaselineModel, CostModel, Metrics};
-use crate::mapping::PriorityMapper;
+use crate::coordinator::jobs::SystemSpec;
+use crate::cost::Metrics;
+use crate::sweep::{MapperChoice, SweepJob};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workload::{synthetic, Gemm};
@@ -34,36 +40,65 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         synthetic::square_series()
     };
 
+    let levels = [("RF", MemLevel::RegisterFile), ("SMEM", MemLevel::Smem)];
+    let spec_for = |level: MemLevel, prim: CimPrimitive| match level {
+        MemLevel::RegisterFile => SystemSpec::CimAtRf(prim),
+        _ => SystemSpec::CimAtSmem(prim, SmemConfig::ConfigB),
+    };
+
+    // Flat job list in emission order: level → square → (baseline, 4 prims).
+    let mut jobs = Vec::new();
+    for (_, level) in levels {
+        for g in &squares {
+            jobs.push(SweepJob {
+                workload: "fig13".to_string(),
+                gemm: *g,
+                spec: SystemSpec::Baseline,
+                sms: 1,
+                mapper: MapperChoice::Priority,
+            });
+            for prim in CimPrimitive::all() {
+                jobs.push(SweepJob {
+                    workload: "fig13".to_string(),
+                    gemm: *g,
+                    spec: spec_for(level, prim),
+                    sms: 1,
+                    mapper: MapperChoice::Priority,
+                });
+            }
+        }
+    }
+    let results = ctx.engine().run(&jobs);
+    let mut next = results.iter();
+
     let mut csv = Csv::new(vec![
         "level", "x", "system", "dram_fj", "smem_fj", "rf_pebuf_fj", "mac_fj", "total_fj_per_mac",
         "gops",
     ]);
 
-    for (level_name, level) in [("RF", MemLevel::RegisterFile), ("SMEM", MemLevel::Smem)] {
+    for (level_name, _) in levels {
         let mut table = Table::new(vec![
             "X", "system", "DRAM fJ", "SMEM fJ", "RF+PE fJ", "MAC fJ", "total fJ/MAC", "GOPS",
         ]);
         for g in &squares {
             // Baseline tensor core.
-            let base = BaselineModel::new(&ctx.arch).evaluate(g);
+            let r = next.next().expect("baseline result");
+            assert_eq!((r.gemm, r.system.as_str()), (*g, "Tensor-core"), "lockstep drift");
+            let base = r.metrics;
             table.row(breakdown_row(g, "Tcore", &base));
             let mut row = vec![level_name.to_string()];
             row.extend(breakdown_row(g, "Tcore", &base));
-            csv.row(row);
+            csv.row(row)?;
             // All four primitives.
             for prim in CimPrimitive::all() {
                 let label = prim.short_label();
-                let sys = match level {
-                    MemLevel::RegisterFile => {
-                        CimSystem::at_level(&ctx.arch, prim.clone(), level)
-                    }
-                    _ => CimSystem::at_smem(&ctx.arch, prim.clone(), SmemConfig::ConfigB),
-                };
-                let m = CostModel::new(&sys).evaluate(g, &PriorityMapper::new(&sys).map(g));
+                let r = next.next().expect("primitive result");
+                assert_eq!(r.gemm, *g, "lockstep drift");
+                let m = r.metrics;
                 table.row(breakdown_row(g, label, &m));
                 let mut row = vec![level_name.to_string()];
                 row.extend(breakdown_row(g, label, &m));
-                csv.row(row);
+                csv.row(row)?;
             }
         }
         println!("\n-- Fig 13 ({level_name} integration) --");

@@ -30,7 +30,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 g.ops().to_string(),
                 format!("{:.4}", g.algorithmic_reuse()),
                 count.to_string(),
-            ]);
+            ])?;
         }
     }
     ctx.emit(

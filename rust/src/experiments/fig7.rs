@@ -100,7 +100,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 format!("{:.4}", c.tops_w),
                 format!("{:.4}", c.gflops),
                 format!("{:.4}", c.util),
-            ]);
+            ])?;
         }
     }
     ctx.emit(
@@ -148,7 +148,7 @@ pub fn run_table2(ctx: &Ctx) -> Result<()> {
             format!("{ours:.3}"),
             format!("{heur:.3}"),
         ]);
-        csv.row(vec![n.to_string(), format!("{ours:.6}"), format!("{heur:.6}")]);
+        csv.row(vec![n.to_string(), format!("{ours:.6}"), format!("{heur:.6}")])?;
     }
     ctx.emit(
         "table2",

@@ -1,16 +1,19 @@
 //! Fig 9 — energy-efficiency vs throughput scatter for the four CiM
 //! primitives at the register file under iso-area constraints, over the
 //! synthetic GEMM dataset (M, N, K ∈ [16, 8192]).
+//!
+//! Grids are expressed through the sweep engine: one system-major
+//! expansion (primitive outer, GEMM inner, matching the CSV layout),
+//! evaluated in parallel with every point memoized.
 
 use anyhow::Result;
 
 use super::common::Ctx;
 use crate::arch::{CimSystem, MemLevel};
 use crate::cim::CimPrimitive;
-use crate::cost::CostModel;
-use crate::mapping::PriorityMapper;
+use crate::coordinator::jobs::SystemSpec;
+use crate::sweep::SweepSpec;
 use crate::util::csv::Csv;
-use crate::util::pool;
 use crate::util::stats::{percentile, Summary};
 use crate::util::table::Table;
 use crate::workload::synthetic;
@@ -30,15 +33,18 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         "primitive", "m", "n", "k", "tops_w", "gflops", "utilization",
     ]);
 
-    for prim in CimPrimitive::all() {
+    let prims = CimPrimitive::all();
+    let spec = SweepSpec::new("fig9")
+        .workload("synthetic", dataset.clone())
+        .systems(prims.iter().cloned().map(SystemSpec::CimAtRf).collect());
+    let results = ctx.engine().run(&spec.jobs_system_major());
+
+    for (i, prim) in prims.iter().enumerate() {
         let sys = CimSystem::at_level(&ctx.arch, prim.clone(), MemLevel::RegisterFile);
-        let rows = pool::map_parallel(&dataset, ctx.threads, |g| {
-            let m = CostModel::new(&sys).evaluate(g, &PriorityMapper::new(&sys).map(g));
-            (*g, m)
-        });
-        let t: Vec<f64> = rows.iter().map(|(_, m)| m.tops_per_watt).collect();
-        let f: Vec<f64> = rows.iter().map(|(_, m)| m.gflops).collect();
-        let u: Vec<f64> = rows.iter().map(|(_, m)| m.utilization).collect();
+        let rows = &results[i * dataset.len()..(i + 1) * dataset.len()];
+        let t: Vec<f64> = rows.iter().map(|r| r.metrics.tops_per_watt).collect();
+        let f: Vec<f64> = rows.iter().map(|r| r.metrics.gflops).collect();
+        let u: Vec<f64> = rows.iter().map(|r| r.metrics.utilization).collect();
         table.row(vec![
             prim.name.to_string(),
             sys.count.to_string(),
@@ -48,16 +54,16 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             format!("{:.0}", Summary::of(&f).max),
             format!("{:.2}", Summary::of(&u).mean),
         ]);
-        for (g, m) in &rows {
+        for r in rows {
             csv.row(vec![
                 prim.name.to_string(),
-                g.m.to_string(),
-                g.n.to_string(),
-                g.k.to_string(),
-                format!("{:.4}", m.tops_per_watt),
-                format!("{:.1}", m.gflops),
-                format!("{:.4}", m.utilization),
-            ]);
+                r.gemm.m.to_string(),
+                r.gemm.n.to_string(),
+                r.gemm.k.to_string(),
+                format!("{:.4}", r.metrics.tops_per_watt),
+                format!("{:.1}", r.metrics.gflops),
+                format!("{:.4}", r.metrics.utilization),
+            ])?;
         }
     }
     ctx.emit(

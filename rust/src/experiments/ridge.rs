@@ -35,7 +35,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             format!("{:.1}", sys.peak_gops()),
             format!("{:.2}", smem.ridge_point()),
             format!("{:.2}", dram.ridge_point()),
-        ]);
+        ])?;
     }
     ctx.emit(
         "roofline",

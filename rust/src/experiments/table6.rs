@@ -28,7 +28,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 g.k.to_string(),
                 g.macs().to_string(),
                 format!("{:.4}", g.algorithmic_reuse()),
-            ]);
+            ])?;
         }
     }
     ctx.emit("table6", "Table VI: ML workload characteristics", &table, &csv)

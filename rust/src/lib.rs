@@ -16,7 +16,8 @@
 //!   priority-based dataflow mapper and its heuristic-search comparator
 //!   ([`mapping`]), the analytical cost model ([`cost`]), roofline
 //!   analysis ([`roofline`]), the evaluation coordinator
-//!   ([`coordinator`]) and one regenerator per paper table/figure
+//!   ([`coordinator`]), the parallel memoized design-space sweep engine
+//!   ([`sweep`]) and one regenerator per paper table/figure
 //!   ([`experiments`]).
 //! * **L2/L1 (python, build-time)** — a JAX model whose hot loop is a
 //!   Pallas weight-stationary int8 GEMM kernel mirroring the paper's CiM
@@ -48,6 +49,7 @@ pub mod experiments;
 pub mod mapping;
 pub mod roofline;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 
@@ -57,5 +59,6 @@ pub mod prelude {
     pub use crate::cim::{CimPrimitive, CellType, ComputeType};
     pub use crate::cost::{CostModel, Metrics};
     pub use crate::mapping::{HeuristicMapper, Mapping, PriorityMapper};
+    pub use crate::sweep::{SweepEngine, SweepSpec};
     pub use crate::workload::{Gemm, Workload};
 }

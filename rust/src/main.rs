@@ -3,7 +3,7 @@
 //! Subcommands:
 //! * `evaluate`   — one GEMM on one system, full metric breakdown
 //! * `compare`    — one GEMM across baseline + all primitives
-//! * `sweep`      — a workload across systems (per-layer table)
+//! * `sweep`      — parallel memoized design-space sweep (grid flags)
 //! * `experiment` — regenerate a paper table/figure (`all` for every one)
 //! * `validate`   — replay mappings through the PJRT artifacts
 //! * `roofline`   — ridge-point analysis
@@ -13,16 +13,17 @@ use anyhow::{bail, Context, Result};
 
 use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
 use www_cim::cim::CimPrimitive;
-use www_cim::coordinator::jobs::{Grid, SystemSpec};
 use www_cim::coordinator::validate::validate_mappings;
 use www_cim::cost::{BaselineModel, CostModel, Metrics};
 use www_cim::experiments::{self, Ctx};
 use www_cim::mapping::PriorityMapper;
 use www_cim::roofline::Roofline;
 use www_cim::runtime::{default_artifacts_dir, Engine};
+use www_cim::sweep::{output, spec, MapperChoice, SweepEngine, SweepSpec};
 use www_cim::util::cli::Args;
+use www_cim::util::pool;
 use www_cim::util::table::Table;
-use www_cim::workload::{models, Gemm};
+use www_cim::workload::{synthetic, Gemm};
 
 fn main() {
     let args = Args::from_env();
@@ -56,7 +57,11 @@ usage: repro <subcommand> [options]
 
   evaluate   --gemm MxNxK [--prim d1|d2|a1|a2] [--level rf|smem] [--smem-config a|b]
   compare    --gemm MxNxK
-  sweep      --workload bert|gptj|resnet50|dlrm [--prim d1] [--level rf|smem]
+  sweep      [--workloads all|real|bert,gptj,...|synthetic[:N]]
+             [--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]
+             [--sms 1,2,4] [--threads N] [--mapper priority|dup|heuristic[:budget]]
+             [--seed N] [--out results] [--json]
+             (defaults sweep the full zoo x 13 systems, >= 500 points)
   experiment <fig2|fig7|table2|fig9|fig10|fig11|fig12|fig13|table6|roofline|
               ablation-threshold|ablation-order|all> [--quick] [--out results]
   validate   [--artifacts artifacts] [--seed N]
@@ -163,34 +168,77 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro sweep` — the design-space sweep engine on the CLI: cartesian
+/// grid flags expanded into a parallel, memoized evaluation with CSV +
+/// JSON mirrors.
 fn cmd_sweep(args: &Args) -> Result<()> {
+    if let Some(err) = args.unknown_flags(&[
+        "workload", "workloads", "prim", "prims", "level", "levels", "sms", "threads",
+        "mapper", "seed", "out", "json",
+    ]) {
+        bail!(err);
+    }
     let arch = Architecture::default_sm();
-    let name = args.get_or("workload", "bert");
-    let wl = match name.to_ascii_lowercase().as_str() {
-        "bert" | "bert-large" => models::bert_large(),
-        "gptj" | "gpt-j" => models::gpt_j(),
-        "resnet" | "resnet50" => models::resnet50(),
-        "dlrm" => models::dlrm(),
-        other => bail!("unknown workload {other:?} (bert, gptj, resnet50, dlrm)"),
-    };
-    let grid = Grid::new(arch.clone());
-    let spec = match parse_system(args, &arch)? {
-        None => SystemSpec::Baseline,
-        Some(sys) => match (sys.level, sys.smem_config) {
-            (MemLevel::RegisterFile, _) => SystemSpec::CimAtRf(sys.primitive),
-            (MemLevel::Smem, Some(cfg)) => SystemSpec::CimAtSmem(sys.primitive, cfg),
-            _ => unreachable!(),
-        },
-    };
-    let gemms: Vec<Gemm> = wl.unique_with_counts().into_iter().map(|(g, _)| g).collect();
-    let jobs = grid.cross(&[(wl.name.clone(), gemms)], &[spec]);
-    let results = grid.run(&jobs);
-    let rows: Vec<(String, Metrics)> = results
-        .iter()
-        .map(|r| (r.gemm.to_string(), r.metrics))
-        .collect();
-    println!("{} on {}:", wl.name, results[0].system);
-    print!("{}", metrics_table(&rows));
+    let seed = args.get_parsed_or("seed", synthetic::DEFAULT_SEED);
+    let threads = args.get_parsed_or("threads", pool::default_threads());
+
+    // Grid axes (singular flags are aliases for the plural ones).
+    let workloads_arg = args
+        .get("workloads")
+        .or_else(|| args.get("workload"))
+        .unwrap_or(spec::DEFAULT_WORKLOADS);
+    let prims_arg = args
+        .get("prims")
+        .or_else(|| args.get("prim"))
+        .unwrap_or(spec::DEFAULT_PRIMS);
+    let levels_arg = args
+        .get("levels")
+        .or_else(|| args.get("level"))
+        .unwrap_or(spec::DEFAULT_LEVELS);
+
+    let sweep_spec = SweepSpec::new("sweep")
+        .workloads(spec::parse_workloads(workloads_arg, seed)?)
+        .systems(spec::parse_systems(prims_arg, levels_arg)?)
+        .sm_counts(spec::parse_sm_counts(args.get_or("sms", "1"))?)
+        .mapper(MapperChoice::parse(args.get_or("mapper", "priority"), seed)?);
+
+    println!(
+        "sweep: {} grid points ({} workload(s) x {} system(s) x {} SM count(s)), {} threads",
+        sweep_spec.n_points(),
+        sweep_spec.workloads.len(),
+        sweep_spec.systems.len(),
+        sweep_spec.sm_counts.len(),
+        threads
+    );
+    let engine = SweepEngine::new(arch).threads(threads);
+    let run = engine.run_spec(&sweep_spec);
+    println!(
+        "evaluated {} points in {:.3}s (cache: {} unique, {} duplicate hits)",
+        run.n_points(),
+        run.elapsed.as_secs_f64(),
+        run.cache_misses,
+        run.cache_hits
+    );
+
+    // Small grids get the full per-point table; every run gets the
+    // per-system summary.
+    if run.results.len() <= 80 {
+        print!("{}", output::detail_table(&run.results));
+    }
+    print!("{}", output::summary_table(&run.results));
+
+    // CSV + JSON mirrors.
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    let csv = output::results_csv(&run.results)?;
+    let csv_path = out_dir.join("sweep.csv");
+    csv.write(&csv_path)?;
+    println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
+    let json_path = out_dir.join("sweep.json");
+    output::write_json_summary(&run, &json_path)?;
+    println!("[json] summary -> {}", json_path.display());
+    if args.flag("json") {
+        print!("{}", output::json_summary(&run));
+    }
     Ok(())
 }
 

@@ -10,6 +10,12 @@
 
 pub mod artifacts;
 pub mod matrix;
+/// Real PJRT engine (requires the `xla` feature and a real xla crate).
+#[cfg(feature = "xla")]
+pub mod pjrt;
+/// Offline stand-in with the identical API (default build).
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod tiled;
 

@@ -1,0 +1,64 @@
+//! Offline stand-in for [`super::pjrt`], compiled when the `xla`
+//! feature is off (the default — the build image has no PJRT
+//! toolchain).
+//!
+//! The API mirrors the real engine exactly, so the coordinator, the
+//! tiled executor and the CLI compile unchanged; every execution entry
+//! point fails with an actionable message instead. Tests that need
+//! artifacts already skip when `artifacts/manifest.tsv` is absent,
+//! which is always the case in an offline checkout.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::artifacts::Manifest;
+use super::matrix::{MatI32, MatI8};
+
+/// Feature-gated stand-in for the PJRT execution engine.
+#[derive(Debug)]
+pub struct Engine {
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Always fails: execution requires the `xla` feature.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        bail!(
+            "cannot load PJRT artifacts from {dir:?}: www_cim was built without the `xla` \
+             feature; rebuild with `cargo build --features xla` against a real xla crate"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        format!("unavailable (no xla feature; dir {})", self.dir.display())
+    }
+
+    pub fn execute_i8(&self, name: &str, _inputs: &[&MatI8]) -> Result<Vec<MatI32>> {
+        bail!("cannot execute {name:?}: built without the `xla` feature")
+    }
+
+    pub fn gemm_padded(&self, kernel: &str, _x: &MatI8, _w: &MatI8) -> Result<MatI32> {
+        bail!("cannot execute {kernel:?}: built without the `xla` feature")
+    }
+
+    pub fn cached(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let err = Engine::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("--features xla"), "{err:#}");
+    }
+}

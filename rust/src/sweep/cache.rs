@@ -1,0 +1,317 @@
+//! Memoization cache for design-space evaluations.
+//!
+//! Every point of the What/When/Where design space is identified by a
+//! *system fingerprint* — a stable string naming the system
+//! configuration (integration point + primitive + SM count + mapper) —
+//! plus the GEMM shape. The analytical evaluation of a point is a pure
+//! function of that key, so duplicate points across experiments (fig9's
+//! synthetic sweep, fig11/fig12's workload grids, the zoo, the serving
+//! router all revisit the same (system, GEMM) pairs) are scored exactly
+//! once per process.
+//!
+//! The cache is sharded: each shard is an independent `Mutex<HashMap>`,
+//! picked by key hash, so parallel sweeps do not serialize on one lock.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use crate::cim::isoarea;
+use crate::coordinator::jobs::SystemSpec;
+use crate::cost::Metrics;
+use crate::workload::Gemm;
+
+/// Number of independent shards (power of two).
+const SHARDS: usize = 16;
+
+/// Mapper fingerprint fragment for baseline points: the mapper cannot
+/// influence the tensor-core baseline, so every mapper choice shares
+/// one baseline cache entry under this marker.
+pub const BASELINE_MAPPER_FP: &str = "n/a";
+
+/// Stable fingerprint of an [`Architecture`]: capacities, bandwidths,
+/// per-element energies and baseline peak. Cached metrics are only
+/// valid for the architecture they were computed on, so this prefixes
+/// every cache key (engines over different architectures may share one
+/// [`EvalCache`] without cross-talk).
+pub fn arch_fingerprint(arch: &Architecture) -> String {
+    let lv = |l: MemLevel| {
+        let s = arch.level(l);
+        format!(
+            "{}:{:.4}:{:.6}",
+            s.capacity_bytes,
+            s.bandwidth_bytes_per_cycle,
+            arch.energy.elem_pj(l)
+        )
+    };
+    format!(
+        "arch[{};{};{};{};red{:.6};mac{:.6};tc{}x{}x{}]",
+        lv(MemLevel::Dram),
+        lv(MemLevel::Smem),
+        lv(MemLevel::RegisterFile),
+        lv(MemLevel::PeBuffer),
+        arch.energy.reduction_pj,
+        arch.energy.mac_pj,
+        arch.tensor_core.subcores,
+        arch.tensor_core.pe_rows,
+        arch.tensor_core.pe_cols
+    )
+}
+
+/// Fingerprint of a CiM primitive: name *and* every model parameter,
+/// so user-defined primitives sharing a name but not parameters never
+/// share cache entries.
+fn prim_fingerprint(p: &crate::cim::CimPrimitive) -> String {
+    format!(
+        "{}({},{},{},{},{},{},{},{})",
+        p.name,
+        p.rp,
+        p.cp,
+        p.rh,
+        p.ch,
+        p.capacity_bytes,
+        p.latency_ns,
+        p.mac_energy_pj,
+        p.area_overhead
+    )
+}
+
+/// Stable fingerprint of a [`SystemSpec`] — cheap (no system
+/// instantiation) and equal to [`system_fingerprint`] of the
+/// `CimSystem` the spec builds.
+pub fn spec_fingerprint(spec: &SystemSpec) -> String {
+    match spec {
+        SystemSpec::Baseline => "baseline".to_string(),
+        SystemSpec::CimAtRf(p) => format!("rf:{}", prim_fingerprint(p)),
+        SystemSpec::CimAtSmem(p, SmemConfig::ConfigA) => {
+            format!("smem-a:{}", prim_fingerprint(p))
+        }
+        SystemSpec::CimAtSmem(p, SmemConfig::ConfigB) => {
+            format!("smem-b:{}", prim_fingerprint(p))
+        }
+    }
+}
+
+/// Stable fingerprint of an instantiated [`CimSystem`]; matches
+/// [`spec_fingerprint`] of the spec that would build it.
+pub fn system_fingerprint(sys: &CimSystem) -> String {
+    let p = prim_fingerprint(&sys.primitive);
+    match (sys.level, sys.smem_config) {
+        (MemLevel::RegisterFile, _) => format!("rf:{p}"),
+        (MemLevel::Smem, Some(SmemConfig::ConfigA)) => format!("smem-a:{p}"),
+        (MemLevel::Smem, _) => format!("smem-b:{p}"),
+        (other, _) => format!("{}:{p}", other.short_name()),
+    }
+}
+
+/// Full cache key string for one single-SM design point (everything
+/// but the GEMM). Multi-SM metrics are a pure post-transform of the
+/// single-SM entry ([`crate::arch::MultiSm::scale`]), so the SM count
+/// is deliberately *not* part of the key — every SM-count axis value
+/// shares one cached evaluation.
+pub fn point_key(arch_fp: &str, system_fp: &str, mapper_fp: &str) -> String {
+    format!("{arch_fp}|{system_fp}|{mapper_fp}")
+}
+
+/// Human-readable system label for a spec, identical to
+/// `CimSystem::label()` of the instantiated system but computed without
+/// cloning the architecture (the label is needed on cache hits too).
+pub fn spec_label(spec: &SystemSpec, arch: &crate::arch::Architecture) -> String {
+    match spec {
+        SystemSpec::Baseline => "Tensor-core".to_string(),
+        SystemSpec::CimAtRf(p) => {
+            let count = isoarea::primitives_fitting(arch.capacity(MemLevel::RegisterFile), p);
+            format!("{}@RF x{count}", p.name)
+        }
+        SystemSpec::CimAtSmem(p, cfg) => {
+            let (tag, cap_level) = match cfg {
+                SmemConfig::ConfigA => ("A", MemLevel::RegisterFile),
+                SmemConfig::ConfigB => ("B", MemLevel::Smem),
+            };
+            let count = isoarea::primitives_fitting(arch.capacity(cap_level), p);
+            format!("{}@SMEM/config{tag} x{count}", p.name)
+        }
+    }
+}
+
+type Key = (String, Gemm);
+
+/// Sharded (system fingerprint, GEMM) → [`Metrics`] memoization cache
+/// with hit/miss accounting.
+#[derive(Debug)]
+pub struct EvalCache {
+    shards: Vec<Mutex<HashMap<Key, Metrics>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        EvalCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(key: &Key) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+
+    /// Return the memoized metrics for `(point, gemm)`, computing them
+    /// with `f` on a miss. The evaluation runs outside the shard lock so
+    /// concurrent misses on other keys proceed; a racing duplicate miss
+    /// computes redundantly but deterministically (first insert wins).
+    pub fn get_or_compute<F: FnOnce() -> Metrics>(
+        &self,
+        point: String,
+        gemm: Gemm,
+        f: F,
+    ) -> Metrics {
+        let key = (point, gemm);
+        let shard = &self.shards[Self::shard_of(&key)];
+        if let Some(m) = shard.lock().expect("cache shard poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *m;
+        }
+        let m = f();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        *shard
+            .lock()
+            .expect("cache shard poisoned")
+            .entry(key)
+            .or_insert(m)
+    }
+
+    /// Number of distinct cached points.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop all cached entries and reset the counters.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().expect("cache shard poisoned").clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Architecture;
+    use crate::cim::CimPrimitive;
+
+    fn dummy_metrics(x: f64) -> Metrics {
+        Metrics {
+            macs: 1,
+            ops: 2,
+            energy_pj: x,
+            breakdown: Default::default(),
+            tops_per_watt: 2.0 / x,
+            compute_cycles: 1,
+            dram_cycles: 1,
+            smem_cycles: 0,
+            total_cycles: 1,
+            gflops: 2.0,
+            utilization: 1.0,
+            dram_bytes: 3,
+            smem_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn hit_returns_first_computation() {
+        let cache = EvalCache::new();
+        let g = Gemm::new(16, 16, 16);
+        let a = cache.get_or_compute("p".into(), g, || dummy_metrics(1.0));
+        let b = cache.get_or_compute("p".into(), g, || dummy_metrics(999.0));
+        assert_eq!(a, b, "second call must be served from the cache");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_points_distinct_entries() {
+        let cache = EvalCache::new();
+        let g = Gemm::new(16, 16, 16);
+        cache.get_or_compute("a".into(), g, || dummy_metrics(1.0));
+        cache.get_or_compute("b".into(), g, || dummy_metrics(2.0));
+        cache.get_or_compute("a".into(), Gemm::new(32, 32, 32), || dummy_metrics(3.0));
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let cache = EvalCache::new();
+        cache.get_or_compute("a".into(), Gemm::new(8, 8, 8), || dummy_metrics(1.0));
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.hits() + cache.misses(), 0);
+    }
+
+    #[test]
+    fn spec_and_system_fingerprints_agree() {
+        let arch = Architecture::default_sm();
+        let specs = [
+            SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            SystemSpec::CimAtSmem(CimPrimitive::analog_8t(), SmemConfig::ConfigA),
+            SystemSpec::CimAtSmem(CimPrimitive::digital_8t(), SmemConfig::ConfigB),
+        ];
+        for spec in specs {
+            let sys = spec.system(&arch).expect("cim spec builds a system");
+            assert_eq!(spec_fingerprint(&spec), system_fingerprint(&sys));
+        }
+        assert_eq!(spec_fingerprint(&SystemSpec::Baseline), "baseline");
+    }
+
+    #[test]
+    fn spec_label_matches_instantiated_system_label() {
+        // Guard against drift from the ground truth: the label of the
+        // actually-instantiated CimSystem (SystemSpec::label delegates
+        // to spec_label, so compare against CimSystem::label directly).
+        let arch = Architecture::default_sm();
+        assert_eq!(spec_label(&SystemSpec::Baseline, &arch), "Tensor-core");
+        for p in CimPrimitive::all() {
+            for spec in [
+                SystemSpec::CimAtRf(p.clone()),
+                SystemSpec::CimAtSmem(p.clone(), SmemConfig::ConfigA),
+                SystemSpec::CimAtSmem(p.clone(), SmemConfig::ConfigB),
+            ] {
+                let sys = spec.system(&arch).expect("cim spec builds a system");
+                assert_eq!(spec_label(&spec, &arch), sys.label(), "{spec:?}");
+            }
+        }
+    }
+}

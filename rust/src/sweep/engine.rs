@@ -1,0 +1,257 @@
+//! The parallel, memoized sweep executor.
+//!
+//! [`SweepEngine`] turns a job list (from [`super::spec::SweepSpec`] or
+//! hand-built) into results by fanning evaluations over the in-tree
+//! worker pool ([`crate::util::pool`]) with every point memoized in a
+//! shared [`EvalCache`]. Evaluation of a point is a pure function of
+//! (system fingerprint, SM count, mapper, GEMM), so results are
+//! bit-identical across thread counts and across warm/cold caches —
+//! properties the test suite asserts.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::arch::{Architecture, MultiSm};
+use crate::coordinator::jobs::SystemSpec;
+use crate::cost::{BaselineModel, CostModel, Metrics};
+use crate::util::pool;
+
+use super::cache::{self, EvalCache};
+use super::spec::{SweepJob, SweepResult, SweepSpec};
+
+/// Parallel grid evaluator with a shared memoization cache.
+#[derive(Debug, Clone)]
+pub struct SweepEngine {
+    arch: Architecture,
+    /// Precomputed [`cache::arch_fingerprint`] — prefixes every key so
+    /// engines over different architectures can share one cache.
+    arch_fp: String,
+    threads: usize,
+    cache: Arc<EvalCache>,
+}
+
+impl SweepEngine {
+    /// Engine with a fresh cache and the default thread count.
+    pub fn new(arch: Architecture) -> Self {
+        Self::with_cache(arch, Arc::new(EvalCache::new()))
+    }
+
+    /// Engine sharing an existing cache (e.g. across experiments of one
+    /// `repro experiment all` run).
+    pub fn with_cache(arch: Architecture, cache: Arc<EvalCache>) -> Self {
+        let arch_fp = cache::arch_fingerprint(&arch);
+        SweepEngine {
+            arch,
+            arch_fp,
+            threads: pool::default_threads(),
+            cache,
+        }
+    }
+
+    /// Set the worker-thread count (builder style).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    pub fn thread_count(&self) -> usize {
+        self.threads
+    }
+
+    pub fn arch(&self) -> &Architecture {
+        &self.arch
+    }
+
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+
+    pub fn shared_cache(&self) -> Arc<EvalCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// Evaluate one job, memoized. The cache holds the single-SM
+    /// metrics; multi-SM points are a pure post-transform
+    /// ([`MultiSm::scale`]) applied on read, so every value of an
+    /// SM-count axis shares one evaluation.
+    pub fn evaluate(&self, job: &SweepJob) -> SweepResult {
+        let system_fp = cache::spec_fingerprint(&job.spec);
+        // The mapper cannot influence the baseline, so baseline points
+        // share one cache entry across mapper choices.
+        let mapper_fp = if matches!(job.spec, SystemSpec::Baseline) {
+            cache::BASELINE_MAPPER_FP.to_string()
+        } else {
+            job.mapper.fingerprint()
+        };
+        let key = cache::point_key(&self.arch_fp, &system_fp, &mapper_fp);
+        let single = self
+            .cache
+            .get_or_compute(key, job.gemm, || self.evaluate_uncached(job));
+        let metrics = if job.sms <= 1 {
+            single
+        } else {
+            MultiSm::new(job.sms).scale(&single)
+        };
+        SweepResult {
+            workload: job.workload.clone(),
+            gemm: job.gemm,
+            system: cache::spec_label(&job.spec, &self.arch),
+            sms: job.sms,
+            metrics,
+        }
+    }
+
+    /// The raw (cache-miss) evaluation: instantiate the system, map the
+    /// GEMM, run the cost model (single-SM).
+    fn evaluate_uncached(&self, job: &SweepJob) -> Metrics {
+        match job.spec.system(&self.arch) {
+            None => BaselineModel::new(&self.arch).evaluate(&job.gemm),
+            Some(sys) => {
+                let mapping = job.mapper.map(&sys, &job.gemm);
+                CostModel::new(&sys).evaluate(&job.gemm, &mapping)
+            }
+        }
+    }
+
+    /// Evaluate a batch in parallel, preserving job order.
+    pub fn run(&self, jobs: &[SweepJob]) -> Vec<SweepResult> {
+        pool::map_parallel(jobs, self.threads, |job| self.evaluate(job))
+    }
+
+    /// Expand and run a full [`SweepSpec`], with timing and cache
+    /// accounting for the run.
+    pub fn run_spec(&self, spec: &SweepSpec) -> SweepRun {
+        let (h0, m0) = (self.cache.hits(), self.cache.misses());
+        let t0 = Instant::now();
+        let results = self.run(&spec.jobs());
+        SweepRun {
+            spec_name: spec.name.clone(),
+            results,
+            threads: self.threads,
+            cache_hits: self.cache.hits() - h0,
+            cache_misses: self.cache.misses() - m0,
+            elapsed: t0.elapsed(),
+        }
+    }
+}
+
+/// One executed sweep: ordered results plus run-level accounting.
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    pub spec_name: String,
+    pub results: Vec<SweepResult>,
+    pub threads: usize,
+    /// Cache hits during this run (duplicates within the grid plus
+    /// overlap with previously-run sweeps sharing the cache).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub elapsed: Duration,
+}
+
+impl SweepRun {
+    pub fn n_points(&self) -> usize {
+        self.results.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::CimPrimitive;
+    use crate::sweep::spec::MapperChoice;
+    use crate::workload::Gemm;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec::new("unit")
+            .workload(
+                "w",
+                vec![Gemm::new(64, 64, 64), Gemm::new(512, 1024, 1024)],
+            )
+            .systems(vec![
+                SystemSpec::Baseline,
+                SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            ])
+    }
+
+    #[test]
+    fn run_preserves_order_and_counts() {
+        let engine = SweepEngine::new(Architecture::default_sm());
+        let spec = small_spec();
+        let run = engine.run_spec(&spec);
+        assert_eq!(run.n_points(), spec.n_points());
+        assert_eq!(run.results[0].system, "Tensor-core");
+        assert!(run.results[1].system.contains("Digital-6T@RF"));
+        assert_eq!(run.cache_misses, 4);
+        assert_eq!(run.cache_hits, 0);
+    }
+
+    #[test]
+    fn rerun_is_fully_cached_and_identical() {
+        let engine = SweepEngine::new(Architecture::default_sm()).threads(1);
+        let spec = small_spec();
+        let cold = engine.run_spec(&spec);
+        let warm = engine.run_spec(&spec);
+        assert_eq!(warm.cache_misses, 0);
+        assert_eq!(warm.cache_hits, cold.cache_misses);
+        for (a, b) in cold.results.iter().zip(&warm.results) {
+            assert_eq!(a.metrics, b.metrics);
+            assert_eq!(a.system, b.system);
+        }
+    }
+
+    #[test]
+    fn engine_matches_direct_evaluation() {
+        use crate::arch::{CimSystem, MemLevel};
+        use crate::mapping::PriorityMapper;
+        let arch = Architecture::default_sm();
+        let engine = SweepEngine::new(arch.clone());
+        let g = Gemm::new(512, 1024, 1024);
+        let job = SweepJob {
+            workload: "w".into(),
+            gemm: g,
+            spec: SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            sms: 1,
+            mapper: MapperChoice::Priority,
+        };
+        let via_engine = engine.evaluate(&job).metrics;
+        let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        let direct = CostModel::new(&sys).evaluate(&g, &PriorityMapper::new(&sys).map(&g));
+        assert_eq!(via_engine, direct);
+    }
+
+    #[test]
+    fn sms_axis_applies_multi_sm_scaling() {
+        let arch = Architecture::default_sm();
+        let engine = SweepEngine::new(arch);
+        let mk = |sms| SweepJob {
+            workload: "w".into(),
+            gemm: Gemm::new(2048, 4096, 4096),
+            spec: SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            sms,
+            mapper: MapperChoice::Priority,
+        };
+        let one = engine.evaluate(&mk(1)).metrics;
+        let four = engine.evaluate(&mk(4)).metrics;
+        assert_eq!(MultiSm::new(4).scale(&one), four);
+        assert!(four.gflops > one.gflops);
+        // Every SM-count axis value shares the single-SM cache entry.
+        assert_eq!(engine.cache().misses(), 1);
+        assert_eq!(engine.cache().hits(), 1);
+    }
+
+    #[test]
+    fn baseline_cache_entry_shared_across_mappers() {
+        let engine = SweepEngine::new(Architecture::default_sm()).threads(1);
+        let mk = |mapper| SweepJob {
+            workload: "w".into(),
+            gemm: Gemm::new(64, 64, 64),
+            spec: SystemSpec::Baseline,
+            sms: 1,
+            mapper,
+        };
+        engine.evaluate(&mk(MapperChoice::Priority));
+        engine.evaluate(&mk(MapperChoice::PriorityDuplication));
+        assert_eq!(engine.cache().misses(), 1);
+        assert_eq!(engine.cache().hits(), 1);
+    }
+}

@@ -1,0 +1,49 @@
+//! Design-space sweep engine (the framework's DSE subsystem).
+//!
+//! The paper's What/When/Where questions are answered by sweeping grids
+//! of (workload × CiM primitive × memory level × mapper × SM count)
+//! through the analytical cost model. This module provides that sweep
+//! as a reusable engine instead of per-figure loops:
+//!
+//! * [`spec::SweepSpec`] — a declarative cartesian grid that expands
+//!   into an evaluation job list ([`spec::SweepJob`]);
+//! * [`cache::EvalCache`] — a sharded memoization cache keyed by
+//!   (system fingerprint, GEMM), so duplicate points across experiments
+//!   are scored once per process;
+//! * [`engine::SweepEngine`] — the parallel executor over
+//!   [`crate::util::pool`], deterministic across thread counts;
+//! * [`output`] — CSV mirrors, summary tables and a machine-readable
+//!   JSON summary.
+//!
+//! The experiment regenerators ([`crate::experiments`]), the
+//! coordinator grid ([`crate::coordinator::jobs::Grid`]) and the
+//! `repro sweep` CLI all evaluate through this engine.
+//!
+//! ```no_run
+//! use www_cim::arch::Architecture;
+//! use www_cim::cim::CimPrimitive;
+//! use www_cim::coordinator::jobs::SystemSpec;
+//! use www_cim::sweep::{SweepEngine, SweepSpec};
+//! use www_cim::workload::synthetic;
+//!
+//! let spec = SweepSpec::new("example")
+//!     .workload("synthetic", synthetic::dataset(7, 100))
+//!     .systems(vec![
+//!         SystemSpec::Baseline,
+//!         SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+//!     ]);
+//! let run = SweepEngine::new(Architecture::default_sm()).run_spec(&spec);
+//! println!("{} points in {:?}", run.n_points(), run.elapsed);
+//! ```
+
+pub mod cache;
+pub mod engine;
+pub mod output;
+pub mod spec;
+
+pub use cache::{
+    arch_fingerprint, point_key, spec_fingerprint, system_fingerprint, EvalCache,
+    BASELINE_MAPPER_FP,
+};
+pub use engine::{SweepEngine, SweepRun};
+pub use spec::{MapperChoice, SweepJob, SweepResult, SweepSpec};

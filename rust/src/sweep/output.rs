@@ -1,0 +1,277 @@
+//! Sweep result sinks: the CSV mirror, paper-style summary tables, and
+//! a machine-readable JSON summary (hand-rolled encoder — serde is
+//! unavailable offline).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csv::Csv;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+
+use super::engine::SweepRun;
+use super::spec::SweepResult;
+
+/// Per-point CSV mirror: one row per evaluated grid point.
+pub fn results_csv(results: &[SweepResult]) -> Result<Csv> {
+    let mut csv = Csv::new(vec![
+        "workload",
+        "m",
+        "n",
+        "k",
+        "system",
+        "sms",
+        "tops_w",
+        "gflops",
+        "utilization",
+        "energy_pj",
+        "total_cycles",
+        "bound",
+    ]);
+    for r in results {
+        csv.row(vec![
+            r.workload.clone(),
+            r.gemm.m.to_string(),
+            r.gemm.n.to_string(),
+            r.gemm.k.to_string(),
+            r.system.clone(),
+            r.sms.to_string(),
+            format!("{:.4}", r.metrics.tops_per_watt),
+            format!("{:.1}", r.metrics.gflops),
+            format!("{:.4}", r.metrics.utilization),
+            format!("{:.1}", r.metrics.energy_pj),
+            r.metrics.total_cycles.to_string(),
+            if r.metrics.memory_bound() { "memory" } else { "compute" }.to_string(),
+        ])?;
+    }
+    Ok(csv)
+}
+
+/// Group keys `(system, sms)` in first-appearance order.
+fn group_order(results: &[SweepResult]) -> Vec<(String, u64)> {
+    let mut order: Vec<(String, u64)> = Vec::new();
+    for r in results {
+        let key = (r.system.clone(), r.sms);
+        if !order.contains(&key) {
+            order.push(key);
+        }
+    }
+    order
+}
+
+/// Per-group aggregate of a sweep (one row of the summary table / one
+/// entry of the JSON `systems` array).
+#[derive(Debug, Clone)]
+pub struct SystemSummary {
+    pub system: String,
+    pub sms: u64,
+    pub points: usize,
+    pub geomean_tops_w: f64,
+    pub geomean_gflops: f64,
+    pub mean_utilization: f64,
+    pub peak_gflops: f64,
+}
+
+/// Aggregate results per `(system, sms)` group.
+pub fn summarize(results: &[SweepResult]) -> Vec<SystemSummary> {
+    group_order(results)
+        .into_iter()
+        .map(|(system, sms)| {
+            let group: Vec<&SweepResult> = results
+                .iter()
+                .filter(|r| r.system == system && r.sms == sms)
+                .collect();
+            let t: Vec<f64> = group.iter().map(|r| r.metrics.tops_per_watt).collect();
+            let f: Vec<f64> = group.iter().map(|r| r.metrics.gflops).collect();
+            let u: f64 =
+                group.iter().map(|r| r.metrics.utilization).sum::<f64>() / group.len() as f64;
+            SystemSummary {
+                system,
+                sms,
+                points: group.len(),
+                geomean_tops_w: geomean(&t),
+                geomean_gflops: geomean(&f),
+                mean_utilization: u,
+                peak_gflops: f.iter().cloned().fold(0.0, f64::max),
+            }
+        })
+        .collect()
+}
+
+/// Paper-style summary table, one row per `(system, sms)` group.
+pub fn summary_table(results: &[SweepResult]) -> Table {
+    let mut t = Table::new(vec![
+        "system",
+        "SMs",
+        "points",
+        "geomean TOPS/W",
+        "geomean GFLOPS",
+        "mean util",
+        "peak GFLOPS",
+    ]);
+    for s in summarize(results) {
+        t.row(vec![
+            s.system,
+            s.sms.to_string(),
+            s.points.to_string(),
+            format!("{:.3}", s.geomean_tops_w),
+            format!("{:.0}", s.geomean_gflops),
+            format!("{:.2}", s.mean_utilization),
+            format!("{:.0}", s.peak_gflops),
+        ]);
+    }
+    t
+}
+
+/// Per-point detail table (for small grids).
+pub fn detail_table(results: &[SweepResult]) -> Table {
+    let mut t = Table::new(vec![
+        "workload", "GEMM", "system", "SMs", "TOPS/W", "GFLOPS", "util", "bound",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.workload.clone(),
+            r.gemm.to_string(),
+            r.system.clone(),
+            r.sms.to_string(),
+            format!("{:.3}", r.metrics.tops_per_watt),
+            format!("{:.0}", r.metrics.gflops),
+            format!("{:.2}", r.metrics.utilization),
+            if r.metrics.memory_bound() { "memory" } else { "compute" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Escape a string for a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Machine-readable summary of a sweep run.
+pub fn json_summary(run: &SweepRun) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"sweep\": \"{}\",\n", json_escape(&run.spec_name)));
+    out.push_str(&format!("  \"points\": {},\n", run.n_points()));
+    out.push_str(&format!("  \"threads\": {},\n", run.threads));
+    out.push_str(&format!(
+        "  \"elapsed_s\": {},\n",
+        json_f64(run.elapsed.as_secs_f64())
+    ));
+    out.push_str(&format!(
+        "  \"cache\": {{\"hits\": {}, \"misses\": {}}},\n",
+        run.cache_hits, run.cache_misses
+    ));
+    out.push_str("  \"systems\": [\n");
+    let summaries = summarize(&run.results);
+    for (i, s) in summaries.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"system\": \"{}\", \"sms\": {}, \"points\": {}, \
+             \"geomean_tops_w\": {}, \"geomean_gflops\": {}, \
+             \"mean_utilization\": {}, \"peak_gflops\": {}}}{}\n",
+            json_escape(&s.system),
+            s.sms,
+            s.points,
+            json_f64(s.geomean_tops_w),
+            json_f64(s.geomean_gflops),
+            json_f64(s.mean_utilization),
+            json_f64(s.peak_gflops),
+            if i + 1 < summaries.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON summary to `path`, creating parent directories.
+pub fn write_json_summary(run: &SweepRun, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, json_summary(run))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Architecture;
+    use crate::cim::CimPrimitive;
+    use crate::coordinator::jobs::SystemSpec;
+    use crate::sweep::engine::SweepEngine;
+    use crate::sweep::spec::SweepSpec;
+    use crate::workload::Gemm;
+
+    fn run() -> SweepRun {
+        let spec = SweepSpec::new("unit-output")
+            .workload("w", vec![Gemm::new(64, 64, 64), Gemm::new(256, 256, 256)])
+            .systems(vec![
+                SystemSpec::Baseline,
+                SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            ]);
+        SweepEngine::new(Architecture::default_sm()).run_spec(&spec)
+    }
+
+    #[test]
+    fn csv_has_one_row_per_point() {
+        let run = run();
+        let csv = results_csv(&run.results).unwrap();
+        assert_eq!(csv.n_rows(), run.n_points());
+        let text = csv.encode();
+        assert!(text.starts_with("workload,m,n,k,system,sms,"));
+        assert!(text.contains("Tensor-core"));
+    }
+
+    #[test]
+    fn summary_groups_by_system() {
+        let run = run();
+        let s = summarize(&run.results);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].system, "Tensor-core");
+        assert_eq!(s[0].points, 2);
+        assert!(s.iter().all(|g| g.geomean_tops_w > 0.0));
+        assert_eq!(summary_table(&run.results).n_rows(), 2);
+        assert_eq!(detail_table(&run.results).n_rows(), 4);
+    }
+
+    #[test]
+    fn json_summary_is_well_formed() {
+        let run = run();
+        let j = json_summary(&run);
+        assert!(j.contains("\"sweep\": \"unit-output\""));
+        assert!(j.contains("\"points\": 4"));
+        assert!(j.contains("\"systems\": ["));
+        assert!(j.contains("Tensor-core"));
+        // braces balance
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+        assert_eq!(json_f64(f64::NAN), "null");
+    }
+}

@@ -1,0 +1,470 @@
+//! Declarative sweep specifications: cartesian grids over workloads,
+//! CiM systems, SM counts and mapper choices, expanded into a flat
+//! evaluation job list.
+//!
+//! The grid axes mirror the paper's three questions — *What* (the
+//! [`crate::cim::CimPrimitive`]), *Where* (the integration point,
+//! via [`SystemSpec`]), *When* (the workload GEMMs) — plus the
+//! framework extensions (SM count, mapper choice).
+
+use anyhow::{bail, Result};
+
+use crate::arch::{CimSystem, SmemConfig};
+use crate::cim::CimPrimitive;
+use crate::coordinator::jobs::SystemSpec;
+use crate::cost::Metrics;
+use crate::mapping::{HeuristicMapper, Mapping, PriorityMapper};
+use crate::util::rng::Rng;
+use crate::workload::{models, synthetic, Gemm};
+
+/// Which mapping algorithm scores each grid point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MapperChoice {
+    /// The paper's priority-based mapper (Algo 1) — the default.
+    Priority,
+    /// Priority mapper with weight duplication across idle primitives
+    /// (§IV-B future work).
+    PriorityDuplication,
+    /// Random heuristic search with a valid-sample budget (Fig 7's
+    /// comparator); seeded per GEMM for determinism.
+    Heuristic { budget: u64, seed: u64 },
+}
+
+impl MapperChoice {
+    /// Stable fingerprint fragment for cache keys.
+    pub fn fingerprint(&self) -> String {
+        match self {
+            MapperChoice::Priority => "priority".to_string(),
+            MapperChoice::PriorityDuplication => "priority+dup".to_string(),
+            MapperChoice::Heuristic { budget, seed } => format!("heuristic:{budget}:{seed}"),
+        }
+    }
+
+    /// Parse a CLI mapper name: `priority`, `dup`, `heuristic[:budget]`.
+    pub fn parse(s: &str, seed: u64) -> Result<MapperChoice> {
+        let s = s.to_ascii_lowercase();
+        if s == "priority" {
+            return Ok(MapperChoice::Priority);
+        }
+        if s == "dup" || s == "duplication" || s == "priority+dup" {
+            return Ok(MapperChoice::PriorityDuplication);
+        }
+        if let Some(rest) = s.strip_prefix("heuristic") {
+            let budget = match rest.strip_prefix(':') {
+                None if rest.is_empty() => 500,
+                Some(b) => match b.parse() {
+                    Ok(v) => v,
+                    Err(_) => bail!("--mapper heuristic:<budget>: bad budget {b:?}"),
+                },
+                _ => bail!("--mapper: unknown mapper {s:?}"),
+            };
+            return Ok(MapperChoice::Heuristic { budget, seed });
+        }
+        bail!("--mapper: unknown mapper {s:?} (priority, dup, heuristic[:budget])")
+    }
+
+    /// Produce the mapping for one GEMM on one CiM system.
+    pub fn map(&self, sys: &CimSystem, gemm: &Gemm) -> Mapping {
+        match self {
+            MapperChoice::Priority => PriorityMapper::new(sys).map(gemm),
+            MapperChoice::PriorityDuplication => {
+                PriorityMapper::new(sys).with_weight_duplication().map(gemm)
+            }
+            MapperChoice::Heuristic { budget, seed } => {
+                let mut h = HeuristicMapper::new(sys);
+                h.valid_budget = *budget;
+                let mut rng = Rng::new(seed ^ gemm.m ^ gemm.n ^ gemm.k);
+                h.map(gemm, &mut rng).0
+            }
+        }
+    }
+}
+
+/// One evaluation job: a GEMM of a workload on a system configuration.
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    /// Workload the GEMM came from (reporting key).
+    pub workload: String,
+    pub gemm: Gemm,
+    pub spec: SystemSpec,
+    /// Streaming-multiprocessor count (1 = the paper's single SM;
+    /// larger counts apply the multi-SM scaling model).
+    pub sms: u64,
+    pub mapper: MapperChoice,
+}
+
+/// Result of one evaluated job.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub workload: String,
+    pub gemm: Gemm,
+    /// Human-readable system label (`CimSystem::label()` convention).
+    pub system: String,
+    pub sms: u64,
+    pub metrics: Metrics,
+}
+
+/// A declarative design-space sweep: the cartesian product of the
+/// workload, system, and SM-count axes under one mapper choice.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Named GEMM lists (workload axis).
+    pub workloads: Vec<(String, Vec<Gemm>)>,
+    /// System axis (baseline and/or CiM integrations).
+    pub systems: Vec<SystemSpec>,
+    /// SM-count axis (default `[1]`).
+    pub sm_counts: Vec<u64>,
+    pub mapper: MapperChoice,
+}
+
+impl SweepSpec {
+    pub fn new(name: &str) -> Self {
+        SweepSpec {
+            name: name.to_string(),
+            workloads: Vec::new(),
+            systems: Vec::new(),
+            sm_counts: vec![1],
+            mapper: MapperChoice::Priority,
+        }
+    }
+
+    /// Add one named workload (a list of GEMMs).
+    pub fn workload(mut self, name: &str, gemms: Vec<Gemm>) -> Self {
+        self.workloads.push((name.to_string(), gemms));
+        self
+    }
+
+    /// Replace the workload axis.
+    pub fn workloads(mut self, workloads: Vec<(String, Vec<Gemm>)>) -> Self {
+        self.workloads = workloads;
+        self
+    }
+
+    /// Add one system to the system axis.
+    pub fn system(mut self, spec: SystemSpec) -> Self {
+        self.systems.push(spec);
+        self
+    }
+
+    /// Replace the system axis.
+    pub fn systems(mut self, specs: Vec<SystemSpec>) -> Self {
+        self.systems = specs;
+        self
+    }
+
+    /// Replace the SM-count axis.
+    pub fn sm_counts(mut self, counts: Vec<u64>) -> Self {
+        assert!(!counts.is_empty(), "sm_counts axis must be non-empty");
+        self.sm_counts = counts;
+        self
+    }
+
+    pub fn mapper(mut self, mapper: MapperChoice) -> Self {
+        self.mapper = mapper;
+        self
+    }
+
+    /// Total number of grid points.
+    pub fn n_points(&self) -> usize {
+        let gemms: usize = self.workloads.iter().map(|(_, g)| g.len()).sum();
+        gemms * self.systems.len() * self.sm_counts.len()
+    }
+
+    /// Expand the grid, GEMM-major: workload → GEMM → system → SM count
+    /// (the `Grid::cross` convention used by the per-workload figures).
+    pub fn jobs(&self) -> Vec<SweepJob> {
+        let mut out = Vec::with_capacity(self.n_points());
+        for (name, gemms) in &self.workloads {
+            for gemm in gemms {
+                for spec in &self.systems {
+                    for &sms in &self.sm_counts {
+                        out.push(SweepJob {
+                            workload: name.clone(),
+                            gemm: *gemm,
+                            spec: spec.clone(),
+                            sms,
+                            mapper: self.mapper,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Expand the grid, system-major: system → workload → GEMM → SM
+    /// count (the per-primitive figures' convention, e.g. Fig 9).
+    pub fn jobs_system_major(&self) -> Vec<SweepJob> {
+        let mut out = Vec::with_capacity(self.n_points());
+        for spec in &self.systems {
+            for (name, gemms) in &self.workloads {
+                for gemm in gemms {
+                    for &sms in &self.sm_counts {
+                        out.push(SweepJob {
+                            workload: name.clone(),
+                            gemm: *gemm,
+                            spec: spec.clone(),
+                            sms,
+                            mapper: self.mapper,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI axis parsing (`repro sweep` grid flags).
+// ---------------------------------------------------------------------
+
+/// Resolve a comma-separated workload list. Accepted names: the real
+/// models (`bert`, `gptj`, `resnet50`, `dlrm`), the zoo extensions
+/// (`vit`, `llama-decode`, `llama-prefill`), the groups `real` /
+/// `all`, and `synthetic[:N]` (seeded synthetic dataset). Each
+/// workload contributes its deduplicated layer shapes.
+pub fn parse_workloads(list: &str, seed: u64) -> Result<Vec<(String, Vec<Gemm>)>> {
+    fn push_model(out: &mut Vec<(String, Vec<Gemm>)>, w: crate::workload::Workload) {
+        let gemms: Vec<Gemm> = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+        out.push((w.name, gemms));
+    }
+    let mut out: Vec<(String, Vec<Gemm>)> = Vec::new();
+    for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match name.to_ascii_lowercase().as_str() {
+            "bert" | "bert-large" => push_model(&mut out, models::bert_large()),
+            "gptj" | "gpt-j" => push_model(&mut out, models::gpt_j()),
+            "resnet" | "resnet50" => push_model(&mut out, models::resnet50()),
+            "dlrm" => push_model(&mut out, models::dlrm()),
+            "vit" | "vit-base" => push_model(&mut out, models::vit_base()),
+            "llama-decode" => push_model(&mut out, models::llama2_7b_decode()),
+            "llama-prefill" => push_model(&mut out, models::llama2_7b_prefill(2048)),
+            "real" => {
+                for w in models::real_dataset() {
+                    push_model(&mut out, w);
+                }
+            }
+            "all" | "zoo" => {
+                for w in models::extended_dataset() {
+                    push_model(&mut out, w);
+                }
+            }
+            other => {
+                if let Some(rest) = other.strip_prefix("synthetic") {
+                    let n = match rest.strip_prefix(':') {
+                        None if rest.is_empty() => 60,
+                        Some(v) => match v.parse() {
+                            Ok(n) => n,
+                            Err(_) => bail!("--workloads synthetic:<N>: bad count {v:?}"),
+                        },
+                        _ => bail!("--workloads: unknown workload {other:?}"),
+                    };
+                    out.push(("Synthetic".to_string(), synthetic::dataset(seed, n)));
+                } else {
+                    bail!(
+                        "--workloads: unknown workload {other:?} (bert, gptj, resnet50, dlrm, \
+                         vit, llama-decode, llama-prefill, real, all, synthetic[:N])"
+                    );
+                }
+            }
+        }
+    }
+    if out.is_empty() {
+        bail!("--workloads: empty workload list");
+    }
+    Ok(out)
+}
+
+/// Resolve the system axis from a primitive list (`d1,d2,a1,a2`, `all`,
+/// and/or `baseline`) crossed with an integration-level list (`rf`,
+/// `smem-a`, `smem-b`, `all`). `baseline` contributes one tensor-core
+/// system regardless of levels.
+pub fn parse_systems(prims: &str, levels: &str) -> Result<Vec<SystemSpec>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Level {
+        Rf,
+        SmemA,
+        SmemB,
+    }
+    let mut level_list: Vec<Level> = Vec::new();
+    for l in levels.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match l.to_ascii_lowercase().as_str() {
+            "rf" => level_list.push(Level::Rf),
+            "smem-a" | "smema" | "smem_a" => level_list.push(Level::SmemA),
+            "smem-b" | "smemb" | "smem_b" | "smem" => level_list.push(Level::SmemB),
+            "all" => {
+                level_list.extend([Level::Rf, Level::SmemA, Level::SmemB]);
+            }
+            other => bail!("--levels: unknown level {other:?} (rf, smem-a, smem-b, all)"),
+        }
+    }
+    if level_list.is_empty() {
+        bail!("--levels: empty level list");
+    }
+
+    let mut specs: Vec<SystemSpec> = Vec::new();
+    let mut prim_list: Vec<CimPrimitive> = Vec::new();
+    for p in prims.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match p.to_ascii_lowercase().as_str() {
+            "baseline" | "tcore" => {
+                if !specs.contains(&SystemSpec::Baseline) {
+                    specs.push(SystemSpec::Baseline);
+                }
+            }
+            "all" => prim_list.extend(CimPrimitive::all()),
+            other => match CimPrimitive::parse(other) {
+                Some(prim) => prim_list.push(prim),
+                None => bail!("--prims: unknown primitive {other:?} (d1, d2, a1, a2, all, baseline)"),
+            },
+        }
+    }
+    for prim in prim_list {
+        for level in &level_list {
+            specs.push(match level {
+                Level::Rf => SystemSpec::CimAtRf(prim.clone()),
+                Level::SmemA => SystemSpec::CimAtSmem(prim.clone(), SmemConfig::ConfigA),
+                Level::SmemB => SystemSpec::CimAtSmem(prim.clone(), SmemConfig::ConfigB),
+            });
+        }
+    }
+    if specs.is_empty() {
+        bail!("--prims: empty system axis");
+    }
+    Ok(specs)
+}
+
+/// Parse the SM-count axis: a comma-separated list of positive integers.
+pub fn parse_sm_counts(list: &str) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for tok in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match tok.parse::<u64>() {
+            Ok(n) if n > 0 => out.push(n),
+            _ => bail!("--sms: bad SM count {tok:?} (positive integers)"),
+        }
+    }
+    if out.is_empty() {
+        bail!("--sms: empty SM-count list");
+    }
+    Ok(out)
+}
+
+/// Default CLI axis values — shared between [`default_grid`] (what the
+/// ≥500-point acceptance tests pin) and `repro sweep`'s flag defaults,
+/// so the two cannot drift apart.
+pub const DEFAULT_WORKLOADS: &str = "all";
+pub const DEFAULT_PRIMS: &str = "baseline,all";
+pub const DEFAULT_LEVELS: &str = "rf,smem-a,smem-b";
+
+/// The default `repro sweep` grid: the full model zoo across the
+/// baseline and every (primitive × integration point) — ≥500 points.
+pub fn default_grid(seed: u64) -> Result<SweepSpec> {
+    Ok(SweepSpec::new("sweep")
+        .workloads(parse_workloads(DEFAULT_WORKLOADS, seed)?)
+        .systems(parse_systems(DEFAULT_PRIMS, DEFAULT_LEVELS)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_the_cartesian_product() {
+        let spec = SweepSpec::new("t")
+            .workload("a", vec![Gemm::new(16, 16, 16), Gemm::new(32, 32, 32)])
+            .workload("b", vec![Gemm::new(64, 64, 64)])
+            .systems(vec![
+                SystemSpec::Baseline,
+                SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            ])
+            .sm_counts(vec![1, 4]);
+        assert_eq!(spec.n_points(), 3 * 2 * 2);
+        assert_eq!(spec.jobs().len(), spec.n_points());
+        assert_eq!(spec.jobs_system_major().len(), spec.n_points());
+    }
+
+    #[test]
+    fn gemm_major_vs_system_major_ordering() {
+        let spec = SweepSpec::new("t")
+            .workload("a", vec![Gemm::new(16, 16, 16), Gemm::new(32, 32, 32)])
+            .systems(vec![
+                SystemSpec::Baseline,
+                SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            ]);
+        let gm = spec.jobs();
+        assert_eq!(gm[0].gemm, gm[1].gemm, "gemm-major keeps the gemm fixed first");
+        let sm = spec.jobs_system_major();
+        assert_eq!(sm[0].spec, sm[1].spec, "system-major keeps the system fixed first");
+    }
+
+    #[test]
+    fn mapper_fingerprints_distinct() {
+        let fps = [
+            MapperChoice::Priority.fingerprint(),
+            MapperChoice::PriorityDuplication.fingerprint(),
+            MapperChoice::Heuristic { budget: 60, seed: 7 }.fingerprint(),
+            MapperChoice::Heuristic { budget: 500, seed: 7 }.fingerprint(),
+        ];
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn mapper_parse() {
+        assert_eq!(MapperChoice::parse("priority", 1).unwrap(), MapperChoice::Priority);
+        assert_eq!(
+            MapperChoice::parse("dup", 1).unwrap(),
+            MapperChoice::PriorityDuplication
+        );
+        assert_eq!(
+            MapperChoice::parse("heuristic:60", 9).unwrap(),
+            MapperChoice::Heuristic { budget: 60, seed: 9 }
+        );
+        assert!(MapperChoice::parse("magic", 1).is_err());
+    }
+
+    #[test]
+    fn workload_parsing() {
+        let real = parse_workloads("real", 7).unwrap();
+        assert_eq!(real.len(), 4);
+        let one = parse_workloads("bert", 7).unwrap();
+        assert_eq!(one[0].0, "BERT-Large");
+        assert_eq!(one[0].1.len(), 5);
+        let synth = parse_workloads("synthetic:25", 7).unwrap();
+        assert_eq!(synth[0].1.len(), 25);
+        assert!(parse_workloads("quantum", 7).is_err());
+        assert!(parse_workloads("", 7).is_err());
+    }
+
+    #[test]
+    fn system_parsing() {
+        let specs = parse_systems("baseline,all", "rf,smem-b").unwrap();
+        // 1 baseline + 4 prims x 2 levels
+        assert_eq!(specs.len(), 9);
+        assert_eq!(specs[0], SystemSpec::Baseline);
+        let one = parse_systems("d1", "rf").unwrap();
+        assert_eq!(one, vec![SystemSpec::CimAtRf(CimPrimitive::digital_6t())]);
+        assert!(parse_systems("d1", "l5").is_err());
+        assert!(parse_systems("d9", "rf").is_err());
+    }
+
+    #[test]
+    fn sm_count_parsing() {
+        assert_eq!(parse_sm_counts("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert!(parse_sm_counts("0").is_err());
+        assert!(parse_sm_counts("x").is_err());
+    }
+
+    #[test]
+    fn default_grid_is_at_least_500_points() {
+        let spec = default_grid(7).unwrap();
+        assert!(
+            spec.n_points() >= 500,
+            "default grid has only {} points",
+            spec.n_points()
+        );
+    }
+}

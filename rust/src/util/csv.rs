@@ -7,6 +7,29 @@ use std::fs;
 use std::io::Write as _;
 use std::path::Path;
 
+/// A row whose cell count does not match the document header.
+///
+/// Surfaced as a typed error (convertible into `anyhow::Error`) instead
+/// of a panic: a malformed experiment row should fail that experiment's
+/// `Result`, not abort a whole `repro experiment all` run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowArityError {
+    pub expected: usize,
+    pub got: usize,
+}
+
+impl std::fmt::Display for RowArityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "csv row arity mismatch: row has {} cells, header has {}",
+            self.got, self.expected
+        )
+    }
+}
+
+impl std::error::Error for RowArityError {}
+
 /// In-memory CSV document with a fixed header.
 #[derive(Debug, Clone)]
 pub struct Csv {
@@ -22,11 +45,18 @@ impl Csv {
         }
     }
 
-    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+    /// Append a row; errors (rather than panics) when the cell count
+    /// does not match the header arity.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> Result<&mut Self, RowArityError> {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
-        assert_eq!(cells.len(), self.header.len(), "csv row arity mismatch");
+        if cells.len() != self.header.len() {
+            return Err(RowArityError {
+                expected: self.header.len(),
+                got: cells.len(),
+            });
+        }
         self.rows.push(cells);
-        self
+        Ok(self)
     }
 
     pub fn n_rows(&self) -> usize {
@@ -114,7 +144,7 @@ mod tests {
     #[test]
     fn encode_basic() {
         let mut c = Csv::new(vec!["a", "b"]);
-        c.row(vec!["1", "2"]);
+        c.row(vec!["1", "2"]).unwrap();
         assert_eq!(c.encode(), "a,b\n1,2\n");
     }
 
@@ -128,10 +158,31 @@ mod tests {
     #[test]
     fn roundtrip() {
         let mut c = Csv::new(vec!["x", "y"]);
-        c.row(vec!["with,comma", "with \"quote\""]);
+        c.row(vec!["with,comma", "with \"quote\""]).unwrap();
         let parsed = parse(&c.encode());
         assert_eq!(parsed[0], vec!["x", "y"]);
         assert_eq!(parsed[1], vec!["with,comma", "with \"quote\""]);
+    }
+
+    #[test]
+    fn roundtrip_quoted_fields_exhaustive() {
+        // Encode/parse round trip over the quoting corner cases: plain,
+        // embedded comma, embedded quotes, doubled quotes, both at once,
+        // leading/trailing spaces, empty fields.
+        let rows: Vec<Vec<String>> = vec![
+            vec!["plain".into(), "".into(), " padded ".into()],
+            vec!["a,b,c".into(), "say \"hi\"".into(), "\"\"".into()],
+            vec!["mix,ed \"q,uote\"".into(), ",".into(), "\"".into()],
+        ];
+        let mut c = Csv::new(vec!["c1", "c2", "c3"]);
+        for r in &rows {
+            c.row(r.clone()).unwrap();
+        }
+        let parsed = parse(&c.encode());
+        assert_eq!(parsed[0], vec!["c1", "c2", "c3"]);
+        for (want, got) in rows.iter().zip(&parsed[1..]) {
+            assert_eq!(want, got);
+        }
     }
 
     #[test]
@@ -140,16 +191,33 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("nested/out.csv");
         let mut c = Csv::new(vec!["a"]);
-        c.row(vec!["1"]);
+        c.row(vec!["1"]).unwrap();
         c.write(&path).unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n1\n");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
-    #[should_panic(expected = "arity")]
-    fn arity_checked() {
+    fn arity_mismatch_is_a_typed_error() {
         let mut c = Csv::new(vec!["a", "b"]);
-        c.row(vec!["1"]);
+        let err = c.row(vec!["1"]).unwrap_err();
+        assert_eq!(err, RowArityError { expected: 2, got: 1 });
+        assert!(err.to_string().contains("arity mismatch"));
+        // the malformed row is not recorded
+        assert_eq!(c.n_rows(), 0);
+        // and a good row still goes through afterwards
+        c.row(vec!["1", "2"]).unwrap();
+        assert_eq!(c.n_rows(), 1);
+    }
+
+    #[test]
+    fn arity_error_converts_into_anyhow() {
+        fn emit() -> anyhow::Result<()> {
+            let mut c = Csv::new(vec!["a", "b"]);
+            c.row(vec!["only-one"])?;
+            Ok(())
+        }
+        let err = emit().unwrap_err();
+        assert!(format!("{err:#}").contains("arity mismatch"));
     }
 }

@@ -1,0 +1,289 @@
+//! Integration + property tests for the design-space sweep engine:
+//! memoization soundness, thread-count independence, grid expansion,
+//! cache accounting, and the CSV/JSON sinks.
+
+use std::sync::Arc;
+
+use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::coordinator::jobs::SystemSpec;
+use www_cim::cost::{BaselineModel, CostModel};
+use www_cim::mapping::PriorityMapper;
+use www_cim::sweep::{
+    output, spec, EvalCache, MapperChoice, SweepEngine, SweepJob, SweepSpec,
+};
+use www_cim::util::check::{check, Config};
+use www_cim::util::pool;
+use www_cim::util::rng::Rng;
+use www_cim::workload::{synthetic, Gemm};
+
+fn random_gemm(rng: &mut Rng) -> Gemm {
+    let dim = |rng: &mut Rng| -> u64 {
+        match rng.gen_range(0, 3) {
+            0 => 1 << rng.gen_range(0, 14),
+            1 => rng.gen_range(1, 8193),
+            _ => rng.gen_range(1, 64),
+        }
+    };
+    Gemm::new(dim(rng), dim(rng), dim(rng))
+}
+
+fn random_spec(rng: &mut Rng) -> SystemSpec {
+    let prim = CimPrimitive::all()[rng.index(4)].clone();
+    match rng.gen_range(0, 4) {
+        0 => SystemSpec::Baseline,
+        1 => SystemSpec::CimAtRf(prim),
+        2 => SystemSpec::CimAtSmem(prim, SmemConfig::ConfigA),
+        _ => SystemSpec::CimAtSmem(prim, SmemConfig::ConfigB),
+    }
+}
+
+fn job(gemm: Gemm, spec: SystemSpec) -> SweepJob {
+    SweepJob {
+        workload: "prop".to_string(),
+        gemm,
+        spec,
+        sms: 1,
+        mapper: MapperChoice::Priority,
+    }
+}
+
+/// ISSUE property 1: a memoized re-evaluation is bit-identical to a
+/// fresh evaluation — for random (gemm, system) points, the cached
+/// result equals both a cold engine's result and the direct
+/// mapper+cost-model computation.
+#[test]
+fn prop_memoized_reeval_bit_identical() {
+    let arch = Architecture::default_sm();
+    let shared = SweepEngine::new(arch.clone());
+    check(Config::default().cases(60), "memoized == fresh", |rng| {
+        let gemm = random_gemm(rng);
+        let spec = random_spec(rng);
+        let j = job(gemm, spec.clone());
+        let first = shared.evaluate(&j).metrics; // may be a miss
+        let cached = shared.evaluate(&j).metrics; // always a hit
+        let cold = SweepEngine::new(arch.clone()).evaluate(&j).metrics;
+        if first != cached {
+            return Err(format!("{gemm}: cached result diverged from first evaluation"));
+        }
+        if first != cold {
+            return Err(format!("{gemm}: cached result diverged from a cold engine"));
+        }
+        let direct = match spec.system(&arch) {
+            None => BaselineModel::new(&arch).evaluate(&gemm),
+            Some(sys) => {
+                CostModel::new(&sys).evaluate(&gemm, &PriorityMapper::new(&sys).map(&gemm))
+            }
+        };
+        if first != direct {
+            return Err(format!("{gemm}: engine result diverged from direct evaluation"));
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE property 2: sweep results are independent of the worker-thread
+/// count (the `WWW_THREADS=1` vs N contract, pinned via the explicit
+/// thread-count setter that `WWW_THREADS` feeds).
+#[test]
+fn prop_results_independent_of_thread_count() {
+    let arch = Architecture::default_sm();
+    check(Config::default().cases(8), "thread independence", |rng| {
+        let n = 10 + rng.index(20);
+        let gemms: Vec<Gemm> = (0..n).map(|_| random_gemm(rng)).collect();
+        let sweep = SweepSpec::new("prop")
+            .workload("w", gemms)
+            .systems(vec![random_spec(rng), random_spec(rng), random_spec(rng)]);
+        let threads_n = 2 + rng.index(7);
+        let serial = SweepEngine::new(arch.clone()).threads(1).run_spec(&sweep);
+        let parallel = SweepEngine::new(arch.clone())
+            .threads(threads_n)
+            .run_spec(&sweep);
+        if serial.n_points() != parallel.n_points() {
+            return Err("point counts differ".to_string());
+        }
+        for (a, b) in serial.results.iter().zip(&parallel.results) {
+            if a.metrics != b.metrics || a.system != b.system || a.gemm != b.gemm {
+                return Err(format!(
+                    "{} on {}: threads=1 vs threads={threads_n} diverged",
+                    a.gemm, a.system
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn duplicate_points_scored_once() {
+    let engine = SweepEngine::new(Architecture::default_sm()).threads(1);
+    let base = vec![
+        job(Gemm::new(64, 64, 64), SystemSpec::CimAtRf(CimPrimitive::digital_6t())),
+        job(Gemm::new(128, 128, 128), SystemSpec::Baseline),
+    ];
+    // Each unique point repeated 3x within one job list.
+    let mut jobs = Vec::new();
+    for _ in 0..3 {
+        jobs.extend(base.clone());
+    }
+    let results = engine.run(&jobs);
+    assert_eq!(results.len(), 6);
+    assert_eq!(engine.cache().misses(), 2, "unique points evaluated once");
+    assert_eq!(engine.cache().hits(), 4, "duplicates served from the cache");
+    for chunk in results.chunks(2).skip(1) {
+        assert_eq!(chunk[0].metrics, results[0].metrics);
+        assert_eq!(chunk[1].metrics, results[1].metrics);
+    }
+}
+
+#[test]
+fn shared_cache_dedups_across_engines() {
+    let cache = Arc::new(EvalCache::new());
+    let arch = Architecture::default_sm();
+    let j = job(
+        Gemm::new(256, 256, 256),
+        SystemSpec::CimAtSmem(CimPrimitive::digital_6t(), SmemConfig::ConfigB),
+    );
+    let a = SweepEngine::with_cache(arch.clone(), Arc::clone(&cache)).evaluate(&j);
+    let b = SweepEngine::with_cache(arch, Arc::clone(&cache)).evaluate(&j);
+    assert_eq!(a.metrics, b.metrics);
+    assert_eq!(cache.misses(), 1);
+    assert_eq!(cache.hits(), 1);
+}
+
+#[test]
+fn hybrid_router_shares_engine_cache_keys() {
+    use www_cim::coordinator::hybrid::{HybridRouter, RoutePolicy};
+    let arch = Architecture::default_sm();
+    let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let cache = Arc::new(EvalCache::new());
+    let g = Gemm::new(512, 1024, 1024);
+
+    // Engine scores the point first...
+    let engine = SweepEngine::with_cache(arch.clone(), Arc::clone(&cache));
+    engine.evaluate(&job(g, SystemSpec::CimAtRf(CimPrimitive::digital_6t())));
+    engine.evaluate(&job(g, SystemSpec::Baseline));
+    let misses_before = cache.misses();
+
+    // ...and the router's placement replays it from the cache.
+    let router = HybridRouter::with_cache(&sys, &arch, RoutePolicy::MinEnergy, Arc::clone(&cache));
+    let placement = router.place(&g);
+    assert_eq!(cache.misses(), misses_before, "router must not re-evaluate");
+    assert!(cache.hits() >= 2);
+    assert!(placement.metrics.energy_pj > 0.0);
+}
+
+#[test]
+fn five_hundred_point_default_grid_runs() {
+    let sweep = spec::default_grid(7).expect("default grid builds");
+    assert!(sweep.n_points() >= 500, "{} points", sweep.n_points());
+    let engine = SweepEngine::new(Architecture::default_sm());
+    let run = engine.run_spec(&sweep);
+    assert_eq!(run.n_points(), sweep.n_points());
+    for r in &run.results {
+        assert!(r.metrics.energy_pj > 0.0, "{} on {}", r.gemm, r.system);
+        assert!(r.metrics.gflops > 0.0);
+        assert!(r.metrics.tops_per_watt.is_finite());
+    }
+    // The default grid's baseline column duplicates GEMMs shared across
+    // workloads, so some hits are expected even on a cold cache.
+    assert_eq!(run.cache_hits + run.cache_misses, run.n_points() as u64);
+}
+
+#[test]
+fn warm_rerun_of_a_big_grid_is_all_hits() {
+    let sweep = SweepSpec::new("warm")
+        .workload("synthetic", synthetic::dataset(11, 40))
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            SystemSpec::CimAtSmem(CimPrimitive::analog_6t(), SmemConfig::ConfigB),
+        ]);
+    let engine = SweepEngine::new(Architecture::default_sm());
+    let cold = engine.run_spec(&sweep);
+    let warm = engine.run_spec(&sweep);
+    assert_eq!(warm.cache_misses, 0, "warm run must be fully memoized");
+    assert_eq!(warm.cache_hits as usize, sweep.n_points());
+    for (a, b) in cold.results.iter().zip(&warm.results) {
+        assert_eq!(a.metrics, b.metrics);
+    }
+}
+
+#[test]
+fn sweep_csv_and_json_sinks() {
+    let sweep = SweepSpec::new("sinks")
+        .workload("w", vec![Gemm::new(64, 64, 64), Gemm::new(1, 256, 512)])
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_8t()),
+        ]);
+    let run = SweepEngine::new(Architecture::default_sm()).run_spec(&sweep);
+
+    let csv = output::results_csv(&run.results).unwrap();
+    assert_eq!(csv.n_rows(), run.n_points());
+    let text = csv.encode();
+    assert_eq!(
+        text.lines().next().unwrap(),
+        "workload,m,n,k,system,sms,tops_w,gflops,utilization,energy_pj,total_cycles,bound"
+    );
+
+    let dir = std::env::temp_dir().join("www_cim_sweep_sink_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let json_path = dir.join("nested/sweep.json");
+    output::write_json_summary(&run, &json_path).unwrap();
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"sweep\": \"sinks\""));
+    assert!(json.contains("\"points\": 4"));
+    assert!(json.contains("Tensor-core"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn grid_axis_parsers_power_the_cli() {
+    // The flag combinations `repro sweep` documents.
+    let workloads = spec::parse_workloads("bert,synthetic:10", 7).unwrap();
+    assert_eq!(workloads.len(), 2);
+    assert_eq!(workloads[1].1.len(), 10);
+    let systems = spec::parse_systems("baseline,d1", "rf,smem-b").unwrap();
+    assert_eq!(systems.len(), 3);
+    let sms = spec::parse_sm_counts("1,8,64").unwrap();
+    assert_eq!(sms, vec![1, 8, 64]);
+    let sweep = SweepSpec::new("cli")
+        .workloads(workloads)
+        .systems(systems)
+        .sm_counts(sms);
+    assert_eq!(sweep.n_points(), 15 * 3 * 3);
+}
+
+#[test]
+fn mapper_axis_changes_results_but_stays_deterministic() {
+    let arch = Architecture::default_sm();
+    let engine = SweepEngine::new(arch);
+    let g = Gemm::new(8192, 16, 256); // duplication-friendly shape
+    let spec = SystemSpec::CimAtSmem(CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+    let mk = |mapper| SweepJob {
+        workload: "w".to_string(),
+        gemm: g,
+        spec: spec.clone(),
+        sms: 1,
+        mapper,
+    };
+    let plain = engine.evaluate(&mk(MapperChoice::Priority)).metrics;
+    let dup = engine.evaluate(&mk(MapperChoice::PriorityDuplication)).metrics;
+    // Distinct mapper choices are distinct cache points (no false hits).
+    assert_eq!(engine.cache().misses(), 2);
+    assert!(plain.energy_pj > 0.0 && dup.energy_pj > 0.0);
+    let h = MapperChoice::Heuristic { budget: 40, seed: 3 };
+    let h1 = engine.evaluate(&mk(h)).metrics;
+    let h2 = SweepEngine::new(Architecture::default_sm())
+        .evaluate(&mk(h))
+        .metrics;
+    assert_eq!(h1, h2, "seeded heuristic sweeps are deterministic");
+}
+
+#[test]
+fn default_threads_env_contract() {
+    // WWW_THREADS drives pool::default_threads(), which both the CLI
+    // and Ctx feed into the engine; the value must be >= 1.
+    assert!(pool::default_threads() >= 1);
+}

@@ -1,0 +1,128 @@
+//! Typed stub of the `xla` crate surface that `www_cim::runtime::pjrt`
+//! compiles against.
+//!
+//! The real xla/PJRT toolchain is not present in the offline build
+//! image, so this stub lets `cargo build --features xla` typecheck the
+//! real PJRT engine code; every entry point fails at runtime with a
+//! clear message. Deploying against real PJRT means pointing the `xla`
+//! path dependency in the root Cargo.toml at the actual crate — no
+//! source changes in www_cim.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (it implements
+/// `std::error::Error`, so `?` converts into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in this build (vendor/xla is the offline stub; \
+         point the `xla` path dependency at the real crate)"
+    )))
+}
+
+/// Element types accepted by [`Literal::create_from_shape_and_untyped_data`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    S8,
+    S32,
+}
+
+/// Stub of the PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stub of a parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stub of an XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of a host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal, Error> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stub of a compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real signature: generic over the argument kind,
+    /// returns per-device, per-output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let err = Literal::create_from_shape_and_untyped_data(ElementType::S8, &[2, 2], &[0; 4])
+            .unwrap_err();
+        assert!(err.to_string().contains("PJRT is unavailable"));
+    }
+}
