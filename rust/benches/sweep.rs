@@ -1,13 +1,16 @@
 //! Sweep-engine benchmark: a ≥500-point design-space grid evaluated
-//! (a) cold on one thread, (b) cold on the full worker pool, and
-//! (c) warm (fully memoized) — the acceptance numbers for the DSE
-//! subsystem: parallelism and the memo cache must both be measurable
-//! wins over the cold single-threaded run.
+//! (a) cold on one thread, (b) cold on the full worker pool,
+//! (c) warm (fully memoized), and (d) warm from a persisted cache file
+//! (load included — the `--cache` cross-process path). The acceptance
+//! numbers for the DSE subsystem: parallelism and the memo cache must
+//! both be measurable wins over the cold single-threaded run.
+
+use std::sync::Arc;
 
 use www_cim::arch::Architecture;
 use www_cim::cim::CimPrimitive;
 use www_cim::coordinator::jobs::SystemSpec;
-use www_cim::sweep::{SweepEngine, SweepSpec};
+use www_cim::sweep::{persist, EvalCache, SweepEngine, SweepSpec};
 use www_cim::util::bench::{black_box, Bencher};
 use www_cim::util::pool;
 use www_cim::workload::synthetic;
@@ -68,14 +71,38 @@ fn main() {
         })
         .mean();
 
+    // (d) warm from disk: persist the primed cache once, then load it
+    // into a fresh engine per iteration — what a second process pays
+    // with `--cache` (file parse + preload + all-hit sweep).
+    let cache_file = std::env::temp_dir().join("www_cim_sweep_bench_cache.bin");
+    persist::save(warm_engine.cache(), &cache_file).expect("persist bench cache");
+    let disk = b
+        .bench_with_items(
+            &format!("sweep/{n}pts/warm-from-disk/threads={threads}"),
+            n,
+            &mut || {
+                let cache = Arc::new(EvalCache::new());
+                persist::load_into(&cache, &cache_file).expect("load bench cache");
+                let engine = SweepEngine::with_cache(arch.clone(), cache);
+                black_box(engine.run(&jobs));
+            },
+        )
+        .mean();
+    let _ = std::fs::remove_file(&cache_file);
+
     println!(
-        "\nspeedup vs cold single-thread: cold x{} = {:.2}x, warm = {:.2}x",
+        "\nspeedup vs cold single-thread: cold x{} = {:.2}x, warm = {:.2}x, \
+         warm-from-disk = {:.2}x",
         threads,
         cold_1.as_secs_f64() / cold_n.as_secs_f64().max(1e-12),
         cold_1.as_secs_f64() / warm.as_secs_f64().max(1e-12),
+        cold_1.as_secs_f64() / disk.as_secs_f64().max(1e-12),
     );
     if warm >= cold_1 {
         println!("WARNING: warm memoized run was not faster than the cold single-threaded run");
+    }
+    if disk >= cold_1 {
+        println!("WARNING: warm-from-disk run was not faster than the cold single-threaded run");
     }
     b.finish("sweep");
 }

@@ -154,7 +154,7 @@ impl<'a> HybridRouter<'a> {
         };
         match &self.cache {
             None => compute(),
-            Some(rc) => rc.cache.get_or_compute(rc.cim_point.clone(), *gemm, compute),
+            Some(rc) => rc.cache.get_or_compute(&rc.cim_point, *gemm, compute),
         }
     }
 
@@ -163,7 +163,7 @@ impl<'a> HybridRouter<'a> {
         let compute = || BaselineModel::new(self.arch).evaluate(gemm);
         match &self.cache {
             None => compute(),
-            Some(rc) => rc.cache.get_or_compute(rc.tc_point.clone(), *gemm, compute),
+            Some(rc) => rc.cache.get_or_compute(&rc.tc_point, *gemm, compute),
         }
     }
 

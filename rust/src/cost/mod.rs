@@ -10,6 +10,17 @@ pub mod baseline;
 
 pub use baseline::BaselineModel;
 
+/// Version of the analytical cost model. Bump this whenever a change
+/// can alter any produced [`Metrics`] value (energy weights, cycle
+/// accounting, utilization, …): persisted sweep caches embed the
+/// constant in their header and are discarded wholesale on mismatch
+/// ([`crate::sweep::persist`]), so a model change can never silently
+/// serve stale metrics from a previous run's cache file. Mapping
+/// *algorithm* changes are covered separately by
+/// [`crate::mapping::MAPPER_VERSION`], which is embedded in the cache
+/// keys themselves.
+pub const COST_MODEL_VERSION: u32 = 1;
+
 use crate::arch::{CimSystem, MemLevel};
 use crate::cost::access::fill_at;
 use crate::mapping::loopnest::{Dim, Tensor};

@@ -25,6 +25,10 @@ pub struct Ctx {
     /// Shared design-point memoization cache: duplicate (system, GEMM)
     /// points across the experiments of one run are scored once.
     pub cache: Arc<EvalCache>,
+    /// Optional persistent-cache file (`--cache`): loaded if compatible
+    /// before a run and saved after it, so repeated `repro experiment`
+    /// invocations are warm across processes.
+    pub cache_path: Option<PathBuf>,
 }
 
 impl Default for Ctx {
@@ -36,6 +40,7 @@ impl Default for Ctx {
             threads: crate::util::pool::default_threads(),
             seed: crate::workload::synthetic::DEFAULT_SEED,
             cache: Arc::new(EvalCache::new()),
+            cache_path: None,
         }
     }
 }
@@ -58,6 +63,26 @@ impl Ctx {
     /// consume `EvalResult`-shaped output, e.g. the workload reports).
     pub fn grid(&self) -> Grid {
         Grid::with_cache(self.arch.clone(), self.threads, Arc::clone(&self.cache))
+    }
+
+    /// Warm the shared cache from [`Ctx::cache_path`] (no-op without
+    /// one). Incompatible or corrupt files are discarded, not fatal.
+    pub fn load_persistent_cache(&self) -> Result<()> {
+        if let Some(path) = &self.cache_path {
+            let load = crate::sweep::persist::load_into(&self.cache, path)?;
+            println!("[cache] {} ({})", load.describe(), path.display());
+        }
+        Ok(())
+    }
+
+    /// Persist the shared cache to [`Ctx::cache_path`] (no-op without
+    /// one).
+    pub fn save_persistent_cache(&self) -> Result<()> {
+        if let Some(path) = &self.cache_path {
+            let n = crate::sweep::persist::save(&self.cache, path)?;
+            println!("[cache] saved {n} design points -> {}", path.display());
+        }
+        Ok(())
     }
 
     /// Synthetic dataset size honouring quick mode.

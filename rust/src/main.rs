@@ -3,7 +3,9 @@
 //! Subcommands:
 //! * `evaluate`   — one GEMM on one system, full metric breakdown
 //! * `compare`    — one GEMM across baseline + all primitives
-//! * `sweep`      — parallel memoized design-space sweep (grid flags)
+//! * `sweep`      — parallel memoized design-space sweep (grid flags,
+//!   `--cache` persistence, `--shard i/n` slicing)
+//! * `merge`      — combine per-shard sweep summaries into one result
 //! * `experiment` — regenerate a paper table/figure (`all` for every one)
 //! * `validate`   — replay mappings through the PJRT artifacts
 //! * `roofline`   — ridge-point analysis
@@ -19,7 +21,7 @@ use www_cim::experiments::{self, Ctx};
 use www_cim::mapping::PriorityMapper;
 use www_cim::roofline::Roofline;
 use www_cim::runtime::{default_artifacts_dir, Engine};
-use www_cim::sweep::{output, spec, MapperChoice, SweepEngine, SweepSpec};
+use www_cim::sweep::{output, persist, shard, spec, MapperChoice, ShardId, SweepEngine, SweepSpec};
 use www_cim::util::cli::Args;
 use www_cim::util::pool;
 use www_cim::util::table::Table;
@@ -38,6 +40,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("evaluate") => cmd_evaluate(args),
         Some("compare") => cmd_compare(args),
         Some("sweep") => cmd_sweep(args),
+        Some("merge") => cmd_merge(args),
         Some("experiment") => cmd_experiment(args),
         Some("validate") => cmd_validate(args),
         Some("roofline") => cmd_roofline(),
@@ -60,10 +63,15 @@ usage: repro <subcommand> [options]
   sweep      [--workloads all|real|bert,gptj,...|synthetic[:N]]
              [--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]
              [--sms 1,2,4] [--threads N] [--mapper priority|dup|heuristic[:budget]]
-             [--seed N] [--out results] [--json]
-             (defaults sweep the full zoo x 13 systems, >= 500 points)
+             [--seed N] [--out results] [--tag name] [--json]
+             [--cache [results/cache.bin]] [--shard i/n]
+             (defaults sweep the full zoo x 13 systems, >= 500 points;
+              --cache persists the memo cache across runs, --shard runs
+              one deterministic 1/n slice of the grid)
+  merge      <shard.json> <shard.json> ... [--tag name] [--out results] [--json]
   experiment <fig2|fig7|table2|fig9|fig10|fig11|fig12|fig13|table6|roofline|
               ablation-threshold|ablation-order|all> [--quick] [--out results]
+             [--cache [results/cache.bin]]
   validate   [--artifacts artifacts] [--seed N]
   roofline
   list";
@@ -168,13 +176,27 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--cache [path]` — the persistent sweep cache location. A bare
+/// `--cache` uses the conventional `results/cache.bin`.
+fn cache_path_flag(args: &Args) -> Option<std::path::PathBuf> {
+    args.get("cache").map(|v| {
+        if v == "true" {
+            std::path::PathBuf::from("results/cache.bin")
+        } else {
+            std::path::PathBuf::from(v)
+        }
+    })
+}
+
 /// `repro sweep` — the design-space sweep engine on the CLI: cartesian
 /// grid flags expanded into a parallel, memoized evaluation with CSV +
-/// JSON mirrors.
+/// JSON mirrors, optional disk persistence of the memo cache
+/// (`--cache`) and deterministic `--shard i/n` slicing for distributed
+/// runs.
 fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(err) = args.unknown_flags(&[
         "workload", "workloads", "prim", "prims", "level", "levels", "sms", "threads",
-        "mapper", "seed", "out", "json",
+        "mapper", "seed", "out", "json", "cache", "shard", "tag",
     ]) {
         bail!(err);
     }
@@ -211,7 +233,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         threads
     );
     let engine = SweepEngine::new(arch).threads(threads);
-    let run = engine.run_spec(&sweep_spec);
+
+    // Persistent cache: warm from disk if a compatible file exists.
+    let cache_path = cache_path_flag(args);
+    if let Some(path) = &cache_path {
+        let load = persist::load_into(engine.cache(), path)?;
+        println!("[cache] {} ({})", load.describe(), path.display());
+    }
+
+    // Shard slicing: expand the full grid, run the deterministic
+    // round-robin slice (the whole grid without --shard).
+    let shard_id = args.get("shard").map(ShardId::parse).transpose()?;
+    let all_jobs = sweep_spec.jobs();
+    let run = match shard_id {
+        None => engine.run_jobs_named(&sweep_spec.name, &all_jobs),
+        Some(s) => {
+            let slice = s.slice(&all_jobs);
+            println!("shard {s}: {} of {} grid points", slice.len(), all_jobs.len());
+            engine.run_jobs_named(&sweep_spec.name, &slice)
+        }
+    };
     println!(
         "evaluated {} points in {:.3}s (cache: {} unique, {} duplicate hits)",
         run.n_points(),
@@ -219,6 +260,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         run.cache_misses,
         run.cache_hits
     );
+    if let Some(path) = &cache_path {
+        let n = persist::save(engine.cache(), path)?;
+        println!("[cache] saved {n} design points -> {}", path.display());
+    }
 
     // Small grids get the full per-point table; every run gets the
     // per-system summary.
@@ -227,17 +272,78 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     print!("{}", output::summary_table(&run.results));
 
-    // CSV + JSON mirrors.
+    // CSV + JSON mirrors, named by --tag (default: the spec name, so
+    // plain sweeps keep writing sweep.csv/sweep.json) and the shard
+    // identity — successive tagged or sharded sweeps never overwrite
+    // each other.
     let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    let base = args.get_or("tag", &sweep_spec.name).to_string();
     let csv = output::results_csv(&run.results)?;
-    let csv_path = out_dir.join("sweep.csv");
+    match shard_id {
+        None => {
+            let csv_path = out_dir.join(format!("{base}.csv"));
+            csv.write(&csv_path)?;
+            println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
+            let json_path = out_dir.join(format!("{base}.json"));
+            output::write_json_summary(&run, &json_path)?;
+            println!("[json] summary -> {}", json_path.display());
+            if args.flag("json") {
+                print!("{}", output::json_summary(&run));
+            }
+        }
+        Some(s) => {
+            let fp = shard::sweep_fingerprint(engine.arch(), &sweep_spec);
+            let csv_path = out_dir.join(format!("{base}-{}.csv", s.file_tag()));
+            csv.write(&csv_path)?;
+            println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
+            let json_path = out_dir.join(format!("{base}-{}.json", s.file_tag()));
+            shard::write_shard_json(&run, s, &fp, all_jobs.len(), &json_path)?;
+            println!(
+                "[json] shard summary -> {} (merge all {} shards with `repro merge`)",
+                json_path.display(),
+                s.count
+            );
+            if args.flag("json") {
+                print!("{}", shard::shard_json(&run, s, &fp, all_jobs.len()));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `repro merge` — validate and combine per-shard sweep summaries into
+/// the unsharded sweep.csv/sweep.json (byte-identical CSV).
+fn cmd_merge(args: &Args) -> Result<()> {
+    if let Some(err) = args.unknown_flags(&["out", "tag", "json"]) {
+        bail!(err);
+    }
+    if args.positional.is_empty() {
+        bail!("usage: repro merge <shard.json> <shard.json> ... [--tag name] [--out results]");
+    }
+    let paths: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    let merged = shard::merge_files(&paths)?;
+    println!(
+        "merged {} shard(s) of sweep {:?}: {} points (fingerprint {})",
+        merged.shard_count,
+        merged.spec_name,
+        merged.results.len(),
+        merged.fingerprint
+    );
+    print!("{}", output::summary_table(&merged.results));
+
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    let base = args.get_or("tag", &merged.spec_name).to_string();
+    let csv = output::results_csv(&merged.results)?;
+    let csv_path = out_dir.join(format!("{base}.csv"));
     csv.write(&csv_path)?;
     println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
-    let json_path = out_dir.join("sweep.json");
-    output::write_json_summary(&run, &json_path)?;
-    println!("[json] summary -> {}", json_path.display());
+    // csv.write above already created out_dir.
+    let json_path = out_dir.join(format!("{base}.json"));
+    std::fs::write(&json_path, shard::merged_json(&merged))?;
+    println!("[json] merged summary -> {}", json_path.display());
     if args.flag("json") {
-        print!("{}", output::json_summary(&run));
+        print!("{}", shard::merged_json(&merged));
     }
     Ok(())
 }
@@ -253,7 +359,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     ctx.out_dir = args.get_or("out", "results").into();
     ctx.threads = args.get_parsed_or("threads", ctx.threads);
     ctx.seed = args.get_parsed_or("seed", ctx.seed);
-    experiments::run(id, &ctx)
+    ctx.cache_path = cache_path_flag(args);
+    ctx.load_persistent_cache()?;
+    let result = experiments::run(id, &ctx);
+    // Persist whatever was scored even if one experiment failed — the
+    // cache entries themselves are valid. A save failure must not mask
+    // the experiment's own error, so it is reported, not propagated.
+    if let Err(e) = ctx.save_persistent_cache() {
+        eprintln!("warning: could not persist the sweep cache: {e:#}");
+    }
+    result
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {

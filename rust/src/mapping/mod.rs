@@ -24,6 +24,16 @@ pub use spatial::CimSpatial;
 
 use crate::workload::Gemm;
 
+/// Version of the mapping algorithms. Bump this whenever any mapper's
+/// produced [`Mapping`] can change for the same (system, GEMM) —
+/// tiling rules, loop ordering, spatial assignment, search behavior.
+/// It is embedded in every mapper fingerprint
+/// ([`crate::sweep::MapperChoice::fingerprint`]), which in turn forms
+/// the design-point cache keys persisted by `--cache`
+/// ([`crate::sweep::persist`]) — so metrics computed by an older
+/// mapper implementation can never be served for a newer one.
+pub const MAPPER_VERSION: u32 = 1;
+
 /// A complete schedule of one GEMM onto a CiM-integrated system.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mapping {

@@ -9,8 +9,18 @@
 //! router all revisit the same (system, GEMM) pairs) are scored exactly
 //! once per process.
 //!
+//! Fingerprints must be *injective*: now that cache entries persist
+//! across runs ([`super::persist`]), a key collision is silent
+//! cross-run data corruption, not just an unlucky in-process hit. Every
+//! floating-point model parameter is therefore fingerprinted by its
+//! exact bit pattern ([`f64::to_bits`] hex) rather than a truncated
+//! decimal rendering.
+//!
 //! The cache is sharded: each shard is an independent `Mutex<HashMap>`,
 //! picked by key hash, so parallel sweeps do not serialize on one lock.
+//! Within a shard the map is two-level (point key → GEMM → metrics), so
+//! lookups borrow the caller's `&str` key instead of forcing an owned
+//! `String` per probe.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -32,6 +42,14 @@ const SHARDS: usize = 16;
 /// one baseline cache entry under this marker.
 pub const BASELINE_MAPPER_FP: &str = "n/a";
 
+/// Exact fingerprint fragment of one `f64` model parameter: the IEEE-754
+/// bit pattern in hex. Unlike a `{:.4}`-style decimal rendering this is
+/// injective — two parameters differing by even 1 ulp fingerprint
+/// differently, so they can never alias one persisted cache entry.
+pub fn f64_bits_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
 /// Stable fingerprint of an [`Architecture`]: capacities, bandwidths,
 /// per-element energies and baseline peak. Cached metrics are only
 /// valid for the architecture they were computed on, so this prefixes
@@ -41,20 +59,20 @@ pub fn arch_fingerprint(arch: &Architecture) -> String {
     let lv = |l: MemLevel| {
         let s = arch.level(l);
         format!(
-            "{}:{:.4}:{:.6}",
+            "{}:{}:{}",
             s.capacity_bytes,
-            s.bandwidth_bytes_per_cycle,
-            arch.energy.elem_pj(l)
+            f64_bits_hex(s.bandwidth_bytes_per_cycle),
+            f64_bits_hex(arch.energy.elem_pj(l))
         )
     };
     format!(
-        "arch[{};{};{};{};red{:.6};mac{:.6};tc{}x{}x{}]",
+        "arch[{};{};{};{};red{};mac{};tc{}x{}x{}]",
         lv(MemLevel::Dram),
         lv(MemLevel::Smem),
         lv(MemLevel::RegisterFile),
         lv(MemLevel::PeBuffer),
-        arch.energy.reduction_pj,
-        arch.energy.mac_pj,
+        f64_bits_hex(arch.energy.reduction_pj),
+        f64_bits_hex(arch.energy.mac_pj),
         arch.tensor_core.subcores,
         arch.tensor_core.pe_rows,
         arch.tensor_core.pe_cols
@@ -63,7 +81,7 @@ pub fn arch_fingerprint(arch: &Architecture) -> String {
 
 /// Fingerprint of a CiM primitive: name *and* every model parameter,
 /// so user-defined primitives sharing a name but not parameters never
-/// share cache entries.
+/// share cache entries. Float parameters use their exact bit patterns.
 fn prim_fingerprint(p: &crate::cim::CimPrimitive) -> String {
     format!(
         "{}({},{},{},{},{},{},{},{})",
@@ -73,9 +91,9 @@ fn prim_fingerprint(p: &crate::cim::CimPrimitive) -> String {
         p.rh,
         p.ch,
         p.capacity_bytes,
-        p.latency_ns,
-        p.mac_energy_pj,
-        p.area_overhead
+        f64_bits_hex(p.latency_ns),
+        f64_bits_hex(p.mac_energy_pj),
+        f64_bits_hex(p.area_overhead)
     )
 }
 
@@ -97,12 +115,22 @@ pub fn spec_fingerprint(spec: &SystemSpec) -> String {
 
 /// Stable fingerprint of an instantiated [`CimSystem`]; matches
 /// [`spec_fingerprint`] of the spec that would build it.
+///
+/// The match is exhaustive over the SMEM configurations: a `CimSystem`
+/// at SMEM whose `smem_config` is `None` is malformed (every
+/// constructor sets it), and silently mapping it onto ConfigB's entries
+/// would alias a broken system onto real cached metrics — so it panics
+/// instead.
 pub fn system_fingerprint(sys: &CimSystem) -> String {
     let p = prim_fingerprint(&sys.primitive);
     match (sys.level, sys.smem_config) {
         (MemLevel::RegisterFile, _) => format!("rf:{p}"),
         (MemLevel::Smem, Some(SmemConfig::ConfigA)) => format!("smem-a:{p}"),
-        (MemLevel::Smem, _) => format!("smem-b:{p}"),
+        (MemLevel::Smem, Some(SmemConfig::ConfigB)) => format!("smem-b:{p}"),
+        (MemLevel::Smem, None) => panic!(
+            "CimSystem at SMEM without an smem_config cannot be fingerprinted \
+             (it would silently alias a ConfigA/ConfigB cache entry)"
+        ),
         (other, _) => format!("{}:{p}", other.short_name()),
     }
 }
@@ -137,13 +165,15 @@ pub fn spec_label(spec: &SystemSpec, arch: &crate::arch::Architecture) -> String
     }
 }
 
-type Key = (String, Gemm);
+/// One shard: point key → GEMM → metrics. Two-level so a probe borrows
+/// the point key (`&str`) and only allocates on a miss.
+type Shard = HashMap<String, HashMap<Gemm, Metrics>>;
 
 /// Sharded (system fingerprint, GEMM) → [`Metrics`] memoization cache
 /// with hit/miss accounting.
 #[derive(Debug)]
 pub struct EvalCache {
-    shards: Vec<Mutex<HashMap<Key, Metrics>>>,
+    shards: Vec<Mutex<Shard>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -163,9 +193,10 @@ impl EvalCache {
         }
     }
 
-    fn shard_of(key: &Key) -> usize {
+    fn shard_of(point: &str, gemm: &Gemm) -> usize {
         let mut h = DefaultHasher::new();
-        key.hash(&mut h);
+        point.hash(&mut h);
+        gemm.hash(&mut h);
         (h.finish() as usize) % SHARDS
     }
 
@@ -175,13 +206,17 @@ impl EvalCache {
     /// computes redundantly but deterministically (first insert wins).
     pub fn get_or_compute<F: FnOnce() -> Metrics>(
         &self,
-        point: String,
+        point: &str,
         gemm: Gemm,
         f: F,
     ) -> Metrics {
-        let key = (point, gemm);
-        let shard = &self.shards[Self::shard_of(&key)];
-        if let Some(m) = shard.lock().expect("cache shard poisoned").get(&key) {
+        let shard = &self.shards[Self::shard_of(point, &gemm)];
+        if let Some(m) = shard
+            .lock()
+            .expect("cache shard poisoned")
+            .get(point)
+            .and_then(|per_gemm| per_gemm.get(&gemm))
+        {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *m;
         }
@@ -190,15 +225,57 @@ impl EvalCache {
         *shard
             .lock()
             .expect("cache shard poisoned")
-            .entry(key)
+            .entry(point.to_string())
+            .or_default()
+            .entry(gemm)
             .or_insert(m)
+    }
+
+    /// Insert an entry without touching the hit/miss counters (cache
+    /// warm-up from a persisted file). An existing entry wins — the
+    /// live-computed value and the persisted one are identical by the
+    /// purity contract, so keeping the first avoids surprises.
+    pub fn preload(&self, point: &str, gemm: Gemm, metrics: Metrics) {
+        let shard = &self.shards[Self::shard_of(point, &gemm)];
+        shard
+            .lock()
+            .expect("cache shard poisoned")
+            .entry(point.to_string())
+            .or_default()
+            .entry(gemm)
+            .or_insert(metrics);
+    }
+
+    /// All cached entries, sorted by (point key, GEMM) so the snapshot
+    /// — and any file serialized from it — is deterministic regardless
+    /// of insertion order and shard hashing.
+    pub fn snapshot(&self) -> Vec<(String, Gemm, Metrics)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let shard = s.lock().expect("cache shard poisoned");
+            for (point, per_gemm) in shard.iter() {
+                for (gemm, m) in per_gemm {
+                    out.push((point.clone(), *gemm, *m));
+                }
+            }
+        }
+        out.sort_by(|a, b| {
+            (a.0.as_str(), a.1.m, a.1.n, a.1.k).cmp(&(b.0.as_str(), b.1.m, b.1.n, b.1.k))
+        });
+        out
     }
 
     /// Number of distinct cached points.
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().expect("cache shard poisoned").len())
+            .map(|s| {
+                s.lock()
+                    .expect("cache shard poisoned")
+                    .values()
+                    .map(HashMap::len)
+                    .sum::<usize>()
+            })
             .sum()
     }
 
@@ -248,12 +325,17 @@ mod tests {
         }
     }
 
+    /// One ulp up — the smallest possible parameter perturbation.
+    fn ulp_up(x: f64) -> f64 {
+        f64::from_bits(x.to_bits() + 1)
+    }
+
     #[test]
     fn hit_returns_first_computation() {
         let cache = EvalCache::new();
         let g = Gemm::new(16, 16, 16);
-        let a = cache.get_or_compute("p".into(), g, || dummy_metrics(1.0));
-        let b = cache.get_or_compute("p".into(), g, || dummy_metrics(999.0));
+        let a = cache.get_or_compute("p", g, || dummy_metrics(1.0));
+        let b = cache.get_or_compute("p", g, || dummy_metrics(999.0));
         assert_eq!(a, b, "second call must be served from the cache");
         assert_eq!(cache.hits(), 1);
         assert_eq!(cache.misses(), 1);
@@ -264,9 +346,9 @@ mod tests {
     fn distinct_points_distinct_entries() {
         let cache = EvalCache::new();
         let g = Gemm::new(16, 16, 16);
-        cache.get_or_compute("a".into(), g, || dummy_metrics(1.0));
-        cache.get_or_compute("b".into(), g, || dummy_metrics(2.0));
-        cache.get_or_compute("a".into(), Gemm::new(32, 32, 32), || dummy_metrics(3.0));
+        cache.get_or_compute("a", g, || dummy_metrics(1.0));
+        cache.get_or_compute("b", g, || dummy_metrics(2.0));
+        cache.get_or_compute("a", Gemm::new(32, 32, 32), || dummy_metrics(3.0));
         assert_eq!(cache.len(), 3);
         assert_eq!(cache.misses(), 3);
         assert_eq!(cache.hits(), 0);
@@ -275,10 +357,42 @@ mod tests {
     #[test]
     fn clear_resets() {
         let cache = EvalCache::new();
-        cache.get_or_compute("a".into(), Gemm::new(8, 8, 8), || dummy_metrics(1.0));
+        cache.get_or_compute("a", Gemm::new(8, 8, 8), || dummy_metrics(1.0));
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.hits() + cache.misses(), 0);
+    }
+
+    #[test]
+    fn preload_serves_hits_without_counting_a_miss() {
+        let cache = EvalCache::new();
+        let g = Gemm::new(16, 16, 16);
+        cache.preload("p", g, dummy_metrics(5.0));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.hits() + cache.misses(), 0);
+        let m = cache.get_or_compute("p", g, || panic!("preloaded entry must hit"));
+        assert_eq!(m, dummy_metrics(5.0));
+        assert_eq!(cache.hits(), 1);
+        // preload never overwrites an existing entry
+        cache.preload("p", g, dummy_metrics(9.0));
+        let again = cache.get_or_compute("p", g, || unreachable!());
+        assert_eq!(again, dummy_metrics(5.0));
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let cache = EvalCache::new();
+        cache.get_or_compute("b", Gemm::new(8, 8, 8), || dummy_metrics(1.0));
+        cache.get_or_compute("a", Gemm::new(32, 32, 32), || dummy_metrics(2.0));
+        cache.get_or_compute("a", Gemm::new(8, 8, 8), || dummy_metrics(3.0));
+        let snap = cache.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(
+            snap.iter()
+                .map(|(p, g, _)| (p.as_str(), g.m))
+                .collect::<Vec<_>>(),
+            vec![("a", 8), ("a", 32), ("b", 8)]
+        );
     }
 
     #[test]
@@ -294,6 +408,80 @@ mod tests {
             assert_eq!(spec_fingerprint(&spec), system_fingerprint(&sys));
         }
         assert_eq!(spec_fingerprint(&SystemSpec::Baseline), "baseline");
+    }
+
+    #[test]
+    #[should_panic(expected = "smem_config")]
+    fn smem_system_without_config_fails_loudly() {
+        // Regression: (Smem, None) used to silently fingerprint as
+        // "smem-b", aliasing a malformed system onto ConfigB's entries.
+        let arch = Architecture::default_sm();
+        let mut sys = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        sys.smem_config = None;
+        let _ = system_fingerprint(&sys);
+    }
+
+    #[test]
+    fn prim_fingerprint_distinguishes_one_ulp() {
+        // Regression: {:.6}-truncated float rendering let two primitives
+        // differing below 1e-6 share a fingerprint (and, once persisted,
+        // each other's metrics).
+        let p = CimPrimitive::digital_6t();
+        for field in 0..3 {
+            let mut q = p.clone();
+            match field {
+                0 => q.latency_ns = ulp_up(q.latency_ns),
+                1 => q.mac_energy_pj = ulp_up(q.mac_energy_pj),
+                _ => q.area_overhead = ulp_up(q.area_overhead),
+            }
+            assert_ne!(
+                spec_fingerprint(&SystemSpec::CimAtRf(p.clone())),
+                spec_fingerprint(&SystemSpec::CimAtRf(q)),
+                "field {field}: 1-ulp perturbation must change the fingerprint"
+            );
+        }
+    }
+
+    #[test]
+    fn arch_fingerprint_distinguishes_one_ulp() {
+        let arch = Architecture::default_sm();
+        let fp = arch_fingerprint(&arch);
+
+        let mut mac = arch.clone();
+        mac.energy.mac_pj = ulp_up(mac.energy.mac_pj);
+        assert_ne!(fp, arch_fingerprint(&mac));
+
+        let mut red = arch.clone();
+        red.energy.reduction_pj = ulp_up(red.energy.reduction_pj);
+        assert_ne!(fp, arch_fingerprint(&red));
+
+        let mut bw = arch.clone();
+        for l in &mut bw.levels {
+            if l.level == MemLevel::Smem {
+                l.bandwidth_bytes_per_cycle = ulp_up(l.bandwidth_bytes_per_cycle);
+            }
+        }
+        assert_ne!(fp, arch_fingerprint(&bw));
+    }
+
+    #[test]
+    fn fingerprints_distinguish_sub_truncation_deltas() {
+        // The old {:.4} bandwidth rendering collapsed 42.0 and 42.00001.
+        let arch = Architecture::default_sm();
+        let mut close = arch.clone();
+        for l in &mut close.levels {
+            if l.level == MemLevel::Smem {
+                l.bandwidth_bytes_per_cycle += 1e-5;
+            }
+        }
+        assert_ne!(arch_fingerprint(&arch), arch_fingerprint(&close));
+    }
+
+    #[test]
+    fn f64_bits_hex_is_exact() {
+        assert_eq!(f64_bits_hex(1.0), format!("{:016x}", 1.0f64.to_bits()));
+        assert_ne!(f64_bits_hex(0.0), f64_bits_hex(-0.0));
+        assert_ne!(f64_bits_hex(42.0), f64_bits_hex(ulp_up(42.0)));
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::cost::{BaselineModel, CostModel, Metrics};
 use crate::util::pool;
 
 use super::cache::{self, EvalCache};
-use super::spec::{SweepJob, SweepResult, SweepSpec};
+use super::spec::{MapperChoice, SweepJob, SweepResult, SweepSpec};
 
 /// Parallel grid evaluator with a shared memoization cache.
 #[derive(Debug, Clone)]
@@ -70,23 +70,39 @@ impl SweepEngine {
         Arc::clone(&self.cache)
     }
 
+    /// Precomputed per-(system spec, mapper) evaluation context: the
+    /// full cache key and the human-readable label. Building these is
+    /// pure string formatting, so a sweep computes them once per
+    /// distinct spec instead of once per job — on a warm cache the
+    /// per-job work drops to one borrowed-key map probe.
+    fn point_meta(&self, spec: &SystemSpec, mapper: MapperChoice) -> PointMeta {
+        let system_fp = cache::spec_fingerprint(spec);
+        // The mapper cannot influence the baseline, so baseline points
+        // share one cache entry across mapper choices.
+        let mapper_fp = if matches!(spec, SystemSpec::Baseline) {
+            cache::BASELINE_MAPPER_FP.to_string()
+        } else {
+            mapper.fingerprint()
+        };
+        PointMeta {
+            key: cache::point_key(&self.arch_fp, &system_fp, &mapper_fp),
+            label: cache::spec_label(spec, &self.arch),
+        }
+    }
+
     /// Evaluate one job, memoized. The cache holds the single-SM
     /// metrics; multi-SM points are a pure post-transform
     /// ([`MultiSm::scale`]) applied on read, so every value of an
     /// SM-count axis shares one evaluation.
     pub fn evaluate(&self, job: &SweepJob) -> SweepResult {
-        let system_fp = cache::spec_fingerprint(&job.spec);
-        // The mapper cannot influence the baseline, so baseline points
-        // share one cache entry across mapper choices.
-        let mapper_fp = if matches!(job.spec, SystemSpec::Baseline) {
-            cache::BASELINE_MAPPER_FP.to_string()
-        } else {
-            job.mapper.fingerprint()
-        };
-        let key = cache::point_key(&self.arch_fp, &system_fp, &mapper_fp);
+        let meta = self.point_meta(&job.spec, job.mapper);
+        self.evaluate_with_meta(job, &meta)
+    }
+
+    fn evaluate_with_meta(&self, job: &SweepJob, meta: &PointMeta) -> SweepResult {
         let single = self
             .cache
-            .get_or_compute(key, job.gemm, || self.evaluate_uncached(job));
+            .get_or_compute(&meta.key, job.gemm, || self.evaluate_uncached(job));
         let metrics = if job.sms <= 1 {
             single
         } else {
@@ -95,7 +111,7 @@ impl SweepEngine {
         SweepResult {
             workload: job.workload.clone(),
             gemm: job.gemm,
-            system: cache::spec_label(&job.spec, &self.arch),
+            system: meta.label.clone(),
             sms: job.sms,
             metrics,
         }
@@ -113,19 +129,40 @@ impl SweepEngine {
         }
     }
 
-    /// Evaluate a batch in parallel, preserving job order.
+    /// Evaluate a batch in parallel, preserving job order. The (cache
+    /// key, label) pair is computed once per distinct (spec, mapper) in
+    /// the batch and shared across its jobs (grids repeat each system
+    /// for every GEMM × SM count).
     pub fn run(&self, jobs: &[SweepJob]) -> Vec<SweepResult> {
-        pool::map_parallel(jobs, self.threads, |job| self.evaluate(job))
+        let mut distinct: Vec<(&SystemSpec, MapperChoice, Arc<PointMeta>)> = Vec::new();
+        let mut pairs: Vec<(&SweepJob, Arc<PointMeta>)> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let meta = match distinct
+                .iter()
+                .find(|(s, m, _)| **s == job.spec && *m == job.mapper)
+            {
+                Some((_, _, meta)) => Arc::clone(meta),
+                None => {
+                    let meta = Arc::new(self.point_meta(&job.spec, job.mapper));
+                    distinct.push((&job.spec, job.mapper, Arc::clone(&meta)));
+                    meta
+                }
+            };
+            pairs.push((job, meta));
+        }
+        pool::map_parallel(&pairs, self.threads, |(job, meta)| {
+            self.evaluate_with_meta(job, meta)
+        })
     }
 
-    /// Expand and run a full [`SweepSpec`], with timing and cache
-    /// accounting for the run.
-    pub fn run_spec(&self, spec: &SweepSpec) -> SweepRun {
+    /// Run an explicit job list with timing and cache accounting —
+    /// the engine behind [`Self::run_spec`] and the `--shard` slices.
+    pub fn run_jobs_named(&self, name: &str, jobs: &[SweepJob]) -> SweepRun {
         let (h0, m0) = (self.cache.hits(), self.cache.misses());
         let t0 = Instant::now();
-        let results = self.run(&spec.jobs());
+        let results = self.run(jobs);
         SweepRun {
-            spec_name: spec.name.clone(),
+            spec_name: name.to_string(),
             results,
             threads: self.threads,
             cache_hits: self.cache.hits() - h0,
@@ -133,6 +170,19 @@ impl SweepEngine {
             elapsed: t0.elapsed(),
         }
     }
+
+    /// Expand and run a full [`SweepSpec`], with timing and cache
+    /// accounting for the run.
+    pub fn run_spec(&self, spec: &SweepSpec) -> SweepRun {
+        self.run_jobs_named(&spec.name, &spec.jobs())
+    }
+}
+
+/// Precomputed (cache key, display label) for one (spec, mapper) pair.
+#[derive(Debug)]
+struct PointMeta {
+    key: String,
+    label: String,
 }
 
 /// One executed sweep: ordered results plus run-level accounting.

@@ -12,6 +12,12 @@
 //!   are scored once per process;
 //! * [`engine::SweepEngine`] — the parallel executor over
 //!   [`crate::util::pool`], deterministic across thread counts;
+//! * [`persist`] — versioned disk persistence of the cache
+//!   (`--cache`), embedding the cost-model version so stale files are
+//!   discarded, not served;
+//! * [`shard`] — deterministic `--shard i/n` slicing of the job list,
+//!   fingerprint-tagged per-shard summaries and the `repro merge`
+//!   validator/combiner;
 //! * [`output`] — CSV mirrors, summary tables and a machine-readable
 //!   JSON summary.
 //!
@@ -39,6 +45,8 @@
 pub mod cache;
 pub mod engine;
 pub mod output;
+pub mod persist;
+pub mod shard;
 pub mod spec;
 
 pub use cache::{
@@ -46,4 +54,6 @@ pub use cache::{
     BASELINE_MAPPER_FP,
 };
 pub use engine::{SweepEngine, SweepRun};
+pub use persist::{CacheLoad, CACHE_FORMAT_VERSION};
+pub use shard::{sweep_fingerprint, MergedSweep, ShardId};
 pub use spec::{MapperChoice, SweepJob, SweepResult, SweepSpec};

@@ -144,8 +144,9 @@ pub fn detail_table(results: &[SweepResult]) -> Table {
     t
 }
 
-/// Escape a string for a JSON string literal.
-fn json_escape(s: &str) -> String {
+/// Escape a string for a JSON string literal (shared with the shard
+/// summary writer).
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -161,7 +162,7 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-fn json_f64(x: f64) -> String {
+pub(crate) fn json_f64(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.6}")
     } else {

@@ -1,0 +1,415 @@
+//! Disk persistence for the [`EvalCache`] — warm sweeps across
+//! processes.
+//!
+//! The cache serializes to a versioned line-oriented file
+//! (`results/cache.bin` by convention): a header line embedding the
+//! cache-format version and the **cost-model version**
+//! ([`crate::cost::COST_MODEL_VERSION`]), then one tab-separated line
+//! per entry (point key, GEMM dims, metrics). Float metrics are stored
+//! as IEEE-754 bit patterns in hex, so a save → load round trip is
+//! bit-identical and a warm run reproduces a cold run exactly.
+//!
+//! Loading is *compatible-or-discarded*: a file whose header does not
+//! match the running binary's versions — or that fails to parse at all
+//! — is ignored wholesale ([`CacheLoad::Discarded`]) rather than
+//! trusted partially or turned into a hard error. A bumped cost-model
+//! version therefore invalidates every persisted entry instead of
+//! serving stale metrics. Saves are atomic (pid-unique temp file +
+//! rename), so a crash mid-save can corrupt at worst a temp file,
+//! never the cache — and a save first merges any compatible entries
+//! already on disk, so processes sharing one `--cache` path
+//! accumulate a union (see [`save`] for the simultaneous-save caveat).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cost::{EnergyBreakdown, Metrics, COST_MODEL_VERSION};
+use crate::workload::Gemm;
+
+use super::cache::{f64_bits_hex, EvalCache};
+
+/// Version of the on-disk cache layout itself (header + line format).
+/// Bump on any format change; old files are then discarded on load.
+pub const CACHE_FORMAT_VERSION: u32 = 1;
+
+/// First token of the header line — identifies the file type.
+const MAGIC: &str = "www-cim-cache";
+
+/// Fields per serialized [`Metrics`] (see [`metrics_fields`] order).
+const METRIC_FIELDS: usize = 18;
+
+/// Outcome of [`load_into`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheLoad {
+    /// No cache file at the path (a cold start, not an error).
+    Missing,
+    /// Compatible file; `entries` points preloaded.
+    Loaded { entries: usize },
+    /// Incompatible or corrupt file; nothing was preloaded.
+    Discarded { reason: String },
+}
+
+impl CacheLoad {
+    /// One-line human-readable description for CLI status output.
+    pub fn describe(&self) -> String {
+        match self {
+            CacheLoad::Missing => "no persisted cache (cold start)".to_string(),
+            CacheLoad::Loaded { entries } => {
+                format!("loaded {entries} persisted design points")
+            }
+            CacheLoad::Discarded { reason } => {
+                format!("discarded persisted cache: {reason}")
+            }
+        }
+    }
+}
+
+/// The header line the running binary writes and accepts.
+fn header() -> String {
+    format!("{MAGIC}\tformat={CACHE_FORMAT_VERSION}\tcost-model={COST_MODEL_VERSION}")
+}
+
+/// Serialize one [`Metrics`] to its stable field list: integers in
+/// decimal, floats as exact bit patterns. The order is part of the
+/// persisted format — extend only together with
+/// [`CACHE_FORMAT_VERSION`].
+pub fn metrics_fields(m: &Metrics) -> Vec<String> {
+    vec![
+        m.macs.to_string(),
+        m.ops.to_string(),
+        f64_bits_hex(m.energy_pj),
+        f64_bits_hex(m.breakdown.dram_pj),
+        f64_bits_hex(m.breakdown.smem_pj),
+        f64_bits_hex(m.breakdown.rf_pj),
+        f64_bits_hex(m.breakdown.pe_buf_pj),
+        f64_bits_hex(m.breakdown.mac_pj),
+        f64_bits_hex(m.breakdown.reduction_pj),
+        f64_bits_hex(m.tops_per_watt),
+        m.compute_cycles.to_string(),
+        m.dram_cycles.to_string(),
+        m.smem_cycles.to_string(),
+        m.total_cycles.to_string(),
+        f64_bits_hex(m.gflops),
+        f64_bits_hex(m.utilization),
+        m.dram_bytes.to_string(),
+        m.smem_bytes.to_string(),
+    ]
+}
+
+fn parse_u64(s: &str) -> Result<u64> {
+    s.parse::<u64>()
+        .with_context(|| format!("bad integer field {s:?}"))
+}
+
+fn parse_f64_bits(s: &str) -> Result<f64> {
+    let bits =
+        u64::from_str_radix(s, 16).with_context(|| format!("bad float bit pattern {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Inverse of [`metrics_fields`].
+pub fn metrics_from_fields(fields: &[&str]) -> Result<Metrics> {
+    if fields.len() != METRIC_FIELDS {
+        bail!(
+            "metrics want {METRIC_FIELDS} fields, got {}",
+            fields.len()
+        );
+    }
+    Ok(Metrics {
+        macs: parse_u64(fields[0])?,
+        ops: parse_u64(fields[1])?,
+        energy_pj: parse_f64_bits(fields[2])?,
+        breakdown: EnergyBreakdown {
+            dram_pj: parse_f64_bits(fields[3])?,
+            smem_pj: parse_f64_bits(fields[4])?,
+            rf_pj: parse_f64_bits(fields[5])?,
+            pe_buf_pj: parse_f64_bits(fields[6])?,
+            mac_pj: parse_f64_bits(fields[7])?,
+            reduction_pj: parse_f64_bits(fields[8])?,
+        },
+        tops_per_watt: parse_f64_bits(fields[9])?,
+        compute_cycles: parse_u64(fields[10])?,
+        dram_cycles: parse_u64(fields[11])?,
+        smem_cycles: parse_u64(fields[12])?,
+        total_cycles: parse_u64(fields[13])?,
+        gflops: parse_f64_bits(fields[14])?,
+        utilization: parse_f64_bits(fields[15])?,
+        dram_bytes: parse_u64(fields[16])?,
+        smem_bytes: parse_u64(fields[17])?,
+    })
+}
+
+/// Serialize the whole cache (header + sorted entries). Deterministic:
+/// equal cache contents produce byte-identical files.
+pub fn encode(cache: &EvalCache) -> String {
+    let mut out = String::new();
+    out.push_str(&header());
+    out.push('\n');
+    for (point, gemm, m) in cache.snapshot() {
+        out.push_str(&point);
+        out.push('\t');
+        out.push_str(&format!("{}\t{}\t{}", gemm.m, gemm.n, gemm.k));
+        for field in metrics_fields(&m) {
+            out.push('\t');
+            out.push_str(&field);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write the cache to `path` atomically (unique temp file + rename),
+/// creating parent directories. Returns the number of entries written.
+///
+/// Saving first folds any *compatible* entries already at `path` into
+/// the in-memory cache, so the written file is the union of both —
+/// sequential shard processes pointing `--cache` at one file each
+/// contribute their slice instead of overwriting each other's. The
+/// temp name embeds the pid, so concurrent savers never clobber each
+/// other's in-flight temp file; the final rename, however, is
+/// last-writer-wins — two processes saving at the same instant can
+/// lose the entries only the rename-loser computed (they are merely
+/// recomputed on the next run, never corrupted). True concurrent
+/// accumulation needs file locking, which std does not portably offer.
+pub fn save(cache: &EvalCache, path: &Path) -> Result<usize> {
+    // Loaded => existing entries merged into the union written below;
+    // Missing/Discarded => nothing (valid) to merge. A real read error
+    // must propagate: overwriting a file we could not read would
+    // silently destroy previously persisted entries.
+    load_into(cache, path)
+        .with_context(|| format!("refusing to overwrite unreadable cache {}", path.display()))?;
+    let entries = cache.len();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating cache dir {}", parent.display()))?;
+        }
+    }
+    let tmp: PathBuf = {
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("cache.bin");
+        path.with_file_name(format!("{name}.{}.tmp", std::process::id()))
+    };
+    fs::write(&tmp, encode(cache))
+        .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming cache file into place at {}", path.display()))?;
+    Ok(entries)
+}
+
+/// Load a persisted cache into `cache` (no hit/miss counter changes).
+/// A missing file is a cold start; an incompatible or corrupt file is
+/// discarded in full — only I/O failures on an existing file error.
+pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
+    let discard = |reason: String| Ok(CacheLoad::Discarded { reason });
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(CacheLoad::Missing),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading cache file {}", path.display()))
+        }
+    };
+    let mut lines = text.lines();
+    let head = match lines.next() {
+        Some(h) => h,
+        None => return discard("empty file".to_string()),
+    };
+    if head != header() {
+        if !head.starts_with(MAGIC) {
+            return discard("not a www-cim cache file".to_string());
+        }
+        return discard(format!(
+            "incompatible header {head:?} (this binary writes {:?})",
+            header()
+        ));
+    }
+    // Parse every line before preloading anything: a corrupt tail must
+    // not leave a half-loaded cache behind.
+    let mut parsed: Vec<(String, Gemm, Metrics)> = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        if fields.len() != 4 + METRIC_FIELDS {
+            return discard(format!(
+                "corrupt entry on line {} ({} fields, want {})",
+                i + 2,
+                fields.len(),
+                4 + METRIC_FIELDS
+            ));
+        }
+        let dims = (
+            parse_u64(fields[1]),
+            parse_u64(fields[2]),
+            parse_u64(fields[3]),
+        );
+        let gemm = match dims {
+            (Ok(m), Ok(n), Ok(k)) => Gemm::new(m, n, k),
+            _ => return discard(format!("corrupt GEMM dims on line {}", i + 2)),
+        };
+        let metrics = match metrics_from_fields(&fields[4..]) {
+            Ok(m) => m,
+            Err(e) => return discard(format!("corrupt metrics on line {}: {e:#}", i + 2)),
+        };
+        parsed.push((fields[0].to_string(), gemm, metrics));
+    }
+    let entries = parsed.len();
+    for (point, gemm, m) in parsed {
+        cache.preload(&point, gemm, m);
+    }
+    Ok(CacheLoad::Loaded { entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(seed: f64) -> Metrics {
+        Metrics {
+            macs: 10,
+            ops: 20,
+            energy_pj: seed,
+            breakdown: EnergyBreakdown {
+                dram_pj: seed * 0.1,
+                smem_pj: seed * 0.2,
+                rf_pj: seed * 0.3,
+                pe_buf_pj: 0.0,
+                mac_pj: seed * 0.4,
+                reduction_pj: seed / 3.0,
+            },
+            tops_per_watt: 20.0 / seed,
+            compute_cycles: 100,
+            dram_cycles: 90,
+            smem_cycles: 80,
+            total_cycles: 100,
+            gflops: 0.2,
+            utilization: 1.0 / 3.0,
+            dram_bytes: 5,
+            smem_bytes: 6,
+        }
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join("www_cim_persist_unit")
+            .join(format!("{tag}.bin"))
+    }
+
+    #[test]
+    fn metrics_fields_round_trip_bit_exact() {
+        for seed in [1.0, 0.3, 1e-12, 7.25e9] {
+            let m = metrics(seed);
+            let fields = metrics_fields(&m);
+            assert_eq!(fields.len(), METRIC_FIELDS);
+            let refs: Vec<&str> = fields.iter().map(String::as_str).collect();
+            assert_eq!(metrics_from_fields(&refs).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let cache = EvalCache::new();
+        cache.get_or_compute("pt-a", Gemm::new(8, 8, 8), || metrics(1.0));
+        cache.get_or_compute("pt-b", Gemm::new(16, 32, 64), || metrics(2.5));
+        let path = tmp_path("roundtrip");
+        let _ = fs::remove_file(&path);
+        assert_eq!(save(&cache, &path).unwrap(), 2);
+
+        let fresh = EvalCache::new();
+        let load = load_into(&fresh, &path).unwrap();
+        assert_eq!(load, CacheLoad::Loaded { entries: 2 });
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(fresh.hits() + fresh.misses(), 0, "preload must not count");
+        let m = fresh.get_or_compute("pt-b", Gemm::new(16, 32, 64), || {
+            panic!("persisted entry must hit")
+        });
+        assert_eq!(m, metrics(2.5));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_a_cold_start() {
+        let fresh = EvalCache::new();
+        let load = load_into(&fresh, &tmp_path("never-written")).unwrap();
+        assert_eq!(load, CacheLoad::Missing);
+        assert!(fresh.is_empty());
+    }
+
+    #[test]
+    fn bumped_cost_model_version_discards_the_file() {
+        let cache = EvalCache::new();
+        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || metrics(1.0));
+        let path = tmp_path("stale-model");
+        save(&cache, &path).unwrap();
+        // Simulate a cache written by a binary with a different cost
+        // model: rewrite the header's version token.
+        let text = fs::read_to_string(&path).unwrap();
+        let stale = text.replacen(
+            &format!("cost-model={COST_MODEL_VERSION}"),
+            "cost-model=999999",
+            1,
+        );
+        assert_ne!(text, stale, "header rewrite must take effect");
+        fs::write(&path, stale).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => {
+                assert!(reason.contains("incompatible header"), "{reason}");
+            }
+            other => panic!("stale cache must be discarded, got {other:?}"),
+        }
+        assert!(fresh.is_empty(), "no entries may leak from a stale cache");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_entries_discard_the_whole_file() {
+        let cache = EvalCache::new();
+        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || metrics(1.0));
+        let path = tmp_path("corrupt");
+        save(&cache, &path).unwrap();
+        let mut text = fs::read_to_string(&path).unwrap();
+        text.push_str("pt-broken\t1\t2\n"); // truncated entry
+        fs::write(&path, &text).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => assert!(reason.contains("corrupt"), "{reason}"),
+            other => panic!("corrupt cache must be discarded, got {other:?}"),
+        }
+        assert!(fresh.is_empty(), "corrupt file must not half-load");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_cache_file_is_discarded_not_an_error() {
+        let path = tmp_path("not-a-cache");
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, "{\"json\": true}\n").unwrap();
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => {
+                assert!(reason.contains("not a www-cim cache"), "{reason}")
+            }
+            other => panic!("foreign file must be discarded, got {other:?}"),
+        }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn encode_is_deterministic_regardless_of_insertion_order() {
+        let a = EvalCache::new();
+        a.get_or_compute("x", Gemm::new(1, 2, 3), || metrics(1.0));
+        a.get_or_compute("y", Gemm::new(4, 5, 6), || metrics(2.0));
+        let b = EvalCache::new();
+        b.get_or_compute("y", Gemm::new(4, 5, 6), || metrics(2.0));
+        b.get_or_compute("x", Gemm::new(1, 2, 3), || metrics(1.0));
+        assert_eq!(encode(&a), encode(&b));
+    }
+}

@@ -1,0 +1,593 @@
+//! Sweep sharding: deterministic slicing of a sweep's job list across
+//! processes/hosts, per-shard summary files, and the merge tool.
+//!
+//! `repro sweep --shard i/n` expands the *full* [`SweepSpec`], takes
+//! the deterministic round-robin slice `{g : g mod n == i}` of the job
+//! list, and writes a per-shard JSON summary tagged with the shard
+//! identity and a **sweep fingerprint** (architecture + every grid
+//! axis). `repro merge` then validates that all shards carry the same
+//! fingerprint, that the indices cover `0..n` exactly once, and
+//! re-interleaves the per-point results into the original job order —
+//! the merged `sweep.csv` is byte-identical to an unsharded run's.
+//!
+//! Metrics travel through the shard files as exact bit patterns
+//! (see [`super::persist::metrics_fields`]), so merging is lossless.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::Architecture;
+use crate::cost::COST_MODEL_VERSION;
+use crate::util::json::Json;
+use crate::workload::Gemm;
+
+use super::cache;
+use super::engine::SweepRun;
+use super::output::{json_escape, json_f64, summarize};
+use super::persist;
+use super::spec::{SweepResult, SweepSpec};
+
+/// Version of the shard-summary JSON layout. Bump on any change to the
+/// document structure; `repro merge` refuses other versions.
+pub const SHARD_FORMAT_VERSION: u32 = 1;
+
+/// One shard of an `n`-way sweep: `index` ∈ `0..count`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardId {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardId {
+    /// Parse the CLI form `i/n` (e.g. `0/4`).
+    pub fn parse(s: &str) -> Result<ShardId> {
+        let (i, n) = match s.split_once('/') {
+            Some(parts) => parts,
+            None => bail!("--shard wants i/n (e.g. 0/4), got {s:?}"),
+        };
+        let index: usize = i
+            .trim()
+            .parse()
+            .ok()
+            .with_context(|| format!("--shard {s:?}: bad shard index {i:?}"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .ok()
+            .with_context(|| format!("--shard {s:?}: bad shard count {n:?}"))?;
+        if count == 0 {
+            bail!("--shard {s:?}: shard count must be >= 1");
+        }
+        if index >= count {
+            bail!("--shard {s:?}: shard index must be < count");
+        }
+        Ok(ShardId { index, count })
+    }
+
+    /// Deterministic round-robin slice of a job list: global job `g`
+    /// belongs to shard `g % count`. Round-robin (not contiguous
+    /// blocks) keeps shard runtimes balanced when a grid orders its
+    /// jobs from cheap to expensive GEMMs.
+    pub fn slice<T: Clone>(&self, jobs: &[T]) -> Vec<T> {
+        jobs.iter()
+            .enumerate()
+            .filter(|(g, _)| g % self.count == self.index)
+            .map(|(_, j)| j.clone())
+            .collect()
+    }
+
+    /// Number of jobs this shard takes from a list of `total`.
+    pub fn len_of(&self, total: usize) -> usize {
+        (total + self.count - self.index - 1) / self.count
+    }
+
+    /// Filename fragment (`shard0of4`).
+    pub fn file_tag(&self) -> String {
+        format!("shard{}of{}", self.index, self.count)
+    }
+}
+
+impl fmt::Display for ShardId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// FNV-1a 64-bit — a stable, dependency-free hash. `DefaultHasher` is
+/// deliberately not used here: its algorithm is unspecified across
+/// Rust releases, and shard fingerprints must compare equal across
+/// binaries built on different hosts.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable fingerprint of (architecture, sweep spec): every grid axis —
+/// workloads with their GEMM lists, systems, SM counts, mapper — plus
+/// the architecture fingerprint. Shards carry it so `repro merge`
+/// refuses to combine shards of different sweeps, and so two shards of
+/// one sweep run on different hosts still match.
+pub fn sweep_fingerprint(arch: &Architecture, spec: &SweepSpec) -> String {
+    let mut desc = String::new();
+    desc.push_str(&cache::arch_fingerprint(arch));
+    desc.push('|');
+    desc.push_str(&spec.mapper.fingerprint());
+    for (name, gemms) in &spec.workloads {
+        desc.push('|');
+        desc.push_str(name);
+        for g in gemms {
+            desc.push_str(&format!(";{}x{}x{}", g.m, g.n, g.k));
+        }
+    }
+    for s in &spec.systems {
+        desc.push('|');
+        desc.push_str(&cache::spec_fingerprint(s));
+    }
+    for &n in &spec.sm_counts {
+        desc.push_str(&format!("|sms{n}"));
+    }
+    format!("{:016x}", fnv1a(desc.as_bytes()))
+}
+
+/// Encode one shard's run as the per-shard JSON summary document.
+pub fn shard_json(
+    run: &SweepRun,
+    shard: ShardId,
+    fingerprint: &str,
+    points_total: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!(
+        "  \"sweep\": \"{}\",\n",
+        json_escape(&run.spec_name)
+    ));
+    out.push_str(&format!("  \"format\": {SHARD_FORMAT_VERSION},\n"));
+    out.push_str(&format!("  \"cost_model\": {COST_MODEL_VERSION},\n"));
+    out.push_str(&format!(
+        "  \"fingerprint\": \"{}\",\n",
+        json_escape(fingerprint)
+    ));
+    out.push_str(&format!("  \"points_total\": {points_total},\n"));
+    out.push_str(&format!(
+        "  \"shard\": {{\"index\": {}, \"count\": {}, \"points\": {}}},\n",
+        shard.index,
+        shard.count,
+        run.n_points()
+    ));
+    out.push_str(&format!("  \"threads\": {},\n", run.threads));
+    out.push_str(&format!(
+        "  \"elapsed_s\": {},\n",
+        json_f64(run.elapsed.as_secs_f64())
+    ));
+    out.push_str(&format!(
+        "  \"cache\": {{\"hits\": {}, \"misses\": {}}},\n",
+        run.cache_hits, run.cache_misses
+    ));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in run.results.iter().enumerate() {
+        let metrics: Vec<String> = persist::metrics_fields(&r.metrics)
+            .into_iter()
+            .map(|f| format!("\"{f}\""))
+            .collect();
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
+             \"system\": \"{}\", \"sms\": {}, \"metrics\": [{}]}}{}\n",
+            json_escape(&r.workload),
+            r.gemm.m,
+            r.gemm.n,
+            r.gemm.k,
+            json_escape(&r.system),
+            r.sms,
+            metrics.join(", "),
+            if i + 1 < run.results.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the per-shard JSON summary to `path`, creating parent dirs.
+pub fn write_shard_json(
+    run: &SweepRun,
+    shard: ShardId,
+    fingerprint: &str,
+    points_total: usize,
+    path: &Path,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    fs::write(path, shard_json(run, shard, fingerprint, points_total))
+        .with_context(|| format!("writing shard summary {}", path.display()))?;
+    Ok(())
+}
+
+/// A validated, re-interleaved merge of every shard of one sweep.
+#[derive(Debug, Clone)]
+pub struct MergedSweep {
+    pub spec_name: String,
+    pub fingerprint: String,
+    pub shard_count: usize,
+    pub cost_model: u64,
+    /// Per-point results in the original (unsharded) job order.
+    pub results: Vec<SweepResult>,
+}
+
+struct ShardDoc {
+    shard: ShardId,
+    results: Vec<SweepResult>,
+}
+
+fn result_from_json(v: &Json) -> Result<SweepResult> {
+    let workload = v
+        .get("workload")
+        .and_then(Json::as_str)
+        .context("result missing \"workload\"")?
+        .to_string();
+    let m = v.get("m").and_then(Json::as_u64).context("result missing \"m\"")?;
+    let n = v.get("n").and_then(Json::as_u64).context("result missing \"n\"")?;
+    let k = v.get("k").and_then(Json::as_u64).context("result missing \"k\"")?;
+    let system = v
+        .get("system")
+        .and_then(Json::as_str)
+        .context("result missing \"system\"")?
+        .to_string();
+    let sms = v
+        .get("sms")
+        .and_then(Json::as_u64)
+        .context("result missing \"sms\"")?;
+    let arr = v
+        .get("metrics")
+        .and_then(Json::as_array)
+        .context("result missing \"metrics\"")?;
+    let fields = arr
+        .iter()
+        .map(|j| j.as_str().context("metrics fields must be strings"))
+        .collect::<Result<Vec<&str>>>()?;
+    let metrics = persist::metrics_from_fields(&fields)?;
+    Ok(SweepResult {
+        workload,
+        gemm: Gemm::new(m, n, k),
+        system,
+        sms,
+        metrics,
+    })
+}
+
+/// Read, validate and merge per-shard summary files. Every shard of the
+/// sweep must be present exactly once, and all shards must carry the
+/// same sweep fingerprint (same spec + architecture), points total and
+/// cost-model version.
+pub fn merge_files(paths: &[PathBuf]) -> Result<MergedSweep> {
+    if paths.is_empty() {
+        bail!("merge: no shard files given");
+    }
+    let mut name: Option<String> = None;
+    let mut fingerprint: Option<String> = None;
+    let mut points_total: Option<usize> = None;
+    let mut cost_model: Option<u64> = None;
+    let mut docs: Vec<ShardDoc> = Vec::new();
+    for path in paths {
+        let loc = format!("shard file {}", path.display());
+        let text = fs::read_to_string(path).with_context(|| loc.clone())?;
+        let doc = Json::parse(&text).with_context(|| loc.clone())?;
+        let format = doc
+            .get("format")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("{loc}: missing shard format version"))?;
+        if format != u64::from(SHARD_FORMAT_VERSION) {
+            bail!("{loc}: shard format v{format}, this binary reads v{SHARD_FORMAT_VERSION}");
+        }
+        let this_name = doc
+            .get("sweep")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{loc}: missing sweep name"))?
+            .to_string();
+        let this_fp = doc
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{loc}: missing sweep fingerprint"))?
+            .to_string();
+        let this_total = doc
+            .get("points_total")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("{loc}: missing points_total"))? as usize;
+        let this_model = doc
+            .get("cost_model")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("{loc}: missing cost_model version"))?;
+        let shard_obj = doc
+            .get("shard")
+            .with_context(|| format!("{loc}: missing shard identity"))?;
+        let shard = ShardId {
+            index: shard_obj
+                .get("index")
+                .and_then(Json::as_u64)
+                .with_context(|| format!("{loc}: missing shard index"))? as usize,
+            count: shard_obj
+                .get("count")
+                .and_then(Json::as_u64)
+                .with_context(|| format!("{loc}: missing shard count"))? as usize,
+        };
+        if shard.count == 0 || shard.index >= shard.count {
+            bail!("{loc}: bad shard identity {shard}");
+        }
+        match &fingerprint {
+            None => {
+                name = Some(this_name);
+                fingerprint = Some(this_fp);
+                points_total = Some(this_total);
+                cost_model = Some(this_model);
+            }
+            Some(fp) => {
+                if *fp != this_fp {
+                    bail!(
+                        "{loc}: sweep fingerprint {this_fp} does not match the first \
+                         shard's {fp} — shards come from different spec/arch"
+                    );
+                }
+                if points_total != Some(this_total) {
+                    bail!("{loc}: points_total {this_total} disagrees with the first shard");
+                }
+                if cost_model != Some(this_model) {
+                    bail!("{loc}: cost-model version disagrees with the first shard");
+                }
+            }
+        }
+        let rows = doc
+            .get("results")
+            .and_then(Json::as_array)
+            .with_context(|| format!("{loc}: missing results"))?;
+        let expect = shard.len_of(this_total);
+        if rows.len() != expect {
+            bail!(
+                "{loc}: shard {shard} carries {} results, expected {expect}",
+                rows.len()
+            );
+        }
+        let results = rows
+            .iter()
+            .map(result_from_json)
+            .collect::<Result<Vec<SweepResult>>>()
+            .with_context(|| loc.clone())?;
+        docs.push(ShardDoc { shard, results });
+    }
+
+    let count = docs[0].shard.count;
+    if docs.iter().any(|d| d.shard.count != count) {
+        bail!("merge: shard files disagree on the shard count");
+    }
+    if docs.len() != count {
+        bail!(
+            "merge: got {} shard file(s) for a {count}-way sweep — every shard \
+             0..{count} is required exactly once",
+            docs.len()
+        );
+    }
+    let mut by_index: Vec<Option<ShardDoc>> = (0..count).map(|_| None).collect();
+    for d in docs {
+        let i = d.shard.index;
+        if by_index[i].is_some() {
+            bail!("merge: shard {i}/{count} given more than once");
+        }
+        by_index[i] = Some(d);
+    }
+    let shards: Vec<ShardDoc> = by_index
+        .into_iter()
+        .map(|d| d.expect("every index filled (checked above)"))
+        .collect();
+
+    // Re-interleave: global point g was computed by shard g % count at
+    // local position g / count.
+    let total = points_total.unwrap_or(0);
+    let mut results = Vec::with_capacity(total);
+    for g in 0..total {
+        results.push(shards[g % count].results[g / count].clone());
+    }
+    Ok(MergedSweep {
+        spec_name: name.expect("first shard recorded"),
+        fingerprint: fingerprint.expect("first shard recorded"),
+        shard_count: count,
+        cost_model: cost_model.expect("first shard recorded"),
+        results,
+    })
+}
+
+/// Machine-readable summary of a merged sweep (the merged counterpart
+/// of [`super::output::json_summary`]).
+pub fn merged_json(m: &MergedSweep) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"sweep\": \"{}\",\n", json_escape(&m.spec_name)));
+    out.push_str(&format!("  \"merged_from_shards\": {},\n", m.shard_count));
+    out.push_str(&format!(
+        "  \"fingerprint\": \"{}\",\n",
+        json_escape(&m.fingerprint)
+    ));
+    out.push_str(&format!("  \"cost_model\": {},\n", m.cost_model));
+    out.push_str(&format!("  \"points\": {},\n", m.results.len()));
+    out.push_str("  \"systems\": [\n");
+    let summaries = summarize(&m.results);
+    for (i, s) in summaries.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"system\": \"{}\", \"sms\": {}, \"points\": {}, \
+             \"geomean_tops_w\": {}, \"geomean_gflops\": {}, \
+             \"mean_utilization\": {}, \"peak_gflops\": {}}}{}\n",
+            json_escape(&s.system),
+            s.sms,
+            s.points,
+            json_f64(s.geomean_tops_w),
+            json_f64(s.geomean_gflops),
+            json_f64(s.mean_utilization),
+            json_f64(s.peak_gflops),
+            if i + 1 < summaries.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::CimPrimitive;
+    use crate::coordinator::jobs::SystemSpec;
+    use crate::sweep::engine::SweepEngine;
+    use crate::sweep::output;
+
+    fn spec() -> SweepSpec {
+        SweepSpec::new("unit-shard")
+            .workload(
+                "w",
+                vec![
+                    Gemm::new(32, 32, 32),
+                    Gemm::new(64, 64, 64),
+                    Gemm::new(96, 96, 96),
+                ],
+            )
+            .systems(vec![
+                SystemSpec::Baseline,
+                SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            ])
+    }
+
+    #[test]
+    fn shard_id_parsing() {
+        assert_eq!(ShardId::parse("0/2").unwrap(), ShardId { index: 0, count: 2 });
+        assert_eq!(ShardId::parse("3/4").unwrap(), ShardId { index: 3, count: 4 });
+        for bad in ["", "2", "2/2", "5/4", "a/2", "1/b", "1/0", "-1/2"] {
+            assert!(ShardId::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        assert_eq!(ShardId { index: 1, count: 4 }.file_tag(), "shard1of4");
+        assert_eq!(ShardId { index: 1, count: 4 }.to_string(), "1/4");
+    }
+
+    #[test]
+    fn slices_partition_the_job_list() {
+        let jobs: Vec<u32> = (0..11).collect();
+        for count in 1..=4usize {
+            let mut seen: Vec<u32> = Vec::new();
+            for index in 0..count {
+                let shard = ShardId { index, count };
+                let slice = shard.slice(&jobs);
+                assert_eq!(slice.len(), shard.len_of(jobs.len()), "{shard}");
+                seen.extend(&slice);
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, jobs, "count={count}: shards must partition");
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_axis() {
+        let arch = Architecture::default_sm();
+        let base = sweep_fingerprint(&arch, &spec());
+        assert_eq!(base, sweep_fingerprint(&arch, &spec()), "deterministic");
+        let mut s = spec();
+        s.workloads[0].1.pop();
+        assert_ne!(base, sweep_fingerprint(&arch, &s));
+        let mut s = spec();
+        s.systems.pop();
+        assert_ne!(base, sweep_fingerprint(&arch, &s));
+        let mut s = spec();
+        s.sm_counts = vec![1, 4];
+        assert_ne!(base, sweep_fingerprint(&arch, &s));
+        let s = spec().mapper(crate::sweep::spec::MapperChoice::PriorityDuplication);
+        assert_ne!(base, sweep_fingerprint(&arch, &s));
+    }
+
+    #[test]
+    fn two_shards_merge_byte_identical_to_unsharded() {
+        let arch = Architecture::default_sm();
+        let spec = spec();
+        let fp = sweep_fingerprint(&arch, &spec);
+        let jobs = spec.jobs();
+
+        let full = SweepEngine::new(arch.clone()).run_spec(&spec);
+        let full_csv = output::results_csv(&full.results).unwrap().encode();
+
+        let dir = std::env::temp_dir().join("www_cim_shard_unit");
+        let _ = fs::remove_dir_all(&dir);
+        let mut paths = Vec::new();
+        for index in 0..2 {
+            let shard = ShardId { index, count: 2 };
+            let engine = SweepEngine::new(arch.clone());
+            let run = engine.run_jobs_named(&spec.name, &shard.slice(&jobs));
+            let path = dir.join(format!("{}.json", shard.file_tag()));
+            write_shard_json(&run, shard, &fp, jobs.len(), &path).unwrap();
+            paths.push(path);
+        }
+
+        // Merge order must not matter.
+        paths.reverse();
+        let merged = merge_files(&paths).unwrap();
+        assert_eq!(merged.spec_name, "unit-shard");
+        assert_eq!(merged.shard_count, 2);
+        assert_eq!(merged.results.len(), full.results.len());
+        for (a, b) in merged.results.iter().zip(&full.results) {
+            assert_eq!(a.metrics, b.metrics);
+            assert_eq!(a.system, b.system);
+            assert_eq!(a.gemm, b.gemm);
+            assert_eq!(a.workload, b.workload);
+        }
+        let merged_csv = output::results_csv(&merged.results).unwrap().encode();
+        assert_eq!(merged_csv, full_csv, "merged CSV must be byte-identical");
+
+        let j = merged_json(&merged);
+        assert!(j.contains("\"merged_from_shards\": 2"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_and_incomplete_shards() {
+        let arch = Architecture::default_sm();
+        let spec_a = spec();
+        let spec_b = spec().sm_counts(vec![1, 2]);
+        let dir = std::env::temp_dir().join("www_cim_shard_unit_reject");
+        let _ = fs::remove_dir_all(&dir);
+
+        let mk = |spec: &SweepSpec, shard: ShardId, tag: &str| -> PathBuf {
+            let jobs = spec.jobs();
+            let engine = SweepEngine::new(arch.clone());
+            let run = engine.run_jobs_named(&spec.name, &shard.slice(&jobs));
+            let path = dir.join(format!("{tag}.json"));
+            write_shard_json(
+                &run,
+                shard,
+                &sweep_fingerprint(&arch, spec),
+                jobs.len(),
+                &path,
+            )
+            .unwrap();
+            path
+        };
+
+        let a0 = mk(&spec_a, ShardId { index: 0, count: 2 }, "a0");
+        let a1 = mk(&spec_a, ShardId { index: 1, count: 2 }, "a1");
+        let b1 = mk(&spec_b, ShardId { index: 1, count: 2 }, "b1");
+
+        // Different spec -> different fingerprint -> refused.
+        let err = merge_files(&[a0.clone(), b1]).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        // Missing shard -> refused.
+        let err = merge_files(&[a0.clone()]).unwrap_err();
+        assert!(format!("{err:#}").contains("required exactly once"), "{err:#}");
+        // Duplicate shard -> refused.
+        let err = merge_files(&[a0.clone(), a0.clone()]).unwrap_err();
+        assert!(format!("{err:#}").contains("more than once"), "{err:#}");
+        // The healthy pair still merges.
+        assert!(merge_files(&[a0, a1]).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -31,12 +31,17 @@ pub enum MapperChoice {
 }
 
 impl MapperChoice {
-    /// Stable fingerprint fragment for cache keys.
+    /// Stable fingerprint fragment for cache keys. Prefixed with
+    /// [`crate::mapping::MAPPER_VERSION`]: cached metrics depend on the
+    /// mapper *implementation*, not just its name, and keys now outlive
+    /// the process (`--cache`) — a changed algorithm must never hit an
+    /// older implementation's persisted entries.
     pub fn fingerprint(&self) -> String {
+        let v = crate::mapping::MAPPER_VERSION;
         match self {
-            MapperChoice::Priority => "priority".to_string(),
-            MapperChoice::PriorityDuplication => "priority+dup".to_string(),
-            MapperChoice::Heuristic { budget, seed } => format!("heuristic:{budget}:{seed}"),
+            MapperChoice::Priority => format!("v{v}:priority"),
+            MapperChoice::PriorityDuplication => format!("v{v}:priority+dup"),
+            MapperChoice::Heuristic { budget, seed } => format!("v{v}:heuristic:{budget}:{seed}"),
         }
     }
 

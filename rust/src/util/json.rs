@@ -1,0 +1,358 @@
+//! Minimal JSON reader (serde_json is unavailable offline).
+//!
+//! The sweep subsystem emits JSON with hand-rolled encoders
+//! ([`crate::sweep::output`], [`crate::sweep::shard`]); this is the
+//! matching reader, used by `repro merge` to consume per-shard summary
+//! files. It parses the full JSON grammar (objects, arrays, strings
+//! with escapes, numbers, literals) into a small [`Json`] tree with
+//! typed accessors. Object keys keep their document order.
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document.
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser {
+            chars: text.chars().collect(),
+            pos: 0,
+            depth: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.chars.len() {
+            bail!("json: trailing characters at offset {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for missing keys and non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Integer accessor: the number must be a non-negative integer
+    /// small enough that the f64 carrier held it exactly.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.007_199_254_740_992e15 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Maximum container nesting. Malformed or hostile input (e.g. a
+/// truncated shard file full of `[`) must surface as a parse error,
+/// not a recursion-driven stack overflow.
+const MAX_DEPTH: usize = 128;
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+    depth: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t' | '\n' | '\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, want: char) -> Result<()> {
+        match self.bump() {
+            Some(c) if c == want => Ok(()),
+            Some(c) => bail!("json: expected {want:?}, found {c:?} at offset {}", self.pos - 1),
+            None => bail!("json: expected {want:?}, found end of input"),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
+        for want in word.chars() {
+            match self.bump() {
+                Some(c) if c == want => {}
+                _ => bail!("json: malformed literal (expected {word:?})"),
+            }
+        }
+        Ok(value)
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some('{') => self.nested(Self::object),
+            Some('[') => self.nested(Self::array),
+            Some('"') => Ok(Json::Str(self.string()?)),
+            Some('t') => self.literal("true", Json::Bool(true)),
+            Some('f') => self.literal("false", Json::Bool(false)),
+            Some('n') => self.literal("null", Json::Null),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("json: unexpected character {c:?} at offset {}", self.pos),
+            None => bail!("json: unexpected end of input"),
+        }
+    }
+
+    fn nested(&mut self, f: fn(&mut Self) -> Result<Json>) -> Result<Json> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("json: nesting deeper than {MAX_DEPTH} levels");
+        }
+        let v = f(self);
+        self.depth -= 1;
+        v
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect('{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some('}') {
+            self.bump();
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(':')?;
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.bump() {
+                Some(',') => continue,
+                Some('}') => return Ok(Json::Obj(fields)),
+                Some(c) => bail!("json: expected ',' or '}}' in object, found {c:?}"),
+                None => bail!("json: unterminated object"),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect('[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(']') {
+            self.bump();
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(',') => continue,
+                Some(']') => return Ok(Json::Arr(items)),
+                Some(c) => bail!("json: expected ',' or ']' in array, found {c:?}"),
+                None => bail!("json: unterminated array"),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => bail!("json: unterminated string"),
+                Some('"') => return Ok(out),
+                Some('\\') => match self.bump() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('/') => out.push('/'),
+                    Some('b') => out.push('\u{0008}'),
+                    Some('f') => out.push('\u{000C}'),
+                    Some('n') => out.push('\n'),
+                    Some('r') => out.push('\r'),
+                    Some('t') => out.push('\t'),
+                    Some('u') => {
+                        let hi = self.hex4()?;
+                        let code = if (0xD800..0xDC00).contains(&hi) {
+                            // Surrogate pair: a low surrogate must follow.
+                            if self.bump() != Some('\\') || self.bump() != Some('u') {
+                                bail!("json: unpaired high surrogate \\u{hi:04x}");
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                bail!("json: invalid low surrogate \\u{lo:04x}");
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else {
+                            hi
+                        };
+                        match char::from_u32(code) {
+                            Some(c) => out.push(c),
+                            None => bail!("json: invalid unicode escape \\u{code:04x}"),
+                        }
+                    }
+                    Some(c) => bail!("json: invalid escape \\{c}"),
+                    None => bail!("json: unterminated escape"),
+                },
+                Some(c) => out.push(c),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v: u32 = 0;
+        for _ in 0..4 {
+            let c = match self.bump() {
+                Some(c) => c,
+                None => bail!("json: unterminated \\u escape"),
+            };
+            let d = match c.to_digit(16) {
+                Some(d) => d,
+                None => bail!("json: non-hex digit {c:?} in \\u escape"),
+            };
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some('-' | '+' | '.' | 'e' | 'E' | '0'..='9')
+        ) {
+            self.pos += 1;
+        }
+        let text: String = self.chars[start..self.pos].iter().collect();
+        match text.parse::<f64>() {
+            Ok(n) => Ok(Json::Num(n)),
+            Err(_) => bail!("json: malformed number {text:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(
+            Json::parse("\"hi\"").unwrap(),
+            Json::Str("hi".to_string())
+        );
+    }
+
+    #[test]
+    fn nested_document_with_accessors() {
+        let doc = Json::parse(
+            r#"{
+                "name": "sweep",
+                "points": 12,
+                "shard": {"index": 0, "count": 2},
+                "rows": [["a", "b"], []],
+                "ok": true,
+                "missing": null
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").and_then(Json::as_str), Some("sweep"));
+        assert_eq!(doc.get("points").and_then(Json::as_u64), Some(12));
+        let shard = doc.get("shard").unwrap();
+        assert_eq!(shard.get("count").and_then(Json::as_u64), Some(2));
+        let rows = doc.get("rows").and_then(Json::as_array).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_array().unwrap().len(), 2);
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(doc.get("missing"), Some(&Json::Null));
+        assert_eq!(doc.get("absent"), None);
+    }
+
+    #[test]
+    fn string_escapes_round_trip_the_output_encoder() {
+        // The shard/summary writers escape with output::json_escape;
+        // this reader must invert it exactly.
+        let doc = Json::parse(r#""a\"b\\c\n\tAé""#).unwrap();
+        assert_eq!(doc.as_str(), Some("a\"b\\c\n\tA\u{e9}"));
+    }
+
+    #[test]
+    fn surrogate_pairs() {
+        let doc = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(doc.as_str(), Some("\u{1F600}"));
+        assert!(Json::parse(r#""\ud83d""#).is_err());
+    }
+
+    #[test]
+    fn malformed_documents_error() {
+        for bad in [
+            "", "{", "[1,", "{\"a\"}", "{\"a\":}", "tru", "1 2", "\"", "{\"a\":1,}",
+            "[1]]",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn as_u64_rejects_non_integers() {
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("-2").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("7").unwrap().as_u64(), Some(7));
+    }
+
+    #[test]
+    fn deep_nesting_is_a_parse_error_not_a_stack_overflow() {
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(format!("{err:#}").contains("nesting"), "{err:#}");
+        // ...while reasonable nesting still parses.
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+    }
+}

@@ -5,6 +5,8 @@
 //! * [`stats`] — summary statistics used by the experiment harnesses.
 //! * [`table`] — ASCII table rendering for paper-style output.
 //! * [`csv`] — CSV writers for `results/`.
+//! * [`json`] — minimal JSON reader (serde_json replacement) for the
+//!   shard-merge tool.
 //! * [`check`] — mini property-testing harness (proptest replacement).
 //! * [`cli`] — subcommand/flag parser (clap replacement).
 //! * [`pool`] — scoped worker pool (tokio/rayon replacement).
@@ -15,6 +17,7 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod csv;
+pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod stats;

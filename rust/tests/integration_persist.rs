@@ -1,0 +1,266 @@
+//! Integration tests for the persistence + sharding layer (ISSUE 2):
+//! persisted-cache round trips (warm-from-disk runs bit-identical to
+//! cold ones, zero misses), cost-model-version invalidation at the
+//! engine level, and shard + merge reproducing the unsharded sweep
+//! byte-for-byte.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use www_cim::arch::{Architecture, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::coordinator::jobs::SystemSpec;
+use www_cim::cost::COST_MODEL_VERSION;
+use www_cim::sweep::{
+    output, persist, shard, sweep_fingerprint, CacheLoad, EvalCache, SweepEngine, SweepSpec,
+};
+use www_cim::util::check::{check, Config};
+use www_cim::util::rng::Rng;
+use www_cim::workload::{synthetic, Gemm};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("www_cim_persist_it_{tag}"))
+}
+
+fn random_gemm(rng: &mut Rng) -> Gemm {
+    let dim = |rng: &mut Rng| -> u64 {
+        match rng.gen_range(0, 3) {
+            0 => 1 << rng.gen_range(0, 12),
+            1 => rng.gen_range(1, 4097),
+            _ => rng.gen_range(1, 64),
+        }
+    };
+    Gemm::new(dim(rng), dim(rng), dim(rng))
+}
+
+fn random_spec(rng: &mut Rng) -> SystemSpec {
+    let prim = CimPrimitive::all()[rng.index(4)].clone();
+    match rng.gen_range(0, 4) {
+        0 => SystemSpec::Baseline,
+        1 => SystemSpec::CimAtRf(prim),
+        2 => SystemSpec::CimAtSmem(prim, SmemConfig::ConfigA),
+        _ => SystemSpec::CimAtSmem(prim, SmemConfig::ConfigB),
+    }
+}
+
+/// ISSUE property: save → load → warm run is bit-identical to the cold
+/// run that wrote the cache, with zero warm misses — for random grids.
+#[test]
+fn prop_persisted_cache_round_trip() {
+    let arch = Architecture::default_sm();
+    let dir = tmp_dir("prop");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut case = 0u32;
+    check(
+        Config::default().cases(12),
+        "save -> load -> warm == cold",
+        |rng| {
+            case += 1;
+            let path = dir.join(format!("cache-{case}.bin"));
+            let gemms: Vec<Gemm> = (0..(1 + rng.index(5))).map(|_| random_gemm(rng)).collect();
+            let spec = SweepSpec::new("prop")
+                .workload("w", gemms)
+                .systems(vec![random_spec(rng), random_spec(rng)]);
+
+            let cold_engine = SweepEngine::new(arch.clone()).threads(1);
+            let cold = cold_engine.run_spec(&spec);
+            persist::save(cold_engine.cache(), &path).map_err(|e| format!("save: {e:#}"))?;
+
+            let warm_cache = Arc::new(EvalCache::new());
+            match persist::load_into(&warm_cache, &path).map_err(|e| format!("load: {e:#}"))? {
+                CacheLoad::Loaded { entries } => {
+                    if entries as u64 != cold.cache_misses {
+                        return Err(format!(
+                            "persisted {entries} entries, cold run computed {}",
+                            cold.cache_misses
+                        ));
+                    }
+                }
+                other => return Err(format!("expected Loaded, got {other:?}")),
+            }
+            let warm_engine = SweepEngine::with_cache(arch.clone(), warm_cache).threads(1);
+            let warm = warm_engine.run_spec(&spec);
+            if warm.cache_misses != 0 {
+                return Err(format!(
+                    "warm-from-disk run recomputed {} points",
+                    warm.cache_misses
+                ));
+            }
+            for (a, b) in cold.results.iter().zip(&warm.results) {
+                if a.metrics != b.metrics || a.system != b.system {
+                    return Err(format!("{} on {}: warm != cold", a.gemm, a.system));
+                }
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The cross-process warm-start contract on a realistic grid: every
+/// point of a second process's identical sweep is served from the
+/// persisted file, and re-saving yields a byte-identical cache file.
+#[test]
+fn warm_start_across_processes_zero_misses() {
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("sweep")
+        .workload("synthetic", synthetic::dataset(7, 30))
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            SystemSpec::CimAtSmem(CimPrimitive::analog_8t(), SmemConfig::ConfigB),
+        ]);
+    let dir = tmp_dir("warm");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("cache.bin");
+
+    // "Process 1": cold sweep, persist.
+    let p1 = SweepEngine::new(arch.clone());
+    let cold = p1.run_spec(&spec);
+    assert!(cold.cache_misses > 0);
+    persist::save(p1.cache(), &path).unwrap();
+    let file1 = std::fs::read_to_string(&path).unwrap();
+
+    // "Process 2": fresh engine, warm cache from disk.
+    let cache = Arc::new(EvalCache::new());
+    persist::load_into(&cache, &path).unwrap();
+    let p2 = SweepEngine::with_cache(arch, cache);
+    let warm = p2.run_spec(&spec);
+    assert_eq!(warm.cache_misses, 0, "cross-process rerun must be all hits");
+    assert_eq!(warm.cache_hits as usize, spec.n_points());
+    for (a, b) in cold.results.iter().zip(&warm.results) {
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    // Determinism: persisting the warmed cache reproduces the file.
+    persist::save(p2.cache(), &path).unwrap();
+    let file2 = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(file1, file2, "cache file must be stable across save cycles");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A bumped cost-model version must invalidate the persisted cache at
+/// the engine level: the next run recomputes everything instead of
+/// serving stale metrics.
+#[test]
+fn stale_cost_model_forces_recomputation() {
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("stale")
+        .workload("w", vec![Gemm::new(64, 64, 64), Gemm::new(256, 256, 256)])
+        .systems(vec![SystemSpec::CimAtRf(CimPrimitive::digital_6t())]);
+    let dir = tmp_dir("stale");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("cache.bin");
+
+    let p1 = SweepEngine::new(arch.clone());
+    p1.run_spec(&spec);
+    persist::save(p1.cache(), &path).unwrap();
+
+    // Pretend the file came from a binary with a newer cost model.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let stale = text.replacen(
+        &format!("cost-model={COST_MODEL_VERSION}"),
+        &format!("cost-model={}", COST_MODEL_VERSION + 1),
+        1,
+    );
+    assert_ne!(text, stale);
+    std::fs::write(&path, stale).unwrap();
+
+    let cache = Arc::new(EvalCache::new());
+    match persist::load_into(&cache, &path).unwrap() {
+        CacheLoad::Discarded { .. } => {}
+        other => panic!("version-bumped cache must be discarded, got {other:?}"),
+    }
+    let p2 = SweepEngine::with_cache(arch, cache);
+    let rerun = p2.run_spec(&spec);
+    assert_eq!(
+        rerun.cache_misses as usize,
+        spec.n_points(),
+        "a discarded cache must recompute every point"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `n` shards, run by `n` independent engines, merged via the shard
+/// summaries == the unsharded sweep — byte-identical CSV included.
+#[test]
+fn shard_merge_reproduces_unsharded_sweep() {
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("sweep")
+        .workload("synthetic", synthetic::dataset(11, 13))
+        .workload("fixed", vec![Gemm::new(512, 1024, 1024), Gemm::new(1, 256, 512)])
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_8t()),
+            SystemSpec::CimAtSmem(CimPrimitive::analog_6t(), SmemConfig::ConfigA),
+        ])
+        .sm_counts(vec![1, 4]);
+    let fp = sweep_fingerprint(&arch, &spec);
+    let jobs = spec.jobs();
+    let full = SweepEngine::new(arch.clone()).run_spec(&spec);
+    let full_csv = output::results_csv(&full.results).unwrap().encode();
+
+    let dir = tmp_dir("merge");
+    let _ = std::fs::remove_dir_all(&dir);
+    for count in [2usize, 3] {
+        let mut paths = Vec::new();
+        for index in 0..count {
+            let id = shard::ShardId { index, count };
+            // Each shard runs in its own engine, as separate processes
+            // (or hosts) would.
+            let engine = SweepEngine::new(arch.clone());
+            let run = engine.run_jobs_named(&spec.name, &id.slice(&jobs));
+            let path = dir.join(format!("{count}way-{}.json", id.file_tag()));
+            shard::write_shard_json(&run, id, &fp, jobs.len(), &path).unwrap();
+            paths.push(path);
+        }
+        let merged = shard::merge_files(&paths).unwrap();
+        assert_eq!(merged.shard_count, count);
+        assert_eq!(merged.results.len(), full.results.len());
+        let merged_csv = output::results_csv(&merged.results).unwrap().encode();
+        assert_eq!(
+            merged_csv, full_csv,
+            "{count}-way merge must be byte-identical to the unsharded CSV"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Sharding composes with the persistent cache: shards sharing one
+/// cache file leave a cache that fully warms the unsharded sweep.
+#[test]
+fn shards_prime_the_persistent_cache_for_full_runs() {
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("compose")
+        .workload("synthetic", synthetic::dataset(3, 10))
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+        ]);
+    let jobs = spec.jobs();
+    let dir = tmp_dir("compose");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("cache.bin");
+
+    for index in 0..2usize {
+        let id = shard::ShardId { index, count: 2 };
+        let cache = Arc::new(EvalCache::new());
+        persist::load_into(&cache, &path).unwrap();
+        let engine = SweepEngine::with_cache(arch.clone(), cache);
+        engine.run_jobs_named(&spec.name, &id.slice(&jobs));
+        persist::save(engine.cache(), &path).unwrap();
+    }
+
+    let cache = Arc::new(EvalCache::new());
+    match persist::load_into(&cache, &path).unwrap() {
+        CacheLoad::Loaded { entries } => assert!(entries > 0),
+        other => panic!("expected Loaded, got {other:?}"),
+    }
+    let engine = SweepEngine::with_cache(arch, cache);
+    let run = engine.run_spec(&spec);
+    assert_eq!(
+        run.cache_misses, 0,
+        "two half-sweeps must fully warm the whole grid"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
