@@ -1,19 +1,24 @@
 //! Sweep-engine benchmark: a ≥500-point design-space grid evaluated
 //! (a) cold on one thread, (b) cold on the full worker pool,
 //! (c) warm (fully memoized), and (d) warm from a persisted cache file
-//! (load included — the `--cache` cross-process path). The acceptance
-//! numbers for the DSE subsystem: parallelism and the memo cache must
-//! both be measurable wins over the cold single-threaded run.
+//! (load included — the `--cache` cross-process path), plus (e) the
+//! mapping-aware cache's headline win: an exhaustive-mapper point (the
+//! `optimality` axis every `repro experiment all` run pays for) cold vs
+//! warm-from-disk. The acceptance numbers for the DSE subsystem:
+//! parallelism and the memo cache must both be measurable wins over the
+//! cold single-threaded run, and the warm exhaustive point must be
+//! orders of magnitude cheaper than the cold search it memoizes.
 
 use std::sync::Arc;
 
 use www_cim::arch::Architecture;
 use www_cim::cim::CimPrimitive;
 use www_cim::coordinator::jobs::SystemSpec;
-use www_cim::sweep::{persist, EvalCache, SweepEngine, SweepSpec};
+use www_cim::mapping::Objective;
+use www_cim::sweep::{persist, EvalCache, MapperChoice, SweepEngine, SweepJob, SweepSpec};
 use www_cim::util::bench::{black_box, Bencher};
 use www_cim::util::pool;
-use www_cim::workload::synthetic;
+use www_cim::workload::{synthetic, Gemm};
 
 fn grid_spec() -> SweepSpec {
     // 50 synthetic GEMMs x (1 baseline + 4 primitives x 3 integration
@@ -89,6 +94,48 @@ fn main() {
         )
         .mean();
     let _ = std::fs::remove_file(&cache_file);
+
+    // (e) exhaustive-mapper point, cold vs warm-from-disk: the cache
+    // now memoizes (mapping, metrics), so a warm `repro experiment all`
+    // skips the whole exhaustive search — the single most expensive
+    // evaluation any experiment performs.
+    let ex_job = SweepJob {
+        workload: "optimality".to_string(),
+        gemm: Gemm::new(256, 512, 512),
+        spec: SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+        sms: 1,
+        mapper: MapperChoice::Exhaustive {
+            objective: Objective::Energy,
+        },
+    };
+    let cold_ex = b
+        .bench("sweep/exhaustive-point/cold", &mut || {
+            let engine = SweepEngine::new(arch.clone()).threads(1);
+            black_box(engine.evaluate(&ex_job));
+        })
+        .mean();
+    let ex_cache_file = std::env::temp_dir().join("www_cim_sweep_bench_excache.bin");
+    let primed = SweepEngine::new(arch.clone()).threads(1);
+    primed.evaluate(&ex_job);
+    persist::save(primed.cache(), &ex_cache_file).expect("persist exhaustive cache");
+    let warm_ex = b
+        .bench("sweep/exhaustive-point/warm-from-disk", &mut || {
+            let cache = Arc::new(EvalCache::new());
+            persist::load_into(&cache, &ex_cache_file).expect("load exhaustive cache");
+            let engine = SweepEngine::with_cache(arch.clone(), cache).threads(1);
+            black_box(engine.evaluate(&ex_job));
+        })
+        .mean();
+    let _ = std::fs::remove_file(&ex_cache_file);
+    println!(
+        "exhaustive point: cold = {:?}, warm-from-disk = {:?} ({:.0}x)",
+        cold_ex,
+        warm_ex,
+        cold_ex.as_secs_f64() / warm_ex.as_secs_f64().max(1e-12)
+    );
+    if warm_ex >= cold_ex {
+        println!("WARNING: warm exhaustive point was not faster than the cold search");
+    }
 
     println!(
         "\nspeedup vs cold single-thread: cold x{} = {:.2}x, warm = {:.2}x, \

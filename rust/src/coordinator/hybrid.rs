@@ -14,8 +14,8 @@ use crate::arch::{Architecture, CimSystem};
 use crate::cost::{BaselineModel, CostModel, Metrics};
 use crate::mapping::PriorityMapper;
 use crate::sweep::{
-    arch_fingerprint, point_key, spec_fingerprint, system_fingerprint, EvalCache, MapperChoice,
-    BASELINE_MAPPER_FP,
+    arch_fingerprint, point_key, spec_fingerprint, system_fingerprint, CacheEntry, EvalCache,
+    MapperChoice, BASELINE_MAPPER_FP,
 };
 use crate::workload::{Gemm, Workload};
 
@@ -147,23 +147,34 @@ impl<'a> HybridRouter<'a> {
     }
 
     /// Price one layer on the CiM engine (memoized when a cache is
-    /// attached; key-compatible with [`crate::sweep::SweepEngine`]).
+    /// attached; key- and entry-compatible with
+    /// [`crate::sweep::SweepEngine`] — a miss stores the mapping next
+    /// to the metrics, and a hit on an engine-written entry never
+    /// re-runs the mapper).
     pub fn eval_cim(&self, gemm: &Gemm) -> Metrics {
-        let compute = || {
-            CostModel::new(self.sys).evaluate(gemm, &PriorityMapper::new(self.sys).map(gemm))
-        };
         match &self.cache {
-            None => compute(),
-            Some(rc) => rc.cache.get_or_compute(&rc.cim_point, *gemm, compute),
+            None => {
+                CostModel::new(self.sys).evaluate(gemm, &PriorityMapper::new(self.sys).map(gemm))
+            }
+            Some(rc) => rc.cache.get_or_compute_metrics(&rc.cim_point, *gemm, || {
+                rc.cache.note_mapper_call();
+                let mapping = PriorityMapper::new(self.sys).map(gemm);
+                let metrics = CostModel::new(self.sys).evaluate(gemm, &mapping);
+                CacheEntry {
+                    mapping: Some(Arc::new(mapping)),
+                    metrics,
+                }
+            }),
         }
     }
 
     /// Price one layer on the tensor-core baseline (memoized likewise).
     pub fn eval_tc(&self, gemm: &Gemm) -> Metrics {
-        let compute = || BaselineModel::new(self.arch).evaluate(gemm);
         match &self.cache {
-            None => compute(),
-            Some(rc) => rc.cache.get_or_compute(&rc.tc_point, *gemm, compute),
+            None => BaselineModel::new(self.arch).evaluate(gemm),
+            Some(rc) => rc.cache.get_or_compute_metrics(&rc.tc_point, *gemm, || {
+                CacheEntry::metrics_only(BaselineModel::new(self.arch).evaluate(gemm))
+            }),
         }
     }
 

@@ -5,17 +5,21 @@
 //! * `ablation-order` — greedy DRAM-level loop ordering vs fixed
 //!   orders, quantifying what the §IV-B "Deciding loop order" greedy
 //!   step buys.
+//!
+//! Both axes are expressed as [`MapperChoice`] variants
+//! (`PriorityThreshold`, `PriorityFixedOrder`) and evaluated through
+//! the shared sweep engine, so the ablation grids are memoized and
+//! persistently cacheable like every other experiment.
 
 use anyhow::Result;
 
-use super::common::Ctx;
-use crate::arch::{CimSystem, MemLevel};
+use super::common::{jobs_for, Ctx};
+use crate::arch::SmemConfig;
 use crate::cim::CimPrimitive;
-use crate::cost::CostModel;
-use crate::mapping::loopnest::{Block, Dim, Loop, LoopNest};
-use crate::mapping::{Mapping, PriorityMapper};
+use crate::coordinator::jobs::SystemSpec;
+use crate::mapping::loopnest::Dim;
+use crate::sweep::MapperChoice;
 use crate::util::csv::Csv;
-use crate::util::pool;
 use crate::util::stats::geomean;
 use crate::util::table::Table;
 use crate::workload::synthetic;
@@ -29,19 +33,18 @@ pub fn run_threshold(ctx: &Ctx) -> Result<()> {
 
     // SMEM configB has the largest primitive pool -> the threshold
     // matters most there (Fig 6's skew pathology).
-    let sys = CimSystem::at_smem(
-        &ctx.arch,
-        CimPrimitive::digital_6t(),
-        crate::arch::SmemConfig::ConfigB,
-    );
+    let spec = SystemSpec::CimAtSmem(CimPrimitive::digital_6t(), SmemConfig::ConfigB);
     for threshold in [1u64, 2, 4, 8, 16, 64] {
-        let rows = pool::map_parallel(&dataset, ctx.threads, |g| {
-            let mapper = PriorityMapper::with_threshold(&sys, threshold);
-            CostModel::new(&sys).evaluate(g, &mapper.map(g))
-        });
-        let t: Vec<f64> = rows.iter().map(|m| m.tops_per_watt).collect();
-        let f: Vec<f64> = rows.iter().map(|m| m.gflops).collect();
-        let u = rows.iter().map(|m| m.utilization).sum::<f64>() / rows.len() as f64;
+        let jobs = jobs_for(
+            "threshold",
+            &dataset,
+            &spec,
+            &[MapperChoice::PriorityThreshold { threshold }],
+        );
+        let rows = ctx.run_aligned(&jobs);
+        let t: Vec<f64> = rows.iter().map(|r| r.metrics.tops_per_watt).collect();
+        let f: Vec<f64> = rows.iter().map(|r| r.metrics.gflops).collect();
+        let u = rows.iter().map(|r| r.metrics.utilization).sum::<f64>() / rows.len() as f64;
         table.row(vec![
             threshold.to_string(),
             format!("{:.3}", geomean(&t)),
@@ -63,47 +66,39 @@ pub fn run_threshold(ctx: &Ctx) -> Result<()> {
     )
 }
 
-/// Rebuild a mapping with a fixed DRAM-level loop order.
-fn with_fixed_order(m: &Mapping, order: [Dim; 3]) -> Mapping {
-    let b0 = &m.nest.blocks[0];
-    let factor = |d: Dim| b0.dim_factor(d);
-    let loops: Vec<Loop> = order
-        .iter()
-        .map(|&d| Loop::new(d, factor(d)))
-        .collect();
-    let mut blocks = m.nest.blocks.clone();
-    blocks[0] = Block::new(blocks[0].mem, loops);
-    Mapping {
-        gemm: m.gemm,
-        spatial: m.spatial,
-        nest: LoopNest::new(m.gemm, blocks),
-    }
-}
-
 pub fn run_order(ctx: &Ctx) -> Result<()> {
     let dataset = synthetic::dataset(ctx.seed, ctx.synthetic_size().min(300));
-    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let spec = SystemSpec::CimAtRf(CimPrimitive::digital_6t());
 
-    let variants: [(&str, Option<[Dim; 3]>); 4] = [
-        ("greedy (ours)", None),
-        ("fixed M,K,N", Some([Dim::M, Dim::K, Dim::N])),
-        ("fixed N,K,M", Some([Dim::N, Dim::K, Dim::M])),
-        ("fixed K,N,M", Some([Dim::K, Dim::N, Dim::M])),
+    let variants: [(&str, MapperChoice); 4] = [
+        ("greedy (ours)", MapperChoice::Priority),
+        (
+            "fixed M,K,N",
+            MapperChoice::PriorityFixedOrder {
+                order: [Dim::M, Dim::K, Dim::N],
+            },
+        ),
+        (
+            "fixed N,K,M",
+            MapperChoice::PriorityFixedOrder {
+                order: [Dim::N, Dim::K, Dim::M],
+            },
+        ),
+        (
+            "fixed K,N,M",
+            MapperChoice::PriorityFixedOrder {
+                order: [Dim::K, Dim::N, Dim::M],
+            },
+        ),
     ];
 
     let mut table = Table::new(vec!["order", "geomean TOPS/W", "geomean GFLOPS"]);
     let mut csv = Csv::new(vec!["order", "geo_topsw", "geo_gflops"]);
-    for (name, order) in variants {
-        let rows = pool::map_parallel(&dataset, ctx.threads, |g| {
-            let base = PriorityMapper::new(&sys).map(g);
-            let mapping = match order {
-                None => base,
-                Some(o) => with_fixed_order(&base, o),
-            };
-            CostModel::new(&sys).evaluate(g, &mapping)
-        });
-        let t: Vec<f64> = rows.iter().map(|m| m.tops_per_watt).collect();
-        let f: Vec<f64> = rows.iter().map(|m| m.gflops).collect();
+    for (name, mapper) in variants {
+        let jobs = jobs_for("order", &dataset, &spec, &[mapper]);
+        let rows = ctx.run_aligned(&jobs);
+        let t: Vec<f64> = rows.iter().map(|r| r.metrics.tops_per_watt).collect();
+        let f: Vec<f64> = rows.iter().map(|r| r.metrics.gflops).collect();
         table.row(vec![
             name.to_string(),
             format!("{:.3}", geomean(&t)),

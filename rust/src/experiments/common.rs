@@ -6,10 +6,36 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::arch::Architecture;
-use crate::coordinator::jobs::Grid;
-use crate::sweep::{EvalCache, SweepEngine};
+use crate::coordinator::jobs::{Grid, SystemSpec};
+use crate::sweep::{EvalCache, MapperChoice, SweepEngine, SweepJob, SweepResult};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
+use crate::workload::Gemm;
+
+/// Build the single-SM engine job list for one system over a GEMM
+/// list: one job per (GEMM, mapper), GEMM-major with the mappers
+/// interleaved per GEMM — consumers index the (order-checked) results
+/// as `mappers.len()`-sized groups per GEMM.
+pub fn jobs_for(
+    workload: &str,
+    gemms: &[Gemm],
+    spec: &SystemSpec,
+    mappers: &[MapperChoice],
+) -> Vec<SweepJob> {
+    let mut out = Vec::with_capacity(gemms.len() * mappers.len());
+    for g in gemms {
+        for mapper in mappers {
+            out.push(SweepJob {
+                workload: workload.to_string(),
+                gemm: *g,
+                spec: spec.clone(),
+                sms: 1,
+                mapper: *mapper,
+            });
+        }
+    }
+    out
+}
 
 /// Experiment execution context.
 #[derive(Debug, Clone)]
@@ -59,6 +85,31 @@ impl Ctx {
         SweepEngine::with_cache(self.arch.clone(), Arc::clone(&self.cache)).threads(self.threads)
     }
 
+    /// Run a job list through [`Ctx::engine`] and check that the
+    /// results align with the jobs — same length, same GEMM and SM
+    /// count per position — before returning them. Every experiment
+    /// that consumes engine output positionally goes through this, so
+    /// a cross-point engine reordering fails loudly instead of
+    /// silently misattributing rows. The check cannot distinguish two
+    /// jobs that differ *only* in mapper ([`SweepResult`] carries no
+    /// mapper identity); that last step rests on the engine's
+    /// order-preservation contract, which its own unit tests pin —
+    /// experiments add system-label or mapping-shape asserts where a
+    /// mapper swap would be observable.
+    pub fn run_aligned(&self, jobs: &[SweepJob]) -> Vec<SweepResult> {
+        let results = self.engine().run(jobs);
+        assert_eq!(
+            results.len(),
+            jobs.len(),
+            "engine must return one result per job"
+        );
+        for (i, (j, r)) in jobs.iter().zip(&results).enumerate() {
+            assert_eq!(j.gemm, r.gemm, "result {i} does not match its job");
+            assert_eq!(j.sms, r.sms, "result {i} does not match its job");
+        }
+        results
+    }
+
     /// Coordinator grid bound to the shared cache (for experiments that
     /// consume `EvalResult`-shaped output, e.g. the workload reports).
     pub fn grid(&self) -> Grid {
@@ -83,6 +134,27 @@ impl Ctx {
             println!("[cache] saved {n} design points -> {}", path.display());
         }
         Ok(())
+    }
+
+    /// One-line evaluation-cache accounting for the whole run. The CI
+    /// warm-cache pass greps it: a second `experiment all` over a
+    /// persisted cache must print `0 misses (100.0% hit rate), 0 mapper
+    /// call(s)` — every evaluated design point is served from the
+    /// persisted cache, none re-mapped. (Evaluations *outside* the
+    /// engine would be invisible here, so a companion CI check rejects
+    /// any direct cost-model use in `experiments/` at the source level.)
+    pub fn cache_stats_line(&self) -> String {
+        let (h, m) = (self.cache.hits(), self.cache.misses());
+        let total = h + m;
+        let rate = if total == 0 {
+            100.0
+        } else {
+            100.0 * h as f64 / total as f64
+        };
+        format!(
+            "[cache] run stats: {h} hits / {m} misses ({rate:.1}% hit rate), {} mapper call(s)",
+            self.cache.mapper_calls()
+        )
     }
 
     /// Synthetic dataset size honouring quick mode.

@@ -62,7 +62,9 @@ usage: repro <subcommand> [options]
   compare    --gemm MxNxK
   sweep      [--workloads all|real|bert,gptj,...|synthetic[:N]]
              [--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]
-             [--sms 1,2,4] [--threads N] [--mapper priority|dup|heuristic[:budget]]
+             [--sms 1,2,4] [--threads N]
+             [--mapper priority|priority:t<n>|dup|heuristic[:budget]|
+                       exhaustive[:energy|delay|edp]]
              [--seed N] [--out results] [--tag name] [--json]
              [--cache [results/cache.bin]] [--shard i/n]
              (defaults sweep the full zoo x 13 systems, >= 500 points;
@@ -362,6 +364,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     ctx.cache_path = cache_path_flag(args);
     ctx.load_persistent_cache()?;
     let result = experiments::run(id, &ctx);
+    // Run-level cache accounting: on a warm persisted cache this must
+    // read "0 misses (100.0% hit rate), 0 mapper call(s)" — the CI e2e
+    // step greps for it to prove no experiment bypasses the engine.
+    println!("{}", ctx.cache_stats_line());
     // Persist whatever was scored even if one experiment failed — the
     // cache entries themselves are valid. A save failure must not mask
     // the experiment's own error, so it is reported, not propagated.

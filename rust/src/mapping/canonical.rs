@@ -1,0 +1,294 @@
+//! Canonical, bit-exact serialized form of a [`Mapping`].
+//!
+//! Cache entries now persist the mapping alongside the metrics
+//! ([`crate::sweep::persist`]), so a `Mapping` needs a stable textual
+//! form with an exact round trip: `serialize → persist → load →
+//! re-serialize` must be byte-identical. Integers serialize in decimal;
+//! the one float field (`occupancy`) serializes as its IEEE-754 bit
+//! pattern in hex — the same discipline as the cache-key fingerprints
+//! ([`crate::sweep::cache::f64_bits_hex`]).
+//!
+//! The format is a single line with no whitespace or tabs (it embeds in
+//! the tab-separated cache file and in JSON strings):
+//!
+//! ```text
+//! g=512x32x256;s=1,2,256,16,1;occ=3fe5555555555555;n=DRAM[M4,K2]/SMEM[N2]/RF[N16,K64,M8]
+//! ```
+//!
+//! * `g`   — the GEMM as `MxNxK`;
+//! * `s`   — the spatial split `k_prims,n_prims,ku,nu,m_prims`;
+//! * `occ` — the occupancy bit pattern (16 hex digits);
+//! * `n`   — the loop nest, blocks outermost first, `/`-separated:
+//!   `LEVEL[loops]` with each loop `<dim><factor>` (factor-1 loops were
+//!   already dropped at construction).
+//!
+//! [`Mapping::fingerprint`] hashes the canonical form with the stable
+//! FNV-1a ([`crate::util::hash`]) and folds in
+//! [`super::MAPPER_VERSION`], so a mapper-algorithm change retires the
+//! fingerprints of every previously produced mapping.
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::MemLevel;
+use crate::util::hash::fnv1a;
+use crate::workload::Gemm;
+
+use super::loopnest::{Block, Dim, Loop, LoopNest};
+use super::spatial::CimSpatial;
+use super::{Mapping, MAPPER_VERSION};
+
+impl Mapping {
+    /// The canonical serialized form (see the module docs). Contains no
+    /// whitespace, tabs or quotes; equal mappings produce equal strings
+    /// and distinct mappings distinct strings (the fields written are
+    /// exactly the fields of the struct).
+    pub fn canonical(&self) -> String {
+        let mut out = String::with_capacity(96);
+        out.push_str(&format!("g={}x{}x{}", self.gemm.m, self.gemm.n, self.gemm.k));
+        let s = &self.spatial;
+        out.push_str(&format!(
+            ";s={},{},{},{},{}",
+            s.k_prims, s.n_prims, s.ku, s.nu, s.m_prims
+        ));
+        out.push_str(&format!(";occ={:016x}", self.occupancy.to_bits()));
+        out.push_str(";n=");
+        for (i, b) in self.nest.blocks.iter().enumerate() {
+            if i > 0 {
+                out.push('/');
+            }
+            out.push_str(b.mem.short_name());
+            out.push('[');
+            for (j, l) in b.loops.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(l.dim.name());
+                out.push_str(&l.factor.to_string());
+            }
+            out.push(']');
+        }
+        out
+    }
+
+    /// Parse a canonical form back into a `Mapping`. The inverse of
+    /// [`Mapping::canonical`]: `from_canonical(m.canonical()) == m`
+    /// bit-for-bit. Corrupt input fails with an error (never panics or
+    /// half-parses) so a damaged cache file is discarded, not trusted.
+    pub fn from_canonical(text: &str) -> Result<Mapping> {
+        let mut gemm: Option<Gemm> = None;
+        let mut spatial: Option<CimSpatial> = None;
+        let mut occupancy: Option<f64> = None;
+        let mut blocks: Option<Vec<Block>> = None;
+        for seg in text.split(';') {
+            let (key, val) = seg
+                .split_once('=')
+                .with_context(|| format!("mapping segment {seg:?} lacks '='"))?;
+            match key {
+                "g" => gemm = Some(parse_gemm(val)?),
+                "s" => spatial = Some(parse_spatial(val)?),
+                "occ" => occupancy = Some(parse_occupancy(val)?),
+                "n" => blocks = Some(parse_nest(val)?),
+                other => bail!("unknown mapping segment {other:?}"),
+            }
+        }
+        let gemm = gemm.context("mapping lacks the 'g' segment")?;
+        let nest = LoopNest {
+            gemm,
+            blocks: blocks.context("mapping lacks the 'n' segment")?,
+        };
+        if let Err(e) = nest.validate() {
+            bail!("persisted mapping does not tile its GEMM: {e}");
+        }
+        Ok(Mapping {
+            gemm,
+            spatial: spatial.context("mapping lacks the 's' segment")?,
+            occupancy: occupancy.context("mapping lacks the 'occ' segment")?,
+            nest,
+        })
+    }
+
+    /// Stable fingerprint of this mapping: FNV-1a over the canonical
+    /// form, prefixed with [`MAPPER_VERSION`] — any change to any field
+    /// changes the digest, and a mapper-algorithm version bump retires
+    /// every older fingerprint.
+    pub fn fingerprint(&self) -> String {
+        let desc = format!("v{}:{}", MAPPER_VERSION, self.canonical());
+        format!("{:016x}", fnv1a(desc.as_bytes()))
+    }
+}
+
+fn parse_u64_pos(s: &str, what: &str) -> Result<u64> {
+    match s.parse::<u64>() {
+        Ok(v) if v >= 1 => Ok(v),
+        _ => bail!("{what}: want a positive integer, got {s:?}"),
+    }
+}
+
+fn parse_gemm(val: &str) -> Result<Gemm> {
+    let dims: Vec<&str> = val.split('x').collect();
+    if dims.len() != 3 {
+        bail!("mapping GEMM {val:?}: want MxNxK");
+    }
+    Ok(Gemm::new(
+        parse_u64_pos(dims[0], "gemm M")?,
+        parse_u64_pos(dims[1], "gemm N")?,
+        parse_u64_pos(dims[2], "gemm K")?,
+    ))
+}
+
+fn parse_spatial(val: &str) -> Result<CimSpatial> {
+    let f: Vec<&str> = val.split(',').collect();
+    if f.len() != 5 {
+        bail!("mapping spatial {val:?}: want k_prims,n_prims,ku,nu,m_prims");
+    }
+    Ok(CimSpatial {
+        k_prims: parse_u64_pos(f[0], "k_prims")?,
+        n_prims: parse_u64_pos(f[1], "n_prims")?,
+        ku: parse_u64_pos(f[2], "ku")?,
+        nu: parse_u64_pos(f[3], "nu")?,
+        m_prims: parse_u64_pos(f[4], "m_prims")?,
+    })
+}
+
+fn parse_occupancy(val: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(val, 16)
+        .with_context(|| format!("mapping occupancy {val:?}: bad bit pattern"))?;
+    let x = f64::from_bits(bits);
+    if !x.is_finite() {
+        bail!("mapping occupancy {val:?} is not finite");
+    }
+    Ok(x)
+}
+
+fn parse_nest(val: &str) -> Result<Vec<Block>> {
+    let mut blocks = Vec::new();
+    for part in val.split('/') {
+        let (level, rest) = part
+            .split_once('[')
+            .with_context(|| format!("mapping block {part:?} lacks '['"))?;
+        let loops_str = rest
+            .strip_suffix(']')
+            .with_context(|| format!("mapping block {part:?} lacks ']'"))?;
+        let mem = MemLevel::parse(level)
+            .with_context(|| format!("mapping block level {level:?} unknown"))?;
+        let mut loops = Vec::new();
+        if !loops_str.is_empty() {
+            for l in loops_str.split(',') {
+                // The dim tag is a single ASCII letter, so `l[1..]` is
+                // a char boundary; anything else (including an empty or
+                // multi-byte-leading corrupt token) errors here first.
+                let dim = match l.chars().next() {
+                    Some('M') => Dim::M,
+                    Some('N') => Dim::N,
+                    Some('K') => Dim::K,
+                    _ => bail!("mapping loop {l:?}: want <M|N|K><factor>"),
+                };
+                loops.push(Loop::new(dim, parse_u64_pos(&l[1..], "loop factor")?));
+            }
+        }
+        blocks.push(Block::new(mem, loops));
+    }
+    if blocks.is_empty() {
+        bail!("mapping nest has no blocks");
+    }
+    Ok(blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Architecture, CimSystem, SmemConfig};
+    use crate::cim::CimPrimitive;
+    use crate::mapping::PriorityMapper;
+
+    fn sample(g: Gemm) -> Mapping {
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        PriorityMapper::new(&sys).map(&g)
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        for g in [
+            Gemm::new(512, 1024, 1024),
+            Gemm::new(1, 4096, 4096),
+            Gemm::new(12544, 64, 147),
+            Gemm::new(3, 5, 7),
+        ] {
+            let m = sample(g);
+            let text = m.canonical();
+            let back = Mapping::from_canonical(&text).unwrap();
+            assert_eq!(back, m, "{g}");
+            assert_eq!(back.canonical(), text, "{g}: re-serialization drifted");
+            assert_eq!(back.occupancy.to_bits(), m.occupancy.to_bits(), "{g}");
+        }
+    }
+
+    #[test]
+    fn canonical_has_no_forbidden_characters() {
+        // The form embeds in tab-separated cache lines and JSON strings.
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_smem(&arch, CimPrimitive::analog_6t(), SmemConfig::ConfigB);
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(4096, 512, 512));
+        let text = m.canonical();
+        assert!(!text.contains('\t') && !text.contains('\n'));
+        assert!(!text.contains('"') && !text.contains('\\'));
+        assert!(!text.contains(' '));
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let m = sample(Gemm::new(512, 1024, 1024));
+        let base = m.fingerprint();
+        assert_eq!(base, sample(Gemm::new(512, 1024, 1024)).fingerprint());
+
+        let mut g = m.clone();
+        g.gemm = Gemm::new(513, 1024, 1024);
+        assert_ne!(base, g.fingerprint(), "gemm dim");
+        let mut s = m.clone();
+        s.spatial.m_prims += 1;
+        assert_ne!(base, s.fingerprint(), "spatial split");
+        let mut o = m.clone();
+        o.occupancy = f64::from_bits(o.occupancy.to_bits() + 1);
+        assert_ne!(base, o.fingerprint(), "occupancy ulp");
+        let mut n = m.clone();
+        n.nest.blocks[0].loops.push(Loop::new(Dim::M, 2));
+        assert_ne!(base, n.fingerprint(), "extra loop");
+    }
+
+    #[test]
+    fn corrupt_forms_error_cleanly() {
+        let m = sample(Gemm::new(64, 64, 64));
+        let good = m.canonical();
+        for bad in [
+            "",
+            "g=64x64",
+            "g=64x64x64",                                     // missing segments
+            "g=0x64x64;s=1,1,64,16,1;occ=0;n=DRAM[]",         // zero dim
+            "g=64x64x64;s=1,1;occ=0;n=DRAM[]",                // short spatial
+            "g=64x64x64;s=1,1,64,16,1;occ=zz;n=DRAM[]",       // bad hex
+            "g=64x64x64;s=1,1,64,16,1;occ=7ff8000000000000;n=DRAM[M64,K64,N64]", // NaN occ
+            "g=64x64x64;s=1,1,64,16,1;occ=0;n=L9[M64]",       // unknown level
+            "g=64x64x64;s=1,1,64,16,1;occ=0;n=DRAM[Q64]",     // unknown dim
+            "g=64x64x64;s=1,1,64,16,1;occ=0;n=DRAM[M2]",      // under-tiled
+            &good[..good.len() - 1],                          // truncated tail
+        ] {
+            assert!(
+                Mapping::from_canonical(bad).is_err(),
+                "{bad:?} must not parse"
+            );
+        }
+        assert!(Mapping::from_canonical(&good).is_ok());
+    }
+
+    #[test]
+    fn empty_loop_blocks_round_trip() {
+        // CiM@SMEM mappings commonly have an empty DRAM block.
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_smem(&arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+        let m = PriorityMapper::new(&sys).map(&Gemm::new(4096, 512, 512));
+        assert!(m.nest.blocks[0].loops.is_empty(), "{}", m.canonical());
+        let back = Mapping::from_canonical(&m.canonical()).unwrap();
+        assert_eq!(back, m);
+    }
+}

@@ -34,6 +34,26 @@ impl Objective {
             Objective::Edp => m.energy_pj * m.total_cycles as f64,
         }
     }
+
+    /// Stable lower-case name, used in mapper fingerprints
+    /// ([`crate::sweep::MapperChoice::fingerprint`]) and CLI parsing.
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Energy => "energy",
+            Objective::Delay => "delay",
+            Objective::Edp => "edp",
+        }
+    }
+
+    /// Parse a lower-case objective name (inverse of [`Self::name`]).
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s {
+            "energy" => Some(Objective::Energy),
+            "delay" => Some(Objective::Delay),
+            "edp" => Some(Objective::Edp),
+            _ => None,
+        }
+    }
 }
 
 /// Exhaustive search result.
@@ -59,12 +79,51 @@ impl<'a> ExhaustiveMapper<'a> {
 
     /// Enumerate and score every candidate; returns the optimum.
     pub fn map(&self, gemm: &Gemm) -> ExhaustiveResult {
-        let sys = self.sys;
-        let p = &sys.primitive;
-        let cost = CostModel::new(sys);
+        let cost = CostModel::new(self.sys);
         let mut best: Option<(f64, Mapping, crate::cost::Metrics)> = None;
         let mut candidates = 0u64;
+        self.for_each_candidate(gemm, |mapping| {
+            let m = cost.evaluate(gemm, &mapping);
+            let s = self.objective.score(&m);
+            candidates += 1;
+            if best.as_ref().map_or(true, |(b, _, _)| s < *b) {
+                best = Some((s, mapping, m));
+            }
+        });
+        let (_, mapping, metrics) = best.expect("space contains at least the trivial mapping");
+        ExhaustiveResult {
+            mapping,
+            metrics,
+            candidates,
+        }
+    }
 
+    /// Size of the discretized map-space for `gemm` — the number of
+    /// candidates [`Self::map`] scores. Shares the spatial enumeration
+    /// with `map` and counts the temporal combinations arithmetically
+    /// (candidate validity is decided *before* a nest is built, so no
+    /// `Mapping` is allocated per candidate) — cheap enough to
+    /// recompute when the expensive search itself is served from a
+    /// cache. The `count_matches_scored_candidates` test pins it
+    /// against `map`'s actual tally.
+    pub fn count_candidates(&self, gemm: &Gemm) -> u64 {
+        let mut n = 0u64;
+        self.for_each_spatial(gemm, |spatial| n += self.count_temporal(gemm, spatial));
+        n
+    }
+
+    /// Walk every valid candidate mapping of the discretized space, in
+    /// deterministic enumeration order.
+    fn for_each_candidate<F: FnMut(Mapping)>(&self, gemm: &Gemm, mut f: F) {
+        self.for_each_spatial(gemm, |spatial| {
+            self.enumerate_temporal(gemm, spatial, &mut f);
+        });
+    }
+
+    /// Walk every valid spatial split of the discretized space.
+    fn for_each_spatial<F: FnMut(&CimSpatial)>(&self, gemm: &Gemm, mut f: F) {
+        let sys = self.sys;
+        let p = &sys.primitive;
         let ku_max = gemm.k.min(p.weight_rows());
         let nu_max = gemm.n.min(p.weight_cols());
         for ku in pow2_upto(ku_max) {
@@ -85,27 +144,21 @@ impl<'a> ExhaustiveMapper<'a> {
                         if (k_prims - 1) * ku >= gemm.k || (n_prims - 1) * nu >= gemm.n {
                             continue;
                         }
-                        self.enumerate_temporal(gemm, &spatial, &cost, &mut best, &mut candidates);
+                        f(&spatial);
                     }
                 }
             }
         }
-        let (_, mapping, metrics) = best.expect("space contains at least the trivial mapping");
-        ExhaustiveResult {
-            mapping,
-            metrics,
-            candidates,
-        }
     }
 
-    fn enumerate_temporal(
+    /// Temporal bounds shared by [`Self::enumerate_temporal`] and
+    /// [`Self::count_temporal`]: `(k_tiles, n_tiles, staging, capacity,
+    /// k0, n0)`.
+    fn temporal_bounds(
         &self,
         gemm: &Gemm,
         spatial: &CimSpatial,
-        cost: &CostModel,
-        best: &mut Option<(f64, Mapping, crate::cost::Metrics)>,
-        candidates: &mut u64,
-    ) {
+    ) -> (u64, u64, MemLevel, u64, u64, u64) {
         let sys = self.sys;
         let k0 = spatial.k0(gemm.k);
         let n0 = spatial.n0(gemm.n);
@@ -116,6 +169,40 @@ impl<'a> ExhaustiveMapper<'a> {
             MemLevel::Dram => u64::MAX,
             lvl => sys.arch.capacity(lvl),
         };
+        (k_tiles, n_tiles, staging, capacity, k0, n0)
+    }
+
+    /// Number of candidates [`Self::enumerate_temporal`] emits for one
+    /// spatial split: every (m1, k1, n1) combination surviving the
+    /// capacity filter contributes 6 DRAM orders × 2 staging orders —
+    /// counted without building a single nest.
+    fn count_temporal(&self, gemm: &Gemm, spatial: &CimSpatial) -> u64 {
+        let (k_tiles, n_tiles, _, capacity, k0, n0) = self.temporal_bounds(gemm, spatial);
+        let mut n = 0u64;
+        for m1 in pow2_upto(gemm.m) {
+            for k1 in pow2_upto(k_tiles) {
+                for n1 in pow2_upto(n_tiles) {
+                    if capacity != u64::MAX
+                        && m1.saturating_mul(k1 * k0 + n1 * n0) > capacity
+                    {
+                        continue;
+                    }
+                    n += (PERMS3.len() as u64) * 2;
+                }
+            }
+        }
+        n
+    }
+
+    fn enumerate_temporal<F: FnMut(Mapping)>(
+        &self,
+        gemm: &Gemm,
+        spatial: &CimSpatial,
+        f: &mut F,
+    ) {
+        let sys = self.sys;
+        let occupancy = spatial.utilization(sys);
+        let (k_tiles, n_tiles, staging, capacity, k0, n0) = self.temporal_bounds(gemm, spatial);
 
         for m1 in pow2_upto(gemm.m) {
             for k1 in pow2_upto(k_tiles) {
@@ -156,17 +243,12 @@ impl<'a> ExhaustiveMapper<'a> {
                             );
                             let nest =
                                 LoopNest::new(*gemm, vec![block0, block1, block2]);
-                            let mapping = Mapping {
+                            f(Mapping {
                                 gemm: *gemm,
                                 spatial: *spatial,
+                                occupancy,
                                 nest,
-                            };
-                            let m = cost.evaluate(gemm, &mapping);
-                            let s = self.objective.score(&m);
-                            *candidates += 1;
-                            if best.as_ref().map_or(true, |(b, _, _)| s < *b) {
-                                *best = Some((s, mapping, m));
-                            }
+                            });
                         }
                     }
                 }
@@ -252,6 +334,25 @@ mod tests {
         let ours = cost.evaluate(&g, &PriorityMapper::new(&sys).map(&g));
         let gap = ours.energy_pj / exact.metrics.energy_pj;
         assert!(gap < 1.5, "optimality gap {gap}");
+    }
+
+    #[test]
+    fn count_matches_scored_candidates() {
+        // `count_candidates` shares the enumeration with `map`; the
+        // totals must agree exactly (the optimality CSV depends on it).
+        let sys = sys();
+        for g in [Gemm::new(64, 64, 256), Gemm::new(1, 256, 512)] {
+            let mapper = ExhaustiveMapper::new(&sys, Objective::Energy);
+            assert_eq!(mapper.count_candidates(&g), mapper.map(&g).candidates, "{g}");
+        }
+    }
+
+    #[test]
+    fn objective_names_round_trip() {
+        for o in [Objective::Energy, Objective::Delay, Objective::Edp] {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("speed"), None);
     }
 
     #[test]

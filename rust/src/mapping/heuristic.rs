@@ -157,6 +157,7 @@ impl<'a> HeuristicMapper<'a> {
         Some(Mapping {
             gemm: *gemm,
             spatial,
+            occupancy: spatial.utilization(sys),
             nest,
         })
     }
@@ -194,6 +195,7 @@ impl<'a> HeuristicMapper<'a> {
         Mapping {
             gemm: *gemm,
             spatial,
+            occupancy: spatial.utilization(self.sys),
             nest,
         }
     }

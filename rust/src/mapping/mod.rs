@@ -4,12 +4,19 @@
 //! CiM primitives ([`CimSpatial`]) + a temporal [`LoopNest`] describing
 //! the tiled dataflow across DRAM / staging memory / the CiM level.
 //!
-//! Two mappers are provided:
+//! Three mappers are provided:
 //! * [`PriorityMapper`] — the paper's contribution: weight-stationary,
 //!   utilization-first, then reuse (Algo 1), greedy loop order.
 //! * [`HeuristicMapper`] — the comparator: random search that stops
 //!   after 100 000 consecutive invalid samples (Fig 7, Table II).
+//! * [`ExhaustiveMapper`] — the yardstick: the true optimum over the
+//!   discretized map-space.
+//!
+//! Mappings have a canonical, bit-exact serialized form ([`canonical`])
+//! so the sweep cache can persist `(Mapping, Metrics)` pairs across
+//! processes.
 
+pub mod canonical;
 pub mod exhaustive;
 pub mod heuristic;
 pub mod loopnest;
@@ -39,10 +46,35 @@ pub const MAPPER_VERSION: u32 = 1;
 pub struct Mapping {
     pub gemm: Gemm,
     pub spatial: CimSpatial,
+    /// Compute-hardware occupancy of the spatial placement
+    /// ([`CimSpatial::utilization`]), recorded at map time so post-hoc
+    /// consumers of persisted mappings ([`crate::sweep::persist`]) can
+    /// read it without re-instantiating the system. Always finite.
+    pub occupancy: f64,
     pub nest: LoopNest,
 }
 
 impl Mapping {
+    /// Rebuild this mapping with a fixed DRAM-level loop order (the
+    /// `ablation-order` axis): block 0 is replaced by `order`, each
+    /// dimension carrying its existing block-0 factor. Inner blocks and
+    /// the spatial placement are untouched.
+    pub fn with_dram_order(&self, order: [Dim; 3]) -> Mapping {
+        let b0 = &self.nest.blocks[0];
+        let loops: Vec<Loop> = order
+            .iter()
+            .map(|&d| Loop::new(d, b0.dim_factor(d)))
+            .collect();
+        let mut blocks = self.nest.blocks.clone();
+        blocks[0] = Block::new(blocks[0].mem, loops);
+        Mapping {
+            gemm: self.gemm,
+            spatial: self.spatial,
+            occupancy: self.occupancy,
+            nest: LoopNest::new(self.gemm, blocks),
+        }
+    }
+
     /// Mapped weight-tile extent along K (rows across primitives).
     pub fn k0(&self) -> u64 {
         self.spatial.k0(self.gemm.k)
@@ -53,15 +85,17 @@ impl Mapping {
         self.spatial.n0(self.gemm.n)
     }
 
-    /// Short human-readable description for logs.
+    /// Short human-readable description for logs (`repro evaluate
+    /// --verbose`).
     pub fn describe(&self) -> String {
         format!(
-            "{} -> prims {}x{} (K0={} N0={}), nest {:?}",
+            "{} -> prims {}x{} (K0={} N0={}, occ {:.1}%), nest {:?}",
             self.gemm,
             self.spatial.k_prims,
             self.spatial.n_prims,
             self.k0(),
             self.n0(),
+            100.0 * self.occupancy,
             self.nest
                 .blocks
                 .iter()

@@ -66,6 +66,7 @@ impl<'a> PriorityMapper<'a> {
         Mapping {
             gemm: *gemm,
             spatial,
+            occupancy: spatial.utilization(self.sys),
             nest,
         }
     }
@@ -222,6 +223,7 @@ impl<'a> PriorityMapper<'a> {
             0 | 1 => &[[0, 1, 2]],
             _ => &permutations3(),
         };
+        let occupancy = spatial.utilization(self.sys);
         let mut best: Option<(f64, Mapping)> = None;
         let mut seen: Vec<Vec<Loop>> = Vec::with_capacity(perms.len());
         for perm in perms {
@@ -242,6 +244,7 @@ impl<'a> PriorityMapper<'a> {
             let mapping = Mapping {
                 gemm: *gemm,
                 spatial: *spatial,
+                occupancy,
                 nest,
             };
             let e = crate::cost::CostModel::new(self.sys)

@@ -18,20 +18,24 @@
 //!
 //! The cache is sharded: each shard is an independent `Mutex<HashMap>`,
 //! picked by key hash, so parallel sweeps do not serialize on one lock.
-//! Within a shard the map is two-level (point key → GEMM → metrics), so
+//! Within a shard the map is two-level (point key → GEMM → entry), so
 //! lookups borrow the caller's `&str` key instead of forcing an owned
-//! `String` per probe.
+//! `String` per probe. An entry is a [`CacheEntry`]: the metrics *and*
+//! the [`Mapping`] that produced them (None for baseline points), so
+//! consumers can run post-hoc cost analyses on cached mappings without
+//! re-invoking the mapper.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
 use crate::cim::isoarea;
 use crate::coordinator::jobs::SystemSpec;
 use crate::cost::Metrics;
+use crate::mapping::Mapping;
 use crate::workload::Gemm;
 
 /// Number of independent shards (power of two).
@@ -165,17 +169,48 @@ pub fn spec_label(spec: &SystemSpec, arch: &crate::arch::Architecture) -> String
     }
 }
 
-/// One shard: point key → GEMM → metrics. Two-level so a probe borrows
-/// the point key (`&str`) and only allocates on a miss.
-type Shard = HashMap<String, HashMap<Gemm, Metrics>>;
+/// One memoized design-point evaluation: the metrics *and* the mapping
+/// that produced them, so post-hoc cost analyses (NoC sensitivity,
+/// duplication factors) can consume cached mappings without re-running
+/// the mapper. Baseline (tensor-core) points have no mapping.
+///
+/// The mapping is behind an [`Arc`] so cloning an entry — which
+/// [`EvalCache::get_or_compute`] does on every hit, *inside* the shard
+/// critical section — is one atomic increment plus a `Metrics` copy,
+/// never a loop-nest deep copy under the lock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    pub mapping: Option<Arc<Mapping>>,
+    pub metrics: Metrics,
+}
 
-/// Sharded (system fingerprint, GEMM) → [`Metrics`] memoization cache
-/// with hit/miss accounting.
+impl CacheEntry {
+    /// A mapper-less entry (the baseline, and tests that only care
+    /// about metrics).
+    pub fn metrics_only(metrics: Metrics) -> Self {
+        CacheEntry {
+            mapping: None,
+            metrics,
+        }
+    }
+}
+
+/// One shard: point key → GEMM → (mapping, metrics). Two-level so a
+/// probe borrows the point key (`&str`) and only allocates on a miss.
+type Shard = HashMap<String, HashMap<Gemm, CacheEntry>>;
+
+/// Sharded (system fingerprint, GEMM) → [`CacheEntry`] memoization
+/// cache with hit/miss accounting.
 #[derive(Debug)]
 pub struct EvalCache {
     shards: Vec<Mutex<Shard>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Mapper invocations performed by cached evaluation paths (the
+    /// sweep engine and the hybrid router): every cache miss on a CiM
+    /// point costs exactly one, so a fully warm run reports zero — the
+    /// invariant the warm-start tests pin.
+    mapper_calls: AtomicU64,
 }
 
 impl Default for EvalCache {
@@ -190,6 +225,7 @@ impl EvalCache {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            mapper_calls: AtomicU64::new(0),
         }
     }
 
@@ -200,42 +236,79 @@ impl EvalCache {
         (h.finish() as usize) % SHARDS
     }
 
-    /// Return the memoized metrics for `(point, gemm)`, computing them
-    /// with `f` on a miss. The evaluation runs outside the shard lock so
+    /// Return the memoized entry for `(point, gemm)`, computing it with
+    /// `f` on a miss. The evaluation runs outside the shard lock so
     /// concurrent misses on other keys proceed; a racing duplicate miss
     /// computes redundantly but deterministically (first insert wins).
-    pub fn get_or_compute<F: FnOnce() -> Metrics>(
+    /// The hit-path clone is cheap (`Arc` bump + `Metrics` copy — see
+    /// [`CacheEntry`]).
+    pub fn get_or_compute<F: FnOnce() -> CacheEntry>(
         &self,
         point: &str,
         gemm: Gemm,
         f: F,
-    ) -> Metrics {
+    ) -> CacheEntry {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
-        if let Some(m) = shard
+        if let Some(e) = shard
             .lock()
             .expect("cache shard poisoned")
             .get(point)
             .and_then(|per_gemm| per_gemm.get(&gemm))
         {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return *m;
+            return e.clone();
         }
-        let m = f();
+        let e = f();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        *shard
+        shard
             .lock()
             .expect("cache shard poisoned")
             .entry(point.to_string())
             .or_default()
             .entry(gemm)
-            .or_insert(m)
+            .or_insert(e)
+            .clone()
+    }
+
+    /// Metrics-only variant of [`Self::get_or_compute`]: serves hits by
+    /// copying the `Metrics` (a `Copy` type) out from under the shard
+    /// lock without cloning the cached mapping. The hybrid router's hot
+    /// path — it prices thousands of trace layers and never reads the
+    /// mapping — uses this; the engine, whose results carry the
+    /// mapping, uses `get_or_compute`.
+    pub fn get_or_compute_metrics<F: FnOnce() -> CacheEntry>(
+        &self,
+        point: &str,
+        gemm: Gemm,
+        f: F,
+    ) -> Metrics {
+        let shard = &self.shards[Self::shard_of(point, &gemm)];
+        if let Some(e) = shard
+            .lock()
+            .expect("cache shard poisoned")
+            .get(point)
+            .and_then(|per_gemm| per_gemm.get(&gemm))
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return e.metrics;
+        }
+        let e = f();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard
+            .lock()
+            .expect("cache shard poisoned")
+            .entry(point.to_string())
+            .or_default()
+            .entry(gemm)
+            .or_insert(e)
+            .metrics
     }
 
     /// Insert an entry without touching the hit/miss counters (cache
     /// warm-up from a persisted file). An existing entry wins — the
     /// live-computed value and the persisted one are identical by the
     /// purity contract, so keeping the first avoids surprises.
-    pub fn preload(&self, point: &str, gemm: Gemm, metrics: Metrics) {
+    pub fn preload(&self, point: &str, gemm: Gemm, entry: CacheEntry) {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
         shard
             .lock()
@@ -243,19 +316,19 @@ impl EvalCache {
             .entry(point.to_string())
             .or_default()
             .entry(gemm)
-            .or_insert(metrics);
+            .or_insert(entry);
     }
 
     /// All cached entries, sorted by (point key, GEMM) so the snapshot
     /// — and any file serialized from it — is deterministic regardless
     /// of insertion order and shard hashing.
-    pub fn snapshot(&self) -> Vec<(String, Gemm, Metrics)> {
+    pub fn snapshot(&self) -> Vec<(String, Gemm, CacheEntry)> {
         let mut out = Vec::new();
         for s in &self.shards {
             let shard = s.lock().expect("cache shard poisoned");
             for (point, per_gemm) in shard.iter() {
-                for (gemm, m) in per_gemm {
-                    out.push((point.clone(), *gemm, *m));
+                for (gemm, e) in per_gemm {
+                    out.push((point.clone(), *gemm, e.clone()));
                 }
             }
         }
@@ -291,6 +364,19 @@ impl EvalCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Record one mapper invocation by a cached evaluation path (called
+    /// by the evaluators, inside their miss closures).
+    pub fn note_mapper_call(&self) {
+        self.mapper_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mapper invocations performed so far by cached evaluation paths.
+    /// Zero on a fully warm run — cached mappings make re-mapping
+    /// unnecessary, which this counter lets tests assert directly.
+    pub fn mapper_calls(&self) -> u64 {
+        self.mapper_calls.load(Ordering::Relaxed)
+    }
+
     /// Drop all cached entries and reset the counters.
     pub fn clear(&self) {
         for s in &self.shards {
@@ -298,6 +384,7 @@ impl EvalCache {
         }
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+        self.mapper_calls.store(0, Ordering::Relaxed);
     }
 }
 
@@ -325,6 +412,10 @@ mod tests {
         }
     }
 
+    fn dummy_entry(x: f64) -> CacheEntry {
+        CacheEntry::metrics_only(dummy_metrics(x))
+    }
+
     /// One ulp up — the smallest possible parameter perturbation.
     fn ulp_up(x: f64) -> f64 {
         f64::from_bits(x.to_bits() + 1)
@@ -334,8 +425,8 @@ mod tests {
     fn hit_returns_first_computation() {
         let cache = EvalCache::new();
         let g = Gemm::new(16, 16, 16);
-        let a = cache.get_or_compute("p", g, || dummy_metrics(1.0));
-        let b = cache.get_or_compute("p", g, || dummy_metrics(999.0));
+        let a = cache.get_or_compute("p", g, || dummy_entry(1.0));
+        let b = cache.get_or_compute("p", g, || dummy_entry(999.0));
         assert_eq!(a, b, "second call must be served from the cache");
         assert_eq!(cache.hits(), 1);
         assert_eq!(cache.misses(), 1);
@@ -346,9 +437,9 @@ mod tests {
     fn distinct_points_distinct_entries() {
         let cache = EvalCache::new();
         let g = Gemm::new(16, 16, 16);
-        cache.get_or_compute("a", g, || dummy_metrics(1.0));
-        cache.get_or_compute("b", g, || dummy_metrics(2.0));
-        cache.get_or_compute("a", Gemm::new(32, 32, 32), || dummy_metrics(3.0));
+        cache.get_or_compute("a", g, || dummy_entry(1.0));
+        cache.get_or_compute("b", g, || dummy_entry(2.0));
+        cache.get_or_compute("a", Gemm::new(32, 32, 32), || dummy_entry(3.0));
         assert_eq!(cache.len(), 3);
         assert_eq!(cache.misses(), 3);
         assert_eq!(cache.hits(), 0);
@@ -357,34 +448,35 @@ mod tests {
     #[test]
     fn clear_resets() {
         let cache = EvalCache::new();
-        cache.get_or_compute("a", Gemm::new(8, 8, 8), || dummy_metrics(1.0));
+        cache.get_or_compute("a", Gemm::new(8, 8, 8), || dummy_entry(1.0));
+        cache.note_mapper_call();
         cache.clear();
         assert!(cache.is_empty());
-        assert_eq!(cache.hits() + cache.misses(), 0);
+        assert_eq!(cache.hits() + cache.misses() + cache.mapper_calls(), 0);
     }
 
     #[test]
     fn preload_serves_hits_without_counting_a_miss() {
         let cache = EvalCache::new();
         let g = Gemm::new(16, 16, 16);
-        cache.preload("p", g, dummy_metrics(5.0));
+        cache.preload("p", g, dummy_entry(5.0));
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.hits() + cache.misses(), 0);
-        let m = cache.get_or_compute("p", g, || panic!("preloaded entry must hit"));
-        assert_eq!(m, dummy_metrics(5.0));
+        let e = cache.get_or_compute("p", g, || panic!("preloaded entry must hit"));
+        assert_eq!(e, dummy_entry(5.0));
         assert_eq!(cache.hits(), 1);
         // preload never overwrites an existing entry
-        cache.preload("p", g, dummy_metrics(9.0));
+        cache.preload("p", g, dummy_entry(9.0));
         let again = cache.get_or_compute("p", g, || unreachable!());
-        assert_eq!(again, dummy_metrics(5.0));
+        assert_eq!(again, dummy_entry(5.0));
     }
 
     #[test]
     fn snapshot_is_sorted_and_complete() {
         let cache = EvalCache::new();
-        cache.get_or_compute("b", Gemm::new(8, 8, 8), || dummy_metrics(1.0));
-        cache.get_or_compute("a", Gemm::new(32, 32, 32), || dummy_metrics(2.0));
-        cache.get_or_compute("a", Gemm::new(8, 8, 8), || dummy_metrics(3.0));
+        cache.get_or_compute("b", Gemm::new(8, 8, 8), || dummy_entry(1.0));
+        cache.get_or_compute("a", Gemm::new(32, 32, 32), || dummy_entry(2.0));
+        cache.get_or_compute("a", Gemm::new(8, 8, 8), || dummy_entry(3.0));
         let snap = cache.snapshot();
         assert_eq!(snap.len(), 3);
         assert_eq!(
@@ -393,6 +485,44 @@ mod tests {
                 .collect::<Vec<_>>(),
             vec![("a", 8), ("a", 32), ("b", 8)]
         );
+    }
+
+    #[test]
+    fn metrics_only_probe_shares_entries_with_the_full_probe() {
+        let cache = EvalCache::new();
+        let g = Gemm::new(16, 16, 16);
+        let m = cache.get_or_compute_metrics("p", g, || dummy_entry(3.0));
+        assert_eq!(m, dummy_metrics(3.0));
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        // Hits are served to either probe from the one shared entry.
+        assert_eq!(
+            cache.get_or_compute("p", g, || unreachable!()),
+            dummy_entry(3.0)
+        );
+        assert_eq!(
+            cache.get_or_compute_metrics("p", g, || unreachable!()),
+            dummy_metrics(3.0)
+        );
+        assert_eq!((cache.hits(), cache.misses()), (2, 1));
+    }
+
+    #[test]
+    fn entries_carry_their_mapping() {
+        use crate::arch::CimSystem;
+        use crate::mapping::PriorityMapper;
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        let g = Gemm::new(512, 1024, 1024);
+        let mapping = PriorityMapper::new(&sys).map(&g);
+        let cache = EvalCache::new();
+        cache.get_or_compute("cim", g, || CacheEntry {
+            mapping: Some(Arc::new(mapping.clone())),
+            metrics: dummy_metrics(1.0),
+        });
+        let hit = cache.get_or_compute("cim", g, || unreachable!());
+        assert_eq!(hit.mapping.as_deref(), Some(&mapping));
+        let (_, _, snap) = cache.snapshot().pop().expect("one entry");
+        assert_eq!(snap.mapping, Some(Arc::new(mapping)));
     }
 
     #[test]

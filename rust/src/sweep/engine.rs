@@ -13,10 +13,10 @@ use std::time::{Duration, Instant};
 
 use crate::arch::{Architecture, MultiSm};
 use crate::coordinator::jobs::SystemSpec;
-use crate::cost::{BaselineModel, CostModel, Metrics};
+use crate::cost::{BaselineModel, CostModel};
 use crate::util::pool;
 
-use super::cache::{self, EvalCache};
+use super::cache::{self, CacheEntry, EvalCache};
 use super::spec::{MapperChoice, SweepJob, SweepResult, SweepSpec};
 
 /// Parallel grid evaluator with a shared memoization cache.
@@ -100,13 +100,13 @@ impl SweepEngine {
     }
 
     fn evaluate_with_meta(&self, job: &SweepJob, meta: &PointMeta) -> SweepResult {
-        let single = self
+        let entry = self
             .cache
             .get_or_compute(&meta.key, job.gemm, || self.evaluate_uncached(job));
         let metrics = if job.sms <= 1 {
-            single
+            entry.metrics
         } else {
-            MultiSm::new(job.sms).scale(&single)
+            MultiSm::new(job.sms).scale(&entry.metrics)
         };
         SweepResult {
             workload: job.workload.clone(),
@@ -114,17 +114,25 @@ impl SweepEngine {
             system: meta.label.clone(),
             sms: job.sms,
             metrics,
+            mapping: entry.mapping,
         }
     }
 
     /// The raw (cache-miss) evaluation: instantiate the system, map the
-    /// GEMM, run the cost model (single-SM).
-    fn evaluate_uncached(&self, job: &SweepJob) -> Metrics {
+    /// GEMM, run the cost model (single-SM). The mapping rides into the
+    /// cache next to the metrics; every mapper invocation is counted on
+    /// the shared cache so warm runs can prove they never re-map.
+    fn evaluate_uncached(&self, job: &SweepJob) -> CacheEntry {
         match job.spec.system(&self.arch) {
-            None => BaselineModel::new(&self.arch).evaluate(&job.gemm),
+            None => CacheEntry::metrics_only(BaselineModel::new(&self.arch).evaluate(&job.gemm)),
             Some(sys) => {
+                self.cache.note_mapper_call();
                 let mapping = job.mapper.map(&sys, &job.gemm);
-                CostModel::new(&sys).evaluate(&job.gemm, &mapping)
+                let metrics = CostModel::new(&sys).evaluate(&job.gemm, &mapping);
+                CacheEntry {
+                    mapping: Some(Arc::new(mapping)),
+                    metrics,
+                }
             }
         }
     }
@@ -287,6 +295,43 @@ mod tests {
         // Every SM-count axis value shares the single-SM cache entry.
         assert_eq!(engine.cache().misses(), 1);
         assert_eq!(engine.cache().hits(), 1);
+    }
+
+    #[test]
+    fn results_carry_mappings_and_mapper_calls_are_counted() {
+        use crate::mapping::PriorityMapper;
+        let arch = Architecture::default_sm();
+        let engine = SweepEngine::new(arch.clone()).threads(1);
+        let g = Gemm::new(512, 1024, 1024);
+        let mk = |spec| SweepJob {
+            workload: "w".into(),
+            gemm: g,
+            spec,
+            sms: 1,
+            mapper: MapperChoice::Priority,
+        };
+        let jobs = [
+            mk(SystemSpec::CimAtRf(CimPrimitive::digital_6t())),
+            mk(SystemSpec::Baseline),
+        ];
+        let results = engine.run(&jobs);
+        // CiM results carry the exact mapping the mapper produced;
+        // baseline results carry none.
+        let sys = crate::arch::CimSystem::at_level(
+            &arch,
+            CimPrimitive::digital_6t(),
+            crate::arch::MemLevel::RegisterFile,
+        );
+        assert_eq!(
+            results[0].mapping.as_deref(),
+            Some(&PriorityMapper::new(&sys).map(&g))
+        );
+        assert!(results[1].mapping.is_none());
+        assert_eq!(engine.cache().mapper_calls(), 1, "one CiM miss = one map");
+        // A warm rerun serves the mapping from the cache: no re-mapping.
+        let warm = engine.run(&jobs);
+        assert_eq!(engine.cache().mapper_calls(), 1);
+        assert_eq!(warm[0].mapping, results[0].mapping);
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! * [`spec::SweepSpec`] — a declarative cartesian grid that expands
 //!   into an evaluation job list ([`spec::SweepJob`]);
 //! * [`cache::EvalCache`] — a sharded memoization cache keyed by
-//!   (system fingerprint, GEMM), so duplicate points across experiments
-//!   are scored once per process;
+//!   (system fingerprint, GEMM) holding `(Mapping, Metrics)` entries,
+//!   so duplicate points across experiments are scored once per process
+//!   and post-hoc analyses reuse cached mappings;
 //! * [`engine::SweepEngine`] — the parallel executor over
 //!   [`crate::util::pool`], deterministic across thread counts;
 //! * [`persist`] — versioned disk persistence of the cache
@@ -50,7 +51,7 @@ pub mod shard;
 pub mod spec;
 
 pub use cache::{
-    arch_fingerprint, point_key, spec_fingerprint, system_fingerprint, EvalCache,
+    arch_fingerprint, point_key, spec_fingerprint, system_fingerprint, CacheEntry, EvalCache,
     BASELINE_MAPPER_FP,
 };
 pub use engine::{SweepEngine, SweepRun};

@@ -3,42 +3,57 @@
 //!
 //! The cache serializes to a versioned line-oriented file
 //! (`results/cache.bin` by convention): a header line embedding the
-//! cache-format version and the **cost-model version**
-//! ([`crate::cost::COST_MODEL_VERSION`]), then one tab-separated line
-//! per entry (point key, GEMM dims, metrics). Float metrics are stored
-//! as IEEE-754 bit patterns in hex, so a save → load round trip is
-//! bit-identical and a warm run reproduces a cold run exactly.
+//! cache-format version, the **cost-model version**
+//! ([`crate::cost::COST_MODEL_VERSION`]) and the **mapper version**
+//! ([`crate::mapping::MAPPER_VERSION`]), then one tab-separated line
+//! per entry (point key, GEMM dims, canonical mapping, metrics). Float
+//! metrics — and the mapping's occupancy field — are stored as IEEE-754
+//! bit patterns in hex, so a save → load round trip is bit-identical
+//! and a warm run reproduces a cold run exactly. The mapping column is
+//! the [`Mapping::canonical`] form, or `-` for baseline points.
 //!
 //! Loading is *compatible-or-discarded*: a file whose header does not
 //! match the running binary's versions — or that fails to parse at all
 //! — is ignored wholesale ([`CacheLoad::Discarded`]) rather than
 //! trusted partially or turned into a hard error. A bumped cost-model
-//! version therefore invalidates every persisted entry instead of
-//! serving stale metrics. Saves are atomic (pid-unique temp file +
-//! rename), so a crash mid-save can corrupt at worst a temp file,
-//! never the cache — and a save first merges any compatible entries
-//! already on disk, so processes sharing one `--cache` path
-//! accumulate a union (see [`save`] for the simultaneous-save caveat).
+//! version (or mapper version, or cache-format version — PR 2-format
+//! files fall here) therefore invalidates every persisted entry instead
+//! of serving stale metrics or mapper-less entries. Saves are atomic
+//! (pid-unique temp file + rename), so a crash mid-save can corrupt at
+//! worst a temp file, never the cache — and a save first merges any
+//! compatible entries already on disk, so processes sharing one
+//! `--cache` path accumulate a union (see [`save`] for the
+//! simultaneous-save caveat).
 
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::cost::{EnergyBreakdown, Metrics, COST_MODEL_VERSION};
+use crate::mapping::{Mapping, MAPPER_VERSION};
 use crate::workload::Gemm;
 
-use super::cache::{f64_bits_hex, EvalCache};
+use super::cache::{f64_bits_hex, CacheEntry, EvalCache};
 
 /// Version of the on-disk cache layout itself (header + line format).
 /// Bump on any format change; old files are then discarded on load.
-pub const CACHE_FORMAT_VERSION: u32 = 1;
+/// v2: entries gained the canonical-mapping column and the header the
+/// `mapper=` token (v1 files — PR 2's format — are discarded).
+pub const CACHE_FORMAT_VERSION: u32 = 2;
 
 /// First token of the header line — identifies the file type.
 const MAGIC: &str = "www-cim-cache";
 
 /// Fields per serialized [`Metrics`] (see [`metrics_fields`] order).
 const METRIC_FIELDS: usize = 18;
+
+/// Fields per entry line: point key, 3 GEMM dims, mapping, metrics.
+const ENTRY_FIELDS: usize = 5 + METRIC_FIELDS;
+
+/// Mapping column marker for entries without a mapping (baseline).
+const NO_MAPPING: &str = "-";
 
 /// Outcome of [`load_into`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -68,7 +83,10 @@ impl CacheLoad {
 
 /// The header line the running binary writes and accepts.
 fn header() -> String {
-    format!("{MAGIC}\tformat={CACHE_FORMAT_VERSION}\tcost-model={COST_MODEL_VERSION}")
+    format!(
+        "{MAGIC}\tformat={CACHE_FORMAT_VERSION}\tcost-model={COST_MODEL_VERSION}\t\
+         mapper={MAPPER_VERSION}"
+    )
 }
 
 /// Serialize one [`Metrics`] to its stable field list: integers in
@@ -142,16 +160,21 @@ pub fn metrics_from_fields(fields: &[&str]) -> Result<Metrics> {
 }
 
 /// Serialize the whole cache (header + sorted entries). Deterministic:
-/// equal cache contents produce byte-identical files.
+/// equal cache contents produce byte-identical files (the canonical
+/// mapping form is itself deterministic).
 pub fn encode(cache: &EvalCache) -> String {
     let mut out = String::new();
     out.push_str(&header());
     out.push('\n');
-    for (point, gemm, m) in cache.snapshot() {
+    for (point, gemm, entry) in cache.snapshot() {
         out.push_str(&point);
         out.push('\t');
-        out.push_str(&format!("{}\t{}\t{}", gemm.m, gemm.n, gemm.k));
-        for field in metrics_fields(&m) {
+        out.push_str(&format!("{}\t{}\t{}\t", gemm.m, gemm.n, gemm.k));
+        match &entry.mapping {
+            Some(m) => out.push_str(&m.canonical()),
+            None => out.push_str(NO_MAPPING),
+        }
+        for field in metrics_fields(&entry.metrics) {
             out.push('\t');
             out.push_str(&field);
         }
@@ -229,18 +252,17 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
     }
     // Parse every line before preloading anything: a corrupt tail must
     // not leave a half-loaded cache behind.
-    let mut parsed: Vec<(String, Gemm, Metrics)> = Vec::new();
+    let mut parsed: Vec<(String, Gemm, CacheEntry)> = Vec::new();
     for (i, line) in lines.enumerate() {
         if line.is_empty() {
             continue;
         }
         let fields: Vec<&str> = line.split('\t').collect();
-        if fields.len() != 4 + METRIC_FIELDS {
+        if fields.len() != ENTRY_FIELDS {
             return discard(format!(
-                "corrupt entry on line {} ({} fields, want {})",
+                "corrupt entry on line {} ({} fields, want {ENTRY_FIELDS})",
                 i + 2,
                 fields.len(),
-                4 + METRIC_FIELDS
             ));
         }
         let dims = (
@@ -249,18 +271,32 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
             parse_u64(fields[3]),
         );
         let gemm = match dims {
-            (Ok(m), Ok(n), Ok(k)) => Gemm::new(m, n, k),
+            (Ok(m), Ok(n), Ok(k)) if m > 0 && n > 0 && k > 0 => Gemm::new(m, n, k),
             _ => return discard(format!("corrupt GEMM dims on line {}", i + 2)),
         };
-        let metrics = match metrics_from_fields(&fields[4..]) {
+        let mapping = if fields[4] == NO_MAPPING {
+            None
+        } else {
+            match Mapping::from_canonical(fields[4]) {
+                // The mapping's embedded GEMM must agree with the entry
+                // key it is stored under — a mismatch means the file
+                // was spliced or hand-edited.
+                Ok(m) if m.gemm == gemm => Some(Arc::new(m)),
+                Ok(_) => return discard(format!("mapping/GEMM mismatch on line {}", i + 2)),
+                Err(e) => {
+                    return discard(format!("corrupt mapping on line {}: {e:#}", i + 2))
+                }
+            }
+        };
+        let metrics = match metrics_from_fields(&fields[5..]) {
             Ok(m) => m,
             Err(e) => return discard(format!("corrupt metrics on line {}: {e:#}", i + 2)),
         };
-        parsed.push((fields[0].to_string(), gemm, metrics));
+        parsed.push((fields[0].to_string(), gemm, CacheEntry { mapping, metrics }));
     }
     let entries = parsed.len();
-    for (point, gemm, m) in parsed {
-        cache.preload(&point, gemm, m);
+    for (point, gemm, entry) in parsed {
+        cache.preload(&point, gemm, entry);
     }
     Ok(CacheLoad::Loaded { entries })
 }
@@ -268,6 +304,9 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::{Architecture, CimSystem, MemLevel};
+    use crate::cim::CimPrimitive;
+    use crate::mapping::PriorityMapper;
 
     fn metrics(seed: f64) -> Metrics {
         Metrics {
@@ -294,6 +333,19 @@ mod tests {
         }
     }
 
+    fn entry(seed: f64) -> CacheEntry {
+        CacheEntry::metrics_only(metrics(seed))
+    }
+
+    fn mapped_entry(seed: f64, g: Gemm) -> CacheEntry {
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        CacheEntry {
+            mapping: Some(Arc::new(PriorityMapper::new(&sys).map(&g))),
+            metrics: metrics(seed),
+        }
+    }
+
     fn tmp_path(tag: &str) -> PathBuf {
         std::env::temp_dir()
             .join("www_cim_persist_unit")
@@ -314,8 +366,9 @@ mod tests {
     #[test]
     fn save_load_round_trip() {
         let cache = EvalCache::new();
-        cache.get_or_compute("pt-a", Gemm::new(8, 8, 8), || metrics(1.0));
-        cache.get_or_compute("pt-b", Gemm::new(16, 32, 64), || metrics(2.5));
+        cache.get_or_compute("pt-a", Gemm::new(8, 8, 8), || entry(1.0));
+        let g = Gemm::new(16, 32, 64);
+        cache.get_or_compute("pt-b", g, || mapped_entry(2.5, g));
         let path = tmp_path("roundtrip");
         let _ = fs::remove_file(&path);
         assert_eq!(save(&cache, &path).unwrap(), 2);
@@ -325,10 +378,87 @@ mod tests {
         assert_eq!(load, CacheLoad::Loaded { entries: 2 });
         assert_eq!(fresh.len(), 2);
         assert_eq!(fresh.hits() + fresh.misses(), 0, "preload must not count");
-        let m = fresh.get_or_compute("pt-b", Gemm::new(16, 32, 64), || {
+        let e = fresh.get_or_compute("pt-b", g, || panic!("persisted entry must hit"));
+        // The whole entry — mapping included — survives bit-for-bit.
+        assert_eq!(e, mapped_entry(2.5, g));
+        let no_map = fresh.get_or_compute("pt-a", Gemm::new(8, 8, 8), || {
             panic!("persisted entry must hit")
         });
-        assert_eq!(m, metrics(2.5));
+        assert_eq!(no_map, entry(1.0));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pr2_format_v1_cache_is_discarded_wholesale() {
+        // A PR 2-era file: format=1 header and 22-field entries (no
+        // mapping column). Per the versioning contract it is discarded
+        // in full — zero entries may survive into the live cache.
+        let path = tmp_path("pr2-format");
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        let mut old = format!("{MAGIC}\tformat=1\tcost-model={COST_MODEL_VERSION}\n");
+        old.push_str("pt\t8\t8\t8");
+        for f in metrics_fields(&metrics(1.0)) {
+            old.push('\t');
+            old.push_str(&f);
+        }
+        old.push('\n');
+        fs::write(&path, old).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => {
+                assert!(reason.contains("incompatible header"), "{reason}");
+            }
+            other => panic!("format-v1 cache must be discarded, got {other:?}"),
+        }
+        assert!(fresh.is_empty(), "no v1 entries may survive");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_mapper_version_discards_the_file() {
+        let cache = EvalCache::new();
+        let g = Gemm::new(8, 8, 8);
+        cache.get_or_compute("pt", g, || mapped_entry(1.0, g));
+        let path = tmp_path("stale-mapper");
+        save(&cache, &path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        let stale = text.replacen(&format!("mapper={MAPPER_VERSION}"), "mapper=999999", 1);
+        assert_ne!(text, stale, "header rewrite must take effect");
+        fs::write(&path, stale).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => {
+                assert!(reason.contains("incompatible header"), "{reason}");
+            }
+            other => panic!("stale-mapper cache must be discarded, got {other:?}"),
+        }
+        assert!(fresh.is_empty(), "no entries may leak from a stale cache");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mapping_gemm_mismatch_discards_the_file() {
+        // Splice the mapping of one entry under another entry's GEMM.
+        let cache = EvalCache::new();
+        let g = Gemm::new(16, 32, 64);
+        cache.get_or_compute("pt", g, || mapped_entry(1.0, g));
+        let path = tmp_path("spliced");
+        save(&cache, &path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        let spliced = text.replacen("pt\t16\t32\t64\t", "pt\t16\t32\t65\t", 1);
+        assert_ne!(text, spliced);
+        fs::write(&path, spliced).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => {
+                assert!(reason.contains("mismatch"), "{reason}");
+            }
+            other => panic!("spliced cache must be discarded, got {other:?}"),
+        }
+        assert!(fresh.is_empty());
         let _ = fs::remove_file(&path);
     }
 
@@ -343,7 +473,7 @@ mod tests {
     #[test]
     fn bumped_cost_model_version_discards_the_file() {
         let cache = EvalCache::new();
-        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || metrics(1.0));
+        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || entry(1.0));
         let path = tmp_path("stale-model");
         save(&cache, &path).unwrap();
         // Simulate a cache written by a binary with a different cost
@@ -371,7 +501,7 @@ mod tests {
     #[test]
     fn corrupt_entries_discard_the_whole_file() {
         let cache = EvalCache::new();
-        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || metrics(1.0));
+        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || entry(1.0));
         let path = tmp_path("corrupt");
         save(&cache, &path).unwrap();
         let mut text = fs::read_to_string(&path).unwrap();
@@ -405,11 +535,11 @@ mod tests {
     #[test]
     fn encode_is_deterministic_regardless_of_insertion_order() {
         let a = EvalCache::new();
-        a.get_or_compute("x", Gemm::new(1, 2, 3), || metrics(1.0));
-        a.get_or_compute("y", Gemm::new(4, 5, 6), || metrics(2.0));
+        a.get_or_compute("x", Gemm::new(1, 2, 3), || entry(1.0));
+        a.get_or_compute("y", Gemm::new(4, 5, 6), || entry(2.0));
         let b = EvalCache::new();
-        b.get_or_compute("y", Gemm::new(4, 5, 6), || metrics(2.0));
-        b.get_or_compute("x", Gemm::new(1, 2, 3), || metrics(1.0));
+        b.get_or_compute("y", Gemm::new(4, 5, 6), || entry(2.0));
+        b.get_or_compute("x", Gemm::new(1, 2, 3), || entry(1.0));
         assert_eq!(encode(&a), encode(&b));
     }
 }

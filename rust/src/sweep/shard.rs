@@ -16,11 +16,14 @@
 use std::fmt;
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::arch::Architecture;
 use crate::cost::COST_MODEL_VERSION;
+use crate::mapping::Mapping;
+use crate::util::hash::fnv1a;
 use crate::util::json::Json;
 use crate::workload::Gemm;
 
@@ -32,7 +35,8 @@ use super::spec::{SweepResult, SweepSpec};
 
 /// Version of the shard-summary JSON layout. Bump on any change to the
 /// document structure; `repro merge` refuses other versions.
-pub const SHARD_FORMAT_VERSION: u32 = 1;
+/// v2: per-point results carry the canonical mapping (or `null`).
+pub const SHARD_FORMAT_VERSION: u32 = 2;
 
 /// One shard of an `n`-way sweep: `index` ∈ `0..count`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,19 +98,6 @@ impl fmt::Display for ShardId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}/{}", self.index, self.count)
     }
-}
-
-/// FNV-1a 64-bit — a stable, dependency-free hash. `DefaultHasher` is
-/// deliberately not used here: its algorithm is unspecified across
-/// Rust releases, and shard fingerprints must compare equal across
-/// binaries built on different hosts.
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
 }
 
 /// Stable fingerprint of (architecture, sweep spec): every grid axis —
@@ -177,15 +168,20 @@ pub fn shard_json(
             .into_iter()
             .map(|f| format!("\"{f}\""))
             .collect();
+        let mapping = match &r.mapping {
+            Some(m) => format!("\"{}\"", json_escape(&m.canonical())),
+            None => "null".to_string(),
+        };
         out.push_str(&format!(
             "    {{\"workload\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \
-             \"system\": \"{}\", \"sms\": {}, \"metrics\": [{}]}}{}\n",
+             \"system\": \"{}\", \"sms\": {}, \"mapping\": {}, \"metrics\": [{}]}}{}\n",
             json_escape(&r.workload),
             r.gemm.m,
             r.gemm.n,
             r.gemm.k,
             json_escape(&r.system),
             r.sms,
+            mapping,
             metrics.join(", "),
             if i + 1 < run.results.len() { "," } else { "" }
         ));
@@ -255,12 +251,22 @@ fn result_from_json(v: &Json) -> Result<SweepResult> {
         .map(|j| j.as_str().context("metrics fields must be strings"))
         .collect::<Result<Vec<&str>>>()?;
     let metrics = persist::metrics_from_fields(&fields)?;
+    let mapping = match v.get("mapping").context("result missing \"mapping\"")? {
+        Json::Null => None,
+        j => {
+            let s = j
+                .as_str()
+                .context("result \"mapping\" must be a string or null")?;
+            Some(Arc::new(Mapping::from_canonical(s)?))
+        }
+    };
     Ok(SweepResult {
         workload,
         gemm: Gemm::new(m, n, k),
         system,
         sms,
         metrics,
+        mapping,
     })
 }
 
@@ -539,7 +545,13 @@ mod tests {
             assert_eq!(a.system, b.system);
             assert_eq!(a.gemm, b.gemm);
             assert_eq!(a.workload, b.workload);
+            // Mappings travel through the shard files bit-exactly.
+            assert_eq!(a.mapping, b.mapping);
         }
+        assert!(
+            merged.results.iter().any(|r| r.mapping.is_some()),
+            "CiM rows must carry mappings through the merge"
+        );
         let merged_csv = output::results_csv(&merged.results).unwrap().encode();
         assert_eq!(merged_csv, full_csv, "merged CSV must be byte-identical");
 

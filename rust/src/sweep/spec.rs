@@ -7,13 +7,16 @@
 //! via [`SystemSpec`]), *When* (the workload GEMMs) — plus the
 //! framework extensions (SM count, mapper choice).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::arch::{CimSystem, SmemConfig};
 use crate::cim::CimPrimitive;
 use crate::coordinator::jobs::SystemSpec;
 use crate::cost::Metrics;
-use crate::mapping::{HeuristicMapper, Mapping, PriorityMapper};
+use crate::mapping::loopnest::Dim;
+use crate::mapping::{ExhaustiveMapper, HeuristicMapper, Mapping, Objective, PriorityMapper};
 use crate::util::rng::Rng;
 use crate::workload::{models, synthetic, Gemm};
 
@@ -25,9 +28,22 @@ pub enum MapperChoice {
     /// Priority mapper with weight duplication across idle primitives
     /// (§IV-B future work).
     PriorityDuplication,
+    /// Priority mapper with a non-default multi-primitive balance
+    /// threshold (the `ablation-threshold` axis; the paper fixes it at
+    /// 4). `PriorityThreshold { threshold: 4 }` behaves like
+    /// [`MapperChoice::Priority`] but is a distinct cache point — no
+    /// behavioral aliasing is attempted.
+    PriorityThreshold { threshold: u64 },
+    /// Priority mapper with the DRAM-level loop order overridden to a
+    /// fixed permutation (the `ablation-order` axis).
+    PriorityFixedOrder { order: [Dim; 3] },
     /// Random heuristic search with a valid-sample budget (Fig 7's
     /// comparator); seeded per GEMM for determinism.
     Heuristic { budget: u64, seed: u64 },
+    /// Exhaustive enumeration of the discretized map-space — the true
+    /// optimum under `objective` (the `optimality` axis). Orders of
+    /// magnitude slower than the priority mapper; keep the GEMMs modest.
+    Exhaustive { objective: Objective },
 }
 
 impl MapperChoice {
@@ -41,15 +57,36 @@ impl MapperChoice {
         match self {
             MapperChoice::Priority => format!("v{v}:priority"),
             MapperChoice::PriorityDuplication => format!("v{v}:priority+dup"),
+            MapperChoice::PriorityThreshold { threshold } => {
+                format!("v{v}:priority:t{threshold}")
+            }
+            MapperChoice::PriorityFixedOrder { order } => format!(
+                "v{v}:priority:order-{}{}{}",
+                order[0].name(),
+                order[1].name(),
+                order[2].name()
+            ),
             MapperChoice::Heuristic { budget, seed } => format!("v{v}:heuristic:{budget}:{seed}"),
+            MapperChoice::Exhaustive { objective } => {
+                format!("v{v}:exhaustive:{}", objective.name())
+            }
         }
     }
 
-    /// Parse a CLI mapper name: `priority`, `dup`, `heuristic[:budget]`.
+    /// Parse a CLI mapper name: `priority`, `priority:t<threshold>`,
+    /// `dup`, `heuristic[:budget]`, `exhaustive[:energy|delay|edp]`.
     pub fn parse(s: &str, seed: u64) -> Result<MapperChoice> {
         let s = s.to_ascii_lowercase();
         if s == "priority" {
             return Ok(MapperChoice::Priority);
+        }
+        if let Some(t) = s.strip_prefix("priority:t") {
+            return match t.parse() {
+                Ok(threshold) if threshold >= 1 => {
+                    Ok(MapperChoice::PriorityThreshold { threshold })
+                }
+                _ => bail!("--mapper priority:t<threshold>: bad threshold {t:?}"),
+            };
         }
         if s == "dup" || s == "duplication" || s == "priority+dup" {
             return Ok(MapperChoice::PriorityDuplication);
@@ -65,7 +102,21 @@ impl MapperChoice {
             };
             return Ok(MapperChoice::Heuristic { budget, seed });
         }
-        bail!("--mapper: unknown mapper {s:?} (priority, dup, heuristic[:budget])")
+        if let Some(rest) = s.strip_prefix("exhaustive") {
+            let objective = match rest.strip_prefix(':') {
+                None if rest.is_empty() => Objective::Energy,
+                Some(o) => match Objective::parse(o) {
+                    Some(obj) => obj,
+                    None => bail!("--mapper exhaustive:<objective>: bad objective {o:?}"),
+                },
+                _ => bail!("--mapper: unknown mapper {s:?}"),
+            };
+            return Ok(MapperChoice::Exhaustive { objective });
+        }
+        bail!(
+            "--mapper: unknown mapper {s:?} (priority, priority:t<n>, dup, \
+             heuristic[:budget], exhaustive[:energy|delay|edp])"
+        )
     }
 
     /// Produce the mapping for one GEMM on one CiM system.
@@ -75,11 +126,20 @@ impl MapperChoice {
             MapperChoice::PriorityDuplication => {
                 PriorityMapper::new(sys).with_weight_duplication().map(gemm)
             }
+            MapperChoice::PriorityThreshold { threshold } => {
+                PriorityMapper::with_threshold(sys, *threshold).map(gemm)
+            }
+            MapperChoice::PriorityFixedOrder { order } => {
+                PriorityMapper::new(sys).map(gemm).with_dram_order(*order)
+            }
             MapperChoice::Heuristic { budget, seed } => {
                 let mut h = HeuristicMapper::new(sys);
                 h.valid_budget = *budget;
                 let mut rng = Rng::new(seed ^ gemm.m ^ gemm.n ^ gemm.k);
                 h.map(gemm, &mut rng).0
+            }
+            MapperChoice::Exhaustive { objective } => {
+                ExhaustiveMapper::new(sys, *objective).map(gemm).mapping
             }
         }
     }
@@ -107,6 +167,12 @@ pub struct SweepResult {
     pub system: String,
     pub sms: u64,
     pub metrics: Metrics,
+    /// The (single-SM) mapping that produced the metrics — `None` for
+    /// baseline points. Served from the cache on hits (shared via
+    /// `Arc`, so a hit never deep-copies the loop nest), so post-hoc
+    /// cost analyses (NoC sensitivity, duplication factors) never
+    /// re-run the mapper.
+    pub mapping: Option<Arc<Mapping>>,
 }
 
 /// A declarative design-space sweep: the cartesian product of the
@@ -407,8 +473,25 @@ mod tests {
         let fps = [
             MapperChoice::Priority.fingerprint(),
             MapperChoice::PriorityDuplication.fingerprint(),
+            MapperChoice::PriorityThreshold { threshold: 8 }.fingerprint(),
+            MapperChoice::PriorityFixedOrder {
+                order: [Dim::M, Dim::K, Dim::N],
+            }
+            .fingerprint(),
+            MapperChoice::PriorityFixedOrder {
+                order: [Dim::N, Dim::K, Dim::M],
+            }
+            .fingerprint(),
             MapperChoice::Heuristic { budget: 60, seed: 7 }.fingerprint(),
             MapperChoice::Heuristic { budget: 500, seed: 7 }.fingerprint(),
+            MapperChoice::Exhaustive {
+                objective: Objective::Energy,
+            }
+            .fingerprint(),
+            MapperChoice::Exhaustive {
+                objective: Objective::Edp,
+            }
+            .fingerprint(),
         ];
         for i in 0..fps.len() {
             for j in (i + 1)..fps.len() {
@@ -425,10 +508,51 @@ mod tests {
             MapperChoice::PriorityDuplication
         );
         assert_eq!(
+            MapperChoice::parse("priority:t8", 1).unwrap(),
+            MapperChoice::PriorityThreshold { threshold: 8 }
+        );
+        assert_eq!(
             MapperChoice::parse("heuristic:60", 9).unwrap(),
             MapperChoice::Heuristic { budget: 60, seed: 9 }
         );
+        assert_eq!(
+            MapperChoice::parse("exhaustive", 1).unwrap(),
+            MapperChoice::Exhaustive {
+                objective: Objective::Energy
+            }
+        );
+        assert_eq!(
+            MapperChoice::parse("exhaustive:edp", 1).unwrap(),
+            MapperChoice::Exhaustive {
+                objective: Objective::Edp
+            }
+        );
         assert!(MapperChoice::parse("magic", 1).is_err());
+        assert!(MapperChoice::parse("priority:t0", 1).is_err());
+        assert!(MapperChoice::parse("exhaustive:speed", 1).is_err());
+    }
+
+    #[test]
+    fn mapper_variants_produce_their_documented_mappings() {
+        use crate::arch::{Architecture, CimSystem, MemLevel};
+        let arch = Architecture::default_sm();
+        let sys = CimSystem::at_level(&arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+        let g = Gemm::new(256, 512, 512);
+        assert_eq!(
+            MapperChoice::PriorityThreshold { threshold: 4 }.map(&sys, &g),
+            MapperChoice::Priority.map(&sys, &g),
+            "the default threshold is 4"
+        );
+        let order = [Dim::K, Dim::N, Dim::M];
+        assert_eq!(
+            MapperChoice::PriorityFixedOrder { order }.map(&sys, &g),
+            PriorityMapper::new(&sys).map(&g).with_dram_order(order)
+        );
+        let exact = MapperChoice::Exhaustive {
+            objective: Objective::Energy,
+        }
+        .map(&sys, &g);
+        assert!(exact.nest.validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,36 @@
+//! Stable, dependency-free hashing.
+//!
+//! `std::collections::hash_map::DefaultHasher` is deliberately avoided
+//! for anything that crosses a process boundary: its algorithm is
+//! unspecified across Rust releases, while sweep fingerprints and
+//! mapping fingerprints must compare equal across binaries built on
+//! different hosts.
+
+/// FNV-1a 64-bit over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a reference values (offset basis for "", published
+        // digest for "a").
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_digests() {
+        assert_ne!(fnv1a(b"priority"), fnv1a(b"priority+dup"));
+        assert_ne!(fnv1a(b"x"), fnv1a(b"y"));
+    }
+}

@@ -8,6 +8,7 @@
 //! * [`json`] — minimal JSON reader (serde_json replacement) for the
 //!   shard-merge tool.
 //! * [`check`] — mini property-testing harness (proptest replacement).
+//! * [`hash`] — stable FNV-1a hashing for cross-process fingerprints.
 //! * [`cli`] — subcommand/flag parser (clap replacement).
 //! * [`pool`] — scoped worker pool (tokio/rayon replacement).
 //! * [`bench`] — timing harness used by `cargo bench` targets
@@ -17,6 +18,7 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod rng;

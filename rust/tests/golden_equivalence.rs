@@ -1,0 +1,316 @@
+//! Golden equivalence harness for the engine-routing refactor (ISSUE 3).
+//!
+//! `fig7`, `table2`, `optimality`, `ablation-duplication`,
+//! `ablation-interconnect` (and the two mapper ablations) used to
+//! hand-roll serial direct evaluation; they now evaluate through the
+//! shared `SweepEngine`. The refactor's contract is **byte-identical
+//! CSV output**, and this suite proves it: each test regenerates the
+//! pre-refactor CSV with a *reference implementation* — the literal
+//! direct-evaluation code the experiment used before the refactor,
+//! preserved verbatim below — and asserts the engine-routed experiment
+//! emits exactly those bytes.
+//!
+//! The goldens are captured as code rather than committed CSV files on
+//! purpose: several columns are `{:.4}`-formatted results of `ln`/`exp`
+//! (geomeans), so a committed file would pin one platform's libm and
+//! flake on another, while the in-process reference pins precisely the
+//! property the refactor must preserve — same inputs, same bytes — on
+//! every platform the tests run on.
+//!
+//! `table2` reports wall-clock seconds, which no harness can make
+//! byte-stable; for it the structural columns (header + the runs axis)
+//! are pinned instead.
+
+use www_cim::arch::{CimSystem, Interconnect, MemLevel, SmemConfig};
+use www_cim::cim::CimPrimitive;
+use www_cim::cost::CostModel;
+use www_cim::experiments::{self, Ctx};
+use www_cim::mapping::loopnest::Dim;
+use www_cim::mapping::{ExhaustiveMapper, HeuristicMapper, Objective, PriorityMapper};
+use www_cim::util::csv::{self, Csv};
+use www_cim::util::rng::Rng;
+use www_cim::util::stats::geomean;
+use www_cim::workload::{models, synthetic, Gemm};
+
+fn quick_ctx(tag: &str) -> Ctx {
+    let mut ctx = Ctx::quick();
+    ctx.out_dir = std::env::temp_dir().join(format!("www_cim_golden_eq_{tag}"));
+    let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    ctx
+}
+
+/// Run one experiment id and return the CSV mirror's bytes.
+fn run_and_read(ctx: &Ctx, id: &str) -> String {
+    experiments::run(id, ctx).unwrap_or_else(|e| panic!("{id} failed: {e:#}"));
+    let path = ctx.out_dir.join(format!("{id}.csv"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{id}: missing csv mirror: {e}"))
+}
+
+/// The pre-refactor fig7 evaluation suite (quick mode), verbatim.
+fn fig7_suite(ctx: &Ctx) -> Vec<(String, Vec<Gemm>)> {
+    assert!(ctx.quick, "goldens are captured in quick mode");
+    let mut out: Vec<(String, Vec<Gemm>)> = models::real_dataset()
+        .into_iter()
+        .map(|w| {
+            let gemms = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+            (w.name, gemms)
+        })
+        .collect();
+    out.push(("Synthetic".to_string(), synthetic::dataset(ctx.seed, 12)));
+    out
+}
+
+#[test]
+fn fig7_engine_routed_csv_is_byte_identical() {
+    let ctx = quick_ctx("fig7");
+    let got = run_and_read(&ctx, "fig7");
+
+    // Pre-refactor reference: per GEMM, priority vs seeded heuristic
+    // search, both scored with the direct cost model.
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let cost = CostModel::new(&sys);
+    let mut want = Csv::new(vec![
+        "workload", "m", "n", "k", "d_topsw", "d_gflops", "d_util",
+    ]);
+    for (name, gemms) in fig7_suite(&ctx) {
+        for g in &gemms {
+            let ours = cost.evaluate(g, &PriorityMapper::new(&sys).map(g));
+            let mut h = HeuristicMapper::new(&sys);
+            h.valid_budget = ctx.heuristic_budget();
+            let (hm, _) = h.map(g, &mut Rng::new(ctx.seed ^ g.m ^ g.n ^ g.k));
+            let base = cost.evaluate(g, &hm);
+            want.row(vec![
+                name.clone(),
+                g.m.to_string(),
+                g.n.to_string(),
+                g.k.to_string(),
+                format!("{:.4}", ours.tops_per_watt / base.tops_per_watt),
+                format!("{:.4}", ours.gflops / base.gflops),
+                format!("{:.4}", ours.utilization / base.utilization.max(1e-12)),
+            ])
+            .unwrap();
+        }
+    }
+    assert_eq!(got, want.encode(), "fig7.csv drifted from the direct evaluation");
+}
+
+#[test]
+fn table2_engine_axis_keeps_the_golden_structure() {
+    // Timings cannot be byte-stable; pin the schema and the runs axis.
+    let ctx = quick_ctx("table2");
+    let got = run_and_read(&ctx, "table2");
+    let rows = csv::parse(&got);
+    assert_eq!(rows[0], vec!["runs", "ours_s", "heuristic_s"]);
+    let runs: Vec<&str> = rows[1..].iter().map(|r| r[0].as_str()).collect();
+    assert_eq!(runs, vec!["2", "5"], "quick-mode runs axis drifted");
+    for r in &rows[1..] {
+        for cell in &r[1..] {
+            let secs: f64 = cell.parse().unwrap_or_else(|e| {
+                panic!("table2 timing {cell:?} is not a number: {e}")
+            });
+            assert!(secs >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn optimality_engine_routed_csv_is_byte_identical() {
+    let ctx = quick_ctx("optimality");
+    let got = run_and_read(&ctx, "optimality");
+
+    // Pre-refactor reference: exhaustive optimum vs priority, direct.
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let cost = CostModel::new(&sys);
+    let shapes = [Gemm::new(64, 128, 256), Gemm::new(256, 512, 512)];
+    let mut want = Csv::new(vec![
+        "m", "n", "k", "candidates", "opt_pj", "ours_pj", "gap", "opt_cycles", "ours_cycles",
+    ]);
+    for g in &shapes {
+        let exact = ExhaustiveMapper::new(&sys, Objective::Energy).map(g);
+        let ours = cost.evaluate(g, &PriorityMapper::new(&sys).map(g));
+        let gap = ours.energy_pj / exact.metrics.energy_pj;
+        want.row(vec![
+            g.m.to_string(),
+            g.n.to_string(),
+            g.k.to_string(),
+            exact.candidates.to_string(),
+            format!("{:.1}", exact.metrics.energy_pj),
+            format!("{:.1}", ours.energy_pj),
+            format!("{gap:.4}"),
+            exact.metrics.total_cycles.to_string(),
+            ours.total_cycles.to_string(),
+        ])
+        .unwrap();
+    }
+    assert_eq!(
+        got,
+        want.encode(),
+        "optimality.csv drifted from the direct evaluation"
+    );
+}
+
+#[test]
+fn duplication_engine_routed_csv_is_byte_identical() {
+    let ctx = quick_ctx("dup");
+    let got = run_and_read(&ctx, "ablation-duplication");
+
+    let sys = CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+    let cost = CostModel::new(&sys);
+    let shapes = [
+        Gemm::new(8192, 16, 256),
+        Gemm::new(4096, 32, 256),
+        Gemm::new(12544, 64, 147),
+        Gemm::new(2048, 64, 512),
+        Gemm::new(512, 1024, 1024),
+    ];
+    let mut want = Csv::new(vec![
+        "m", "n", "k", "dup", "gflops_off", "gflops_on", "topsw_off", "topsw_on",
+    ]);
+    for g in shapes {
+        let off = cost.evaluate(&g, &PriorityMapper::new(&sys).map(&g));
+        let dup_mapping = PriorityMapper::new(&sys).with_weight_duplication().map(&g);
+        let on = cost.evaluate(&g, &dup_mapping);
+        want.row(vec![
+            g.m.to_string(),
+            g.n.to_string(),
+            g.k.to_string(),
+            dup_mapping.spatial.m_prims.to_string(),
+            format!("{:.1}", off.gflops),
+            format!("{:.1}", on.gflops),
+            format!("{:.4}", off.tops_per_watt),
+            format!("{:.4}", on.tops_per_watt),
+        ])
+        .unwrap();
+    }
+    assert_eq!(
+        got,
+        want.encode(),
+        "ablation-duplication.csv drifted from the direct evaluation"
+    );
+}
+
+#[test]
+fn interconnect_engine_routed_csv_is_byte_identical() {
+    let ctx = quick_ctx("noc");
+    let got = run_and_read(&ctx, "ablation-interconnect");
+
+    let dataset = synthetic::dataset(ctx.seed, ctx.synthetic_size().min(200));
+    let mut want = Csv::new(vec![
+        "system", "hop_pj", "topsw_base", "topsw_noc", "overhead_pct",
+    ]);
+    for (label, sys) in [
+        (
+            "D-1 @ RF",
+            CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile),
+        ),
+        (
+            "D-1 @ SMEM/B",
+            CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB),
+        ),
+    ] {
+        for hop in [0.03, 0.06, 0.12] {
+            let noc = Interconnect { hop_pj: hop };
+            let rows: Vec<(f64, f64)> = dataset
+                .iter()
+                .map(|g| {
+                    let m = PriorityMapper::new(&sys).map(g);
+                    let base = CostModel::new(&sys).evaluate(g, &m);
+                    let with = base.energy_pj + noc.energy_pj(&m);
+                    (base.ops as f64 / base.energy_pj, base.ops as f64 / with)
+                })
+                .collect();
+            let base: Vec<f64> = rows.iter().map(|r| r.0).collect();
+            let with: Vec<f64> = rows.iter().map(|r| r.1).collect();
+            let (gb, gw) = (geomean(&base), geomean(&with));
+            want.row(vec![
+                label.to_string(),
+                format!("{hop}"),
+                format!("{gb:.4}"),
+                format!("{gw:.4}"),
+                format!("{:.2}", 100.0 * (gb / gw - 1.0)),
+            ])
+            .unwrap();
+        }
+    }
+    assert_eq!(
+        got,
+        want.encode(),
+        "ablation-interconnect.csv drifted from the direct evaluation"
+    );
+}
+
+#[test]
+fn threshold_engine_routed_csv_is_byte_identical() {
+    let ctx = quick_ctx("threshold");
+    let got = run_and_read(&ctx, "ablation-threshold");
+
+    let dataset = synthetic::dataset(ctx.seed, ctx.synthetic_size().min(300));
+    let sys = CimSystem::at_smem(&ctx.arch, CimPrimitive::digital_6t(), SmemConfig::ConfigB);
+    let mut want = Csv::new(vec!["threshold", "geo_topsw", "geo_gflops", "mean_util"]);
+    for threshold in [1u64, 2, 4, 8, 16, 64] {
+        let rows: Vec<_> = dataset
+            .iter()
+            .map(|g| {
+                let mapper = PriorityMapper::with_threshold(&sys, threshold);
+                CostModel::new(&sys).evaluate(g, &mapper.map(g))
+            })
+            .collect();
+        let t: Vec<f64> = rows.iter().map(|m| m.tops_per_watt).collect();
+        let f: Vec<f64> = rows.iter().map(|m| m.gflops).collect();
+        let u = rows.iter().map(|m| m.utilization).sum::<f64>() / rows.len() as f64;
+        want.row(vec![
+            threshold.to_string(),
+            format!("{:.4}", geomean(&t)),
+            format!("{:.2}", geomean(&f)),
+            format!("{:.4}", u),
+        ])
+        .unwrap();
+    }
+    assert_eq!(
+        got,
+        want.encode(),
+        "ablation-threshold.csv drifted from the direct evaluation"
+    );
+}
+
+#[test]
+fn order_engine_routed_csv_is_byte_identical() {
+    let ctx = quick_ctx("order");
+    let got = run_and_read(&ctx, "ablation-order");
+
+    let dataset = synthetic::dataset(ctx.seed, ctx.synthetic_size().min(300));
+    let sys = CimSystem::at_level(&ctx.arch, CimPrimitive::digital_6t(), MemLevel::RegisterFile);
+    let variants: [(&str, Option<[Dim; 3]>); 4] = [
+        ("greedy (ours)", None),
+        ("fixed M,K,N", Some([Dim::M, Dim::K, Dim::N])),
+        ("fixed N,K,M", Some([Dim::N, Dim::K, Dim::M])),
+        ("fixed K,N,M", Some([Dim::K, Dim::N, Dim::M])),
+    ];
+    let mut want = Csv::new(vec!["order", "geo_topsw", "geo_gflops"]);
+    for (name, order) in variants {
+        let rows: Vec<_> = dataset
+            .iter()
+            .map(|g| {
+                let base = PriorityMapper::new(&sys).map(g);
+                let mapping = match order {
+                    None => base,
+                    Some(o) => base.with_dram_order(o),
+                };
+                CostModel::new(&sys).evaluate(g, &mapping)
+            })
+            .collect();
+        let t: Vec<f64> = rows.iter().map(|m| m.tops_per_watt).collect();
+        let f: Vec<f64> = rows.iter().map(|m| m.gflops).collect();
+        want.row(vec![
+            name.to_string(),
+            format!("{:.4}", geomean(&t)),
+            format!("{:.2}", geomean(&f)),
+        ])
+        .unwrap();
+    }
+    assert_eq!(
+        got,
+        want.encode(),
+        "ablation-order.csv drifted from the direct evaluation"
+    );
+}

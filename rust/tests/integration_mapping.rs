@@ -126,3 +126,106 @@ fn bigger_pool_never_maps_fewer_primitives() {
         assert!(mb.spatial.prims_used() >= ma.spatial.prims_used());
     }
 }
+
+// ---------------------------------------------------------------------
+// Canonical serialization (ISSUE 3): randomized round-trip and
+// fingerprint-perturbation properties.
+// ---------------------------------------------------------------------
+
+/// Random mappings (priority and heuristic, every system) survive
+/// serialize → parse → re-serialize bit-exactly — the property the
+/// mapping-aware persisted cache rests on.
+#[test]
+fn prop_canonical_round_trip_bit_exact() {
+    use www_cim::mapping::Mapping;
+    use www_cim::util::check::{check, Config};
+
+    let systems = all_systems();
+    check(Config::default().cases(64), "canonical round trip", |rng| {
+        let dim = |rng: &mut Rng| -> u64 {
+            match rng.gen_range(0, 3) {
+                0 => 1 << rng.gen_range(0, 13),
+                1 => rng.gen_range(1, 4097),
+                _ => rng.gen_range(1, 64),
+            }
+        };
+        let g = Gemm::new(dim(rng), dim(rng), dim(rng));
+        let sys = &systems[rng.index(systems.len())];
+        let m = if rng.gen_range(0, 2) == 0 {
+            PriorityMapper::new(sys).map(&g)
+        } else {
+            let mut h = HeuristicMapper::new(sys);
+            h.valid_budget = 20;
+            h.map(&g, &mut Rng::new(rng.gen_range(0, 1 << 30))).0
+        };
+        let text = m.canonical();
+        let back = Mapping::from_canonical(&text)
+            .map_err(|e| format!("{g} on {}: {e:#}", sys.label()))?;
+        if back != m {
+            return Err(format!("{g} on {}: round trip changed the mapping", sys.label()));
+        }
+        if back.canonical() != text {
+            return Err(format!("{g} on {}: re-serialization drifted", sys.label()));
+        }
+        if back.occupancy.to_bits() != m.occupancy.to_bits() {
+            return Err(format!("{g}: occupancy not bit-exact"));
+        }
+        Ok(())
+    });
+}
+
+/// Perturbing any loop-nest, spatial, GEMM or occupancy field of a
+/// randomized mapping changes its fingerprint.
+#[test]
+fn prop_fingerprint_tracks_perturbations() {
+    use www_cim::mapping::loopnest::Loop;
+    use www_cim::util::check::{check, Config};
+
+    let systems = all_systems();
+    check(Config::default().cases(64), "fingerprint perturbation", |rng| {
+        let g = Gemm::new(
+            rng.gen_range(2, 4097),
+            rng.gen_range(2, 4097),
+            rng.gen_range(2, 4097),
+        );
+        let sys = &systems[rng.index(systems.len())];
+        let m = PriorityMapper::new(sys).map(&g);
+        let base = m.fingerprint();
+        if base != m.fingerprint() {
+            return Err("fingerprint is not deterministic".to_string());
+        }
+
+        let mut p = m.clone();
+        match rng.gen_range(0, 5) {
+            0 => p.gemm = Gemm::new(p.gemm.m + 1, p.gemm.n, p.gemm.k),
+            1 => p.spatial.ku += 1,
+            2 => p.occupancy = f64::from_bits(p.occupancy.to_bits() + 1),
+            3 => {
+                // Perturb a loop factor somewhere in the nest (append a
+                // loop if the chosen block is empty).
+                let b = rng.index(p.nest.blocks.len());
+                let block = &mut p.nest.blocks[b];
+                if block.loops.is_empty() {
+                    block.loops.push(Loop::new(Dim::K, 2));
+                } else {
+                    let l = rng.index(block.loops.len());
+                    block.loops[l].factor += 1;
+                }
+            }
+            _ => {
+                // Change a block's memory level.
+                let b = rng.index(p.nest.blocks.len());
+                let block = &mut p.nest.blocks[b];
+                block.mem = if block.mem == MemLevel::PeBuffer {
+                    MemLevel::Dram
+                } else {
+                    MemLevel::PeBuffer
+                };
+            }
+        }
+        if p.fingerprint() == base {
+            return Err(format!("{g}: perturbation left the fingerprint unchanged"));
+        }
+        Ok(())
+    });
+}

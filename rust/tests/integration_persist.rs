@@ -1,8 +1,9 @@
-//! Integration tests for the persistence + sharding layer (ISSUE 2):
-//! persisted-cache round trips (warm-from-disk runs bit-identical to
-//! cold ones, zero misses), cost-model-version invalidation at the
-//! engine level, and shard + merge reproducing the unsharded sweep
-//! byte-for-byte.
+//! Integration tests for the persistence + sharding layer (ISSUE 2 +
+//! ISSUE 3): persisted-cache round trips (warm-from-disk runs
+//! bit-identical to cold ones, zero misses, zero mapper invocations now
+//! that mappings persist too), cost-model/mapper/format-version
+//! invalidation at the engine level, and shard + merge reproducing the
+//! unsharded sweep byte-for-byte.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -90,6 +91,14 @@ fn prop_persisted_cache_round_trip() {
                 if a.metrics != b.metrics || a.system != b.system {
                     return Err(format!("{} on {}: warm != cold", a.gemm, a.system));
                 }
+                // serialize → persist → load → re-serialize must be
+                // bit-exact, canonical mapping form included.
+                if a.mapping != b.mapping {
+                    return Err(format!("{} on {}: mapping round trip drifted", a.gemm, a.system));
+                }
+            }
+            if warm_engine.cache().mapper_calls() != 0 {
+                return Err("warm-from-disk run re-invoked the mapper".to_string());
             }
             Ok(())
         },
@@ -136,6 +145,160 @@ fn warm_start_across_processes_zero_misses() {
     persist::save(p2.cache(), &path).unwrap();
     let file2 = std::fs::read_to_string(&path).unwrap();
     assert_eq!(file1, file2, "cache file must be stable across save cycles");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ISSUE 3 warm-start contract: a persisted mapping-aware cache
+/// fully warms a second process — zero misses *and zero mapper
+/// invocations* (the cached mappings make re-mapping unnecessary), with
+/// every CiM result carrying its mapping bit-for-bit.
+#[test]
+fn warm_start_with_mappings_never_reinvokes_the_mapper() {
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("warm-mappings")
+        .workload("synthetic", synthetic::dataset(5, 20))
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+            SystemSpec::CimAtSmem(CimPrimitive::analog_8t(), SmemConfig::ConfigB),
+        ]);
+    let dir = tmp_dir("warm_mappings");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("cache.bin");
+
+    // "Process 1": cold sweep — one mapper call per distinct CiM miss
+    // (the random dataset may repeat a shape; repeats are hits).
+    let distinct: std::collections::HashSet<Gemm> =
+        spec.workloads[0].1.iter().copied().collect();
+    // Single-threaded so a repeated random shape cannot race two
+    // concurrent misses (which would double-count the mapper call).
+    let p1 = SweepEngine::new(arch.clone()).threads(1);
+    let cold = p1.run_spec(&spec);
+    assert_eq!(
+        p1.cache().mapper_calls(),
+        2 * distinct.len() as u64,
+        "one mapper call per (CiM system, distinct GEMM) miss"
+    );
+    persist::save(p1.cache(), &path).unwrap();
+
+    // "Process 2": warm from disk — no misses, no mapper calls at all.
+    let cache = Arc::new(EvalCache::new());
+    persist::load_into(&cache, &path).unwrap();
+    let p2 = SweepEngine::with_cache(arch, cache);
+    let warm = p2.run_spec(&spec);
+    assert_eq!(warm.cache_misses, 0, "warm run must be all hits");
+    assert_eq!(
+        p2.cache().mapper_calls(),
+        0,
+        "cached mappings must make re-mapping unnecessary"
+    );
+    for (a, b) in cold.results.iter().zip(&warm.results) {
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.mapping, b.mapping, "{} on {}", a.gemm, a.system);
+    }
+    // Baseline rows have no mapping; every CiM row has one.
+    for r in &warm.results {
+        assert_eq!(
+            r.mapping.is_some(),
+            r.system != "Tensor-core",
+            "{} on {}",
+            r.gemm,
+            r.system
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A PR 2-format (format-version 1, mapping-less) cache file must be
+/// discarded wholesale at the engine level: the next run recomputes
+/// every point rather than trusting mapper-less entries.
+#[test]
+fn pr2_format_cache_forces_recomputation() {
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("pr2")
+        .workload("w", vec![Gemm::new(64, 64, 64), Gemm::new(256, 256, 256)])
+        .systems(vec![SystemSpec::CimAtRf(CimPrimitive::digital_6t())]);
+    let dir = tmp_dir("pr2_format");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("cache.bin");
+
+    // Write a current cache, then rewrite it into the PR 2 shape:
+    // format=1 header without the mapper token, entries without the
+    // mapping column.
+    let p1 = SweepEngine::new(arch.clone());
+    p1.run_spec(&spec);
+    persist::save(p1.cache(), &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v1: String = text
+        .lines()
+        .enumerate()
+        .map(|(i, line)| {
+            let fields: Vec<&str> = line.split('\t').collect();
+            if i == 0 {
+                // magic + format=1 + cost-model=…, no mapper token.
+                format!("{}\tformat=1\t{}", fields[0], fields[2])
+            } else {
+                // drop the mapping column (field 4).
+                let mut f = fields.clone();
+                f.remove(4);
+                f.join("\t")
+            }
+        })
+        .collect::<Vec<String>>()
+        .join("\n")
+        + "\n";
+    assert_ne!(text, v1);
+    std::fs::write(&path, v1).unwrap();
+
+    let cache = Arc::new(EvalCache::new());
+    match persist::load_into(&cache, &path).unwrap() {
+        CacheLoad::Discarded { reason } => {
+            assert!(reason.contains("incompatible header"), "{reason}")
+        }
+        other => panic!("PR 2-format cache must be discarded, got {other:?}"),
+    }
+    assert!(cache.is_empty(), "zero v1 entries may survive");
+    let p2 = SweepEngine::with_cache(arch, cache);
+    let rerun = p2.run_spec(&spec);
+    assert_eq!(rerun.cache_misses as usize, spec.n_points());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A stale mapper version in the header (an algorithm change without a
+/// cache-format change) likewise discards the file with zero survivors.
+#[test]
+fn stale_mapper_version_forces_recomputation() {
+    use www_cim::mapping::MAPPER_VERSION;
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("stale-mapper")
+        .workload("w", vec![Gemm::new(128, 128, 128)])
+        .systems(vec![SystemSpec::CimAtRf(CimPrimitive::digital_8t())]);
+    let dir = tmp_dir("stale_mapper");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("cache.bin");
+
+    let p1 = SweepEngine::new(arch.clone());
+    p1.run_spec(&spec);
+    persist::save(p1.cache(), &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let stale = text.replacen(
+        &format!("mapper={MAPPER_VERSION}"),
+        &format!("mapper={}", MAPPER_VERSION + 1),
+        1,
+    );
+    assert_ne!(text, stale);
+    std::fs::write(&path, stale).unwrap();
+
+    let cache = Arc::new(EvalCache::new());
+    match persist::load_into(&cache, &path).unwrap() {
+        CacheLoad::Discarded { .. } => {}
+        other => panic!("stale-mapper cache must be discarded, got {other:?}"),
+    }
+    assert!(cache.is_empty(), "zero stale entries may survive");
+    let p2 = SweepEngine::with_cache(arch, cache);
+    let rerun = p2.run_spec(&spec);
+    assert_eq!(rerun.cache_misses as usize, spec.n_points());
+    assert_eq!(p2.cache().mapper_calls(), 1, "the point must be re-mapped");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
