@@ -17,7 +17,7 @@ fn main() {
     // Regeneration output would swamp the report; mute stdout noise by
     // spot-checking once first.
     let mut b = Bencher::new();
-    for id in experiments::ALL {
+    for id in experiments::ids() {
         b.bench(&format!("experiment/{id}"), || {
             experiments::run(id, &ctx).expect("experiment runs");
         });

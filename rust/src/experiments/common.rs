@@ -55,6 +55,10 @@ pub struct Ctx {
     /// before a run and saved after it, so repeated `repro experiment`
     /// invocations are warm across processes.
     pub cache_path: Option<PathBuf>,
+    /// Optional on-disk size cap for the persisted cache
+    /// (`--cache-max-mb` / a scenario's `cache.max_bytes`): saves trim
+    /// least-recently-used entries until the file fits.
+    pub cache_max_bytes: Option<u64>,
 }
 
 impl Default for Ctx {
@@ -67,6 +71,7 @@ impl Default for Ctx {
             seed: crate::workload::synthetic::DEFAULT_SEED,
             cache: Arc::new(EvalCache::new()),
             cache_path: None,
+            cache_max_bytes: None,
         }
     }
 }
@@ -127,11 +132,12 @@ impl Ctx {
     }
 
     /// Persist the shared cache to [`Ctx::cache_path`] (no-op without
-    /// one).
+    /// one), trimming LRU-first to [`Ctx::cache_max_bytes`] if capped.
     pub fn save_persistent_cache(&self) -> Result<()> {
         if let Some(path) = &self.cache_path {
-            let n = crate::sweep::persist::save(&self.cache, path)?;
-            println!("[cache] saved {n} design points -> {}", path.display());
+            let outcome =
+                crate::sweep::persist::save_capped(&self.cache, path, self.cache_max_bytes)?;
+            println!("[cache] {} -> {}", outcome.describe(), path.display());
         }
         Ok(())
     }

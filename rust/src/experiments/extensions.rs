@@ -252,7 +252,7 @@ pub fn run_duplication(ctx: &Ctx) -> Result<()> {
         "duplication",
         &shapes,
         &spec,
-        &[MapperChoice::Priority, MapperChoice::PriorityDuplication],
+        &[MapperChoice::Priority, MapperChoice::duplication()],
     );
     let results = ctx.run_aligned(&jobs);
     for (i, g) in shapes.iter().enumerate() {

@@ -2,8 +2,13 @@
 //! evaluation (see DESIGN.md §Per-experiment index).
 //!
 //! Every regenerator prints the paper's rows/series as an ASCII table
-//! and mirrors the full series into `results/<id>.csv`. Run via
-//! `repro experiment <id|all>`.
+//! and mirrors the full series into `results/<id>.csv`. The experiments
+//! are registered in [`REGISTRY`] — the single source of truth for
+//! experiment ids that the CLI usage text, `repro list`, the built-in
+//! scenario registry ([`crate::scenario`]) and the test suites all
+//! derive from, so no listing can drift from the set of runnable
+//! experiments. Run via `repro experiment <id|all>` or
+//! `repro run <id>`.
 
 pub mod ablations;
 pub mod common;
@@ -22,42 +27,160 @@ pub use common::Ctx;
 
 use anyhow::{bail, Result};
 
-/// All experiment ids, in paper order.
-pub const ALL: &[&str] = &[
-    "fig2", "fig7", "table2", "fig9", "fig10", "fig11", "fig12", "fig13", "table6", "roofline",
-    "ablation-threshold", "ablation-order", "ablation-duplication", "ablation-interconnect",
-    "scaling", "hybrid", "optimality", "zoo", "serving",
+/// One registered experiment: the paper artifact it regenerates and
+/// the function that shapes its table + CSV output.
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentDef {
+    pub id: &'static str,
+    /// One-line description for `repro list`.
+    pub title: &'static str,
+    pub run: fn(&Ctx) -> Result<()>,
+}
+
+/// Every experiment, in paper order. All listings (CLI usage,
+/// `repro list`, built-in scenarios) and dispatch derive from this
+/// table — adding an entry here is the *whole* registration.
+pub const REGISTRY: &[ExperimentDef] = &[
+    ExperimentDef {
+        id: "fig2",
+        title: "GEMM ops vs algorithmic reuse across ML workloads",
+        run: fig2::run,
+    },
+    ExperimentDef {
+        id: "fig7",
+        title: "priority mapper vs heuristic search (quality ratios)",
+        run: fig7::run,
+    },
+    ExperimentDef {
+        id: "table2",
+        title: "mapper wall-clock comparison (priority vs search)",
+        run: fig7::run_table2,
+    },
+    ExperimentDef {
+        id: "fig9",
+        title: "TOPS/W vs GFLOPS per CiM primitive @ RF (iso-area)",
+        run: fig9::run,
+    },
+    ExperimentDef {
+        id: "fig10",
+        title: "energy breakdown per memory level",
+        run: fig10::run,
+    },
+    ExperimentDef {
+        id: "fig11",
+        title: "workload energy efficiency across integration points",
+        run: fig11::run,
+    },
+    ExperimentDef {
+        id: "fig12",
+        title: "workload throughput across integration points",
+        run: fig12::run,
+    },
+    ExperimentDef {
+        id: "fig13",
+        title: "utilization across integration points",
+        run: fig13::run,
+    },
+    ExperimentDef {
+        id: "table6",
+        title: "per-workload winner summary (what/when/where)",
+        run: table6::run,
+    },
+    ExperimentDef {
+        id: "roofline",
+        title: "ridge-point analysis per system",
+        run: ridge::run,
+    },
+    ExperimentDef {
+        id: "ablation-threshold",
+        title: "balance-threshold sensitivity of the priority mapper",
+        run: ablations::run_threshold,
+    },
+    ExperimentDef {
+        id: "ablation-order",
+        title: "DRAM loop-order sensitivity of the priority mapper",
+        run: ablations::run_order,
+    },
+    ExperimentDef {
+        id: "ablation-duplication",
+        title: "weight duplication on/off across GEMM shapes",
+        run: extensions::run_duplication,
+    },
+    ExperimentDef {
+        id: "ablation-interconnect",
+        title: "NoC interconnect sensitivity from cached mappings",
+        run: extensions::run_interconnect,
+    },
+    ExperimentDef {
+        id: "scaling",
+        title: "multi-SM scaling of the winning systems",
+        run: extensions::run_scaling,
+    },
+    ExperimentDef {
+        id: "hybrid",
+        title: "hybrid CiM/tensor-core router over a serving trace",
+        run: extensions::run_hybrid,
+    },
+    ExperimentDef {
+        id: "optimality",
+        title: "priority mapper vs exhaustive optimum",
+        run: extensions::run_optimality,
+    },
+    ExperimentDef {
+        id: "zoo",
+        title: "extended model zoo across the best systems",
+        run: extensions::run_zoo,
+    },
+    ExperimentDef {
+        id: "serving",
+        title: "serving-mix throughput projection",
+        run: extensions::run_serving,
+    },
 ];
+
+/// Every experiment id, in registry (paper) order.
+pub fn ids() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.id).collect()
+}
+
+/// Look up one experiment by id.
+pub fn find(id: &str) -> Option<&'static ExperimentDef> {
+    REGISTRY.iter().find(|e| e.id == id)
+}
 
 /// Dispatch one experiment id (or "all").
 pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
-    match id {
-        "all" => {
-            for id in ALL {
-                println!("\n################ {id} ################");
-                run(id, ctx)?;
-            }
-            Ok(())
+    if id == "all" {
+        for e in REGISTRY {
+            println!("\n################ {} ################", e.id);
+            (e.run)(ctx)?;
         }
-        "fig2" => fig2::run(ctx),
-        "fig7" => fig7::run(ctx),
-        "table2" => fig7::run_table2(ctx),
-        "fig9" => fig9::run(ctx),
-        "fig10" => fig10::run(ctx),
-        "fig11" => fig11::run(ctx),
-        "fig12" => fig12::run(ctx),
-        "fig13" => fig13::run(ctx),
-        "table6" => table6::run(ctx),
-        "roofline" => ridge::run(ctx),
-        "ablation-threshold" => ablations::run_threshold(ctx),
-        "ablation-order" => ablations::run_order(ctx),
-        "ablation-duplication" => extensions::run_duplication(ctx),
-        "ablation-interconnect" => extensions::run_interconnect(ctx),
-        "scaling" => extensions::run_scaling(ctx),
-        "hybrid" => extensions::run_hybrid(ctx),
-        "optimality" => extensions::run_optimality(ctx),
-        "zoo" => extensions::run_zoo(ctx),
-        "serving" => extensions::run_serving(ctx),
-        other => bail!("unknown experiment {other:?}; options: {}", ALL.join(", ")),
+        return Ok(());
+    }
+    match find(id) {
+        Some(e) => (e.run)(ctx),
+        None => bail!("unknown experiment {id:?}; options: {}", ids().join(", ")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_well_formed() {
+        let ids = ids();
+        assert_eq!(ids.len(), 19, "the paper suite registers 19 experiments");
+        for (i, id) in ids.iter().enumerate() {
+            assert!(!id.is_empty() && *id != "all", "reserved id {id:?}");
+            assert!(
+                id.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'),
+                "id {id:?} must be lower-kebab (it doubles as a file/scenario name)"
+            );
+            assert!(!ids[i + 1..].contains(id), "duplicate id {id:?}");
+        }
+        for e in REGISTRY {
+            assert!(!e.title.is_empty(), "{}: empty title", e.id);
+        }
     }
 }

@@ -49,6 +49,7 @@ pub mod experiments;
 pub mod mapping;
 pub mod roofline;
 pub mod runtime;
+pub mod scenario;
 pub mod sweep;
 pub mod util;
 pub mod workload;
@@ -59,6 +60,7 @@ pub mod prelude {
     pub use crate::cim::{CimPrimitive, CellType, ComputeType};
     pub use crate::cost::{CostModel, Metrics};
     pub use crate::mapping::{HeuristicMapper, Mapping, PriorityMapper};
+    pub use crate::scenario::Scenario;
     pub use crate::sweep::{SweepEngine, SweepSpec};
     pub use crate::workload::{Gemm, Workload};
 }

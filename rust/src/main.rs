@@ -1,15 +1,25 @@
 //! `repro` — the www-cim command-line leader.
 //!
 //! Subcommands:
-//! * `evaluate`   — one GEMM on one system, full metric breakdown
-//! * `compare`    — one GEMM across baseline + all primitives
-//! * `sweep`      — parallel memoized design-space sweep (grid flags,
-//!   `--cache` persistence, `--shard i/n` slicing)
-//! * `merge`      — combine per-shard sweep summaries into one result
-//! * `experiment` — regenerate a paper table/figure (`all` for every one)
-//! * `validate`   — replay mappings through the PJRT artifacts
-//! * `roofline`   — ridge-point analysis
-//! * `list`       — available primitives / workloads / experiments
+//! * `evaluate`    — one GEMM on one system, full metric breakdown
+//! * `compare`     — one GEMM across baseline + all primitives
+//! * `run`         — execute any scenario: a `*.json` file or a
+//!   built-in name (every experiment id + the default sweep)
+//! * `orchestrate` — run a sweep scenario as n shard subprocesses and
+//!   merge on completion (multi-process sweeps in one command)
+//! * `sweep`       — grid flags parsed into a scenario and executed
+//!   (`--emit-scenario` writes the scenario instead of running it)
+//! * `merge`       — combine per-shard sweep summaries into one result
+//! * `experiment`  — regenerate a paper table/figure (`all` for every one)
+//! * `validate`    — replay mappings through the PJRT artifacts
+//! * `roofline`    — ridge-point analysis
+//! * `list`        — primitives / workloads / experiments / scenarios
+//!
+//! The usage text and `repro list` derive their experiment listings
+//! from [`experiments::REGISTRY`], so they can never drift from the
+//! runnable set.
+
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -17,13 +27,13 @@ use www_cim::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
 use www_cim::cim::CimPrimitive;
 use www_cim::coordinator::validate::validate_mappings;
 use www_cim::cost::{BaselineModel, CostModel, Metrics};
-use www_cim::experiments::{self, Ctx};
+use www_cim::experiments;
 use www_cim::mapping::PriorityMapper;
 use www_cim::roofline::Roofline;
 use www_cim::runtime::{default_artifacts_dir, Engine};
-use www_cim::sweep::{output, persist, shard, spec, MapperChoice, ShardId, SweepEngine, SweepSpec};
+use www_cim::scenario::{self, Scenario, ScenarioKind};
+use www_cim::sweep::{output, shard, spec, ShardId};
 use www_cim::util::cli::Args;
-use www_cim::util::pool;
 use www_cim::util::table::Table;
 use www_cim::workload::{synthetic, Gemm};
 
@@ -39,6 +49,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("evaluate") => cmd_evaluate(args),
         Some("compare") => cmd_compare(args),
+        Some("run") => cmd_run(args),
+        Some("orchestrate") => cmd_orchestrate(args),
         Some("sweep") => cmd_sweep(args),
         Some("merge") => cmd_merge(args),
         Some("experiment") => cmd_experiment(args),
@@ -47,36 +59,83 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("list") => cmd_list(),
         Some(other) => bail!("unknown subcommand {other:?} — try `repro list`"),
         None => {
-            println!("{}", USAGE);
+            println!("{}", usage());
             Ok(())
         }
     }
 }
 
-const USAGE: &str = "\
+/// Wrap a `|`-separated id list at `width` columns with a hanging
+/// indent (usage-text formatting for the registry-derived listings).
+fn wrap_ids(ids: &[&str], indent: usize, width: usize) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    let mut line = String::new();
+    for id in ids {
+        if !line.is_empty() && indent + line.len() + 1 + id.len() > width {
+            // Keep the alternation syntax intact across the break: the
+            // finished line ends with its separator.
+            line.push('|');
+            lines.push(std::mem::take(&mut line));
+        }
+        if !line.is_empty() {
+            line.push('|');
+        }
+        line.push_str(id);
+    }
+    if !line.is_empty() {
+        lines.push(line);
+    }
+    lines.join(&format!("\n{}", " ".repeat(indent)))
+}
+
+/// The usage text. Experiment ids come from [`experiments::REGISTRY`];
+/// this cannot drift from `repro list` or the dispatcher (the
+/// regression ISSUE 4 fixes: `optimality`, `scaling`, `zoo`, … used to
+/// be missing here).
+fn usage() -> String {
+    let mut exp_ids: Vec<&str> = experiments::ids();
+    exp_ids.push("all");
+    format!(
+        "\
 repro — WWW: What, When, Where to Compute-in-Memory (reproduction)
 
 usage: repro <subcommand> [options]
 
-  evaluate   --gemm MxNxK [--prim d1|d2|a1|a2] [--level rf|smem] [--smem-config a|b]
-  compare    --gemm MxNxK
-  sweep      [--workloads all|real|bert,gptj,...|synthetic[:N]]
-             [--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]
-             [--sms 1,2,4] [--threads N]
-             [--mapper priority|priority:t<n>|dup|heuristic[:budget]|
-                       exhaustive[:energy|delay|edp]]
-             [--seed N] [--out results] [--tag name] [--json]
-             [--cache [results/cache.bin]] [--shard i/n]
-             (defaults sweep the full zoo x 13 systems, >= 500 points;
-              --cache persists the memo cache across runs, --shard runs
-              one deterministic 1/n slice of the grid)
-  merge      <shard.json> <shard.json> ... [--tag name] [--out results] [--json]
-  experiment <fig2|fig7|table2|fig9|fig10|fig11|fig12|fig13|table6|roofline|
-              ablation-threshold|ablation-order|all> [--quick] [--out results]
-             [--cache [results/cache.bin]]
-  validate   [--artifacts artifacts] [--seed N]
+  evaluate    --gemm MxNxK [--prim d1|d2|a1|a2] [--level rf|smem] [--smem-config a|b]
+  compare     --gemm MxNxK
+  run         <scenario.json|name> [--shard i/n] [--quick] [--seed N]
+              [--threads N] [--out dir] [--tag name] [--json]
+              [--cache [results/cache.bin]] [--cache-max-mb N]
+              (executes any scenario; built-in names:
+               {builtins})
+  orchestrate <scenario.json|name> [--procs n] [+ run's overrides]
+              (spawns n shard subprocesses of the sweep scenario and
+               merges their results on completion)
+  sweep       [--workloads all|real|bert,gptj,...|synthetic[:N]]
+              [--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]
+              [--sms 1,2,4] [--threads N]
+              [--mapper priority|priority:t<n>|priority:order-<mnk perm>|
+                        dup[:t<n>]|heuristic[:budget]|
+                        exhaustive[:energy|delay|edp]]
+              [--seed N] [--out results] [--tag name] [--json]
+              [--cache [results/cache.bin]] [--cache-max-mb N] [--shard i/n]
+              [--emit-scenario [file.json]]
+              (defaults sweep the full zoo x 13 systems, >= 500 points;
+               --cache persists the memo cache across runs with an
+               optional LRU size cap, --shard runs one deterministic
+               1/n slice, --emit-scenario writes the equivalent
+               scenario instead of running)
+  merge       <shard.json> <shard.json> ... [--tag name] [--out results] [--json]
+  experiment  <{experiments}>
+              [--quick] [--out results] [--threads N] [--seed N]
+              [--cache [results/cache.bin]] [--cache-max-mb N]
+  validate    [--artifacts artifacts] [--seed N]
   roofline
-  list";
+  list",
+        builtins = wrap_ids(&scenario::builtin_names(), 15, 76),
+        experiments = wrap_ids(&exp_ids, 15, 76),
+    )
+}
 
 fn parse_gemm(s: &str) -> Result<Gemm> {
     let dims: Vec<u64> = s
@@ -180,137 +239,216 @@ fn cmd_compare(args: &Args) -> Result<()> {
 
 /// `--cache [path]` — the persistent sweep cache location. A bare
 /// `--cache` uses the conventional `results/cache.bin`.
-fn cache_path_flag(args: &Args) -> Option<std::path::PathBuf> {
+fn cache_path_flag(args: &Args) -> Option<PathBuf> {
     args.get("cache").map(|v| {
         if v == "true" {
-            std::path::PathBuf::from("results/cache.bin")
+            PathBuf::from("results/cache.bin")
         } else {
-            std::path::PathBuf::from(v)
+            PathBuf::from(v)
         }
     })
 }
 
-/// `repro sweep` — the design-space sweep engine on the CLI: cartesian
-/// grid flags expanded into a parallel, memoized evaluation with CSV +
-/// JSON mirrors, optional disk persistence of the memo cache
-/// (`--cache`) and deterministic `--shard i/n` slicing for distributed
-/// runs.
-fn cmd_sweep(args: &Args) -> Result<()> {
+/// `--cache-max-mb N` — the persisted cache's LRU size cap, in MiB.
+fn cache_cap_flag(args: &Args) -> Result<Option<u64>> {
+    match args.get("cache-max-mb") {
+        None => Ok(None),
+        Some(v) => {
+            let bytes = v
+                .parse::<u64>()
+                .ok()
+                .filter(|mb| *mb >= 1)
+                .and_then(|mb| mb.checked_mul(1024 * 1024))
+                .with_context(|| {
+                    format!("--cache-max-mb wants a positive integer of MiB, got {v:?}")
+                })?;
+            Ok(Some(bytes))
+        }
+    }
+}
+
+/// Resolve a `repro run`/`repro orchestrate` target. Anything that
+/// looks like a path (a `.json` suffix or a separator) is a scenario
+/// file; otherwise built-in names win — a stray file or directory in
+/// the working directory that happens to share a name (say, a `fig2`
+/// output dir) must not shadow the built-in — and only then is a bare
+/// existing filename tried.
+fn resolve_scenario(target: &str) -> Result<Scenario> {
+    let path = Path::new(target);
+    let looks_like_path = target.ends_with(".json")
+        || target.contains('/')
+        || target.contains(std::path::MAIN_SEPARATOR);
+    if looks_like_path {
+        return Scenario::from_json_file(path);
+    }
+    if scenario::builtin_names().contains(&target) {
+        return scenario::builtin(target);
+    }
+    if path.is_file() {
+        return Scenario::from_json_file(path);
+    }
+    // Not a builtin, not a file: report the builtin listing.
+    scenario::builtin(target)
+}
+
+/// Apply the CLI override flags shared by `run` and `orchestrate` on
+/// top of a resolved scenario.
+fn apply_overrides(sc: &mut Scenario, args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("out") {
+        sc.output.dir = PathBuf::from(dir);
+    }
+    if let Some(tag) = args.get("tag") {
+        sc.output.tag = Some(tag.to_string());
+    }
+    if let Some(t) = args.get("threads") {
+        sc.threads = Some(t.parse().context("--threads wants a positive integer")?);
+    }
+    if let Some(s) = args.get("seed") {
+        sc.seed = s.parse().context("--seed wants an integer")?;
+    }
+    if args.flag("quick") {
+        match &mut sc.kind {
+            ScenarioKind::Experiment { quick, .. } => *quick = true,
+            ScenarioKind::Sweep(_) => bail!("--quick applies to experiment scenarios"),
+        }
+    }
+    if let Some(path) = cache_path_flag(args) {
+        sc.cache.path = Some(path);
+    }
+    if let Some(cap) = cache_cap_flag(args)? {
+        sc.cache.max_bytes = Some(cap);
+    }
+    if args.flag("json") {
+        sc.output.stdout_json = true;
+    }
+    sc.validate()
+}
+
+/// `repro run <scenario.json|name>` — execute any scenario: a file, or
+/// a built-in (every experiment id plus the default sweep).
+fn cmd_run(args: &Args) -> Result<()> {
     if let Some(err) = args.unknown_flags(&[
-        "workload", "workloads", "prim", "prims", "level", "levels", "sms", "threads",
-        "mapper", "seed", "out", "json", "cache", "shard", "tag",
+        "shard", "out", "tag", "threads", "seed", "quick", "cache", "cache-max-mb", "json",
     ]) {
         bail!(err);
     }
-    let arch = Architecture::default_sm();
-    let seed = args.get_parsed_or("seed", synthetic::DEFAULT_SEED);
-    let threads = args.get_parsed_or("threads", pool::default_threads());
+    let target = args.positional.first().context(
+        "usage: repro run <scenario.json|name> [--shard i/n] [--out dir] [--tag name] \
+         [--quick] [--seed N] [--threads N] [--cache [path]] [--cache-max-mb N] [--json] \
+         — `repro list` names the built-in scenarios",
+    )?;
+    let mut sc = resolve_scenario(target)?;
+    apply_overrides(&mut sc, args)?;
+    let shard_id = args.get("shard").map(ShardId::parse).transpose()?;
+    scenario::exec::execute(&sc, shard_id)
+}
 
+/// `repro orchestrate <scenario.json|name> --procs n` — multi-process
+/// sweeps in one command: spawn the shard subprocesses, merge on
+/// completion.
+fn cmd_orchestrate(args: &Args) -> Result<()> {
+    if let Some(err) = args.unknown_flags(&[
+        "procs", "out", "tag", "threads", "seed", "cache", "cache-max-mb", "json",
+    ]) {
+        bail!(err);
+    }
+    let target = args.positional.first().context(
+        "usage: repro orchestrate <scenario.json|name> [--procs n] [--out dir] [--tag name]",
+    )?;
+    let mut sc = resolve_scenario(target)?;
+    apply_overrides(&mut sc, args)?;
+    let procs = match args.get("procs") {
+        Some(v) => v
+            .parse()
+            .ok()
+            .filter(|p| *p >= 1)
+            .with_context(|| format!("--procs wants a positive integer, got {v:?}"))?,
+        // The scenario's shard plan, else every shard in one process
+        // would be pointless — default to 2.
+        None => sc.shards.unwrap_or(2),
+    };
+    scenario::orchestrate(&sc, procs)
+}
+
+/// Construct the scenario `repro sweep`'s grid flags describe — the
+/// thin-parser half of the sweep command (ISSUE 4: flags build a
+/// [`Scenario`]; execution is the scenario path for both).
+fn scenario_from_sweep_flags(args: &Args) -> Result<Scenario> {
+    let seed = args.get_parsed_or("seed", synthetic::DEFAULT_SEED);
     // Grid axes (singular flags are aliases for the plural ones).
-    let workloads_arg = args
+    let workloads = args
         .get("workloads")
         .or_else(|| args.get("workload"))
         .unwrap_or(spec::DEFAULT_WORKLOADS);
-    let prims_arg = args
+    let prims = args
         .get("prims")
         .or_else(|| args.get("prim"))
         .unwrap_or(spec::DEFAULT_PRIMS);
-    let levels_arg = args
+    let levels = args
         .get("levels")
         .or_else(|| args.get("level"))
         .unwrap_or(spec::DEFAULT_LEVELS);
 
-    let sweep_spec = SweepSpec::new("sweep")
-        .workloads(spec::parse_workloads(workloads_arg, seed)?)
-        .systems(spec::parse_systems(prims_arg, levels_arg)?)
-        .sm_counts(spec::parse_sm_counts(args.get_or("sms", "1"))?)
-        .mapper(MapperChoice::parse(args.get_or("mapper", "priority"), seed)?);
-
-    println!(
-        "sweep: {} grid points ({} workload(s) x {} system(s) x {} SM count(s)), {} threads",
-        sweep_spec.n_points(),
-        sweep_spec.workloads.len(),
-        sweep_spec.systems.len(),
-        sweep_spec.sm_counts.len(),
-        threads
-    );
-    let engine = SweepEngine::new(arch).threads(threads);
-
-    // Persistent cache: warm from disk if a compatible file exists.
-    let cache_path = cache_path_flag(args);
-    if let Some(path) = &cache_path {
-        let load = persist::load_into(engine.cache(), path)?;
-        println!("[cache] {} ({})", load.describe(), path.display());
+    let mut b = Scenario::builder("sweep")
+        .workloads(workloads)
+        .prims(prims)
+        .levels(levels)
+        .sms(args.get_or("sms", "1"))
+        .mapper(args.get_or("mapper", "priority"))
+        .seed(seed)
+        .out_dir(Path::new(args.get_or("out", "results")))
+        .stdout_json(args.flag("json"));
+    if let Some(t) = args.get("threads") {
+        b = b.threads(t.parse().context("--threads wants a positive integer")?);
     }
-
-    // Shard slicing: expand the full grid, run the deterministic
-    // round-robin slice (the whole grid without --shard).
-    let shard_id = args.get("shard").map(ShardId::parse).transpose()?;
-    let all_jobs = sweep_spec.jobs();
-    let run = match shard_id {
-        None => engine.run_jobs_named(&sweep_spec.name, &all_jobs),
-        Some(s) => {
-            let slice = s.slice(&all_jobs);
-            println!("shard {s}: {} of {} grid points", slice.len(), all_jobs.len());
-            engine.run_jobs_named(&sweep_spec.name, &slice)
-        }
-    };
-    println!(
-        "evaluated {} points in {:.3}s (cache: {} unique, {} duplicate hits)",
-        run.n_points(),
-        run.elapsed.as_secs_f64(),
-        run.cache_misses,
-        run.cache_hits
-    );
-    if let Some(path) = &cache_path {
-        let n = persist::save(engine.cache(), path)?;
-        println!("[cache] saved {n} design points -> {}", path.display());
+    if let Some(tag) = args.get("tag") {
+        b = b.tag(tag);
     }
-
-    // Small grids get the full per-point table; every run gets the
-    // per-system summary.
-    if run.results.len() <= 80 {
-        print!("{}", output::detail_table(&run.results));
+    if let Some(path) = cache_path_flag(args) {
+        b = b.cache_path(&path);
     }
-    print!("{}", output::summary_table(&run.results));
+    if let Some(cap) = cache_cap_flag(args)? {
+        b = b.cache_max_bytes(cap);
+    }
+    b.build()
+}
 
-    // CSV + JSON mirrors, named by --tag (default: the spec name, so
-    // plain sweeps keep writing sweep.csv/sweep.json) and the shard
-    // identity — successive tagged or sharded sweeps never overwrite
-    // each other.
-    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
-    let base = args.get_or("tag", &sweep_spec.name).to_string();
-    let csv = output::results_csv(&run.results)?;
-    match shard_id {
-        None => {
-            let csv_path = out_dir.join(format!("{base}.csv"));
-            csv.write(&csv_path)?;
-            println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
-            let json_path = out_dir.join(format!("{base}.json"));
-            output::write_json_summary(&run, &json_path)?;
-            println!("[json] summary -> {}", json_path.display());
-            if args.flag("json") {
-                print!("{}", output::json_summary(&run));
-            }
-        }
-        Some(s) => {
-            let fp = shard::sweep_fingerprint(engine.arch(), &sweep_spec);
-            let csv_path = out_dir.join(format!("{base}-{}.csv", s.file_tag()));
-            csv.write(&csv_path)?;
-            println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
-            let json_path = out_dir.join(format!("{base}-{}.json", s.file_tag()));
-            shard::write_shard_json(&run, s, &fp, all_jobs.len(), &json_path)?;
-            println!(
-                "[json] shard summary -> {} (merge all {} shards with `repro merge`)",
-                json_path.display(),
-                s.count
+/// `repro sweep` — the design-space sweep engine on the CLI: cartesian
+/// grid flags parsed into a [`Scenario`] and executed through the
+/// scenario path (CSV + JSON mirrors, `--cache [path]` persistence
+/// with an optional `--cache-max-mb` LRU cap, deterministic
+/// `--shard i/n` slicing). `--emit-scenario [file]` writes the
+/// constructed scenario (stdout without a file) instead of running it.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    if let Some(err) = args.unknown_flags(&[
+        "workload", "workloads", "prim", "prims", "level", "levels", "sms", "threads",
+        "mapper", "seed", "out", "json", "cache", "cache-max-mb", "shard", "tag",
+        "emit-scenario",
+    ]) {
+        bail!(err);
+    }
+    let sc = scenario_from_sweep_flags(args)?;
+    if let Some(dest) = args.get("emit-scenario") {
+        if args.get("shard").is_some() {
+            // A scenario describes the *whole* grid; the slice is a
+            // run-time argument (`repro run <file> --shard i/n`).
+            // Dropping the flag silently would emit a scenario that
+            // reruns the full grid.
+            bail!(
+                "--emit-scenario captures the full grid; pass --shard to \
+                 `repro run` (or use `repro orchestrate`) instead"
             );
-            if args.flag("json") {
-                print!("{}", shard::shard_json(&run, s, &fp, all_jobs.len()));
-            }
         }
+        if dest == "true" {
+            print!("{}", sc.to_json());
+        } else {
+            sc.write(Path::new(dest))?;
+            println!("[scenario] -> {dest} (execute with `repro run {dest}`)");
+        }
+        return Ok(());
     }
-    Ok(())
+    let shard_id = args.get("shard").map(ShardId::parse).transpose()?;
+    scenario::exec::execute(&sc, shard_id)
 }
 
 /// `repro merge` — validate and combine per-shard sweep summaries into
@@ -350,31 +488,37 @@ fn cmd_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro experiment <id|all>` — kept as the familiar spelling; the
+/// flags construct an experiment [`Scenario`] and execution goes
+/// through the same scenario path as `repro run <id>`, so the two are
+/// byte-identical by construction (and pinned by the golden
+/// equivalence suite).
 fn cmd_experiment(args: &Args) -> Result<()> {
+    if let Some(err) = args.unknown_flags(&[
+        "quick", "out", "threads", "seed", "cache", "cache-max-mb",
+    ]) {
+        bail!(err);
+    }
     let id = args
         .positional
         .first()
         .map(String::as_str)
         .unwrap_or("all");
-    let mut ctx = Ctx::default();
-    ctx.quick = args.flag("quick");
-    ctx.out_dir = args.get_or("out", "results").into();
-    ctx.threads = args.get_parsed_or("threads", ctx.threads);
-    ctx.seed = args.get_parsed_or("seed", ctx.seed);
-    ctx.cache_path = cache_path_flag(args);
-    ctx.load_persistent_cache()?;
-    let result = experiments::run(id, &ctx);
-    // Run-level cache accounting: on a warm persisted cache this must
-    // read "0 misses (100.0% hit rate), 0 mapper call(s)" — the CI e2e
-    // step greps for it to prove no experiment bypasses the engine.
-    println!("{}", ctx.cache_stats_line());
-    // Persist whatever was scored even if one experiment failed — the
-    // cache entries themselves are valid. A save failure must not mask
-    // the experiment's own error, so it is reported, not propagated.
-    if let Err(e) = ctx.save_persistent_cache() {
-        eprintln!("warning: could not persist the sweep cache: {e:#}");
+    let mut b = Scenario::builder(id)
+        .experiment(id)
+        .quick(args.flag("quick"))
+        .seed(args.get_parsed_or("seed", synthetic::DEFAULT_SEED))
+        .out_dir(Path::new(args.get_or("out", "results")));
+    if let Some(t) = args.get("threads") {
+        b = b.threads(t.parse().context("--threads wants a positive integer")?);
     }
-    result
+    if let Some(path) = cache_path_flag(args) {
+        b = b.cache_path(&path);
+    }
+    if let Some(cap) = cache_cap_flag(args)? {
+        b = b.cache_max_bytes(cap);
+    }
+    scenario::exec::execute(&b.build()?, None)
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
@@ -458,6 +602,105 @@ fn cmd_list() -> Result<()> {
         );
     }
     println!("\nworkloads: BERT-Large, GPT-J, ResNet50, DLRM, synthetic");
-    println!("\nexperiments: {}", experiments::ALL.join(", "));
+    println!("\nexperiments (repro experiment <id>, or repro run <id>):");
+    for e in experiments::REGISTRY {
+        println!("  {:24} {}", e.id, e.title);
+    }
+    println!(
+        "\nbuilt-in scenarios (repro run/orchestrate <name>): {}",
+        scenario::builtin_names().join(", ")
+    );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ISSUE 4 regression: the usage text used to hand-list experiment
+    /// ids and silently dropped six of them. Both listings now derive
+    /// from the registry, so every runnable id must appear.
+    #[test]
+    fn usage_lists_every_experiment_and_builtin_scenario() {
+        let text = usage();
+        for id in experiments::ids() {
+            assert!(text.contains(id), "usage() omits experiment {id:?}");
+        }
+        for name in scenario::builtin_names() {
+            assert!(text.contains(name), "usage() omits built-in scenario {name:?}");
+        }
+        for sub in ["run", "orchestrate", "sweep", "merge", "experiment"] {
+            assert!(text.contains(&format!("\n  {sub}")), "usage() omits {sub}");
+        }
+    }
+
+    #[test]
+    fn wrap_ids_wraps_and_preserves_every_id() {
+        let ids = ["alpha", "beta", "gamma", "delta", "epsilon"];
+        let wrapped = wrap_ids(&ids, 4, 20);
+        for id in ids {
+            assert!(wrapped.contains(id));
+        }
+        let lines: Vec<&str> = wrapped.lines().collect();
+        assert!(lines.len() > 1, "must wrap at width 20");
+        for (i, line) in lines.iter().enumerate() {
+            assert!(4 + line.trim_start().len() <= 25, "overlong line {line:?}");
+            // The alternation separator survives every line break.
+            if i + 1 < lines.len() {
+                assert!(line.ends_with('|'), "broken alternation at {line:?}");
+            }
+        }
+        // Reassembling yields the unbroken a|b|c list.
+        let joined: String = lines.iter().map(|l| l.trim_start()).collect();
+        assert_eq!(joined, "alpha|beta|gamma|delta|epsilon");
+    }
+
+    #[test]
+    fn sweep_flags_build_the_documented_scenario() {
+        let args = Args::parse(
+            "sweep --workloads synthetic:6 --prims baseline,d1 --levels rf \
+             --sms 1,2 --mapper dup:t3 --seed 9 --tag t --out o --json \
+             --cache c.bin --cache-max-mb 2"
+                .split_whitespace(),
+        );
+        let sc = scenario_from_sweep_flags(&args).unwrap();
+        assert_eq!(sc.name, "sweep");
+        assert_eq!(sc.base_name(), "t");
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.output.dir, PathBuf::from("o"));
+        assert!(sc.output.stdout_json);
+        assert_eq!(sc.cache.path, Some(PathBuf::from("c.bin")));
+        assert_eq!(sc.cache.max_bytes, Some(2 * 1024 * 1024));
+        let spec = sc.sweep_spec().unwrap();
+        assert_eq!(spec.sm_counts, vec![1, 2]);
+        assert_eq!(spec.systems.len(), 2);
+        // Defaults: no flags → the default >= 500-point grid scenario.
+        let sc = scenario_from_sweep_flags(&Args::parse(["sweep"])).unwrap();
+        assert!(sc.sweep_spec().unwrap().n_points() >= 500);
+        assert_eq!(sc.threads, None);
+        assert_eq!(sc.cache, www_cim::scenario::CachePolicy::default());
+    }
+
+    #[test]
+    fn overrides_apply_on_top_of_a_resolved_scenario() {
+        let mut sc = scenario::builtin("fig9").unwrap();
+        let args = Args::parse(
+            "run fig9 --quick --out results-x --seed 3 --threads 2 --cache --cache-max-mb 1"
+                .split_whitespace(),
+        );
+        apply_overrides(&mut sc, &args).unwrap();
+        assert_eq!(sc.output.dir, PathBuf::from("results-x"));
+        assert_eq!(sc.seed, 3);
+        assert_eq!(sc.threads, Some(2));
+        assert_eq!(sc.cache.path, Some(PathBuf::from("results/cache.bin")));
+        assert_eq!(sc.cache.max_bytes, Some(1024 * 1024));
+        match sc.kind {
+            ScenarioKind::Experiment { quick, .. } => assert!(quick),
+            _ => panic!("builtin fig9 must be an experiment scenario"),
+        }
+        // --quick on a sweep scenario is an error, not a silent no-op.
+        let mut sweep = scenario::builtin("sweep").unwrap();
+        let args = Args::parse("run sweep --quick".split_whitespace());
+        assert!(apply_overrides(&mut sweep, &args).is_err());
+    }
 }

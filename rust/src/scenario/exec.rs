@@ -1,0 +1,278 @@
+//! Scenario execution: lower a [`Scenario`] onto the existing engine
+//! machinery and run it.
+//!
+//! * Sweep scenarios lower to a [`crate::sweep::SweepSpec`] and run
+//!   through [`SweepEngine`] exactly the way `repro sweep` always has —
+//!   same console output, same CSV/JSON sinks, same `--shard i/n`
+//!   slicing — so a flag-built sweep and its `--emit-scenario`'d file
+//!   produce byte-identical artifacts (pinned by the integration
+//!   tests).
+//! * Experiment scenarios lower to a [`Ctx`] and dispatch through the
+//!   experiment registry, identically to `repro experiment <id>`
+//!   (pinned by the golden-equivalence suite for all 19 ids).
+
+use anyhow::{bail, Result};
+
+use crate::arch::Architecture;
+use crate::experiments::{self, Ctx};
+use crate::sweep::{output, persist, shard, ShardId, SweepEngine};
+use crate::util::pool;
+
+use super::{Scenario, ScenarioKind};
+
+/// Execute a scenario; `shard` (sweep scenarios only) runs one
+/// deterministic 1/n slice of the grid and writes the per-shard
+/// summary instead of the merged artifacts.
+pub fn execute(sc: &Scenario, shard: Option<ShardId>) -> Result<()> {
+    sc.validate()?;
+    match &sc.kind {
+        ScenarioKind::Experiment { id, .. } => {
+            if shard.is_some() {
+                bail!(
+                    "--shard slices sweep grids; experiment scenarios parallelize \
+                     internally (run {id:?} without --shard)"
+                );
+            }
+            run_experiment(sc, id)
+        }
+        ScenarioKind::Sweep(_) => run_sweep(sc, shard),
+    }
+}
+
+/// Lower an experiment scenario to its [`Ctx`].
+pub fn experiment_ctx(sc: &Scenario) -> Ctx {
+    let mut ctx = Ctx::default();
+    if let ScenarioKind::Experiment { quick, .. } = &sc.kind {
+        ctx.quick = *quick;
+    }
+    ctx.out_dir = sc.output.dir.clone();
+    if let Some(threads) = sc.threads {
+        ctx.threads = threads;
+    }
+    ctx.seed = sc.seed;
+    ctx.cache_path = sc.cache.path.clone();
+    ctx.cache_max_bytes = sc.cache.max_bytes;
+    ctx
+}
+
+fn run_experiment(sc: &Scenario, id: &str) -> Result<()> {
+    let ctx = experiment_ctx(sc);
+    ctx.load_persistent_cache()?;
+    let result = experiments::run(id, &ctx);
+    // Run-level cache accounting: on a warm persisted cache this must
+    // read "0 misses (100.0% hit rate), 0 mapper call(s)" — the CI e2e
+    // step greps for it to prove no experiment bypasses the engine.
+    println!("{}", ctx.cache_stats_line());
+    // Persist whatever was scored even if one experiment failed — the
+    // cache entries themselves are valid. A save failure must not mask
+    // the experiment's own error, so it is reported, not propagated.
+    if let Err(e) = ctx.save_persistent_cache() {
+        eprintln!("warning: could not persist the sweep cache: {e:#}");
+    }
+    result
+}
+
+fn run_sweep(sc: &Scenario, shard_id: Option<ShardId>) -> Result<()> {
+    let arch = Architecture::default_sm();
+    let threads = sc.threads.unwrap_or_else(pool::default_threads);
+    let sweep_spec = sc.sweep_spec()?;
+
+    println!(
+        "sweep: {} grid points ({} workload(s) x {} system(s) x {} SM count(s)), {} threads",
+        sweep_spec.n_points(),
+        sweep_spec.workloads.len(),
+        sweep_spec.systems.len(),
+        sweep_spec.sm_counts.len(),
+        threads
+    );
+    let engine = SweepEngine::new(arch).threads(threads);
+
+    // Persistent cache: warm from disk if a compatible file exists.
+    if let Some(path) = &sc.cache.path {
+        let load = persist::load_into(engine.cache(), path)?;
+        println!("[cache] {} ({})", load.describe(), path.display());
+    }
+
+    // Shard slicing: expand the full grid, run the deterministic
+    // round-robin slice (the whole grid without a shard).
+    let all_jobs = sweep_spec.jobs();
+    let run = match shard_id {
+        None => engine.run_jobs_named(&sweep_spec.name, &all_jobs),
+        Some(s) => {
+            let slice = s.slice(&all_jobs);
+            println!("shard {s}: {} of {} grid points", slice.len(), all_jobs.len());
+            engine.run_jobs_named(&sweep_spec.name, &slice)
+        }
+    };
+    println!(
+        "evaluated {} points in {:.3}s (cache: {} unique, {} duplicate hits)",
+        run.n_points(),
+        run.elapsed.as_secs_f64(),
+        run.cache_misses,
+        run.cache_hits
+    );
+    if let Some(path) = &sc.cache.path {
+        let outcome = persist::save_capped(engine.cache(), path, sc.cache.max_bytes)?;
+        println!("[cache] {} -> {}", outcome.describe(), path.display());
+    }
+
+    // Small grids get the full per-point table; every run gets the
+    // per-system summary.
+    if run.results.len() <= 80 {
+        print!("{}", output::detail_table(&run.results));
+    }
+    print!("{}", output::summary_table(&run.results));
+
+    // CSV + JSON mirrors, named by the scenario's base name (tag, else
+    // name) and the shard identity — successive tagged or sharded
+    // sweeps never overwrite each other.
+    let out_dir = &sc.output.dir;
+    let base = sc.base_name();
+    let csv = output::results_csv(&run.results)?;
+    match shard_id {
+        None => {
+            let csv_path = out_dir.join(format!("{base}.csv"));
+            csv.write(&csv_path)?;
+            println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
+            let json_path = out_dir.join(format!("{base}.json"));
+            output::write_json_summary(&run, &json_path)?;
+            println!("[json] summary -> {}", json_path.display());
+            if sc.output.stdout_json {
+                print!("{}", output::json_summary(&run));
+            }
+        }
+        Some(s) => {
+            let fp = shard::sweep_fingerprint(engine.arch(), &sweep_spec);
+            let csv_path = out_dir.join(format!("{base}-{}.csv", s.file_tag()));
+            csv.write(&csv_path)?;
+            println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
+            let json_path = out_dir.join(format!("{base}-{}.json", s.file_tag()));
+            shard::write_shard_json(&run, s, &fp, all_jobs.len(), &json_path)?;
+            println!(
+                "[json] shard summary -> {} (merge all {} shards with `repro merge` \
+                 or let `repro orchestrate` do it)",
+                json_path.display(),
+                s.count
+            );
+            if sc.output.stdout_json {
+                print!("{}", shard::shard_json(&run, s, &fp, all_jobs.len()));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+    use std::path::{Path, PathBuf};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("www_cim_scenario_exec_{tag}"))
+    }
+
+    #[test]
+    fn sweep_scenario_writes_the_csv_and_json_sinks() {
+        let dir = tmp_dir("sweep");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sc = Scenario::builder("mini")
+            .workloads("synthetic:4")
+            .prims("baseline,d1")
+            .levels("rf")
+            .seed(7)
+            .threads(2)
+            .out_dir(&dir)
+            .build()
+            .unwrap();
+        execute(&sc, None).unwrap();
+        let csv = std::fs::read_to_string(dir.join("mini.csv")).unwrap();
+        assert!(csv.starts_with("workload,m,n,k,system,"));
+        assert_eq!(csv.lines().count(), 1 + 8, "4 GEMMs x 2 systems + header");
+        assert!(dir.join("mini.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tag_overrides_the_output_base_name() {
+        let dir = tmp_dir("tag");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sc = Scenario::builder("mini")
+            .workloads("synthetic:2")
+            .prims("d1")
+            .levels("rf")
+            .seed(7)
+            .tag("renamed")
+            .out_dir(&dir)
+            .build()
+            .unwrap();
+        execute(&sc, None).unwrap();
+        assert!(dir.join("renamed.csv").exists());
+        assert!(!dir.join("mini.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_execution_writes_per_shard_summaries_that_merge_back() {
+        use crate::sweep::shard::{merge_files, ShardId};
+        let dir = tmp_dir("shards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = |tag: &str| {
+            Scenario::builder("sh")
+                .workloads("synthetic:5")
+                .prims("baseline,d1")
+                .levels("rf")
+                .seed(7)
+                .tag(tag)
+                .out_dir(&dir)
+                .build()
+                .unwrap()
+        };
+        // Full run.
+        execute(&mk("full"), None).unwrap();
+        // Two shard runs of the same grid.
+        for i in 0..2 {
+            execute(&mk("part"), Some(ShardId { index: i, count: 2 })).unwrap();
+        }
+        let merged = merge_files(&[
+            dir.join("part-shard0of2.json"),
+            dir.join("part-shard1of2.json"),
+        ])
+        .unwrap();
+        let merged_csv = crate::sweep::output::results_csv(&merged.results)
+            .unwrap()
+            .encode();
+        let full_csv = std::fs::read_to_string(dir.join("full.csv")).unwrap();
+        assert_eq!(merged_csv, full_csv, "shard merge must reproduce the full run");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn experiment_scenario_lowers_to_the_equivalent_ctx() {
+        let sc = Scenario::builder("fig2")
+            .experiment("fig2")
+            .quick(true)
+            .seed(11)
+            .threads(3)
+            .out_dir(Path::new("elsewhere"))
+            .cache_path(Path::new("elsewhere/cache.bin"))
+            .cache_max_bytes(1 << 20)
+            .build()
+            .unwrap();
+        let ctx = experiment_ctx(&sc);
+        assert!(ctx.quick);
+        assert_eq!(ctx.seed, 11);
+        assert_eq!(ctx.threads, 3);
+        assert_eq!(ctx.out_dir, PathBuf::from("elsewhere"));
+        assert_eq!(ctx.cache_path, Some(PathBuf::from("elsewhere/cache.bin")));
+        assert_eq!(ctx.cache_max_bytes, Some(1 << 20));
+    }
+
+    #[test]
+    fn shard_on_an_experiment_scenario_is_refused() {
+        let sc = Scenario::builder("fig2").experiment("fig2").build().unwrap();
+        let err = execute(&sc, Some(crate::sweep::ShardId { index: 0, count: 2 }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--shard"), "{err:#}");
+    }
+}

@@ -1,0 +1,936 @@
+//! The declarative scenario API: one serializable description behind
+//! every sweep, experiment, and multi-process orchestration.
+//!
+//! A [`Scenario`] completely describes a run as *data*: the workload
+//! grid and system axes (in the same compact axis syntax the CLI
+//! flags use), the mapper choice ([`MapperChoice::cli_spec`] syntax),
+//! the seed, the cache policy (path + `max_bytes` LRU cap), the shard
+//! plan and the output sinks. It round-trips through the in-tree JSON
+//! util ([`crate::util::json`]) under a schema version
+//! ([`SCENARIO_FORMAT_VERSION`]), builds fluently via
+//! [`Scenario::builder`], and *lowers* to the existing
+//! [`crate::sweep::SweepSpec`] / [`crate::experiments::Ctx`] machinery
+//! — the engine, cache and golden-equivalence guarantees are reused,
+//! not forked.
+//!
+//! The CLI surface on top:
+//!
+//! * `repro run <scenario.json|name>` executes any scenario — files or
+//!   the [`builtin`] registry (every experiment id plus the default
+//!   sweep);
+//! * `repro sweep` *constructs* a scenario from its grid flags (and can
+//!   `--emit-scenario` it instead of running);
+//! * `repro orchestrate <scenario.json|name> --procs n` spawns the n
+//!   shard subprocesses itself and merges on completion
+//!   ([`orchestrate`]).
+//!
+//! ```no_run
+//! use www_cim::scenario::Scenario;
+//!
+//! let sc = Scenario::builder("quick")
+//!     .workloads("synthetic:12")
+//!     .prims("baseline,d1")
+//!     .levels("rf,smem-b")
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(Scenario::from_json(&sc.to_json()).unwrap(), sc);
+//! www_cim::scenario::exec::execute(&sc, None).unwrap();
+//! ```
+
+pub mod exec;
+pub mod orchestrate;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiments;
+use crate::sweep::spec::{self, MapperChoice, SweepSpec};
+use crate::util::json::Json;
+use crate::workload::synthetic;
+
+pub use orchestrate::orchestrate;
+
+/// Version of the scenario JSON schema. Bump on any structural change;
+/// files of other versions are rejected at load, never half-read.
+pub const SCENARIO_FORMAT_VERSION: u32 = 1;
+
+/// Largest integer the JSON number carrier (f64) holds exactly — the
+/// bound on every integral scenario field.
+const MAX_SAFE_INT: u64 = 9_007_199_254_740_992;
+
+/// Grid axes of a sweep scenario, in the CLI axis syntax (the same
+/// strings `repro sweep --workloads/--prims/--levels/--sms/--mapper`
+/// accept). Kept as strings so a scenario serializes compactly and
+/// lowers through the one battle-tested parser set in
+/// [`crate::sweep::spec`]; validation happens at build/load time, not
+/// first use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GridAxes {
+    pub workloads: String,
+    pub prims: String,
+    pub levels: String,
+    pub sms: String,
+    pub mapper: String,
+}
+
+impl Default for GridAxes {
+    fn default() -> Self {
+        GridAxes {
+            workloads: spec::DEFAULT_WORKLOADS.to_string(),
+            prims: spec::DEFAULT_PRIMS.to_string(),
+            levels: spec::DEFAULT_LEVELS.to_string(),
+            sms: "1".to_string(),
+            mapper: "priority".to_string(),
+        }
+    }
+}
+
+/// What a scenario runs: a design-space sweep grid, or one registered
+/// paper experiment (whose CSV shaping lives in
+/// [`crate::experiments::REGISTRY`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScenarioKind {
+    Sweep(GridAxes),
+    Experiment { id: String, quick: bool },
+}
+
+/// Persistent-cache policy: where the shared design-point cache lives
+/// (None = in-memory only) and the optional on-disk size cap that
+/// [`crate::sweep::persist::save_capped`] trims to, LRU-first.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CachePolicy {
+    pub path: Option<PathBuf>,
+    pub max_bytes: Option<u64>,
+}
+
+/// Output sinks: the directory CSV/JSON mirrors land in, an optional
+/// tag overriding the scenario name as the file base name, and whether
+/// the machine-readable summary is also printed to stdout. `tag` and
+/// `stdout_json` apply to sweep scenarios only — experiments name
+/// their CSVs by experiment id and have no run-level JSON summary, so
+/// validation rejects them there rather than ignoring them silently.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutputPolicy {
+    pub dir: PathBuf,
+    pub tag: Option<String>,
+    pub stdout_json: bool,
+}
+
+impl Default for OutputPolicy {
+    fn default() -> Self {
+        OutputPolicy {
+            dir: PathBuf::from("results"),
+            tag: None,
+            stdout_json: false,
+        }
+    }
+}
+
+/// A complete, serializable run description. See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Scenario name: the default output base name and the display
+    /// name (`SweepSpec::name` for sweep scenarios).
+    pub name: String,
+    pub kind: ScenarioKind,
+    /// Seed for synthetic datasets and seeded mappers.
+    pub seed: u64,
+    /// Worker-thread count (None = one per core).
+    pub threads: Option<usize>,
+    pub cache: CachePolicy,
+    /// Default process count for `repro orchestrate` (None = the
+    /// orchestrator's own default).
+    pub shards: Option<usize>,
+    pub output: OutputPolicy,
+}
+
+impl Scenario {
+    /// Start a fluent builder for a sweep scenario named `name` over
+    /// the default grid (switch to an experiment with
+    /// [`ScenarioBuilder::experiment`]).
+    pub fn builder(name: &str) -> ScenarioBuilder {
+        ScenarioBuilder {
+            sc: Scenario {
+                name: name.to_string(),
+                kind: ScenarioKind::Sweep(GridAxes::default()),
+                seed: synthetic::DEFAULT_SEED,
+                threads: None,
+                cache: CachePolicy::default(),
+                shards: None,
+                output: OutputPolicy::default(),
+            },
+            quick_on_sweep: false,
+        }
+    }
+
+    /// The output file base name: the tag if set, else the name.
+    pub fn base_name(&self) -> &str {
+        self.output.tag.as_deref().unwrap_or(&self.name)
+    }
+
+    /// Check every field, including that the grid axes / experiment id
+    /// actually parse — a scenario that validates will lower. Grid
+    /// validation works by lowering (one [`Self::sweep_spec`] call),
+    /// which builds the workload lists; that is milliseconds even for
+    /// the full zoo, a deliberate trade for having exactly one parser.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("scenario: empty name");
+        }
+        for (field, v) in [("seed", Some(self.seed)), ("cache.max_bytes", self.cache.max_bytes)]
+        {
+            if let Some(v) = v {
+                if v > MAX_SAFE_INT {
+                    bail!("scenario: {field} {v} exceeds the JSON-safe integer range");
+                }
+            }
+        }
+        if self.threads == Some(0) {
+            bail!("scenario: threads must be >= 1");
+        }
+        if self.shards == Some(0) {
+            bail!("scenario: shards must be >= 1");
+        }
+        match &self.kind {
+            ScenarioKind::Sweep(_) => {
+                self.sweep_spec().map(|_| ())
+            }
+            ScenarioKind::Experiment { id, .. } => {
+                if id != "all" && experiments::find(id).is_none() {
+                    bail!(
+                        "scenario: unknown experiment {id:?} (options: {}, all)",
+                        experiments::ids().join(", ")
+                    );
+                }
+                // Experiments name their CSVs by id, have no run-level
+                // JSON summary, and cannot be orchestrated into shard
+                // subprocesses; accepting these fields and ignoring
+                // them would be a silent lie.
+                if self.output.tag.is_some() {
+                    bail!("scenario: output.tag applies to sweep scenarios");
+                }
+                if self.output.stdout_json {
+                    bail!("scenario: output.stdout_json applies to sweep scenarios");
+                }
+                if self.shards.is_some() {
+                    bail!("scenario: shards (the orchestrate plan) applies to sweep scenarios");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Lower a sweep scenario to the engine's [`SweepSpec`] (the
+    /// existing grid expansion, cache keys and shard fingerprints are
+    /// reused unchanged). Errors on experiment scenarios.
+    pub fn sweep_spec(&self) -> Result<SweepSpec> {
+        match &self.kind {
+            ScenarioKind::Sweep(axes) => Ok(SweepSpec::new(&self.name)
+                .workloads(spec::parse_workloads(&axes.workloads, self.seed)?)
+                .systems(spec::parse_systems(&axes.prims, &axes.levels)?)
+                .sm_counts(spec::parse_sm_counts(&axes.sms)?)
+                .mapper(MapperChoice::parse(&axes.mapper, self.seed)?)),
+            ScenarioKind::Experiment { id, .. } => {
+                bail!("experiment scenario {id:?} has no sweep grid to lower")
+            }
+        }
+    }
+
+    /// Serialize to the canonical JSON form. Deterministic — field
+    /// order is fixed — so `to_json ∘ from_json ∘ to_json` is
+    /// byte-identical (the round-trip property test).
+    pub fn to_json(&self) -> String {
+        let opt_str = |v: &Option<String>| match v {
+            Some(s) => Json::Str(s.clone()),
+            None => Json::Null,
+        };
+        let opt_num = |v: Option<u64>| match v {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        };
+        let mut fields = vec![
+            (
+                "scenario_format".to_string(),
+                Json::Num(f64::from(SCENARIO_FORMAT_VERSION)),
+            ),
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("seed".to_string(), Json::Num(self.seed as f64)),
+            (
+                "threads".to_string(),
+                opt_num(self.threads.map(|t| t as u64)),
+            ),
+            ("shards".to_string(), opt_num(self.shards.map(|s| s as u64))),
+            (
+                "cache".to_string(),
+                Json::Obj(vec![
+                    (
+                        "path".to_string(),
+                        opt_str(&self
+                            .cache
+                            .path
+                            .as_ref()
+                            .map(|p| p.to_string_lossy().into_owned())),
+                    ),
+                    ("max_bytes".to_string(), opt_num(self.cache.max_bytes)),
+                ]),
+            ),
+            (
+                "output".to_string(),
+                Json::Obj(vec![
+                    (
+                        "dir".to_string(),
+                        Json::Str(self.output.dir.to_string_lossy().into_owned()),
+                    ),
+                    ("tag".to_string(), opt_str(&self.output.tag)),
+                    ("stdout_json".to_string(), Json::Bool(self.output.stdout_json)),
+                ]),
+            ),
+        ];
+        match &self.kind {
+            ScenarioKind::Sweep(axes) => fields.push((
+                "sweep".to_string(),
+                Json::Obj(vec![
+                    ("workloads".to_string(), Json::Str(axes.workloads.clone())),
+                    ("prims".to_string(), Json::Str(axes.prims.clone())),
+                    ("levels".to_string(), Json::Str(axes.levels.clone())),
+                    ("sms".to_string(), Json::Str(axes.sms.clone())),
+                    ("mapper".to_string(), Json::Str(axes.mapper.clone())),
+                ]),
+            )),
+            ScenarioKind::Experiment { id, quick } => fields.push((
+                "experiment".to_string(),
+                Json::Obj(vec![
+                    ("id".to_string(), Json::Str(id.clone())),
+                    ("quick".to_string(), Json::Bool(*quick)),
+                ]),
+            )),
+        }
+        Json::Obj(fields).encode()
+    }
+
+    /// Parse and validate a scenario document. Strict: an unsupported
+    /// schema version or an unknown field is an error (catches typos
+    /// before they silently fall back to defaults); every missing
+    /// optional field takes its documented default.
+    pub fn from_json(text: &str) -> Result<Scenario> {
+        let doc = Json::parse(text).context("scenario: malformed JSON")?;
+        let fields = match &doc {
+            Json::Obj(fields) => fields,
+            _ => bail!("scenario: top level must be an object"),
+        };
+        const KNOWN: &[&str] = &[
+            "scenario_format",
+            "name",
+            "seed",
+            "threads",
+            "shards",
+            "cache",
+            "output",
+            "sweep",
+            "experiment",
+        ];
+        for (k, _) in fields {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!(
+                    "scenario: unknown field {k:?} (known: {})",
+                    KNOWN.join(", ")
+                );
+            }
+        }
+        let version = doc
+            .get("scenario_format")
+            .and_then(Json::as_u64)
+            .context("scenario: missing scenario_format version")?;
+        if version != u64::from(SCENARIO_FORMAT_VERSION) {
+            bail!(
+                "scenario: format v{version}, this binary reads v{SCENARIO_FORMAT_VERSION}"
+            );
+        }
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .context("scenario: missing name")?
+            .to_string();
+        let seed = match present(&doc, "seed") {
+            Some(v) => v.as_u64().context("scenario: seed must be an integer")?,
+            None => synthetic::DEFAULT_SEED,
+        };
+        let threads = match present(&doc, "threads") {
+            Some(v) => Some(v.as_u64().context("scenario: threads must be an integer")? as usize),
+            None => None,
+        };
+        let shards = match present(&doc, "shards") {
+            Some(v) => Some(v.as_u64().context("scenario: shards must be an integer")? as usize),
+            None => None,
+        };
+        let cache = match present(&doc, "cache") {
+            None => CachePolicy::default(),
+            Some(c) => {
+                check_keys(c, &["path", "max_bytes"], "cache")?;
+                CachePolicy {
+                    path: match present(c, "path") {
+                        Some(v) => Some(PathBuf::from(
+                            v.as_str().context("scenario: cache.path must be a string")?,
+                        )),
+                        None => None,
+                    },
+                    max_bytes: match present(c, "max_bytes") {
+                        Some(v) => Some(
+                            v.as_u64()
+                                .context("scenario: cache.max_bytes must be an integer")?,
+                        ),
+                        None => None,
+                    },
+                }
+            }
+        };
+        let output = match present(&doc, "output") {
+            None => OutputPolicy::default(),
+            Some(o) => {
+                check_keys(o, &["dir", "tag", "stdout_json"], "output")?;
+                OutputPolicy {
+                    dir: match present(o, "dir") {
+                        Some(v) => PathBuf::from(
+                            v.as_str().context("scenario: output.dir must be a string")?,
+                        ),
+                        None => OutputPolicy::default().dir,
+                    },
+                    tag: match present(o, "tag") {
+                        Some(v) => Some(
+                            v.as_str()
+                                .context("scenario: output.tag must be a string")?
+                                .to_string(),
+                        ),
+                        None => None,
+                    },
+                    stdout_json: match present(o, "stdout_json") {
+                        Some(v) => v
+                            .as_bool()
+                            .context("scenario: output.stdout_json must be a boolean")?,
+                        None => false,
+                    },
+                }
+            }
+        };
+        let kind = match (present(&doc, "sweep"), present(&doc, "experiment")) {
+            (Some(_), Some(_)) => {
+                bail!("scenario: give either \"sweep\" or \"experiment\", not both")
+            }
+            (None, None) => bail!("scenario: missing \"sweep\" or \"experiment\" section"),
+            (Some(s), None) => {
+                check_keys(s, &["workloads", "prims", "levels", "sms", "mapper"], "sweep")?;
+                let axis = |key: &str, default: &str| -> Result<String> {
+                    match present(s, key) {
+                        Some(v) => Ok(v
+                            .as_str()
+                            .with_context(|| format!("scenario: sweep.{key} must be a string"))?
+                            .to_string()),
+                        None => Ok(default.to_string()),
+                    }
+                };
+                let defaults = GridAxes::default();
+                ScenarioKind::Sweep(GridAxes {
+                    workloads: axis("workloads", &defaults.workloads)?,
+                    prims: axis("prims", &defaults.prims)?,
+                    levels: axis("levels", &defaults.levels)?,
+                    sms: axis("sms", &defaults.sms)?,
+                    mapper: axis("mapper", &defaults.mapper)?,
+                })
+            }
+            (None, Some(e)) => {
+                check_keys(e, &["id", "quick"], "experiment")?;
+                ScenarioKind::Experiment {
+                    id: e
+                        .get("id")
+                        .and_then(Json::as_str)
+                        .context("scenario: missing experiment.id")?
+                        .to_string(),
+                    quick: match present(e, "quick") {
+                        Some(v) => v
+                            .as_bool()
+                            .context("scenario: experiment.quick must be a boolean")?,
+                        None => false,
+                    },
+                }
+            }
+        };
+        let sc = Scenario {
+            name,
+            kind,
+            seed,
+            threads,
+            cache,
+            shards,
+            output,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Load a scenario from a JSON file.
+    pub fn from_json_file(path: &Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        Scenario::from_json(&text)
+            .with_context(|| format!("scenario file {}", path.display()))
+    }
+
+    /// Write the canonical JSON form to `path`, creating parent dirs.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating scenario dir {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing scenario {}", path.display()))
+    }
+}
+
+/// Field access treating an explicit `null` like a missing field.
+fn present<'a>(obj: &'a Json, key: &str) -> Option<&'a Json> {
+    match obj.get(key) {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v),
+    }
+}
+
+/// Reject unknown keys in a nested section.
+fn check_keys(obj: &Json, known: &[&str], section: &str) -> Result<()> {
+    if let Json::Obj(fields) = obj {
+        for (k, _) in fields {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "scenario: unknown field {section}.{k} (known: {})",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    } else {
+        bail!("scenario: {section} must be an object")
+    }
+}
+
+/// Fluent [`Scenario`] construction; terminate with
+/// [`ScenarioBuilder::build`], which validates.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    sc: Scenario,
+    /// Quick mode requested while the scenario is (still) a sweep —
+    /// adopted by a later [`Self::experiment`] call, rejected by
+    /// [`Self::build`] otherwise (the CLI makes the same request a
+    /// hard error; the builder must not silently drop it).
+    quick_on_sweep: bool,
+}
+
+impl ScenarioBuilder {
+    fn axes_mut(&mut self) -> &mut GridAxes {
+        if let ScenarioKind::Experiment { .. } = self.sc.kind {
+            self.sc.kind = ScenarioKind::Sweep(GridAxes::default());
+        }
+        match &mut self.sc.kind {
+            ScenarioKind::Sweep(axes) => axes,
+            ScenarioKind::Experiment { .. } => unreachable!("replaced above"),
+        }
+    }
+
+    /// Workload axis (`repro sweep --workloads` syntax).
+    pub fn workloads(mut self, v: &str) -> Self {
+        self.axes_mut().workloads = v.to_string();
+        self
+    }
+
+    /// Primitive axis (`--prims` syntax).
+    pub fn prims(mut self, v: &str) -> Self {
+        self.axes_mut().prims = v.to_string();
+        self
+    }
+
+    /// Integration-level axis (`--levels` syntax).
+    pub fn levels(mut self, v: &str) -> Self {
+        self.axes_mut().levels = v.to_string();
+        self
+    }
+
+    /// SM-count axis (`--sms` syntax).
+    pub fn sms(mut self, v: &str) -> Self {
+        self.axes_mut().sms = v.to_string();
+        self
+    }
+
+    /// Mapper axis (`--mapper` syntax; see [`MapperChoice::parse`]).
+    pub fn mapper(mut self, v: &str) -> Self {
+        self.axes_mut().mapper = v.to_string();
+        self
+    }
+
+    /// Mapper axis from a typed choice (spelled via
+    /// [`MapperChoice::cli_spec`], so every variant serializes).
+    ///
+    /// The heuristic mapper is the one variant whose spelling does not
+    /// carry its whole identity: a scenario has exactly one seed, so
+    /// [`MapperChoice::Heuristic`]'s embedded seed is *adopted as the
+    /// scenario seed* here (matching how the CLI derives the heuristic
+    /// seed from `--seed`) rather than silently replaced at lowering.
+    /// Call [`ScenarioBuilder::seed`] afterwards only if you mean to
+    /// re-seed both the workloads and the heuristic together.
+    pub fn mapper_choice(mut self, mc: &MapperChoice) -> Self {
+        if let MapperChoice::Heuristic { seed, .. } = mc {
+            self.sc.seed = *seed;
+        }
+        let spelled = mc.cli_spec();
+        self.mapper(&spelled)
+    }
+
+    /// Turn this scenario into a registered experiment run (adopting
+    /// any [`Self::quick`] request made before this call).
+    pub fn experiment(mut self, id: &str) -> Self {
+        self.sc.kind = ScenarioKind::Experiment {
+            id: id.to_string(),
+            quick: std::mem::take(&mut self.quick_on_sweep),
+        };
+        self
+    }
+
+    /// Quick mode for experiment scenarios. Calling it on a sweep
+    /// scenario is an error at [`Self::build`] (mirroring the CLI's
+    /// `--quick` behavior) unless a later [`Self::experiment`] call
+    /// adopts the request.
+    pub fn quick(mut self, quick: bool) -> Self {
+        match &mut self.sc.kind {
+            ScenarioKind::Experiment { quick: q, .. } => *q = quick,
+            ScenarioKind::Sweep(_) => self.quick_on_sweep = quick,
+        }
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.sc.seed = seed;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.sc.threads = Some(threads);
+        self
+    }
+
+    pub fn cache_path(mut self, path: &Path) -> Self {
+        self.sc.cache.path = Some(path.to_path_buf());
+        self
+    }
+
+    pub fn cache_max_bytes(mut self, max_bytes: u64) -> Self {
+        self.sc.cache.max_bytes = Some(max_bytes);
+        self
+    }
+
+    /// Shard plan: the default `repro orchestrate` process count.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.sc.shards = Some(shards);
+        self
+    }
+
+    pub fn out_dir(mut self, dir: &Path) -> Self {
+        self.sc.output.dir = dir.to_path_buf();
+        self
+    }
+
+    pub fn tag(mut self, tag: &str) -> Self {
+        self.sc.output.tag = Some(tag.to_string());
+        self
+    }
+
+    pub fn stdout_json(mut self, on: bool) -> Self {
+        self.sc.output.stdout_json = on;
+        self
+    }
+
+    /// Validate and produce the scenario.
+    pub fn build(self) -> Result<Scenario> {
+        if self.quick_on_sweep {
+            bail!("scenario: quick mode applies to experiment scenarios");
+        }
+        self.sc.validate()?;
+        Ok(self.sc)
+    }
+}
+
+/// The built-in scenario registry: every experiment id (lowered from
+/// [`crate::experiments::REGISTRY`], so the two can never drift) plus
+/// `sweep`, the default full-grid sweep. `repro run <name>` and
+/// `repro orchestrate <name>` accept these names directly.
+pub fn builtin(name: &str) -> Result<Scenario> {
+    if name == "sweep" {
+        return Scenario::builder("sweep").build();
+    }
+    if experiments::find(name).is_some() {
+        return Scenario::builder(name).experiment(name).build();
+    }
+    bail!(
+        "no built-in scenario {name:?} (built-ins: {})",
+        builtin_names().join(", ")
+    )
+}
+
+/// Names [`builtin`] accepts, in listing order.
+pub fn builtin_names() -> Vec<&'static str> {
+    let mut names = vec!["sweep"];
+    names.extend(experiments::ids());
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn arbitrary_scenario(rng: &mut Rng) -> Scenario {
+        let name = format!("sc-{}", rng.gen_range(0, 1000));
+        let mut b = Scenario::builder(&name).seed(rng.gen_range(1, 1 << 20));
+        let experiment_kind = rng.gen_range(0, 2) == 0;
+        if experiment_kind {
+            let ids = experiments::ids();
+            b = b
+                .experiment(ids[rng.index(ids.len())])
+                .quick(rng.gen_range(0, 2) == 0);
+        } else {
+            let workloads = ["bert", "synthetic:9", "bert,dlrm", "real"];
+            let prims = ["d1", "baseline,d1", "all", "baseline,a2"];
+            let levels = ["rf", "rf,smem-b", "all"];
+            let sms = ["1", "1,2,4", "2"];
+            let mappers = [
+                "priority",
+                "dup:t3",
+                "priority:t7",
+                "priority:order-kmn",
+                "heuristic:60",
+                "exhaustive:edp",
+            ];
+            b = b
+                .workloads(workloads[rng.index(workloads.len())])
+                .prims(prims[rng.index(prims.len())])
+                .levels(levels[rng.index(levels.len())])
+                .sms(sms[rng.index(sms.len())])
+                .mapper(mappers[rng.index(mappers.len())]);
+        }
+        if rng.gen_range(0, 2) == 0 {
+            b = b.threads(rng.gen_range(1, 16) as usize);
+        }
+        if !experiment_kind && rng.gen_range(0, 2) == 0 {
+            b = b.shards(rng.gen_range(1, 8) as usize);
+        }
+        if rng.gen_range(0, 2) == 0 {
+            b = b.cache_path(Path::new("results/cache \"x\".bin"));
+        }
+        if rng.gen_range(0, 2) == 0 {
+            b = b.cache_max_bytes(rng.gen_range(1, 1 << 30));
+        }
+        if rng.gen_range(0, 2) == 0 {
+            b = b.out_dir(Path::new("out/dir"));
+        }
+        // tag / stdout_json are sweep-only fields (validation rejects
+        // them on experiment scenarios).
+        if !experiment_kind {
+            if rng.gen_range(0, 2) == 0 {
+                b = b.tag(&format!("tag-{}", rng.gen_range(0, 100)));
+            }
+            if rng.gen_range(0, 2) == 0 {
+                b = b.stdout_json(true);
+            }
+        }
+        b.build().expect("arbitrary scenario must validate")
+    }
+
+    /// Tentpole property: Scenario → json → Scenario → json is exact —
+    /// the value round-trips and the re-serialization is byte-identical.
+    #[test]
+    fn prop_json_round_trip_is_byte_identical() {
+        let mut rng = Rng::new(0x5eed_5ca1e);
+        for _ in 0..200 {
+            let sc = arbitrary_scenario(&mut rng);
+            let text = sc.to_json();
+            let back = Scenario::from_json(&text)
+                .unwrap_or_else(|e| panic!("round trip failed: {e:#}\n{text}"));
+            assert_eq!(back, sc, "value round trip\n{text}");
+            assert_eq!(back.to_json(), text, "byte round trip");
+        }
+    }
+
+    #[test]
+    fn unsupported_schema_version_is_rejected() {
+        let sc = Scenario::builder("v").workloads("bert").prims("d1").build().unwrap();
+        let bumped = sc
+            .to_json()
+            .replace("\"scenario_format\": 1", "\"scenario_format\": 2");
+        let err = Scenario::from_json(&bumped).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("format v2"),
+            "must reject v2: {err:#}"
+        );
+        let missing = sc.to_json().replace("  \"scenario_format\": 1,\n", "");
+        assert!(Scenario::from_json(&missing).is_err(), "version is mandatory");
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected() {
+        let sc = Scenario::builder("u").build().unwrap();
+        let tweaked = sc.to_json().replace("\"seed\"", "\"sede\"");
+        let err = Scenario::from_json(&tweaked).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown field"), "{err:#}");
+        let tweaked = sc.to_json().replace("\"mapper\"", "\"mappre\"");
+        let err = Scenario::from_json(&tweaked).unwrap_err();
+        assert!(format!("{err:#}").contains("sweep.mappre"), "{err:#}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_scenarios() {
+        assert!(Scenario::builder("x").workloads("quantum").build().is_err());
+        assert!(Scenario::builder("x").mapper("magic").build().is_err());
+        assert!(Scenario::builder("x").sms("0").build().is_err());
+        assert!(Scenario::builder("x").experiment("fig99").build().is_err());
+        assert!(Scenario::builder("").build().is_err());
+        // tag / stdout_json / shards are sweep-only: rejected, never
+        // ignored.
+        assert!(Scenario::builder("x").experiment("fig2").tag("t").build().is_err());
+        assert!(Scenario::builder("x")
+            .experiment("fig2")
+            .stdout_json(true)
+            .build()
+            .is_err());
+        assert!(Scenario::builder("x").experiment("fig2").shards(2).build().is_err());
+        // ...and quick is experiment-only: a sweep build errors rather
+        // than silently dropping the request, while a later
+        // .experiment() adopts it regardless of call order.
+        assert!(Scenario::builder("x").quick(true).build().is_err());
+        let adopted = Scenario::builder("x").quick(true).experiment("fig2").build().unwrap();
+        assert_eq!(
+            adopted.kind,
+            ScenarioKind::Experiment { id: "fig2".to_string(), quick: true }
+        );
+        let mut sc = Scenario::builder("x").build().unwrap();
+        sc.threads = Some(0);
+        assert!(sc.validate().is_err());
+        sc.threads = None;
+        sc.shards = Some(0);
+        assert!(sc.validate().is_err());
+        sc.shards = None;
+        sc.seed = MAX_SAFE_INT + 1;
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn missing_optional_fields_take_defaults() {
+        let sc = Scenario::from_json(
+            r#"{"scenario_format": 1, "name": "minimal",
+                "sweep": {"workloads": "bert", "prims": "d1", "levels": "rf"}}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.seed, synthetic::DEFAULT_SEED);
+        assert_eq!(sc.threads, None);
+        assert_eq!(sc.cache, CachePolicy::default());
+        assert_eq!(sc.output, OutputPolicy::default());
+        match &sc.kind {
+            ScenarioKind::Sweep(axes) => {
+                assert_eq!(axes.sms, "1");
+                assert_eq!(axes.mapper, "priority");
+            }
+            other => panic!("expected sweep kind, got {other:?}"),
+        }
+        assert_eq!(sc.base_name(), "minimal");
+    }
+
+    #[test]
+    fn sweep_and_experiment_are_mutually_exclusive() {
+        let err = Scenario::from_json(
+            r#"{"scenario_format": 1, "name": "both", "sweep": {},
+                "experiment": {"id": "fig9"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("not both"), "{err:#}");
+        let err = Scenario::from_json(r#"{"scenario_format": 1, "name": "neither"}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("missing"), "{err:#}");
+    }
+
+    #[test]
+    fn builtin_registry_covers_every_experiment_and_the_default_sweep() {
+        assert_eq!(builtin_names().len(), experiments::ids().len() + 1);
+        for name in builtin_names() {
+            let sc = builtin(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(sc.name, name);
+            // Every built-in serializes and round-trips like any other
+            // scenario.
+            assert_eq!(Scenario::from_json(&sc.to_json()).unwrap(), sc);
+            match (&sc.kind, name) {
+                (ScenarioKind::Sweep(_), "sweep") => {}
+                (ScenarioKind::Experiment { id, quick }, _) => {
+                    assert_eq!(id, name);
+                    assert!(!*quick, "built-ins default to full fidelity");
+                }
+                (kind, name) => panic!("{name}: unexpected kind {kind:?}"),
+            }
+        }
+        assert!(builtin("fig99").is_err());
+    }
+
+    #[test]
+    fn lowering_matches_the_cli_parsers() {
+        let sc = Scenario::builder("lower")
+            .workloads("bert,dlrm")
+            .prims("baseline,d1")
+            .levels("rf,smem-b")
+            .sms("1,4")
+            .mapper("priority:t7")
+            .seed(11)
+            .build()
+            .unwrap();
+        let spec = sc.sweep_spec().unwrap();
+        assert_eq!(spec.name, "lower");
+        assert_eq!(spec.workloads.len(), 2);
+        assert_eq!(spec.systems.len(), 3);
+        assert_eq!(spec.sm_counts, vec![1, 4]);
+        assert_eq!(
+            spec.mapper,
+            MapperChoice::PriorityThreshold { threshold: 7 }
+        );
+        assert!(builtin("fig9").unwrap().sweep_spec().is_err());
+    }
+
+    #[test]
+    fn mapper_choice_builder_spells_every_variant() {
+        let mc = MapperChoice::PriorityFixedOrder {
+            order: [
+                crate::mapping::loopnest::Dim::K,
+                crate::mapping::loopnest::Dim::N,
+                crate::mapping::loopnest::Dim::M,
+            ],
+        };
+        let sc = Scenario::builder("m")
+            .workloads("bert")
+            .prims("d1")
+            .levels("rf")
+            .mapper_choice(&mc)
+            .build()
+            .unwrap();
+        assert_eq!(sc.sweep_spec().unwrap().mapper, mc);
+
+        // The heuristic's embedded seed is adopted as the scenario
+        // seed, so lowering reproduces the exact typed mapper instead
+        // of silently re-seeding it.
+        let h = MapperChoice::Heuristic { budget: 60, seed: 99 };
+        let sc = Scenario::builder("h")
+            .workloads("bert")
+            .prims("d1")
+            .levels("rf")
+            .seed(7)
+            .mapper_choice(&h)
+            .build()
+            .unwrap();
+        assert_eq!(sc.seed, 99);
+        assert_eq!(sc.sweep_spec().unwrap().mapper, h);
+    }
+}

@@ -1,0 +1,159 @@
+//! The multi-process sweep orchestrator: `repro orchestrate
+//! <scenario.json|name> --procs n` in library form.
+//!
+//! PR 2 made distributed sweeps *possible* (`--shard i/n` + `repro
+//! merge`) but left the choreography manual. The orchestrator closes
+//! the loop: it writes the canonical scenario file, spawns one `repro
+//! run <scenario> --shard i/n` subprocess per shard, waits for all of
+//! them, and merges the per-shard summaries into the final
+//! `<base>.csv` / `<base>.json` — byte-identical to a single-process
+//! `repro run` of the same scenario (the shard/merge guarantee, now
+//! exercised end-to-end in CI).
+//!
+//! Subprocess (not thread) sharding is deliberate: it exercises the
+//! same process boundary a multi-host deployment has, and each shard
+//! gets its own address space. A shared cache path is safe but only
+//! best-effort across *concurrent* shards: each save merges the
+//! entries already on disk, yet the final rename is last-writer-wins
+//! (see [`crate::sweep::persist::save`]), so shards finishing at the
+//! same instant can drop each other's entries from the file — they are
+//! recomputed on the next run, never corrupted. Sweep correctness
+//! never depends on the cache: the merged CSV is assembled from the
+//! shard summaries, not the cache file.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sweep::{output, shard};
+
+use super::{Scenario, ScenarioKind};
+
+/// Run `sc` as `procs` shard subprocesses of this binary and merge the
+/// results. Sweep scenarios only — experiments parallelize internally.
+pub fn orchestrate(sc: &Scenario, procs: usize) -> Result<()> {
+    if let ScenarioKind::Experiment { id, .. } = &sc.kind {
+        bail!(
+            "orchestrate drives sweep scenarios; experiment {id:?} already \
+             parallelizes internally — use `repro run {id}`"
+        );
+    }
+    if procs == 0 {
+        bail!("--procs must be >= 1");
+    }
+    // Lowering doubles as validation for a sweep scenario (a scenario
+    // that lowers is a scenario that runs); the grid is only needed
+    // for the point count here — each shard expands its own.
+    let spec = sc.sweep_spec()?;
+    sc.validate()?;
+
+    // Persist the canonical scenario the shard subprocesses will run:
+    // the children re-load exactly what we validated, and the file
+    // documents the run afterwards.
+    let out_dir = &sc.output.dir;
+    let base = sc.base_name();
+    let sc_path = out_dir.join(format!("{base}.scenario.json"));
+    sc.write(&sc_path)?;
+    let exe = std::env::current_exe()
+        .context("locating the repro binary for shard subprocesses")?;
+    println!(
+        "orchestrate: {procs} shard process(es) over {} grid points ({})",
+        spec.n_points(),
+        sc_path.display()
+    );
+
+    // Spawn every shard, then collect: shards run concurrently and a
+    // failure anywhere fails the whole orchestration (after every
+    // child has been reaped — no zombies, and all diagnostics print).
+    let mut children = Vec::with_capacity(procs);
+    for index in 0..procs {
+        let child = Command::new(&exe)
+            .arg("run")
+            .arg(&sc_path)
+            .arg("--shard")
+            .arg(format!("{index}/{procs}"))
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning shard {index}/{procs}"))?;
+        children.push((index, child));
+    }
+    let mut failures = Vec::new();
+    for (index, child) in children {
+        let out = child
+            .wait_with_output()
+            .with_context(|| format!("waiting for shard {index}/{procs}"))?;
+        // Replay the child's output prefixed with its shard identity,
+        // so concurrent shards stay readable.
+        for line in String::from_utf8_lossy(&out.stdout).lines() {
+            println!("[shard {index}/{procs}] {line}");
+        }
+        for line in String::from_utf8_lossy(&out.stderr).lines() {
+            eprintln!("[shard {index}/{procs}] {line}");
+        }
+        if !out.status.success() {
+            failures.push(format!("shard {index}/{procs} exited with {}", out.status));
+        }
+    }
+    if !failures.is_empty() {
+        bail!("orchestrate failed: {}", failures.join("; "));
+    }
+
+    // Merge the per-shard summaries back into the unsharded artifacts
+    // (the validated, byte-identical combine of `repro merge`).
+    let shard_paths: Vec<PathBuf> = (0..procs)
+        .map(|index| {
+            out_dir.join(format!(
+                "{base}-{}.json",
+                shard::ShardId {
+                    index,
+                    count: procs
+                }
+                .file_tag()
+            ))
+        })
+        .collect();
+    let merged = shard::merge_files(&shard_paths)?;
+    println!(
+        "orchestrate: merged {} shard(s) of {:?}: {} points (fingerprint {})",
+        merged.shard_count,
+        merged.spec_name,
+        merged.results.len(),
+        merged.fingerprint
+    );
+    print!("{}", output::summary_table(&merged.results));
+
+    let csv = output::results_csv(&merged.results)?;
+    let csv_path = out_dir.join(format!("{base}.csv"));
+    csv.write(&csv_path)?;
+    println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
+    let json_path = out_dir.join(format!("{base}.json"));
+    std::fs::write(&json_path, shard::merged_json(&merged))
+        .with_context(|| format!("writing merged summary {}", json_path.display()))?;
+    println!("[json] merged summary -> {}", json_path.display());
+    if sc.output.stdout_json {
+        print!("{}", shard::merged_json(&merged));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    #[test]
+    fn experiment_scenarios_and_zero_procs_are_refused() {
+        let exp = Scenario::builder("fig2").experiment("fig2").build().unwrap();
+        let err = orchestrate(&exp, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("sweep scenarios"), "{err:#}");
+        let sweep = Scenario::builder("s")
+            .workloads("synthetic:2")
+            .prims("d1")
+            .levels("rf")
+            .build()
+            .unwrap();
+        assert!(orchestrate(&sweep, 0).is_err());
+    }
+}

@@ -29,7 +29,8 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
 use crate::cim::isoarea;
@@ -40,6 +41,23 @@ use crate::workload::Gemm;
 
 /// Number of independent shards (power of two).
 const SHARDS: usize = 16;
+
+/// The wall-clock second (unix time) this process first touched an
+/// [`EvalCache`]. One stamp per *process*, not per cache or per access:
+/// every entry used in a run carries the same last-used value, so
+/// serializing a cache stays deterministic within a process (the
+/// byte-identity properties the persistence tests pin), while across
+/// runs the stamps order entries by recency — the signal the
+/// `max_bytes` LRU eviction in [`super::persist`] trims on.
+fn process_stamp() -> u64 {
+    static STAMP: OnceLock<u64> = OnceLock::new();
+    *STAMP.get_or_init(|| {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0)
+    })
+}
 
 /// Mapper fingerprint fragment for baseline points: the mapper cannot
 /// influence the tensor-core baseline, so every mapper choice shares
@@ -195,12 +213,22 @@ impl CacheEntry {
     }
 }
 
-/// One shard: point key → GEMM → (mapping, metrics). Two-level so a
-/// probe borrows the point key (`&str`) and only allocates on a miss.
-type Shard = HashMap<String, HashMap<Gemm, CacheEntry>>;
+/// One cached entry plus its recency metadata: the unix second it was
+/// last served or computed. Preserved across save/load round trips so
+/// LRU eviction orders by *use*, not by when a file happened to be
+/// rewritten.
+#[derive(Debug, Clone)]
+struct Slot {
+    entry: CacheEntry,
+    last_used: u64,
+}
+
+/// One shard: point key → GEMM → slot. Two-level so a probe borrows the
+/// point key (`&str`) and only allocates on a miss.
+type Shard = HashMap<String, HashMap<Gemm, Slot>>;
 
 /// Sharded (system fingerprint, GEMM) → [`CacheEntry`] memoization
-/// cache with hit/miss accounting.
+/// cache with hit/miss accounting and per-entry last-used stamps.
 #[derive(Debug)]
 pub struct EvalCache {
     shards: Vec<Mutex<Shard>>,
@@ -211,6 +239,9 @@ pub struct EvalCache {
     /// point costs exactly one, so a fully warm run reports zero — the
     /// invariant the warm-start tests pin.
     mapper_calls: AtomicU64,
+    /// Last-used stamp applied to every entry touched by this run
+    /// (see [`process_stamp`]).
+    run_stamp: u64,
 }
 
 impl Default for EvalCache {
@@ -226,7 +257,14 @@ impl EvalCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             mapper_calls: AtomicU64::new(0),
+            run_stamp: process_stamp(),
         }
+    }
+
+    /// The last-used stamp this cache applies to every entry it serves
+    /// or computes (one value per process — see [`process_stamp`]).
+    pub fn run_stamp(&self) -> u64 {
+        self.run_stamp
     }
 
     fn shard_of(point: &str, gemm: &Gemm) -> usize {
@@ -249,25 +287,29 @@ impl EvalCache {
         f: F,
     ) -> CacheEntry {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
-        if let Some(e) = shard
+        if let Some(slot) = shard
             .lock()
             .expect("cache shard poisoned")
-            .get(point)
-            .and_then(|per_gemm| per_gemm.get(&gemm))
+            .get_mut(point)
+            .and_then(|per_gemm| per_gemm.get_mut(&gemm))
         {
+            slot.last_used = self.run_stamp;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return e.clone();
+            return slot.entry.clone();
         }
         let e = f();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        shard
-            .lock()
-            .expect("cache shard poisoned")
+        let mut guard = shard.lock().expect("cache shard poisoned");
+        let slot = guard
             .entry(point.to_string())
             .or_default()
             .entry(gemm)
-            .or_insert(e)
-            .clone()
+            .or_insert(Slot {
+                entry: e,
+                last_used: self.run_stamp,
+            });
+        slot.last_used = self.run_stamp;
+        slot.entry.clone()
     }
 
     /// Metrics-only variant of [`Self::get_or_compute`]: serves hits by
@@ -283,32 +325,47 @@ impl EvalCache {
         f: F,
     ) -> Metrics {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
-        if let Some(e) = shard
+        if let Some(slot) = shard
             .lock()
             .expect("cache shard poisoned")
-            .get(point)
-            .and_then(|per_gemm| per_gemm.get(&gemm))
+            .get_mut(point)
+            .and_then(|per_gemm| per_gemm.get_mut(&gemm))
         {
+            slot.last_used = self.run_stamp;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return e.metrics;
+            return slot.entry.metrics;
         }
         let e = f();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        shard
-            .lock()
-            .expect("cache shard poisoned")
+        let mut guard = shard.lock().expect("cache shard poisoned");
+        let slot = guard
             .entry(point.to_string())
             .or_default()
             .entry(gemm)
-            .or_insert(e)
-            .metrics
+            .or_insert(Slot {
+                entry: e,
+                last_used: self.run_stamp,
+            });
+        slot.last_used = self.run_stamp;
+        slot.entry.metrics
     }
 
     /// Insert an entry without touching the hit/miss counters (cache
     /// warm-up from a persisted file). An existing entry wins — the
     /// live-computed value and the persisted one are identical by the
-    /// purity contract, so keeping the first avoids surprises.
+    /// purity contract, so keeping the first avoids surprises. The
+    /// entry is stamped as used *now*; to preserve a persisted stamp
+    /// use [`Self::preload_stamped`].
     pub fn preload(&self, point: &str, gemm: Gemm, entry: CacheEntry) {
+        self.preload_stamped(point, gemm, entry, self.run_stamp);
+    }
+
+    /// [`Self::preload`] preserving a persisted last-used stamp: an
+    /// entry loaded from disk but never used by this run keeps its old
+    /// recency, so the LRU cap evicts it before anything the run
+    /// actually touched. An existing in-memory entry wins, stamp
+    /// included.
+    pub fn preload_stamped(&self, point: &str, gemm: Gemm, entry: CacheEntry, last_used: u64) {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
         shard
             .lock()
@@ -316,19 +373,29 @@ impl EvalCache {
             .entry(point.to_string())
             .or_default()
             .entry(gemm)
-            .or_insert(entry);
+            .or_insert(Slot { entry, last_used });
     }
 
     /// All cached entries, sorted by (point key, GEMM) so the snapshot
     /// — and any file serialized from it — is deterministic regardless
     /// of insertion order and shard hashing.
     pub fn snapshot(&self) -> Vec<(String, Gemm, CacheEntry)> {
+        self.snapshot_stamped()
+            .into_iter()
+            .map(|(point, gemm, _, entry)| (point, gemm, entry))
+            .collect()
+    }
+
+    /// [`Self::snapshot`] with each entry's last-used stamp (the
+    /// persistence layer serializes these; LRU trimming orders on
+    /// them). Same deterministic (point key, GEMM) order.
+    pub fn snapshot_stamped(&self) -> Vec<(String, Gemm, u64, CacheEntry)> {
         let mut out = Vec::new();
         for s in &self.shards {
             let shard = s.lock().expect("cache shard poisoned");
             for (point, per_gemm) in shard.iter() {
-                for (gemm, e) in per_gemm {
-                    out.push((point.clone(), *gemm, e.clone()));
+                for (gemm, slot) in per_gemm {
+                    out.push((point.clone(), *gemm, slot.last_used, slot.entry.clone()));
                 }
             }
         }
@@ -469,6 +536,27 @@ mod tests {
         cache.preload("p", g, dummy_entry(9.0));
         let again = cache.get_or_compute("p", g, || unreachable!());
         assert_eq!(again, dummy_entry(5.0));
+    }
+
+    #[test]
+    fn stamps_track_use_and_survive_preload() {
+        let cache = EvalCache::new();
+        let g = Gemm::new(8, 8, 8);
+        let old = cache.run_stamp().saturating_sub(1000);
+        cache.preload_stamped("stale", g, dummy_entry(1.0), old);
+        cache.preload("fresh", g, dummy_entry(2.0));
+        let snap = cache.snapshot_stamped();
+        assert_eq!(snap[0].0, "fresh");
+        assert_eq!(snap[0].2, cache.run_stamp());
+        assert_eq!(snap[1].0, "stale");
+        assert_eq!(snap[1].2, old, "preload_stamped must keep the persisted stamp");
+        // A hit refreshes the stale entry's recency to this run.
+        cache.get_or_compute("stale", g, || unreachable!());
+        assert_eq!(cache.snapshot_stamped()[1].2, cache.run_stamp());
+        // An existing in-memory entry wins over a late preload, stamp
+        // included.
+        cache.preload_stamped("stale", g, dummy_entry(9.0), old);
+        assert_eq!(cache.snapshot_stamped()[1].2, cache.run_stamp());
     }
 
     #[test]

@@ -345,7 +345,7 @@ mod tests {
             mapper,
         };
         engine.evaluate(&mk(MapperChoice::Priority));
-        engine.evaluate(&mk(MapperChoice::PriorityDuplication));
+        engine.evaluate(&mk(MapperChoice::duplication()));
         assert_eq!(engine.cache().misses(), 1);
         assert_eq!(engine.cache().hits(), 1);
     }

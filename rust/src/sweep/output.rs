@@ -145,21 +145,10 @@ pub fn detail_table(results: &[SweepResult]) -> Table {
 }
 
 /// Escape a string for a JSON string literal (shared with the shard
-/// summary writer).
+/// summary writer; canonical implementation lives next to the reader
+/// in [`crate::util::json`] so the pair can never drift).
 pub(crate) fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
+    crate::util::json::escape(s)
 }
 
 pub(crate) fn json_f64(x: f64) -> String {

@@ -6,11 +6,19 @@
 //! cache-format version, the **cost-model version**
 //! ([`crate::cost::COST_MODEL_VERSION`]) and the **mapper version**
 //! ([`crate::mapping::MAPPER_VERSION`]), then one tab-separated line
-//! per entry (point key, GEMM dims, canonical mapping, metrics). Float
-//! metrics — and the mapping's occupancy field — are stored as IEEE-754
-//! bit patterns in hex, so a save → load round trip is bit-identical
-//! and a warm run reproduces a cold run exactly. The mapping column is
-//! the [`Mapping::canonical`] form, or `-` for baseline points.
+//! per entry (point key, GEMM dims, last-used stamp, canonical
+//! mapping, metrics). Float metrics — and the mapping's occupancy
+//! field — are stored as IEEE-754 bit patterns in hex, so a save →
+//! load round trip is bit-identical and a warm run reproduces a cold
+//! run exactly. The mapping column is the [`Mapping::canonical`] form,
+//! or `-` for baseline points.
+//!
+//! The last-used stamp (unix seconds, preserved across round trips and
+//! refreshed whenever an entry is served or computed) powers the
+//! optional **size cap**: [`save_capped`] trims the written union
+//! least-recently-used first until the file fits `max_bytes`, so a
+//! long-lived shared cache file stops growing without bound
+//! (`--cache-max-mb` on the CLI, `cache.max_bytes` in a scenario).
 //!
 //! Loading is *compatible-or-discarded*: a file whose header does not
 //! match the running binary's versions — or that fails to parse at all
@@ -41,7 +49,9 @@ use super::cache::{f64_bits_hex, CacheEntry, EvalCache};
 /// Bump on any format change; old files are then discarded on load.
 /// v2: entries gained the canonical-mapping column and the header the
 /// `mapper=` token (v1 files — PR 2's format — are discarded).
-pub const CACHE_FORMAT_VERSION: u32 = 2;
+/// v3: entries gained the last-used stamp column (unix seconds), the
+/// recency signal for `max_bytes` LRU eviction (v2 files discarded).
+pub const CACHE_FORMAT_VERSION: u32 = 3;
 
 /// First token of the header line — identifies the file type.
 const MAGIC: &str = "www-cim-cache";
@@ -49,8 +59,9 @@ const MAGIC: &str = "www-cim-cache";
 /// Fields per serialized [`Metrics`] (see [`metrics_fields`] order).
 const METRIC_FIELDS: usize = 18;
 
-/// Fields per entry line: point key, 3 GEMM dims, mapping, metrics.
-const ENTRY_FIELDS: usize = 5 + METRIC_FIELDS;
+/// Fields per entry line: point key, 3 GEMM dims, last-used stamp,
+/// mapping, metrics.
+const ENTRY_FIELDS: usize = 6 + METRIC_FIELDS;
 
 /// Mapping column marker for entries without a mapping (baseline).
 const NO_MAPPING: &str = "-";
@@ -159,28 +170,84 @@ pub fn metrics_from_fields(fields: &[&str]) -> Result<Metrics> {
     })
 }
 
-/// Serialize the whole cache (header + sorted entries). Deterministic:
-/// equal cache contents produce byte-identical files (the canonical
-/// mapping form is itself deterministic).
-pub fn encode(cache: &EvalCache) -> String {
-    let mut out = String::new();
-    out.push_str(&header());
-    out.push('\n');
-    for (point, gemm, entry) in cache.snapshot() {
-        out.push_str(&point);
-        out.push('\t');
-        out.push_str(&format!("{}\t{}\t{}\t", gemm.m, gemm.n, gemm.k));
-        match &entry.mapping {
-            Some(m) => out.push_str(&m.canonical()),
-            None => out.push_str(NO_MAPPING),
-        }
-        for field in metrics_fields(&entry.metrics) {
-            out.push('\t');
-            out.push_str(&field);
-        }
-        out.push('\n');
+/// One serialized entry line (no trailing newline).
+fn encode_entry(point: &str, gemm: &Gemm, last_used: u64, entry: &CacheEntry) -> String {
+    let mut line = String::new();
+    line.push_str(point);
+    line.push('\t');
+    line.push_str(&format!(
+        "{}\t{}\t{}\t{last_used}\t",
+        gemm.m, gemm.n, gemm.k
+    ));
+    match &entry.mapping {
+        Some(m) => line.push_str(&m.canonical()),
+        None => line.push_str(NO_MAPPING),
     }
-    out
+    for field in metrics_fields(&entry.metrics) {
+        line.push('\t');
+        line.push_str(&field);
+    }
+    line
+}
+
+/// Serialize the whole cache (header + sorted entries). Deterministic:
+/// equal cache contents (stamps included — one stamp per process, see
+/// `EvalCache::run_stamp`) produce byte-identical files.
+pub fn encode(cache: &EvalCache) -> String {
+    encode_capped(cache, None).0
+}
+
+/// [`encode`] under an optional size cap: when the full serialization
+/// exceeds `max_bytes`, entries are evicted least-recently-used first
+/// (oldest last-used stamp; ties broken toward the entry latest in the
+/// canonical (point, GEMM) order, so trimming is deterministic) until
+/// the file fits. Returns the encoded text and the eviction count. The
+/// header always survives — a cap smaller than one entry produces a
+/// valid, empty cache file.
+pub fn encode_capped(cache: &EvalCache, max_bytes: Option<u64>) -> (String, usize) {
+    let snapshot = cache.snapshot_stamped();
+    let lines: Vec<String> = snapshot
+        .iter()
+        .map(|(point, gemm, last_used, entry)| encode_entry(point, gemm, *last_used, entry))
+        .collect();
+    let header = header();
+    let full: u64 = (header.len() + 1) as u64
+        + lines.iter().map(|l| (l.len() + 1) as u64).sum::<u64>();
+    let keep: Vec<bool> = match max_bytes {
+        Some(cap) if full > cap => {
+            // Most-recently-used first; within one stamp, earlier
+            // canonical positions survive longer.
+            let mut order: Vec<usize> = (0..lines.len()).collect();
+            order.sort_by_key(|&i| (std::cmp::Reverse(snapshot[i].2), i));
+            let mut keep = vec![false; lines.len()];
+            let mut size = (header.len() + 1) as u64;
+            for i in order {
+                let line_size = (lines[i].len() + 1) as u64;
+                if size + line_size > cap {
+                    // Strict LRU: nothing older than the first entry
+                    // that does not fit survives either.
+                    break;
+                }
+                size += line_size;
+                keep[i] = true;
+            }
+            keep
+        }
+        _ => vec![true; lines.len()],
+    };
+    let mut out = String::new();
+    out.push_str(&header);
+    out.push('\n');
+    let mut evicted = 0usize;
+    for (line, kept) in lines.iter().zip(&keep) {
+        if *kept {
+            out.push_str(line);
+            out.push('\n');
+        } else {
+            evicted += 1;
+        }
+    }
+    (out, evicted)
 }
 
 /// Write the cache to `path` atomically (unique temp file + rename),
@@ -197,13 +264,48 @@ pub fn encode(cache: &EvalCache) -> String {
 /// recomputed on the next run, never corrupted). True concurrent
 /// accumulation needs file locking, which std does not portably offer.
 pub fn save(cache: &EvalCache, path: &Path) -> Result<usize> {
+    save_capped(cache, path, None).map(|o| o.entries)
+}
+
+/// Outcome of [`save_capped`]: how many entries were written and how
+/// many the size cap evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SaveOutcome {
+    pub entries: usize,
+    pub evicted: usize,
+}
+
+impl SaveOutcome {
+    /// One-line human-readable description for CLI status output.
+    pub fn describe(&self) -> String {
+        if self.evicted == 0 {
+            format!("saved {} design points", self.entries)
+        } else {
+            format!(
+                "saved {} design points ({} LRU-evicted by the size cap)",
+                self.entries, self.evicted
+            )
+        }
+    }
+}
+
+/// [`save`] under an optional `max_bytes` size cap (the ROADMAP's cache
+/// eviction story): the on-disk union is trimmed least-recently-used
+/// first until the file fits, so a shared cache file stops growing
+/// without bound across runs while the entries current runs actually
+/// touch stay warm. The in-memory cache is never trimmed — only the
+/// written file is.
+pub fn save_capped(
+    cache: &EvalCache,
+    path: &Path,
+    max_bytes: Option<u64>,
+) -> Result<SaveOutcome> {
     // Loaded => existing entries merged into the union written below;
     // Missing/Discarded => nothing (valid) to merge. A real read error
     // must propagate: overwriting a file we could not read would
     // silently destroy previously persisted entries.
     load_into(cache, path)
         .with_context(|| format!("refusing to overwrite unreadable cache {}", path.display()))?;
-    let entries = cache.len();
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             fs::create_dir_all(parent)
@@ -217,11 +319,15 @@ pub fn save(cache: &EvalCache, path: &Path) -> Result<usize> {
             .unwrap_or("cache.bin");
         path.with_file_name(format!("{name}.{}.tmp", std::process::id()))
     };
-    fs::write(&tmp, encode(cache))
+    let (text, evicted) = encode_capped(cache, max_bytes);
+    fs::write(&tmp, text)
         .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
     fs::rename(&tmp, path)
         .with_context(|| format!("renaming cache file into place at {}", path.display()))?;
-    Ok(entries)
+    Ok(SaveOutcome {
+        entries: cache.len() - evicted,
+        evicted,
+    })
 }
 
 /// Load a persisted cache into `cache` (no hit/miss counter changes).
@@ -252,7 +358,7 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
     }
     // Parse every line before preloading anything: a corrupt tail must
     // not leave a half-loaded cache behind.
-    let mut parsed: Vec<(String, Gemm, CacheEntry)> = Vec::new();
+    let mut parsed: Vec<(String, Gemm, u64, CacheEntry)> = Vec::new();
     for (i, line) in lines.enumerate() {
         if line.is_empty() {
             continue;
@@ -274,10 +380,14 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
             (Ok(m), Ok(n), Ok(k)) if m > 0 && n > 0 && k > 0 => Gemm::new(m, n, k),
             _ => return discard(format!("corrupt GEMM dims on line {}", i + 2)),
         };
-        let mapping = if fields[4] == NO_MAPPING {
+        let last_used = match parse_u64(fields[4]) {
+            Ok(v) => v,
+            Err(_) => return discard(format!("corrupt last-used stamp on line {}", i + 2)),
+        };
+        let mapping = if fields[5] == NO_MAPPING {
             None
         } else {
-            match Mapping::from_canonical(fields[4]) {
+            match Mapping::from_canonical(fields[5]) {
                 // The mapping's embedded GEMM must agree with the entry
                 // key it is stored under — a mismatch means the file
                 // was spliced or hand-edited.
@@ -288,15 +398,20 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
                 }
             }
         };
-        let metrics = match metrics_from_fields(&fields[5..]) {
+        let metrics = match metrics_from_fields(&fields[6..]) {
             Ok(m) => m,
             Err(e) => return discard(format!("corrupt metrics on line {}: {e:#}", i + 2)),
         };
-        parsed.push((fields[0].to_string(), gemm, CacheEntry { mapping, metrics }));
+        parsed.push((
+            fields[0].to_string(),
+            gemm,
+            last_used,
+            CacheEntry { mapping, metrics },
+        ));
     }
     let entries = parsed.len();
-    for (point, gemm, entry) in parsed {
-        cache.preload(&point, gemm, entry);
+    for (point, gemm, last_used, entry) in parsed {
+        cache.preload_stamped(&point, gemm, entry, last_used);
     }
     Ok(CacheLoad::Loaded { entries })
 }
@@ -385,6 +500,140 @@ mod tests {
             panic!("persisted entry must hit")
         });
         assert_eq!(no_map, entry(1.0));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stamps_round_trip_and_lru_cap_evicts_oldest_first() {
+        // Three entries with strictly ordered recency: two stale
+        // (preloaded with old stamps), one fresh (computed this run).
+        let cache = EvalCache::new();
+        let now = cache.run_stamp();
+        cache.preload_stamped("pt-oldest", Gemm::new(8, 8, 8), entry(1.0), now - 2000);
+        cache.preload_stamped("pt-old", Gemm::new(8, 8, 8), entry(2.0), now - 1000);
+        cache.get_or_compute("pt-fresh", Gemm::new(8, 8, 8), || entry(3.0));
+
+        // Uncapped: stamps survive the save → load round trip.
+        let path = tmp_path("stamps");
+        let _ = fs::remove_file(&path);
+        assert_eq!(save(&cache, &path).unwrap(), 3);
+        let reloaded = EvalCache::new();
+        assert_eq!(
+            load_into(&reloaded, &path).unwrap(),
+            CacheLoad::Loaded { entries: 3 }
+        );
+        let stamps: Vec<(String, u64)> = reloaded
+            .snapshot_stamped()
+            .into_iter()
+            .map(|(p, _, s, _)| (p, s))
+            .collect();
+        assert_eq!(
+            stamps,
+            vec![
+                ("pt-fresh".to_string(), now),
+                ("pt-old".to_string(), now - 1000),
+                ("pt-oldest".to_string(), now - 2000),
+            ]
+        );
+
+        // Capped: a budget with room for exactly two entries keeps the
+        // two most recently used and evicts the oldest.
+        let full_len = encode(&cache).len() as u64;
+        let one_entry = encode_entry(
+            "pt-oldest",
+            &Gemm::new(8, 8, 8),
+            now - 2000,
+            &entry(1.0),
+        )
+        .len() as u64
+            + 1;
+        let capped_path = tmp_path("capped");
+        let _ = fs::remove_file(&capped_path);
+        let outcome = save_capped(&cache, &capped_path, Some(full_len - one_entry)).unwrap();
+        assert_eq!(outcome, SaveOutcome { entries: 2, evicted: 1 });
+        assert!(outcome.describe().contains("1 LRU-evicted"), "{}", outcome.describe());
+        let trimmed = EvalCache::new();
+        assert_eq!(
+            load_into(&trimmed, &capped_path).unwrap(),
+            CacheLoad::Loaded { entries: 2 }
+        );
+        let kept: Vec<String> = trimmed
+            .snapshot_stamped()
+            .into_iter()
+            .map(|(p, _, _, _)| p)
+            .collect();
+        assert_eq!(kept, vec!["pt-fresh".to_string(), "pt-old".to_string()]);
+        // The in-memory cache is never trimmed by a capped save.
+        assert_eq!(cache.len(), 3);
+
+        // A cap below one entry still writes a valid (empty) cache.
+        let tiny_path = tmp_path("tiny-cap");
+        let _ = fs::remove_file(&tiny_path);
+        let outcome = save_capped(&cache, &tiny_path, Some(1)).unwrap();
+        assert_eq!(outcome, SaveOutcome { entries: 0, evicted: 3 });
+        let empty = EvalCache::new();
+        assert_eq!(
+            load_into(&empty, &tiny_path).unwrap(),
+            CacheLoad::Loaded { entries: 0 }
+        );
+        for p in [path, capped_path, tiny_path] {
+            let _ = fs::remove_file(&p);
+        }
+    }
+
+    #[test]
+    fn capped_save_merges_disk_union_before_trimming() {
+        // Run 1 persists an entry; run 2 (simulated: a fresh cache with
+        // a *newer* stamp for a different entry) saves with a cap that
+        // fits only one entry — the union is formed first, then the
+        // stale on-disk entry is the one evicted.
+        let path = tmp_path("cap-union");
+        let _ = fs::remove_file(&path);
+        let run1 = EvalCache::new();
+        let now = run1.run_stamp();
+        run1.preload_stamped("pt-disk", Gemm::new(8, 8, 8), entry(1.0), now - 5000);
+        save(&run1, &path).unwrap();
+
+        let run2 = EvalCache::new();
+        run2.get_or_compute("pt-live", Gemm::new(8, 8, 8), || entry(2.0));
+        let line = encode_entry("pt-live", &Gemm::new(8, 8, 8), now, &entry(2.0));
+        let cap = (header().len() + 1 + line.len() + 1) as u64;
+        let outcome = save_capped(&run2, &path, Some(cap)).unwrap();
+        assert_eq!(outcome, SaveOutcome { entries: 1, evicted: 1 });
+        let reloaded = EvalCache::new();
+        assert_eq!(
+            load_into(&reloaded, &path).unwrap(),
+            CacheLoad::Loaded { entries: 1 }
+        );
+        assert_eq!(reloaded.snapshot()[0].0, "pt-live");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pr3_format_v2_cache_is_discarded_wholesale() {
+        // A PR 3-era file: format=2 header, no last-used column. The
+        // versioning contract discards it in full.
+        let path = tmp_path("pr3-format");
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        let mut old = format!(
+            "{MAGIC}\tformat=2\tcost-model={COST_MODEL_VERSION}\tmapper={MAPPER_VERSION}\n"
+        );
+        old.push_str("pt\t8\t8\t8\t-");
+        for f in metrics_fields(&metrics(1.0)) {
+            old.push('\t');
+            old.push_str(&f);
+        }
+        old.push('\n');
+        fs::write(&path, old).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => {
+                assert!(reason.contains("incompatible header"), "{reason}");
+            }
+            other => panic!("format-v2 cache must be discarded, got {other:?}"),
+        }
+        assert!(fresh.is_empty(), "no v2 entries may survive");
         let _ = fs::remove_file(&path);
     }
 

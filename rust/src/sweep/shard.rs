@@ -508,7 +508,7 @@ mod tests {
         let mut s = spec();
         s.sm_counts = vec![1, 4];
         assert_ne!(base, sweep_fingerprint(&arch, &s));
-        let s = spec().mapper(crate::sweep::spec::MapperChoice::PriorityDuplication);
+        let s = spec().mapper(crate::sweep::spec::MapperChoice::duplication());
         assert_ne!(base, sweep_fingerprint(&arch, &s));
     }
 

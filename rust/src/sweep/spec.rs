@@ -26,8 +26,9 @@ pub enum MapperChoice {
     /// The paper's priority-based mapper (Algo 1) — the default.
     Priority,
     /// Priority mapper with weight duplication across idle primitives
-    /// (§IV-B future work).
-    PriorityDuplication,
+    /// (§IV-B future work), at a configurable balance threshold (the
+    /// paper's default is 4 — [`MapperChoice::duplication`]).
+    PriorityDuplication { threshold: u64 },
     /// Priority mapper with a non-default multi-primitive balance
     /// threshold (the `ablation-threshold` axis; the paper fixes it at
     /// 4). `PriorityThreshold { threshold: 4 }` behaves like
@@ -47,6 +48,14 @@ pub enum MapperChoice {
 }
 
 impl MapperChoice {
+    /// The weight-duplication mapper at the paper's default balance
+    /// threshold ([`crate::mapping::priority::BALANCE_THRESHOLD`]).
+    pub fn duplication() -> MapperChoice {
+        MapperChoice::PriorityDuplication {
+            threshold: crate::mapping::priority::BALANCE_THRESHOLD,
+        }
+    }
+
     /// Stable fingerprint fragment for cache keys. Prefixed with
     /// [`crate::mapping::MAPPER_VERSION`]: cached metrics depend on the
     /// mapper *implementation*, not just its name, and keys now outlive
@@ -56,7 +65,9 @@ impl MapperChoice {
         let v = crate::mapping::MAPPER_VERSION;
         match self {
             MapperChoice::Priority => format!("v{v}:priority"),
-            MapperChoice::PriorityDuplication => format!("v{v}:priority+dup"),
+            MapperChoice::PriorityDuplication { threshold } => {
+                format!("v{v}:priority+dup:t{threshold}")
+            }
             MapperChoice::PriorityThreshold { threshold } => {
                 format!("v{v}:priority:t{threshold}")
             }
@@ -74,7 +85,13 @@ impl MapperChoice {
     }
 
     /// Parse a CLI mapper name: `priority`, `priority:t<threshold>`,
-    /// `dup`, `heuristic[:budget]`, `exhaustive[:energy|delay|edp]`.
+    /// `priority:order-<perm>` (a permutation of `mnk`, e.g.
+    /// `priority:order-kmn`), `dup[:t<threshold>]`,
+    /// `heuristic[:budget]`, `exhaustive[:energy|delay|edp]`.
+    ///
+    /// Every [`MapperChoice`] variant is reachable from this syntax and
+    /// [`Self::cli_spec`] is its inverse — the property the scenario
+    /// API relies on to serialize a mapper axis as one string.
     pub fn parse(s: &str, seed: u64) -> Result<MapperChoice> {
         let s = s.to_ascii_lowercase();
         if s == "priority" {
@@ -88,8 +105,21 @@ impl MapperChoice {
                 _ => bail!("--mapper priority:t<threshold>: bad threshold {t:?}"),
             };
         }
+        if let Some(perm) = s.strip_prefix("priority:order-") {
+            return Ok(MapperChoice::PriorityFixedOrder {
+                order: parse_dim_order(perm)?,
+            });
+        }
         if s == "dup" || s == "duplication" || s == "priority+dup" {
-            return Ok(MapperChoice::PriorityDuplication);
+            return Ok(MapperChoice::duplication());
+        }
+        if let Some(t) = s.strip_prefix("dup:t") {
+            return match t.parse() {
+                Ok(threshold) if threshold >= 1 => {
+                    Ok(MapperChoice::PriorityDuplication { threshold })
+                }
+                _ => bail!("--mapper dup:t<threshold>: bad threshold {t:?}"),
+            };
         }
         if let Some(rest) = s.strip_prefix("heuristic") {
             let budget = match rest.strip_prefix(':') {
@@ -114,17 +144,42 @@ impl MapperChoice {
             return Ok(MapperChoice::Exhaustive { objective });
         }
         bail!(
-            "--mapper: unknown mapper {s:?} (priority, priority:t<n>, dup, \
-             heuristic[:budget], exhaustive[:energy|delay|edp])"
+            "--mapper: unknown mapper {s:?} (priority, priority:t<n>, \
+             priority:order-<mnk perm>, dup[:t<n>], heuristic[:budget], \
+             exhaustive[:energy|delay|edp])"
         )
+    }
+
+    /// The canonical CLI/scenario spelling of this mapper — the inverse
+    /// of [`Self::parse`]: `parse(&mc.cli_spec(), seed) == mc` for every
+    /// variant (the heuristic's seed travels separately, as the
+    /// sweep/scenario seed).
+    pub fn cli_spec(&self) -> String {
+        match self {
+            MapperChoice::Priority => "priority".to_string(),
+            MapperChoice::PriorityDuplication { threshold } => format!("dup:t{threshold}"),
+            MapperChoice::PriorityThreshold { threshold } => format!("priority:t{threshold}"),
+            MapperChoice::PriorityFixedOrder { order } => format!(
+                "priority:order-{}{}{}",
+                order[0].name().to_ascii_lowercase(),
+                order[1].name().to_ascii_lowercase(),
+                order[2].name().to_ascii_lowercase()
+            ),
+            MapperChoice::Heuristic { budget, .. } => format!("heuristic:{budget}"),
+            MapperChoice::Exhaustive { objective } => {
+                format!("exhaustive:{}", objective.name())
+            }
+        }
     }
 
     /// Produce the mapping for one GEMM on one CiM system.
     pub fn map(&self, sys: &CimSystem, gemm: &Gemm) -> Mapping {
         match self {
             MapperChoice::Priority => PriorityMapper::new(sys).map(gemm),
-            MapperChoice::PriorityDuplication => {
-                PriorityMapper::new(sys).with_weight_duplication().map(gemm)
+            MapperChoice::PriorityDuplication { threshold } => {
+                PriorityMapper::with_threshold(sys, *threshold)
+                    .with_weight_duplication()
+                    .map(gemm)
             }
             MapperChoice::PriorityThreshold { threshold } => {
                 PriorityMapper::with_threshold(sys, *threshold).map(gemm)
@@ -143,6 +198,27 @@ impl MapperChoice {
             }
         }
     }
+}
+
+/// Parse a three-letter `mnk` permutation (e.g. `kmn`) into a DRAM-level
+/// loop order — the `priority:order-<perm>` mapper axis.
+fn parse_dim_order(perm: &str) -> Result<[Dim; 3]> {
+    let dims: Vec<Dim> = perm
+        .chars()
+        .map(|c| match c {
+            'm' => Ok(Dim::M),
+            'n' => Ok(Dim::N),
+            'k' => Ok(Dim::K),
+            other => bail!("--mapper priority:order-<perm>: bad dimension {other:?}"),
+        })
+        .collect::<Result<Vec<Dim>>>()?;
+    if dims.len() != 3 || !Dim::all().iter().all(|d| dims.contains(d)) {
+        bail!(
+            "--mapper priority:order-<perm>: {perm:?} must be a permutation of \
+             m, n, k (e.g. kmn)"
+        );
+    }
+    Ok([dims[0], dims[1], dims[2]])
 }
 
 /// One evaluation job: a GEMM of a workload on a system configuration.
@@ -472,7 +548,8 @@ mod tests {
     fn mapper_fingerprints_distinct() {
         let fps = [
             MapperChoice::Priority.fingerprint(),
-            MapperChoice::PriorityDuplication.fingerprint(),
+            MapperChoice::duplication().fingerprint(),
+            MapperChoice::PriorityDuplication { threshold: 8 }.fingerprint(),
             MapperChoice::PriorityThreshold { threshold: 8 }.fingerprint(),
             MapperChoice::PriorityFixedOrder {
                 order: [Dim::M, Dim::K, Dim::N],
@@ -505,11 +582,21 @@ mod tests {
         assert_eq!(MapperChoice::parse("priority", 1).unwrap(), MapperChoice::Priority);
         assert_eq!(
             MapperChoice::parse("dup", 1).unwrap(),
-            MapperChoice::PriorityDuplication
+            MapperChoice::duplication()
+        );
+        assert_eq!(
+            MapperChoice::parse("dup:t9", 1).unwrap(),
+            MapperChoice::PriorityDuplication { threshold: 9 }
         );
         assert_eq!(
             MapperChoice::parse("priority:t8", 1).unwrap(),
             MapperChoice::PriorityThreshold { threshold: 8 }
+        );
+        assert_eq!(
+            MapperChoice::parse("priority:order-kmn", 1).unwrap(),
+            MapperChoice::PriorityFixedOrder {
+                order: [Dim::K, Dim::M, Dim::N]
+            }
         );
         assert_eq!(
             MapperChoice::parse("heuristic:60", 9).unwrap(),
@@ -529,7 +616,64 @@ mod tests {
         );
         assert!(MapperChoice::parse("magic", 1).is_err());
         assert!(MapperChoice::parse("priority:t0", 1).is_err());
+        assert!(MapperChoice::parse("dup:t0", 1).is_err());
         assert!(MapperChoice::parse("exhaustive:speed", 1).is_err());
+        // Malformed permutations: wrong length, repeats, foreign dims.
+        for bad in ["priority:order-", "priority:order-mn", "priority:order-mmk",
+                    "priority:order-mnkx", "priority:order-mnq"] {
+            assert!(MapperChoice::parse(bad, 1).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    /// Satellite bugfix property (ISSUE 4): every variant — including
+    /// the previously CLI-unreachable duplication-threshold and
+    /// fixed-order axes — round-trips `cli_spec → parse` exactly, and
+    /// the parsed mapper fingerprints identically to the original (so
+    /// a scenario's serialized mapper axis can never alias a different
+    /// cache point than the in-memory mapper it came from).
+    #[test]
+    fn cli_spec_parse_fingerprint_round_trip() {
+        let seed = 41;
+        let mut choices = vec![
+            MapperChoice::Priority,
+            MapperChoice::duplication(),
+            MapperChoice::Exhaustive { objective: Objective::Energy },
+            MapperChoice::Exhaustive { objective: Objective::Delay },
+            MapperChoice::Exhaustive { objective: Objective::Edp },
+        ];
+        for threshold in [1, 2, 4, 7, 64, 1000] {
+            choices.push(MapperChoice::PriorityThreshold { threshold });
+            choices.push(MapperChoice::PriorityDuplication { threshold });
+        }
+        for budget in [1, 60, 500, 10_000] {
+            choices.push(MapperChoice::Heuristic { budget, seed });
+        }
+        for a in Dim::all() {
+            for b in Dim::all() {
+                for c in Dim::all() {
+                    if a != b && b != c && a != c {
+                        choices.push(MapperChoice::PriorityFixedOrder { order: [a, b, c] });
+                    }
+                }
+            }
+        }
+        for mc in &choices {
+            let spelled = mc.cli_spec();
+            let parsed = MapperChoice::parse(&spelled, seed)
+                .unwrap_or_else(|e| panic!("{spelled:?} must parse: {e:#}"));
+            assert_eq!(parsed, *mc, "{spelled:?} must round-trip");
+            assert_eq!(
+                parsed.fingerprint(),
+                mc.fingerprint(),
+                "{spelled:?}: parse must land on the same cache point"
+            );
+        }
+        // ...and distinct choices never collide through the round trip.
+        for i in 0..choices.len() {
+            for j in (i + 1)..choices.len() {
+                assert_ne!(choices[i].fingerprint(), choices[j].fingerprint());
+            }
+        }
     }
 
     #[test]

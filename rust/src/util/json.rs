@@ -1,11 +1,16 @@
-//! Minimal JSON reader (serde_json is unavailable offline).
+//! Minimal JSON reader *and* writer (serde_json is unavailable
+//! offline).
 //!
 //! The sweep subsystem emits JSON with hand-rolled encoders
 //! ([`crate::sweep::output`], [`crate::sweep::shard`]); this is the
 //! matching reader, used by `repro merge` to consume per-shard summary
-//! files. It parses the full JSON grammar (objects, arrays, strings
-//! with escapes, numbers, literals) into a small [`Json`] tree with
-//! typed accessors. Object keys keep their document order.
+//! files and by the scenario API ([`crate::scenario`]) to load run
+//! descriptions. It parses the full JSON grammar (objects, arrays,
+//! strings with escapes, numbers, literals) into a small [`Json`] tree
+//! with typed accessors. Object keys keep their document order, and
+//! [`Json::encode`] pretty-prints a tree back out *deterministically*
+//! (same tree → same bytes), the property the scenario round-trip
+//! tests pin.
 
 use anyhow::{bail, Result};
 
@@ -76,6 +81,106 @@ impl Json {
             _ => None,
         }
     }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Pretty-print with two-space indentation and a trailing newline.
+    /// Deterministic: object keys are emitted in stored order, numbers
+    /// via [`encode_number`], so encoding the same tree twice yields
+    /// byte-identical text — and `Json::parse(&j.encode())` returns a
+    /// tree equal to `j` (integers and shortest-round-trip floats
+    /// survive exactly).
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.encode_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn encode_into(&self, out: &mut String, indent: usize) {
+        let pad = |out: &mut String, n: usize| {
+            for _ in 0..n {
+                out.push_str("  ");
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => out.push_str(&encode_number(*n)),
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    pad(out, indent + 1);
+                    item.encode_into(out, indent + 1);
+                    out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+                }
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    pad(out, indent + 1);
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\": ");
+                    v.encode_into(out, indent + 1);
+                    out.push_str(if i + 1 < fields.len() { ",\n" } else { "\n" });
+                }
+                pad(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Encode one number: integers (exactly representable in the f64
+/// carrier) in plain decimal, everything else via Rust's shortest
+/// round-trip float rendering.
+fn encode_number(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() <= 9.007_199_254_740_992e15 {
+        (n as i64).to_string()
+    } else {
+        format!("{n:?}")
+    }
+}
+
+/// Escape a string for a JSON string literal (the encoder counterpart
+/// of the reader's escape handling; also used by the sweep summary
+/// writers).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Maximum container nesting. Malformed or hostile input (e.g. a
@@ -337,6 +442,43 @@ mod tests {
         ] {
             assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
         }
+    }
+
+    #[test]
+    fn encode_parse_round_trip_is_exact_and_deterministic() {
+        let doc = Json::Obj(vec![
+            ("name".to_string(), Json::Str("a\"b\\c\n".to_string())),
+            ("n".to_string(), Json::Num(42.0)),
+            ("x".to_string(), Json::Num(1.5)),
+            ("tiny".to_string(), Json::Num(1e-12)),
+            ("neg".to_string(), Json::Num(-7.0)),
+            ("on".to_string(), Json::Bool(true)),
+            ("off".to_string(), Json::Bool(false)),
+            ("nothing".to_string(), Json::Null),
+            ("empty_arr".to_string(), Json::Arr(vec![])),
+            ("empty_obj".to_string(), Json::Obj(vec![])),
+            (
+                "arr".to_string(),
+                Json::Arr(vec![
+                    Json::Num(1.0),
+                    Json::Obj(vec![("k".to_string(), Json::Str("v".to_string()))]),
+                ]),
+            ),
+        ]);
+        let text = doc.encode();
+        assert!(text.ends_with('\n'));
+        let reparsed = Json::parse(&text).unwrap();
+        assert_eq!(reparsed, doc, "parse(encode(doc)) must be lossless");
+        assert_eq!(reparsed.encode(), text, "re-encoding must be byte-identical");
+        // Integers render without a fractional part.
+        assert!(text.contains("\"n\": 42,"), "{text}");
+        assert!(text.contains("\"neg\": -7,"), "{text}");
+    }
+
+    #[test]
+    fn as_bool() {
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
     }
 
     #[test]

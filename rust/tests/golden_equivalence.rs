@@ -314,3 +314,55 @@ fn order_engine_routed_csv_is_byte_identical() {
         "ablation-order.csv drifted from the direct evaluation"
     );
 }
+
+/// ISSUE 4 acceptance: every experiment id executes via the scenario
+/// path (`repro run <name>`) with a CSV byte-identical to the classic
+/// `repro experiment <name>` path. Both lower to the same registry run
+/// function — this pins the *lowering* (quick mode, seed, out-dir and
+/// cache wiring) so `repro run` can never silently drift from
+/// `repro experiment`.
+///
+/// `table2` reports wall-clock seconds, which no harness can make
+/// byte-stable; for it the header and the runs axis are compared
+/// instead of raw bytes.
+#[test]
+fn every_experiment_id_via_scenario_run_is_byte_identical() {
+    use www_cim::scenario::{self, exec, ScenarioKind};
+
+    for id in experiments::ids() {
+        // Classic path: the experiment registry over a plain quick Ctx.
+        let direct_ctx = quick_ctx(&format!("cls_{id}"));
+        let direct = run_and_read(&direct_ctx, id);
+
+        // Scenario path: the built-in scenario for the id, switched to
+        // quick mode, writing into its own directory.
+        let mut sc = scenario::builtin(id).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        match &mut sc.kind {
+            ScenarioKind::Experiment { quick, .. } => *quick = true,
+            other => panic!("{id}: built-in must be an experiment scenario, got {other:?}"),
+        }
+        sc.output.dir = std::env::temp_dir().join(format!("www_cim_golden_eq_run_{id}"));
+        let _ = std::fs::remove_dir_all(&sc.output.dir);
+        exec::execute(&sc, None).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        let via_run = std::fs::read_to_string(sc.output.dir.join(format!("{id}.csv")))
+            .unwrap_or_else(|e| panic!("{id}: scenario run left no csv mirror: {e}"));
+
+        if id == "table2" {
+            let a = csv::parse(&direct);
+            let b = csv::parse(&via_run);
+            assert_eq!(a[0], b[0], "table2: header drifted");
+            assert_eq!(a.len(), b.len(), "table2: row count drifted");
+            let runs = |rows: &[Vec<String>]| -> Vec<String> {
+                rows[1..].iter().map(|r| r[0].clone()).collect()
+            };
+            assert_eq!(runs(&a), runs(&b), "table2: runs axis drifted");
+        } else {
+            assert_eq!(
+                via_run, direct,
+                "{id}: `repro run {id}` CSV drifted from `repro experiment {id}`"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&sc.output.dir);
+        let _ = std::fs::remove_dir_all(&direct_ctx.out_dir);
+    }
+}

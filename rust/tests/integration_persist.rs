@@ -238,8 +238,9 @@ fn pr2_format_cache_forces_recomputation() {
                 // magic + format=1 + cost-model=…, no mapper token.
                 format!("{}\tformat=1\t{}", fields[0], fields[2])
             } else {
-                // drop the mapping column (field 4).
+                // drop the last-used and mapping columns (fields 4-5).
                 let mut f = fields.clone();
+                f.remove(4);
                 f.remove(4);
                 f.join("\t")
             }

@@ -1,0 +1,207 @@
+//! End-to-end tests of the scenario surface (ISSUE 4) over the real
+//! `repro` binary: the flag-emitted scenario reproduces `repro sweep`
+//! byte-for-byte, `repro orchestrate --procs 2` matches a
+//! single-process `repro run` of the same scenario, and
+//! `repro run <id>` matches `repro experiment <id>`.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use www_cim::scenario::Scenario;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("www_cim_scenario_e2e_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run `repro` with `args`, failing the test (with full output) on a
+/// non-zero exit. Returns stdout.
+fn run_ok(args: &[&str]) -> String {
+    let out = repro()
+        .args(args)
+        .output()
+        .unwrap_or_else(|e| panic!("spawning repro {args:?}: {e}"));
+    assert!(
+        out.status.success(),
+        "repro {args:?} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+const GRID: &[&str] = &[
+    "--workloads",
+    "synthetic:8",
+    "--prims",
+    "baseline,d1",
+    "--levels",
+    "rf,smem-b",
+    "--seed",
+    "7",
+];
+
+#[test]
+fn flag_emitted_scenario_reproduces_repro_sweep_byte_for_byte() {
+    let dir_flags = tmp_dir("emit_flags");
+    let dir_sc = tmp_dir("emit_sc");
+    let sc_file = tmp_dir("emit_file").join("sweep.scenario.json");
+
+    // Classic flag-driven sweep.
+    let mut args: Vec<&str> = vec!["sweep"];
+    args.extend(GRID);
+    let dir_flags_s = dir_flags.to_str().unwrap();
+    args.extend(["--out", dir_flags_s]);
+    run_ok(&args);
+
+    // The same flags, but emitting the scenario instead of running...
+    let mut args: Vec<&str> = vec!["sweep"];
+    args.extend(GRID);
+    let dir_sc_s = dir_sc.to_str().unwrap();
+    let sc_file_s = sc_file.to_str().unwrap();
+    args.extend(["--out", dir_sc_s, "--emit-scenario", sc_file_s]);
+    run_ok(&args);
+    assert!(
+        !dir_sc.join("sweep.csv").exists(),
+        "--emit-scenario must not run the sweep"
+    );
+
+    // ...then executing the emitted file.
+    let sc = Scenario::from_json_file(&sc_file).expect("emitted scenario loads");
+    assert_eq!(sc.seed, 7);
+    run_ok(&["run", sc_file_s]);
+
+    let a = read(&dir_flags.join("sweep.csv"));
+    let b = read(&dir_sc.join("sweep.csv"));
+    assert_eq!(a, b, "flag-emitted scenario must reproduce sweep.csv byte-for-byte");
+    for d in [dir_flags, dir_sc, sc_file.parent().unwrap().to_path_buf()] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+#[test]
+fn orchestrate_two_procs_matches_single_process_run_byte_for_byte() {
+    let dir_single = tmp_dir("orch_single");
+    let dir_multi = tmp_dir("orch_multi");
+    let sc_dir = tmp_dir("orch_file");
+    let sc_file = sc_dir.join("quick.scenario.json");
+
+    Scenario::builder("quick")
+        .workloads("synthetic:9")
+        .prims("baseline,d1")
+        .levels("rf,smem-b")
+        .sms("1,2")
+        .seed(7)
+        .shards(2)
+        .build()
+        .expect("scenario builds")
+        .write(&sc_file)
+        .expect("scenario writes");
+    let sc_file_s = sc_file.to_str().unwrap();
+
+    run_ok(&["run", sc_file_s, "--out", dir_single.to_str().unwrap()]);
+    let stdout = run_ok(&[
+        "orchestrate",
+        sc_file_s,
+        "--procs",
+        "2",
+        "--out",
+        dir_multi.to_str().unwrap(),
+    ]);
+    assert!(
+        stdout.contains("[shard 0/2]") && stdout.contains("[shard 1/2]"),
+        "orchestrate must run 2 shard subprocesses:\n{stdout}"
+    );
+
+    let single = read(&dir_single.join("quick.csv"));
+    let multi = read(&dir_multi.join("quick.csv"));
+    assert_eq!(
+        single, multi,
+        "orchestrated merge must be byte-identical to the single-process run"
+    );
+    // The orchestrator leaves the per-shard summaries and the canonical
+    // scenario file behind for inspection.
+    assert!(dir_multi.join("quick-shard0of2.json").exists());
+    assert!(dir_multi.join("quick-shard1of2.json").exists());
+    assert!(dir_multi.join("quick.scenario.json").exists());
+    for d in [dir_single, dir_multi, sc_dir] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+#[test]
+fn run_experiment_name_matches_repro_experiment() {
+    let dir_run = tmp_dir("exp_run");
+    let dir_classic = tmp_dir("exp_classic");
+    // fig2 is cheap and timing-free (pure workload statistics).
+    run_ok(&["run", "fig2", "--quick", "--out", dir_run.to_str().unwrap()]);
+    run_ok(&[
+        "experiment",
+        "fig2",
+        "--quick",
+        "--out",
+        dir_classic.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        read(&dir_run.join("fig2.csv")),
+        read(&dir_classic.join("fig2.csv")),
+        "`repro run fig2` must match `repro experiment fig2` byte-for-byte"
+    );
+    for d in [dir_run, dir_classic] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+#[test]
+fn run_rejects_unknown_names_and_stale_schema_versions() {
+    let out = repro().args(["run", "fig99"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("no built-in scenario"), "{err}");
+
+    let dir = tmp_dir("schema");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("future.json");
+    std::fs::write(
+        &path,
+        "{\"scenario_format\": 999, \"name\": \"future\", \"sweep\": {}}\n",
+    )
+    .unwrap();
+    let out = repro().args(["run", path.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("format v999"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_cache_cap_flag_is_honoured_end_to_end() {
+    let dir = tmp_dir("cap");
+    let dir_s = dir.to_str().unwrap();
+    let cache = dir.join("cache.bin");
+    let cache_s = cache.to_str().unwrap();
+    let mut args: Vec<&str> = vec!["sweep"];
+    args.extend(GRID);
+    args.extend(["--out", dir_s, "--cache", cache_s, "--cache-max-mb", "1"]);
+    run_ok(&args);
+    let size = std::fs::metadata(&cache).expect("cache file written").len();
+    assert!(size > 0 && size <= 1024 * 1024, "cache size {size} violates the cap");
+    // A warm rerun serves everything from the persisted file.
+    let stdout = run_ok(&args);
+    assert!(
+        stdout.contains("cache: 0 unique"),
+        "warm rerun must be fully cached:\n{stdout}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -269,7 +269,7 @@ fn mapper_axis_changes_results_but_stays_deterministic() {
         mapper,
     };
     let plain = engine.evaluate(&mk(MapperChoice::Priority)).metrics;
-    let dup = engine.evaluate(&mk(MapperChoice::PriorityDuplication)).metrics;
+    let dup = engine.evaluate(&mk(MapperChoice::duplication())).metrics;
     // Distinct mapper choices are distinct cache points (no false hits).
     assert_eq!(engine.cache().misses(), 2);
     assert!(plain.energy_pj > 0.0 && dup.energy_pj > 0.0);
