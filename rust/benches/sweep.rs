@@ -4,10 +4,12 @@
 //! (load included — the `--cache` cross-process path), plus (e) the
 //! mapping-aware cache's headline win: an exhaustive-mapper point (the
 //! `optimality` axis every `repro experiment all` run pays for) cold vs
-//! warm-from-disk. The acceptance numbers for the DSE subsystem:
-//! parallelism and the memo cache must both be measurable wins over the
-//! cold single-threaded run, and the warm exhaustive point must be
-//! orders of magnitude cheaper than the cold search it memoizes.
+//! warm-from-disk, and (f) a batched grid (GPT-J decode at batch 1 and
+//! 16) showing batched points memoize like any others. The acceptance
+//! numbers for the DSE subsystem: parallelism and the memo cache must
+//! both be measurable wins over the cold single-threaded run, and the
+//! warm exhaustive point must be orders of magnitude cheaper than the
+//! cold search it memoizes.
 
 use std::sync::Arc;
 
@@ -15,7 +17,7 @@ use www_cim::arch::Architecture;
 use www_cim::cim::CimPrimitive;
 use www_cim::coordinator::jobs::SystemSpec;
 use www_cim::mapping::Objective;
-use www_cim::sweep::{persist, EvalCache, MapperChoice, SweepEngine, SweepJob, SweepSpec};
+use www_cim::sweep::{persist, spec, EvalCache, MapperChoice, SweepEngine, SweepJob, SweepSpec};
 use www_cim::util::bench::{black_box, Bencher};
 use www_cim::util::pool;
 use www_cim::workload::{synthetic, Gemm};
@@ -135,6 +137,37 @@ fn main() {
     );
     if warm_ex >= cold_ex {
         println!("WARNING: warm exhaustive point was not faster than the cold search");
+    }
+
+    // (f) the batch axis: GPT-J decode at batch 1 and 16 — weight GEMMs
+    // fold the batch along M, attention GEMMs replicate, and the
+    // resulting points are ordinary reshaped GEMMs that memoize like
+    // any others (the warm pass is all hits).
+    let batched = SweepSpec::new("bench-batched")
+        .workloads(spec::parse_workloads_batched("gptj", 7, &[1, 16]).expect("batched parse"))
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+        ])
+        .batches(vec![1, 16]);
+    let bjobs = batched.jobs();
+    let bn = bjobs.len() as u64;
+    let cold_b = b
+        .bench_with_items(&format!("sweep/batched/{bn}pts/cold"), bn, &mut || {
+            let engine = SweepEngine::new(arch.clone());
+            black_box(engine.run(&bjobs));
+        })
+        .mean();
+    let warm_b_engine = SweepEngine::new(arch.clone());
+    warm_b_engine.run(&bjobs);
+    let warm_b = b
+        .bench_with_items(&format!("sweep/batched/{bn}pts/warm"), bn, &mut || {
+            black_box(warm_b_engine.run(&bjobs));
+        })
+        .mean();
+    println!("batched grid (gptj @ b1,b16): cold = {cold_b:?}, warm = {warm_b:?}");
+    if warm_b >= cold_b {
+        println!("WARNING: warm batched run was not faster than the cold batched run");
     }
 
     println!(

@@ -9,6 +9,8 @@
 //! * `ablation-duplication` — weight duplication (§IV-B future work).
 //! * `ablation-interconnect` — NoC cost sensitivity (§VI-D).
 //! * `zoo`       — the extended model zoo under the Table V questions.
+//! * `batch`     — serving batch size vs whole-network throughput and
+//!   efficiency: the GEMV → GEMM crossover the batch axis exposes.
 //!
 //! Every experiment here evaluates through the sweep engine and its
 //! shared memo cache — the mapping-level ablations included: the cache
@@ -30,7 +32,7 @@ use crate::sweep::{MapperChoice, SweepJob};
 use crate::util::csv::Csv;
 use crate::util::stats::geomean;
 use crate::util::table::Table;
-use crate::workload::{models, synthetic, Gemm};
+use crate::workload::{models, synthetic, Gemm, Workload};
 
 pub fn run_scaling(ctx: &Ctx) -> Result<()> {
     let g = Gemm::new(2048, 4096, 4096);
@@ -471,6 +473,91 @@ pub fn run_serving(ctx: &Ctx) -> Result<()> {
     ctx.emit(
         "serving",
         "Extension: trace-driven serving on the hybrid SM (200 mixed requests, Poisson arrivals)",
+        &table,
+        &csv,
+    )
+}
+
+pub fn run_batch(ctx: &Ctx) -> Result<()> {
+    // Serving batch-size sensitivity: decode-heavy GPT-J (GEMV-bound at
+    // batch 1) and encoder BERT across the tensor core and the two
+    // winning CiM design points. Weight-bearing layers fold the batch
+    // into M while per-sequence attention merely replicates, so growing
+    // b walks each network out of the GEMV regime — the crossover this
+    // experiment's CSV plots.
+    let batches: &[u64] = if ctx.quick {
+        &[1, 4, 16]
+    } else {
+        &[1, 2, 4, 8, 16, 32, 64]
+    };
+    let systems: [(&str, SystemSpec); 3] = [
+        ("Tensor-core", SystemSpec::Baseline),
+        ("D-1 @ RF", SystemSpec::CimAtRf(CimPrimitive::digital_6t())),
+        (
+            "D-1 @ SMEM/B",
+            SystemSpec::CimAtSmem(CimPrimitive::digital_6t(), SmemConfig::ConfigB),
+        ),
+    ];
+    let mut table = Table::new(vec![
+        "workload", "batch", "system", "net GFLOPS", "net TOPS/W", "vs Tcore",
+    ]);
+    let mut csv = Csv::new(vec![
+        "workload", "batch", "system", "gflops", "tops_per_watt", "energy_pj", "vs_tcore",
+    ]);
+    let makers: [fn(u64) -> Workload; 2] = [models::gpt_j_batched, models::bert_large_batched];
+    for mk in makers {
+        for &b in batches {
+            let wl = mk(b);
+            let uniq = wl.unique_with_counts();
+            let gemms: Vec<Gemm> = uniq.iter().map(|(g, _)| *g).collect();
+            let mut tcore_gflops = None;
+            for (label, spec) in &systems {
+                let jobs =
+                    super::common::jobs_for(&wl.name, &gemms, spec, &[MapperChoice::Priority]);
+                let results = ctx.run_aligned(&jobs);
+                // Whole-network totals weighted by layer multiplicity:
+                // throughput composes harmonically (total ops over total
+                // time), efficiency is total ops over total energy
+                // (1 TOPS/W = 1 op/pJ).
+                let (mut ops, mut secs, mut pj) = (0.0f64, 0.0f64, 0.0f64);
+                for ((_, count), r) in uniq.iter().zip(&results) {
+                    let c = *count as f64;
+                    ops += c * r.metrics.ops as f64;
+                    secs += c * r.metrics.ops as f64 / (r.metrics.gflops * 1e9);
+                    pj += c * r.metrics.energy_pj;
+                }
+                let gflops = ops / secs / 1e9;
+                let topsw = ops / pj;
+                let vs = match tcore_gflops {
+                    None => {
+                        tcore_gflops = Some(gflops);
+                        1.0
+                    }
+                    Some(tc) => gflops / tc,
+                };
+                table.row(vec![
+                    wl.name.clone(),
+                    b.to_string(),
+                    label.to_string(),
+                    format!("{gflops:.0}"),
+                    format!("{topsw:.3}"),
+                    format!("{vs:.2}x"),
+                ]);
+                csv.row(vec![
+                    wl.name.clone(),
+                    b.to_string(),
+                    label.to_string(),
+                    format!("{gflops:.1}"),
+                    format!("{topsw:.4}"),
+                    format!("{pj:.1}"),
+                    format!("{vs:.4}"),
+                ])?;
+            }
+        }
+    }
+    ctx.emit(
+        "batch",
+        "Extension: serving batch size vs whole-network throughput/efficiency (the GEMV -> GEMM crossover)",
         &table,
         &csv,
     )

@@ -136,6 +136,11 @@ pub const REGISTRY: &[ExperimentDef] = &[
         title: "serving-mix throughput projection",
         run: extensions::run_serving,
     },
+    ExperimentDef {
+        id: "batch",
+        title: "serving batch size vs throughput/efficiency (GEMV -> GEMM)",
+        run: extensions::run_batch,
+    },
 ];
 
 /// Every experiment id, in registry (paper) order.
@@ -170,7 +175,7 @@ mod tests {
     #[test]
     fn registry_ids_are_unique_and_well_formed() {
         let ids = ids();
-        assert_eq!(ids.len(), 19, "the paper suite registers 19 experiments");
+        assert_eq!(ids.len(), 20, "the suite registers 20 experiments");
         for (i, id) in ids.iter().enumerate() {
             assert!(!id.is_empty() && *id != "all", "reserved id {id:?}");
             assert!(

@@ -37,8 +37,14 @@ use www_cim::util::cli::Args;
 use www_cim::util::table::Table;
 use www_cim::workload::{synthetic, Gemm};
 
+/// Flags whose value is optional: bare `--cache` / `--emit-scenario`
+/// record presence (the conventional default path / stdout) without
+/// consuming the next token, so `repro run --cache fig2` keeps `fig2`
+/// as the scenario name. An explicit value is `--flag=value`.
+const OPTIONAL_VALUE_FLAGS: &[&str] = &["cache", "emit-scenario"];
+
 fn main() {
-    let args = Args::from_env();
+    let args = Args::from_env_with_optional(OPTIONAL_VALUE_FLAGS);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -105,7 +111,7 @@ usage: repro <subcommand> [options]
   compare     --gemm MxNxK
   run         <scenario.json|name> [--shard i/n] [--quick] [--seed N]
               [--threads N] [--out dir] [--tag name] [--json]
-              [--cache [results/cache.bin]] [--cache-max-mb N]
+              [--cache[=results/cache.bin]] [--cache-max-mb N]
               (executes any scenario; built-in names:
                {builtins})
   orchestrate <scenario.json|name> [--procs n] [+ run's overrides]
@@ -113,14 +119,15 @@ usage: repro <subcommand> [options]
                merges their results on completion)
   sweep       [--workloads all|real|bert,gptj,...|synthetic[:N]]
               [--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]
-              [--sms 1,2,4] [--threads N]
+              [--sms 1,2,4] [--batch 1,4,16,64] [--threads N]
               [--mapper priority|priority:t<n>|priority:order-<mnk perm>|
                         dup[:t<n>]|heuristic[:budget]|
                         exhaustive[:energy|delay|edp]]
               [--seed N] [--out results] [--tag name] [--json]
-              [--cache [results/cache.bin]] [--cache-max-mb N] [--shard i/n]
-              [--emit-scenario [file.json]]
+              [--cache[=results/cache.bin]] [--cache-max-mb N] [--shard i/n]
+              [--emit-scenario[=file.json]]
               (defaults sweep the full zoo x 13 systems, >= 500 points;
+               --batch expands every workload at each batch size,
                --cache persists the memo cache across runs with an
                optional LRU size cap, --shard runs one deterministic
                1/n slice, --emit-scenario writes the equivalent
@@ -128,7 +135,7 @@ usage: repro <subcommand> [options]
   merge       <shard.json> <shard.json> ... [--tag name] [--out results] [--json]
   experiment  <{experiments}>
               [--quick] [--out results] [--threads N] [--seed N]
-              [--cache [results/cache.bin]] [--cache-max-mb N]
+              [--cache[=results/cache.bin]] [--cache-max-mb N]
   validate    [--artifacts artifacts] [--seed N]
   roofline
   list",
@@ -334,7 +341,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let target = args.positional.first().context(
         "usage: repro run <scenario.json|name> [--shard i/n] [--out dir] [--tag name] \
-         [--quick] [--seed N] [--threads N] [--cache [path]] [--cache-max-mb N] [--json] \
+         [--quick] [--seed N] [--threads N] [--cache[=path]] [--cache-max-mb N] [--json] \
          — `repro list` names the built-in scenarios",
     )?;
     let mut sc = resolve_scenario(target)?;
@@ -374,7 +381,7 @@ fn cmd_orchestrate(args: &Args) -> Result<()> {
 /// thin-parser half of the sweep command (ISSUE 4: flags build a
 /// [`Scenario`]; execution is the scenario path for both).
 fn scenario_from_sweep_flags(args: &Args) -> Result<Scenario> {
-    let seed = args.get_parsed_or("seed", synthetic::DEFAULT_SEED);
+    let seed = args.get_parsed_or("seed", synthetic::DEFAULT_SEED)?;
     // Grid axes (singular flags are aliases for the plural ones).
     let workloads = args
         .get("workloads")
@@ -394,6 +401,7 @@ fn scenario_from_sweep_flags(args: &Args) -> Result<Scenario> {
         .prims(prims)
         .levels(levels)
         .sms(args.get_or("sms", "1"))
+        .batch(args.get_or("batch", "1"))
         .mapper(args.get_or("mapper", "priority"))
         .seed(seed)
         .out_dir(Path::new(args.get_or("out", "results")))
@@ -421,9 +429,9 @@ fn scenario_from_sweep_flags(args: &Args) -> Result<Scenario> {
 /// constructed scenario (stdout without a file) instead of running it.
 fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(err) = args.unknown_flags(&[
-        "workload", "workloads", "prim", "prims", "level", "levels", "sms", "threads",
-        "mapper", "seed", "out", "json", "cache", "cache-max-mb", "shard", "tag",
-        "emit-scenario",
+        "workload", "workloads", "prim", "prims", "level", "levels", "sms", "batch",
+        "threads", "mapper", "seed", "out", "json", "cache", "cache-max-mb", "shard",
+        "tag", "emit-scenario",
     ]) {
         bail!(err);
     }
@@ -507,7 +515,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let mut b = Scenario::builder(id)
         .experiment(id)
         .quick(args.flag("quick"))
-        .seed(args.get_parsed_or("seed", synthetic::DEFAULT_SEED))
+        .seed(args.get_parsed_or("seed", synthetic::DEFAULT_SEED)?)
         .out_dir(Path::new(args.get_or("out", "results")));
     if let Some(t) = args.get("threads") {
         b = b.threads(t.parse().context("--threads wants a positive integer")?);
@@ -541,7 +549,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         Gemm::new(100, 48, 300), // awkward non-divisible shape
         Gemm::new(1, 64, 256),   // GEMV
     ];
-    let seed = args.get_parsed_or("seed", 7u64);
+    let seed = args.get_parsed_or("seed", 7u64)?;
     let report = validate_mappings(&engine, &sys, &gemms, seed)?;
     let mut t = Table::new(vec!["GEMM", "kernel calls", "|diff| oracle", "|diff| artifact"]);
     for c in &report.cases {
@@ -657,11 +665,12 @@ mod tests {
 
     #[test]
     fn sweep_flags_build_the_documented_scenario() {
-        let args = Args::parse(
+        let args = Args::parse_with_optional(
             "sweep --workloads synthetic:6 --prims baseline,d1 --levels rf \
-             --sms 1,2 --mapper dup:t3 --seed 9 --tag t --out o --json \
-             --cache c.bin --cache-max-mb 2"
+             --sms 1,2 --batch 1,4 --mapper dup:t3 --seed 9 --tag t --out o --json \
+             --cache=c.bin --cache-max-mb 2"
                 .split_whitespace(),
+            OPTIONAL_VALUE_FLAGS,
         );
         let sc = scenario_from_sweep_flags(&args).unwrap();
         assert_eq!(sc.name, "sweep");
@@ -674,11 +683,34 @@ mod tests {
         let spec = sc.sweep_spec().unwrap();
         assert_eq!(spec.sm_counts, vec![1, 2]);
         assert_eq!(spec.systems.len(), 2);
+        assert_eq!(spec.batches, vec![1, 4]);
+        assert_eq!(spec.workloads.len(), 2, "synthetic:6 at each of 2 batches");
         // Defaults: no flags → the default >= 500-point grid scenario.
         let sc = scenario_from_sweep_flags(&Args::parse(["sweep"])).unwrap();
         assert!(sc.sweep_spec().unwrap().n_points() >= 500);
         assert_eq!(sc.threads, None);
         assert_eq!(sc.cache, www_cim::scenario::CachePolicy::default());
+    }
+
+    /// The optional-value regression (this PR): a bare `--cache` before
+    /// the positional scenario name must not swallow it.
+    #[test]
+    fn bare_cache_flag_keeps_the_scenario_name_positional() {
+        let args = Args::parse_with_optional(
+            "run --cache fig2".split_whitespace(),
+            OPTIONAL_VALUE_FLAGS,
+        );
+        assert_eq!(args.positional, vec!["fig2"]);
+        assert_eq!(
+            cache_path_flag(&args),
+            Some(PathBuf::from("results/cache.bin"))
+        );
+        let args = Args::parse_with_optional(
+            "run --cache=elsewhere/c.bin fig2".split_whitespace(),
+            OPTIONAL_VALUE_FLAGS,
+        );
+        assert_eq!(args.positional, vec!["fig2"]);
+        assert_eq!(cache_path_flag(&args), Some(PathBuf::from("elsewhere/c.bin")));
     }
 
     #[test]

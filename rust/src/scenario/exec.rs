@@ -9,7 +9,7 @@
 //!   tests).
 //! * Experiment scenarios lower to a [`Ctx`] and dispatch through the
 //!   experiment registry, identically to `repro experiment <id>`
-//!   (pinned by the golden-equivalence suite for all 19 ids).
+//!   (pinned by the golden-equivalence suite for every registered id).
 
 use anyhow::{bail, Result};
 
@@ -85,6 +85,16 @@ fn run_sweep(sc: &Scenario, shard_id: Option<ShardId>) -> Result<()> {
         sweep_spec.sm_counts.len(),
         threads
     );
+    // The batch axis is already folded into the workload list (one
+    // entry per workload x batch); announce it only when non-trivial so
+    // batch-1 runs keep their historical output byte-for-byte.
+    if sweep_spec.batches.len() > 1 {
+        println!(
+            "sweep: batch axis {:?} expanded into the {} workload entries",
+            sweep_spec.batches,
+            sweep_spec.workloads.len()
+        );
+    }
     let engine = SweepEngine::new(arch).threads(threads);
 
     // Persistent cache: warm from disk if a compatible file exists.
@@ -190,6 +200,29 @@ mod tests {
         assert!(csv.starts_with("workload,m,n,k,system,"));
         assert_eq!(csv.lines().count(), 1 + 8, "4 GEMMs x 2 systems + header");
         assert!(dir.join("mini.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn batched_sweep_scenario_expands_and_labels_batch_rows() {
+        let dir = tmp_dir("batched");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sc = Scenario::builder("bt")
+            .workloads("dlrm")
+            .prims("baseline,d1")
+            .levels("rf")
+            .batch("1,8")
+            .seed(7)
+            .threads(2)
+            .out_dir(&dir)
+            .build()
+            .unwrap();
+        execute(&sc, None).unwrap();
+        let csv = std::fs::read_to_string(dir.join("bt.csv")).unwrap();
+        // DLRM has 2 unique layers; 2 batches x 2 systems -> 8 rows.
+        assert_eq!(csv.lines().count(), 1 + 8);
+        assert!(csv.contains("DLRM@b8,8,256,512"), "batched row labeled:\n{csv}");
+        assert!(csv.contains("DLRM,1,256,512"), "batch-1 rows keep plain names:\n{csv}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

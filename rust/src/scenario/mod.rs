@@ -54,7 +54,8 @@ pub use orchestrate::orchestrate;
 
 /// Version of the scenario JSON schema. Bump on any structural change;
 /// files of other versions are rejected at load, never half-read.
-pub const SCENARIO_FORMAT_VERSION: u32 = 1;
+/// History: v1 = the initial schema; v2 added the `sweep.batch` axis.
+pub const SCENARIO_FORMAT_VERSION: u32 = 2;
 
 /// Largest integer the JSON number carrier (f64) holds exactly — the
 /// bound on every integral scenario field.
@@ -72,6 +73,9 @@ pub struct GridAxes {
     pub prims: String,
     pub levels: String,
     pub sms: String,
+    /// Batch axis (`--batch` syntax, e.g. `"1,4,16"`). Default `"1"`,
+    /// the paper's regime — and a strict no-op relative to schema v1.
+    pub batch: String,
     pub mapper: String,
 }
 
@@ -82,6 +86,7 @@ impl Default for GridAxes {
             prims: spec::DEFAULT_PRIMS.to_string(),
             levels: spec::DEFAULT_LEVELS.to_string(),
             sms: "1".to_string(),
+            batch: "1".to_string(),
             mapper: "priority".to_string(),
         }
     }
@@ -227,11 +232,19 @@ impl Scenario {
     /// reused unchanged). Errors on experiment scenarios.
     pub fn sweep_spec(&self) -> Result<SweepSpec> {
         match &self.kind {
-            ScenarioKind::Sweep(axes) => Ok(SweepSpec::new(&self.name)
-                .workloads(spec::parse_workloads(&axes.workloads, self.seed)?)
-                .systems(spec::parse_systems(&axes.prims, &axes.levels)?)
-                .sm_counts(spec::parse_sm_counts(&axes.sms)?)
-                .mapper(MapperChoice::parse(&axes.mapper, self.seed)?)),
+            ScenarioKind::Sweep(axes) => {
+                let batches = spec::parse_batches(&axes.batch)?;
+                Ok(SweepSpec::new(&self.name)
+                    .workloads(spec::parse_workloads_batched(
+                        &axes.workloads,
+                        self.seed,
+                        &batches,
+                    )?)
+                    .systems(spec::parse_systems(&axes.prims, &axes.levels)?)
+                    .sm_counts(spec::parse_sm_counts(&axes.sms)?)
+                    .mapper(MapperChoice::parse(&axes.mapper, self.seed)?)
+                    .batches(batches))
+            }
             ScenarioKind::Experiment { id, .. } => {
                 bail!("experiment scenario {id:?} has no sweep grid to lower")
             }
@@ -296,6 +309,7 @@ impl Scenario {
                     ("prims".to_string(), Json::Str(axes.prims.clone())),
                     ("levels".to_string(), Json::Str(axes.levels.clone())),
                     ("sms".to_string(), Json::Str(axes.sms.clone())),
+                    ("batch".to_string(), Json::Str(axes.batch.clone())),
                     ("mapper".to_string(), Json::Str(axes.mapper.clone())),
                 ]),
             )),
@@ -420,7 +434,11 @@ impl Scenario {
             }
             (None, None) => bail!("scenario: missing \"sweep\" or \"experiment\" section"),
             (Some(s), None) => {
-                check_keys(s, &["workloads", "prims", "levels", "sms", "mapper"], "sweep")?;
+                check_keys(
+                    s,
+                    &["workloads", "prims", "levels", "sms", "batch", "mapper"],
+                    "sweep",
+                )?;
                 let axis = |key: &str, default: &str| -> Result<String> {
                     match present(s, key) {
                         Some(v) => Ok(v
@@ -436,6 +454,7 @@ impl Scenario {
                     prims: axis("prims", &defaults.prims)?,
                     levels: axis("levels", &defaults.levels)?,
                     sms: axis("sms", &defaults.sms)?,
+                    batch: axis("batch", &defaults.batch)?,
                     mapper: axis("mapper", &defaults.mapper)?,
                 })
             }
@@ -559,6 +578,12 @@ impl ScenarioBuilder {
     /// SM-count axis (`--sms` syntax).
     pub fn sms(mut self, v: &str) -> Self {
         self.axes_mut().sms = v.to_string();
+        self
+    }
+
+    /// Batch axis (`--batch` syntax, e.g. `"1,4,16"`).
+    pub fn batch(mut self, v: &str) -> Self {
+        self.axes_mut().batch = v.to_string();
         self
     }
 
@@ -702,6 +727,7 @@ mod tests {
             let prims = ["d1", "baseline,d1", "all", "baseline,a2"];
             let levels = ["rf", "rf,smem-b", "all"];
             let sms = ["1", "1,2,4", "2"];
+            let batches = ["1", "1,4", "2,8", "16"];
             let mappers = [
                 "priority",
                 "dup:t3",
@@ -715,6 +741,7 @@ mod tests {
                 .prims(prims[rng.index(prims.len())])
                 .levels(levels[rng.index(levels.len())])
                 .sms(sms[rng.index(sms.len())])
+                .batch(batches[rng.index(batches.len())])
                 .mapper(mappers[rng.index(mappers.len())]);
         }
         if rng.gen_range(0, 2) == 0 {
@@ -765,13 +792,23 @@ mod tests {
         let sc = Scenario::builder("v").workloads("bert").prims("d1").build().unwrap();
         let bumped = sc
             .to_json()
-            .replace("\"scenario_format\": 1", "\"scenario_format\": 2");
+            .replace("\"scenario_format\": 2", "\"scenario_format\": 3");
         let err = Scenario::from_json(&bumped).unwrap_err();
         assert!(
-            format!("{err:#}").contains("format v2"),
-            "must reject v2: {err:#}"
+            format!("{err:#}").contains("format v3"),
+            "must reject v3: {err:#}"
         );
-        let missing = sc.to_json().replace("  \"scenario_format\": 1,\n", "");
+        // v1 files predate the sweep.batch axis; they are rejected at
+        // load (with the version named) rather than half-read.
+        let old = sc
+            .to_json()
+            .replace("\"scenario_format\": 2", "\"scenario_format\": 1");
+        let err = Scenario::from_json(&old).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("format v1"),
+            "must reject v1: {err:#}"
+        );
+        let missing = sc.to_json().replace("  \"scenario_format\": 2,\n", "");
         assert!(Scenario::from_json(&missing).is_err(), "version is mandatory");
     }
 
@@ -825,7 +862,7 @@ mod tests {
     #[test]
     fn missing_optional_fields_take_defaults() {
         let sc = Scenario::from_json(
-            r#"{"scenario_format": 1, "name": "minimal",
+            r#"{"scenario_format": 2, "name": "minimal",
                 "sweep": {"workloads": "bert", "prims": "d1", "levels": "rf"}}"#,
         )
         .unwrap();
@@ -836,6 +873,7 @@ mod tests {
         match &sc.kind {
             ScenarioKind::Sweep(axes) => {
                 assert_eq!(axes.sms, "1");
+                assert_eq!(axes.batch, "1");
                 assert_eq!(axes.mapper, "priority");
             }
             other => panic!("expected sweep kind, got {other:?}"),
@@ -846,12 +884,12 @@ mod tests {
     #[test]
     fn sweep_and_experiment_are_mutually_exclusive() {
         let err = Scenario::from_json(
-            r#"{"scenario_format": 1, "name": "both", "sweep": {},
+            r#"{"scenario_format": 2, "name": "both", "sweep": {},
                 "experiment": {"id": "fig9"}}"#,
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("not both"), "{err:#}");
-        let err = Scenario::from_json(r#"{"scenario_format": 1, "name": "neither"}"#)
+        let err = Scenario::from_json(r#"{"scenario_format": 2, "name": "neither"}"#)
             .unwrap_err();
         assert!(format!("{err:#}").contains("missing"), "{err:#}");
     }
@@ -893,11 +931,33 @@ mod tests {
         assert_eq!(spec.workloads.len(), 2);
         assert_eq!(spec.systems.len(), 3);
         assert_eq!(spec.sm_counts, vec![1, 4]);
+        assert_eq!(spec.batches, vec![1]);
         assert_eq!(
             spec.mapper,
             MapperChoice::PriorityThreshold { threshold: 7 }
         );
         assert!(builtin("fig9").unwrap().sweep_spec().is_err());
+    }
+
+    #[test]
+    fn batch_axis_lowers_and_validates() {
+        let sc = Scenario::builder("batched")
+            .workloads("gptj,bert")
+            .prims("baseline,d1")
+            .levels("rf")
+            .batch("1,16")
+            .seed(7)
+            .build()
+            .unwrap();
+        let spec = sc.sweep_spec().unwrap();
+        assert_eq!(spec.batches, vec![1, 16]);
+        // 2 workloads x 2 batches, batch-major, suffixed past batch 1.
+        let names: Vec<&str> = spec.workloads.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["GPT-J", "BERT-Large", "GPT-J@b16", "BERT-Large@b16"]);
+        // Round-trips like any axis, and a bad axis fails validation.
+        assert_eq!(Scenario::from_json(&sc.to_json()).unwrap(), sc);
+        assert!(Scenario::builder("x").batch("0").build().is_err());
+        assert!(Scenario::builder("x").batch("nope").build().is_err());
     }
 
     #[test]

@@ -562,6 +562,42 @@ mod tests {
     }
 
     #[test]
+    fn more_shards_than_points_merge_with_empty_shards() {
+        // 6 grid points, 8-way sharding: shards 6 and 7 take zero jobs.
+        // Their summaries must still encode, parse and merge, and the
+        // merged CSV must stay byte-identical to the unsharded run.
+        let arch = Architecture::default_sm();
+        let spec = spec();
+        let fp = sweep_fingerprint(&arch, &spec);
+        let jobs = spec.jobs();
+        assert_eq!(jobs.len(), 6);
+
+        let full = SweepEngine::new(arch.clone()).run_spec(&spec);
+        let full_csv = output::results_csv(&full.results).unwrap().encode();
+
+        let dir = std::env::temp_dir().join("www_cim_shard_unit_empty");
+        let _ = fs::remove_dir_all(&dir);
+        let mut paths = Vec::new();
+        for index in 0..8 {
+            let shard = ShardId { index, count: 8 };
+            let engine = SweepEngine::new(arch.clone());
+            let run = engine.run_jobs_named(&spec.name, &shard.slice(&jobs));
+            if index >= jobs.len() {
+                assert_eq!(run.n_points(), 0, "shard {shard} must be empty");
+            }
+            let path = dir.join(format!("{}.json", shard.file_tag()));
+            write_shard_json(&run, shard, &fp, jobs.len(), &path).unwrap();
+            paths.push(path);
+        }
+        let merged = merge_files(&paths).unwrap();
+        assert_eq!(merged.shard_count, 8);
+        assert_eq!(merged.results.len(), jobs.len());
+        let merged_csv = output::results_csv(&merged.results).unwrap().encode();
+        assert_eq!(merged_csv, full_csv, "empty shards must not perturb the merge");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn merge_rejects_mismatched_and_incomplete_shards() {
         let arch = Architecture::default_sm();
         let spec_a = spec();

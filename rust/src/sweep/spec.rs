@@ -263,6 +263,11 @@ pub struct SweepSpec {
     /// SM-count axis (default `[1]`).
     pub sm_counts: Vec<u64>,
     pub mapper: MapperChoice,
+    /// Batch axis the workload entries were expanded at (default
+    /// `[1]`). Bookkeeping only: batching reshapes the GEMMs, so the
+    /// batched shapes (and `@b<n>`-suffixed names) already live in
+    /// `workloads` — see [`parse_workloads_batched`].
+    pub batches: Vec<u64>,
 }
 
 impl SweepSpec {
@@ -273,6 +278,7 @@ impl SweepSpec {
             systems: Vec::new(),
             sm_counts: vec![1],
             mapper: MapperChoice::Priority,
+            batches: vec![1],
         }
     }
 
@@ -309,6 +315,15 @@ impl SweepSpec {
 
     pub fn mapper(mut self, mapper: MapperChoice) -> Self {
         self.mapper = mapper;
+        self
+    }
+
+    /// Record the batch axis. The workload axis must already reflect it
+    /// (use [`parse_workloads_batched`] or the batched model
+    /// constructors); this only keeps the axis visible for reporting.
+    pub fn batches(mut self, batches: Vec<u64>) -> Self {
+        assert!(!batches.is_empty(), "batch axis must be non-empty");
+        self.batches = batches;
         self
     }
 
@@ -373,28 +388,70 @@ impl SweepSpec {
 /// `all`, and `synthetic[:N]` (seeded synthetic dataset). Each
 /// workload contributes its deduplicated layer shapes.
 pub fn parse_workloads(list: &str, seed: u64) -> Result<Vec<(String, Vec<Gemm>)>> {
-    fn push_model(out: &mut Vec<(String, Vec<Gemm>)>, w: crate::workload::Workload) {
-        let gemms: Vec<Gemm> = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
-        out.push((w.name, gemms));
+    parse_workloads_batched(list, seed, &[1])
+}
+
+/// [`parse_workloads`] expanded over a batch axis: the full workload
+/// list at every batch size in `batches`, batch-major. Batching
+/// reshapes the GEMMs themselves (see [`Gemm::batched`]), so no other
+/// layer needs a batch concept — entry names stay plain at batch 1
+/// (making `&[1]` exactly the unbatched parse, cache keys and
+/// fingerprints included) and gain an `@b<n>` suffix for larger
+/// batches so grid rows and fingerprints stay distinguishable.
+pub fn parse_workloads_batched(
+    list: &str,
+    seed: u64,
+    batches: &[u64],
+) -> Result<Vec<(String, Vec<Gemm>)>> {
+    if batches.is_empty() {
+        bail!("--batch: empty batch list");
     }
     let mut out: Vec<(String, Vec<Gemm>)> = Vec::new();
+    for &batch in batches {
+        if batch == 0 {
+            bail!("--batch: batch sizes must be positive");
+        }
+        workloads_at_batch(&mut out, list, seed, batch)?;
+    }
+    if out.is_empty() {
+        bail!("--workloads: empty workload list");
+    }
+    Ok(out)
+}
+
+/// Append the resolved workload list at one batch size.
+fn workloads_at_batch(
+    out: &mut Vec<(String, Vec<Gemm>)>,
+    list: &str,
+    seed: u64,
+    batch: u64,
+) -> Result<()> {
+    fn push_model(out: &mut Vec<(String, Vec<Gemm>)>, w: crate::workload::Workload) {
+        let name = if w.batch() > 1 {
+            format!("{}@b{}", w.name, w.batch())
+        } else {
+            w.name.clone()
+        };
+        let gemms: Vec<Gemm> = w.unique_with_counts().into_iter().map(|(g, _)| g).collect();
+        out.push((name, gemms));
+    }
     for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         match name.to_ascii_lowercase().as_str() {
-            "bert" | "bert-large" => push_model(&mut out, models::bert_large()),
-            "gptj" | "gpt-j" => push_model(&mut out, models::gpt_j()),
-            "resnet" | "resnet50" => push_model(&mut out, models::resnet50()),
-            "dlrm" => push_model(&mut out, models::dlrm()),
-            "vit" | "vit-base" => push_model(&mut out, models::vit_base()),
-            "llama-decode" => push_model(&mut out, models::llama2_7b_decode()),
-            "llama-prefill" => push_model(&mut out, models::llama2_7b_prefill(2048)),
+            "bert" | "bert-large" => push_model(out, models::bert_large_batched(batch)),
+            "gptj" | "gpt-j" => push_model(out, models::gpt_j_batched(batch)),
+            "resnet" | "resnet50" => push_model(out, models::resnet50_batched(batch)),
+            "dlrm" => push_model(out, models::dlrm_batched(batch)),
+            "vit" | "vit-base" => push_model(out, models::vit_base_batched(batch)),
+            "llama-decode" => push_model(out, models::llama2_7b_decode_batched(batch)),
+            "llama-prefill" => push_model(out, models::llama2_7b_prefill_batched(2048, batch)),
             "real" => {
-                for w in models::real_dataset() {
-                    push_model(&mut out, w);
+                for w in models::real_dataset_batched(batch) {
+                    push_model(out, w);
                 }
             }
             "all" | "zoo" => {
-                for w in models::extended_dataset() {
-                    push_model(&mut out, w);
+                for w in models::extended_dataset_batched(batch) {
+                    push_model(out, w);
                 }
             }
             other => {
@@ -407,7 +464,12 @@ pub fn parse_workloads(list: &str, seed: u64) -> Result<Vec<(String, Vec<Gemm>)>
                         },
                         _ => bail!("--workloads: unknown workload {other:?}"),
                     };
-                    out.push(("Synthetic".to_string(), synthetic::dataset(seed, n)));
+                    let wname = if batch > 1 {
+                        format!("Synthetic@b{batch}")
+                    } else {
+                        "Synthetic".to_string()
+                    };
+                    out.push((wname, synthetic::dataset_batched(seed, n, batch)));
                 } else {
                     bail!(
                         "--workloads: unknown workload {other:?} (bert, gptj, resnet50, dlrm, \
@@ -417,8 +479,21 @@ pub fn parse_workloads(list: &str, seed: u64) -> Result<Vec<(String, Vec<Gemm>)>
             }
         }
     }
+    Ok(())
+}
+
+/// Parse the batch axis: a comma-separated list of positive integers
+/// (`--batch 1,4,16,64`).
+pub fn parse_batches(list: &str) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for tok in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match tok.parse::<u64>() {
+            Ok(n) if n > 0 => out.push(n),
+            _ => bail!("--batch: bad batch size {tok:?} (positive integers)"),
+        }
+    }
     if out.is_empty() {
-        bail!("--workloads: empty workload list");
+        bail!("--batch: empty batch list");
     }
     Ok(out)
 }
@@ -729,6 +804,40 @@ mod tests {
         assert_eq!(parse_sm_counts("1,2,4").unwrap(), vec![1, 2, 4]);
         assert!(parse_sm_counts("0").is_err());
         assert!(parse_sm_counts("x").is_err());
+    }
+
+    #[test]
+    fn batch_parsing() {
+        assert_eq!(parse_batches("1,4,16,64").unwrap(), vec![1, 4, 16, 64]);
+        assert_eq!(parse_batches(" 8 ").unwrap(), vec![8]);
+        assert!(parse_batches("0").is_err());
+        assert!(parse_batches("x").is_err());
+        assert!(parse_batches("").is_err());
+    }
+
+    #[test]
+    fn batch_one_workload_parse_is_the_identity() {
+        // The --batch 1 no-op guarantee at the parser level: same
+        // names, same shapes, same order as the unbatched parse.
+        for list in ["all", "real", "gptj,bert", "synthetic:12"] {
+            let plain = parse_workloads(list, 7).unwrap();
+            let batched = parse_workloads_batched(list, 7, &[1]).unwrap();
+            assert_eq!(plain, batched, "{list:?}");
+        }
+    }
+
+    #[test]
+    fn batched_workload_parse_expands_batch_major() {
+        let got = parse_workloads_batched("gptj,dlrm", 7, &[1, 16]).unwrap();
+        let names: Vec<&str> = got.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["GPT-J", "DLRM", "GPT-J@b16", "DLRM@b16"]);
+        // Batch-16 GPT-J carries the folded projection GEMM...
+        assert!(got[2].1.contains(&Gemm::new(16, 4096, 4096)));
+        // ...and the per-sequence attention GEMVs, deduplicated.
+        assert!(got[2].1.contains(&Gemm::new(1, 2048, 4096)));
+        assert_eq!(got[2].1.len(), got[0].1.len());
+        assert!(parse_workloads_batched("gptj", 7, &[]).is_err());
+        assert!(parse_workloads_batched("gptj", 7, &[0]).is_err());
     }
 
     #[test]

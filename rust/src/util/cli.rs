@@ -1,10 +1,16 @@
 //! Hand-rolled command-line parsing (clap is unavailable offline).
 //!
 //! Supports `binary <subcommand> [positional ...] [--flag] [--key value]`
-//! with `--key=value` also accepted. Unknown-flag detection and simple
-//! typed getters cover everything the `repro` CLI needs.
+//! with `--key=value` also accepted. Flags registered as
+//! *optional-value* ([`Args::parse_with_optional`]) never consume the
+//! following token — their value comes via `--flag=value` only — so
+//! `repro run --cache fig2` keeps `fig2` positional instead of
+//! silently swallowing it as the cache path. Unknown-flag detection
+//! and simple typed getters cover everything the `repro` CLI needs.
 
 use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -18,8 +24,21 @@ pub struct Args {
 const PRESENT: &str = "\u{1}true";
 
 impl Args {
-    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// Parse from an iterator of arguments (excluding argv[0]), with no
+    /// optional-value flags.
     pub fn parse<I, S>(argv: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        Args::parse_with_optional(argv, &[])
+    }
+
+    /// Parse, treating every flag named in `optional_value` as
+    /// optional-value: bare `--flag` records presence without touching
+    /// the next token (which stays positional/subcommand), and an
+    /// explicit value is given as `--flag=value` only.
+    pub fn parse_with_optional<I, S>(argv: I, optional_value: &[&str]) -> Self
     where
         I: IntoIterator<Item = S>,
         S: Into<String>,
@@ -30,17 +49,15 @@ impl Args {
             if let Some(stripped) = tok.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
-                } else {
-                    // `--key value` unless the next token is another flag
-                    match iter.peek() {
-                        Some(next) if !next.starts_with("--") => {
-                            let v = iter.next().unwrap();
-                            args.flags.insert(stripped.to_string(), v);
-                        }
-                        _ => {
-                            args.flags.insert(stripped.to_string(), PRESENT.to_string());
-                        }
+                } else if optional_value.contains(&stripped) {
+                    args.flags.insert(stripped.to_string(), PRESENT.to_string());
+                } else if matches!(iter.peek(), Some(next) if !next.starts_with("--")) {
+                    // `--key value`: the next token is the value.
+                    if let Some(v) = iter.next() {
+                        args.flags.insert(stripped.to_string(), v);
                     }
+                } else {
+                    args.flags.insert(stripped.to_string(), PRESENT.to_string());
                 }
             } else if args.subcommand.is_none() {
                 args.subcommand = Some(tok);
@@ -54,6 +71,11 @@ impl Args {
     /// Parse the current process's arguments.
     pub fn from_env() -> Self {
         Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse the current process's arguments with optional-value flags.
+    pub fn from_env_with_optional(optional_value: &[&str]) -> Self {
+        Args::parse_with_optional(std::env::args().skip(1), optional_value)
     }
 
     /// Boolean flag: present (with or without a truthy value)?
@@ -80,14 +102,20 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// Typed option with default; panics with a helpful message on a
-    /// malformed value (user error, not programmer error).
-    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+    /// Typed option with default. A malformed value is a *user* error:
+    /// it returns an error naming the flag and the accepted syntax
+    /// (surfaced as a usage message, never a panic backtrace).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
         match self.get(name) {
-            None => default,
-            Some(v) => v.parse().unwrap_or_else(|_| {
-                panic!("--{name}: cannot parse {v:?} as {}", std::any::type_name::<T>())
-            }),
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(parsed) => Ok(parsed),
+                Err(_) => bail!(
+                    "--{name}: cannot parse {v:?} as {} \
+                     (expected `--{name} <value>` or `--{name}=<value>`)",
+                    std::any::type_name::<T>()
+                ),
+            },
         }
     }
 
@@ -122,6 +150,10 @@ mod tests {
         Args::parse(s.split_whitespace())
     }
 
+    fn parse_opt(s: &str, optional: &[&str]) -> Args {
+        Args::parse_with_optional(s.split_whitespace(), optional)
+    }
+
     #[test]
     fn subcommand_and_positional() {
         let a = parse("experiment fig9 extra");
@@ -133,7 +165,7 @@ mod tests {
     fn key_value_both_styles() {
         let a = parse("run --level smem --seed=42");
         assert_eq!(a.get("level"), Some("smem"));
-        assert_eq!(a.get_parsed_or::<u64>("seed", 0), 42);
+        assert_eq!(a.get_parsed_or::<u64>("seed", 0).unwrap(), 42);
     }
 
     #[test]
@@ -155,7 +187,7 @@ mod tests {
     fn defaults() {
         let a = parse("run");
         assert_eq!(a.get_or("level", "rf"), "rf");
-        assert_eq!(a.get_parsed_or::<usize>("n", 10), 10);
+        assert_eq!(a.get_parsed_or::<usize>("n", 10).unwrap(), 10);
     }
 
     #[test]
@@ -167,9 +199,44 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "cannot parse")]
-    fn malformed_typed_flag_panics() {
+    fn malformed_typed_flag_is_a_user_error() {
         let a = parse("run --n abc");
-        let _: usize = a.get_parsed_or("n", 0);
+        let err = a.get_parsed_or::<usize>("n", 0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--n") && msg.contains("cannot parse"), "{msg}");
+        assert!(msg.contains("--n=<value>"), "must show the syntax: {msg}");
+    }
+
+    #[test]
+    fn optional_value_flag_never_swallows_a_positional() {
+        // The `repro run --cache fig2` regression: fig2 must stay the
+        // positional scenario name, --cache a bare presence flag.
+        let a = parse_opt("run --cache fig2", &["cache"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert!(a.flag("cache"));
+        assert_eq!(a.get("cache"), Some("true"));
+        // An explicit value still comes through `--flag=value`...
+        let a = parse_opt("run --cache=results/c.bin fig2", &["cache"]);
+        assert_eq!(a.get("cache"), Some("results/c.bin"));
+        assert_eq!(a.positional, vec!["fig2"]);
+        // ...and unlisted flags keep the greedy `--key value` style.
+        let a = parse_opt("run --tag full --cache fig2", &["cache"]);
+        assert_eq!(a.get("tag"), Some("full"));
+        assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn optional_value_flag_before_a_subcommand_keeps_the_subcommand() {
+        let a = parse_opt("--emit-scenario sweep", &["emit-scenario"]);
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert!(a.flag("emit-scenario"));
+    }
+
+    #[test]
+    fn plain_parse_keeps_the_greedy_value_style() {
+        let a = parse("run --cache fig2");
+        assert_eq!(a.get("cache"), Some("fig2"));
+        assert!(a.positional.is_empty());
     }
 }

@@ -83,6 +83,26 @@ impl TransformerConfig {
             self.ffn_contract(),
         ]
     }
+
+    /// [`Self::encoder_gemms`] evaluated at batch `b`. Weight-bearing
+    /// layers (projections, FFN) share their weights across the batch
+    /// and fold it into M; the attention GEMMs (QKᵀ, QKᵀV) carry no
+    /// weights and score each sequence against its own K/V, so they
+    /// repeat per sequence with their shape unchanged. `b = 1` is the
+    /// identity.
+    pub fn encoder_gemms_batched(&self, b: u64) -> Vec<Gemm> {
+        assert!(b > 0, "batch must be positive");
+        let mut out = vec![self.projection().batched(b)];
+        for _ in 0..b {
+            out.push(self.logits());
+        }
+        for _ in 0..b {
+            out.push(self.attention_v());
+        }
+        out.push(self.ffn_expand().batched(b));
+        out.push(self.ffn_contract().batched(b));
+        out
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +136,22 @@ mod tests {
         let cfg = TransformerConfig::bert_large(128);
         assert_eq!(cfg.logits().k, cfg.embed);
         assert_eq!(cfg.attention_v().k, cfg.seq);
+    }
+
+    #[test]
+    fn batched_encoder_folds_weights_and_replicates_attention() {
+        let cfg = TransformerConfig::bert_large(512);
+        // batch 1 is exactly encoder_gemms().
+        assert_eq!(cfg.encoder_gemms_batched(1), cfg.encoder_gemms());
+        let b = 4;
+        let gemms = cfg.encoder_gemms_batched(b);
+        // 3 folded weight layers + 2·b replicated attention GEMMs.
+        assert_eq!(gemms.len(), 3 + 2 * b as usize);
+        assert_eq!(gemms[0], cfg.projection().batched(b));
+        assert!(gemms[1..=b as usize].iter().all(|&g| g == cfg.logits()));
+        // Total MACs scale exactly linearly with batch.
+        let macs_1: u64 = cfg.encoder_gemms().iter().map(|g| g.macs()).sum();
+        let macs_b: u64 = gemms.iter().map(|g| g.macs()).sum();
+        assert_eq!(macs_b, b * macs_1);
     }
 }

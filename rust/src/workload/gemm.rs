@@ -61,6 +61,13 @@ impl Gemm {
         self.m == 1
     }
 
+    /// The same layer evaluated at batch `b`: the weight matrix is
+    /// shared across the batch, so the `b` input vectors/matrices stack
+    /// along M — a batch-`b` decode GEMV becomes an `M = b` GEMM.
+    pub fn batched(&self, b: u64) -> Gemm {
+        Gemm::new(self.m * b, self.n, self.k)
+    }
+
     /// "Irregular" shape per §VI-B: one dimension much smaller than the
     /// others (ratio ≥ `threshold`).
     pub fn is_irregular(&self, threshold: f64) -> bool {
@@ -108,6 +115,18 @@ mod tests {
     fn gemv_detection() {
         assert!(Gemm::new(1, 256, 512).is_gemv());
         assert!(!Gemm::new(2, 256, 512).is_gemv());
+    }
+
+    #[test]
+    fn batched_stacks_along_m() {
+        let g = Gemm::new(1, 4096, 4096);
+        assert_eq!(g.batched(16), Gemm::new(16, 4096, 4096));
+        assert!(!g.batched(2).is_gemv());
+        // batch 1 is the identity.
+        assert_eq!(g.batched(1), g);
+        // MACs scale linearly with batch; the weight footprint does not.
+        assert_eq!(g.batched(8).macs(), 8 * g.macs());
+        assert_eq!(g.batched(8).weight_elems(), g.weight_elems());
     }
 
     #[test]

@@ -32,16 +32,32 @@ pub struct Workload {
     pub name: String,
     pub kind: WorkloadKind,
     layers: Vec<Gemm>,
+    /// Batch size the layer list was derived at. The layers already
+    /// reflect it (weight-bearing GEMMs fold it into M, per-sequence
+    /// attention GEMMs repeat), so this is bookkeeping for display and
+    /// per-request normalization, not a multiplier to re-apply.
+    batch: u64,
 }
 
 impl Workload {
     pub fn new(name: &str, kind: WorkloadKind, layers: Vec<Gemm>) -> Self {
+        Workload::new_batched(name, kind, layers, 1)
+    }
+
+    pub fn new_batched(name: &str, kind: WorkloadKind, layers: Vec<Gemm>, batch: u64) -> Self {
         assert!(!layers.is_empty(), "workload needs at least one layer");
+        assert!(batch > 0, "batch must be positive");
         Workload {
             name: name.to_string(),
             kind,
             layers,
+            batch,
         }
+    }
+
+    /// Batch size this workload's layer list was derived at.
+    pub fn batch(&self) -> u64 {
+        self.batch
     }
 
     /// All layers in network order (duplicates kept — repeated blocks
@@ -234,6 +250,126 @@ pub fn extended_dataset() -> Vec<Workload> {
     v
 }
 
+// ---------------------------------------------------------------------
+// Batched variants (serving regime). Weight-bearing layers share their
+// weights across the batch and fold it into M — batch-`b` decode GEMVs
+// become M = b GEMMs, the escape hatch from the §VI-C regime where CiM
+// loses. Attention GEMMs carry no weights and score each sequence
+// against its own K/V, so they repeat with their shape unchanged. Every
+// `*_batched(1)` is layer-for-layer identical to its base constructor.
+// ---------------------------------------------------------------------
+
+/// [`bert_large`] at batch `b` (encoder layer, seq 512).
+pub fn bert_large_batched(batch: u64) -> Workload {
+    let cfg = super::attention::TransformerConfig::bert_large(512);
+    Workload::new_batched(
+        "BERT-Large",
+        WorkloadKind::TransformerEncoder,
+        cfg.encoder_gemms_batched(batch),
+        batch,
+    )
+}
+
+/// [`gpt_j`] decode at batch `b`: the token-at-a-time projection and
+/// FFN GEMVs stack along M (shared weights); the two KV-cache attention
+/// GEMMs repeat per sequence, each against its own 2048-token cache.
+pub fn gpt_j_batched(batch: u64) -> Workload {
+    assert!(batch > 0, "batch must be positive");
+    let mut layers = vec![
+        Gemm::new(1, 4096, 4096).batched(batch),
+        Gemm::new(2048, 4096, 4096).batched(batch),
+    ];
+    for _ in 0..batch {
+        layers.push(Gemm::new(1, 2048, 4096));
+    }
+    for _ in 0..batch {
+        layers.push(Gemm::new(1, 4096, 2048));
+    }
+    layers.push(Gemm::new(1, 16384, 4096).batched(batch));
+    Workload::new_batched("GPT-J", WorkloadKind::TransformerDecoder, layers, batch)
+}
+
+/// [`dlrm`] at batch `b`: MLP weights are shared, both GEMVs fold.
+pub fn dlrm_batched(batch: u64) -> Workload {
+    Workload::new_batched(
+        "DLRM",
+        WorkloadKind::Recommendation,
+        dlrm().gemms().iter().map(|g| g.batched(batch)).collect(),
+        batch,
+    )
+}
+
+/// [`resnet50`] at batch `b`: every im2col GEMM stacks its per-image
+/// output pixels along M (filters are the shared weights).
+pub fn resnet50_batched(batch: u64) -> Workload {
+    Workload::new_batched(
+        "ResNet50",
+        WorkloadKind::Cnn,
+        resnet50().gemms().iter().map(|g| g.batched(batch)).collect(),
+        batch,
+    )
+}
+
+/// [`vit_base`] at batch `b`.
+pub fn vit_base_batched(batch: u64) -> Workload {
+    let cfg = super::attention::TransformerConfig {
+        seq: 197,
+        embed: 768,
+        ff: 3072,
+    };
+    Workload::new_batched(
+        "ViT-Base",
+        WorkloadKind::TransformerEncoder,
+        cfg.encoder_gemms_batched(batch),
+        batch,
+    )
+}
+
+/// [`llama2_7b_decode`] at batch `b`: all three are weight projections,
+/// all fold.
+pub fn llama2_7b_decode_batched(batch: u64) -> Workload {
+    Workload::new_batched(
+        "Llama2-7B-decode",
+        WorkloadKind::TransformerDecoder,
+        llama2_7b_decode().gemms().iter().map(|g| g.batched(batch)).collect(),
+        batch,
+    )
+}
+
+/// [`real_dataset`] at batch `b`, same order.
+pub fn real_dataset_batched(batch: u64) -> Vec<Workload> {
+    vec![
+        bert_large_batched(batch),
+        gpt_j_batched(batch),
+        resnet50_batched(batch),
+        dlrm_batched(batch),
+    ]
+}
+
+/// [`extended_dataset`] at batch `b`, same order.
+pub fn extended_dataset_batched(batch: u64) -> Vec<Workload> {
+    let mut v = real_dataset_batched(batch);
+    v.push(vit_base_batched(batch));
+    v.push(llama2_7b_decode_batched(batch));
+    v.push(llama2_7b_prefill_batched(2048, batch));
+    v
+}
+
+/// [`llama2_7b_prefill`] at batch `b`.
+pub fn llama2_7b_prefill_batched(seq: u64, batch: u64) -> Workload {
+    let cfg = super::attention::TransformerConfig {
+        seq,
+        embed: 4096,
+        ff: 11008,
+    };
+    Workload::new_batched(
+        "Llama2-7B-prefill",
+        WorkloadKind::TransformerDecoder,
+        cfg.encoder_gemms_batched(batch),
+        batch,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +424,55 @@ mod tests {
         for w in real_dataset() {
             assert!(w.total_macs() > 0);
         }
+    }
+
+    #[test]
+    fn batched_at_one_is_the_identity() {
+        // Every batched constructor at b = 1 reproduces its base
+        // constructor layer-for-layer (the --batch 1 no-op guarantee).
+        let pairs: Vec<(Workload, Workload)> = vec![
+            (bert_large(), bert_large_batched(1)),
+            (gpt_j(), gpt_j_batched(1)),
+            (dlrm(), dlrm_batched(1)),
+            (resnet50(), resnet50_batched(1)),
+            (vit_base(), vit_base_batched(1)),
+            (llama2_7b_decode(), llama2_7b_decode_batched(1)),
+            (llama2_7b_prefill(2048), llama2_7b_prefill_batched(2048, 1)),
+        ];
+        for (base, batched) in pairs {
+            assert_eq!(base.gemms(), batched.gemms(), "{}", base.name);
+            assert_eq!(base.name, batched.name);
+            assert_eq!(base.kind, batched.kind);
+            assert_eq!(batched.batch(), 1);
+        }
+    }
+
+    #[test]
+    fn batched_macs_scale_linearly() {
+        // Batch b does b requests' worth of work — no more, no less.
+        for b in [2u64, 8, 16] {
+            assert_eq!(gpt_j_batched(b).total_macs(), b * gpt_j().total_macs());
+            assert_eq!(bert_large_batched(b).total_macs(), b * bert_large().total_macs());
+            assert_eq!(resnet50_batched(b).total_macs(), b * resnet50().total_macs());
+            assert_eq!(dlrm_batched(b).total_macs(), b * dlrm().total_macs());
+        }
+    }
+
+    #[test]
+    fn batching_escapes_the_gemv_regime() {
+        // GPT-J decode at batch 1 is GEMV-dominated; at batch 16 every
+        // weight-bearing layer is a real GEMM (§VI-C escape). The
+        // replicated per-sequence attention GEMMs stay GEMV but dedup
+        // into two shapes with counts.
+        assert!(gpt_j().gemms().iter().filter(|g| g.is_gemv()).count() >= 4);
+        let b16 = gpt_j_batched(16);
+        let uniq = b16.unique_with_counts();
+        assert_eq!(uniq.len(), gpt_j().unique_with_counts().len());
+        assert!(uniq.iter().filter(|(g, _)| g.is_gemv()).all(|&(_, c)| c == 16));
+        assert!(b16.gemms().contains(&Gemm::new(16, 4096, 4096)));
+        assert_eq!(b16.batch(), 16);
+        // DLRM folds entirely: no GEMV left at batch > 1.
+        assert!(dlrm_batched(4).gemms().iter().all(|g| !g.is_gemv()));
     }
 
     #[test]

@@ -29,6 +29,14 @@ pub fn dataset(seed: u64, size: usize) -> Vec<Gemm> {
         .collect()
 }
 
+/// [`dataset`] evaluated at batch `b`: every shape stacks its batch
+/// along M (shared weights), so `dataset_batched(s, n, 1)` is exactly
+/// `dataset(s, n)` and total MACs scale linearly with `b`.
+pub fn dataset_batched(seed: u64, size: usize, batch: u64) -> Vec<Gemm> {
+    assert!(batch > 0, "batch must be positive");
+    dataset(seed, size).iter().map(|g| g.batched(batch)).collect()
+}
+
 /// Default seed for the paper-configuration dataset.
 pub const DEFAULT_SEED: u64 = 0x57_57_57; // "WWW"
 
@@ -69,6 +77,18 @@ mod tests {
     fn deterministic() {
         assert_eq!(dataset(7, 100), dataset(7, 100));
         assert_ne!(dataset(7, 100), dataset(8, 100));
+    }
+
+    #[test]
+    fn batched_dataset_scales_m_only() {
+        assert_eq!(dataset_batched(7, 100, 1), dataset(7, 100));
+        let base = dataset(7, 100);
+        let b4 = dataset_batched(7, 100, 4);
+        assert_eq!(b4.len(), base.len());
+        for (g1, g4) in base.iter().zip(&b4) {
+            assert_eq!(g4.m, 4 * g1.m);
+            assert_eq!((g4.n, g4.k), (g1.n, g1.k));
+        }
     }
 
     #[test]

@@ -366,3 +366,59 @@ fn every_experiment_id_via_scenario_run_is_byte_identical() {
         let _ = std::fs::remove_dir_all(&direct_ctx.out_dir);
     }
 }
+
+/// The batch axis's no-op guarantee: `--batch 1` produces the same
+/// workload list — names, shapes, order — and therefore the same sweep
+/// fingerprint as a parse that never heard of batching. Existing cache
+/// files and shard summaries stay valid.
+#[test]
+fn batch_one_is_a_strict_fingerprint_no_op() {
+    use www_cim::arch::Architecture;
+    use www_cim::sweep::{shard, spec, SweepSpec};
+
+    let seed = synthetic::DEFAULT_SEED;
+    let plain = spec::parse_workloads("all", seed).unwrap();
+    let batched = spec::parse_workloads_batched("all", seed, &[1]).unwrap();
+    assert_eq!(plain, batched, "batch=1 must not perturb the parsed workloads");
+
+    let arch = Architecture::default_sm();
+    let systems = spec::parse_systems("baseline,d1", "rf,smem-b").unwrap();
+    let before = SweepSpec::new("golden")
+        .workloads(plain)
+        .systems(systems.clone());
+    let after = SweepSpec::new("golden")
+        .workloads(batched)
+        .systems(systems)
+        .batches(vec![1]);
+    assert_eq!(
+        shard::sweep_fingerprint(&arch, &before),
+        shard::sweep_fingerprint(&arch, &after),
+        "batch=1 must leave the sweep fingerprint untouched"
+    );
+}
+
+/// And the inverse property: any batch above 1 reshapes the grid (new
+/// `@b<n>` workload names, folded M dimensions), so its fingerprint —
+/// and with it every cache/shard compatibility check — must diverge
+/// from the batch-1 sweep's.
+#[test]
+fn batched_fingerprints_differ_from_batch_one() {
+    use www_cim::arch::Architecture;
+    use www_cim::sweep::{shard, spec, SweepSpec};
+
+    let seed = synthetic::DEFAULT_SEED;
+    let arch = Architecture::default_sm();
+    let systems = spec::parse_systems("baseline,d1", "rf").unwrap();
+    let fp_at = |batches: &[u64]| {
+        let s = SweepSpec::new("golden")
+            .workloads(spec::parse_workloads_batched("gptj,bert", seed, batches).unwrap())
+            .systems(systems.clone())
+            .batches(batches.to_vec());
+        shard::sweep_fingerprint(&arch, &s)
+    };
+    let one = fp_at(&[1]);
+    for b in [2u64, 4, 16, 64] {
+        assert_ne!(one, fp_at(&[b]), "batch={b} must change the fingerprint");
+        assert_ne!(one, fp_at(&[1, b]), "batch axis [1,{b}] must change the fingerprint");
+    }
+}

@@ -70,7 +70,10 @@ fn flag_emitted_scenario_reproduces_repro_sweep_byte_for_byte() {
     args.extend(GRID);
     let dir_sc_s = dir_sc.to_str().unwrap();
     let sc_file_s = sc_file.to_str().unwrap();
-    args.extend(["--out", dir_sc_s, "--emit-scenario", sc_file_s]);
+    // --emit-scenario is an optional-value flag: the path must ride in
+    // the `=` form (a bare flag would print to stdout instead).
+    let emit = format!("--emit-scenario={sc_file_s}");
+    args.extend(["--out", dir_sc_s, &emit]);
     run_ok(&args);
     assert!(
         !dir_sc.join("sweep.csv").exists(),
@@ -141,6 +144,121 @@ fn orchestrate_two_procs_matches_single_process_run_byte_for_byte() {
 }
 
 #[test]
+fn orchestrate_with_more_procs_than_grid_points_still_merges() {
+    // 2 grid points under 5 procs: shards 2..4 run zero jobs. Their
+    // summaries must still be written, validated and merged, and the
+    // merged CSV must match the single-process run byte-for-byte.
+    let dir_single = tmp_dir("empty_single");
+    let dir_multi = tmp_dir("empty_multi");
+    let sc_dir = tmp_dir("empty_file");
+    let sc_file = sc_dir.join("tiny.scenario.json");
+
+    Scenario::builder("tiny")
+        .workloads("synthetic:2")
+        .prims("d1")
+        .levels("rf")
+        .seed(7)
+        .build()
+        .expect("scenario builds")
+        .write(&sc_file)
+        .expect("scenario writes");
+    let sc_file_s = sc_file.to_str().unwrap();
+
+    run_ok(&["run", sc_file_s, "--out", dir_single.to_str().unwrap()]);
+    run_ok(&[
+        "orchestrate",
+        sc_file_s,
+        "--procs",
+        "5",
+        "--out",
+        dir_multi.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        read(&dir_single.join("tiny.csv")),
+        read(&dir_multi.join("tiny.csv")),
+        "empty shards must not perturb the merged CSV"
+    );
+    for i in 0..5 {
+        assert!(
+            dir_multi.join(format!("tiny-shard{i}of5.json")).exists(),
+            "shard {i}/5 summary must exist even when empty"
+        );
+    }
+    for d in [dir_single, dir_multi, sc_dir] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+#[test]
+fn batched_scenario_shards_and_merges_byte_identically() {
+    let dir_single = tmp_dir("batch_single");
+    let dir_multi = tmp_dir("batch_multi");
+    let sc_dir = tmp_dir("batch_file");
+    let sc_file = sc_dir.join("batched.scenario.json");
+
+    Scenario::builder("batched")
+        .workloads("gptj,dlrm")
+        .prims("baseline,d1")
+        .levels("rf")
+        .batch("1,8")
+        .seed(7)
+        .build()
+        .expect("scenario builds")
+        .write(&sc_file)
+        .expect("scenario writes");
+    let sc_file_s = sc_file.to_str().unwrap();
+
+    run_ok(&["run", sc_file_s, "--out", dir_single.to_str().unwrap()]);
+    run_ok(&[
+        "orchestrate",
+        sc_file_s,
+        "--procs",
+        "2",
+        "--out",
+        dir_multi.to_str().unwrap(),
+    ]);
+    let single = read(&dir_single.join("batched.csv"));
+    assert_eq!(
+        single,
+        read(&dir_multi.join("batched.csv")),
+        "batched shards must merge byte-identically"
+    );
+    assert!(single.contains("GPT-J@b8"), "batched rows carry @b labels:\n{single}");
+    assert!(single.contains("DLRM@b8"), "batched rows carry @b labels:\n{single}");
+    for d in [dir_single, dir_multi, sc_dir] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+#[test]
+fn bare_cache_flag_keeps_the_scenario_name_positional() {
+    // The `repro run --cache fig2` regression: the bare optional-value
+    // flag used to swallow `fig2` as the cache path and then fail on a
+    // missing scenario. It must run fig2 and persist the cache at the
+    // conventional default path instead.
+    let dir = tmp_dir("bare_cache");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = repro()
+        .current_dir(&dir)
+        .args(["run", "--cache", "fig2", "--quick", "--out", "out"])
+        .output()
+        .expect("spawning repro");
+    assert!(
+        out.status.success(),
+        "repro run --cache fig2 failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    assert!(dir.join("out").join("fig2.csv").exists(), "fig2 must have run");
+    assert!(
+        dir.join("results").join("cache.bin").exists(),
+        "bare --cache must persist to the default results/cache.bin"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn run_experiment_name_matches_repro_experiment() {
     let dir_run = tmp_dir("exp_run");
     let dir_classic = tmp_dir("exp_classic");
@@ -193,7 +311,8 @@ fn sweep_cache_cap_flag_is_honoured_end_to_end() {
     let cache_s = cache.to_str().unwrap();
     let mut args: Vec<&str> = vec!["sweep"];
     args.extend(GRID);
-    args.extend(["--out", dir_s, "--cache", cache_s, "--cache-max-mb", "1"]);
+    let cache_flag = format!("--cache={cache_s}");
+    args.extend(["--out", dir_s, &cache_flag, "--cache-max-mb", "1"]);
     run_ok(&args);
     let size = std::fs::metadata(&cache).expect("cache file written").len();
     assert!(size > 0 && size <= 1024 * 1024, "cache size {size} violates the cap");
