@@ -56,6 +56,7 @@ impl Architecture {
         self.levels
             .iter()
             .find(|l| l.level == lvl)
+            // lint: allow(R4): every Architecture constructor installs all four levels; a miss is a construction bug
             .expect("level missing from architecture")
     }
 
@@ -103,6 +104,7 @@ impl CimSystem {
                 }
             }
             MemLevel::Smem => Self::at_smem(arch, primitive, SmemConfig::ConfigB),
+            // lint: allow(R4): callers pick the level from a fixed RF/SMEM menu; the paper models no other integration point
             other => panic!("CiM integration modelled at RF/SMEM only, got {other:?}"),
         }
     }
@@ -145,6 +147,7 @@ impl CimSystem {
         match self.level {
             MemLevel::RegisterFile => MemLevel::Smem,
             MemLevel::Smem => MemLevel::Dram,
+            // lint: allow(R4): CimSystem construction only ever sets level to RF or SMEM (see at_level)
             other => panic!("no staging level for {other:?}"),
         }
     }

@@ -126,6 +126,7 @@ impl Grid {
     pub fn evaluate(&self, job: &EvalJob) -> EvalResult {
         self.run(std::slice::from_ref(job))
             .pop()
+            // lint: allow(R4): run() maps jobs to results 1:1 and evaluate() hands it exactly one job
             .expect("one result per job")
     }
 

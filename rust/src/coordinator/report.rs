@@ -46,6 +46,7 @@ impl WorkloadReport {
                 let rb = b
                     .iter()
                     .find(|rb| rb.gemm == ra.gemm)
+                    // lint: allow(R4): both result sets come from the same workload list, asserted equal-length above
                     .expect("reference missing a GEMM");
                 (*ra, *rb)
             })

@@ -62,7 +62,7 @@ pub fn fills(nest: &LoopNest, tensor: Tensor, chain: &[usize]) -> Vec<Fill> {
         "chain must be strictly ascending"
     );
     assert!(
-        *chain.last().unwrap() < nest.blocks.len(),
+        chain.last().is_some_and(|&b| b < nest.blocks.len()),
         "chain index out of range"
     );
     chain[1..].iter().map(|&b| fill_at(nest, tensor, b)).collect()

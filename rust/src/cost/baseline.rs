@@ -51,7 +51,7 @@ impl<'a> BaselineModel<'a> {
         };
         // If even the seed tile does not fit, shrink it (tiny caches).
         while t.footprint() > capacity {
-            let max = [t.m, t.n, t.k].into_iter().max().unwrap();
+            let max = t.m.max(t.n).max(t.k);
             if max == 1 {
                 break;
             }

@@ -20,7 +20,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::common::Ctx;
 use crate::arch::{CimSystem, Interconnect, MultiSm, SmemConfig};
@@ -196,7 +196,7 @@ pub fn run_optimality(ctx: &Ctx) -> Result<()> {
         ],
     );
     let results = ctx.run_aligned(&jobs);
-    let sys = spec.system(&ctx.arch).expect("CiM spec builds a system");
+    let sys = spec.system(&ctx.arch).context("CiM spec builds a system")?;
     for (i, g) in shapes.iter().enumerate() {
         let exact = &results[2 * i].metrics;
         let ours = &results[2 * i + 1].metrics;
@@ -266,13 +266,13 @@ pub fn run_duplication(ctx: &Ctx) -> Result<()> {
         let off_mapping = off_row
             .mapping
             .as_deref()
-            .expect("CiM points carry their mapping");
+            .context("CiM points carry their mapping")?;
         assert_eq!(off_mapping.spatial.m_prims, 1, "job/result pairing broke");
         let off = &off_row.metrics;
         let dup = on_row
             .mapping
             .as_deref()
-            .expect("CiM points carry their mapping")
+            .context("CiM points carry their mapping")?
             .spatial
             .m_prims;
         let on = &on_row.metrics;
@@ -325,15 +325,13 @@ pub fn run_interconnect(ctx: &Ctx) -> Result<()> {
         let results = ctx.run_aligned(&jobs);
         for hop in [0.03, 0.06, 0.12] {
             let noc = Interconnect { hop_pj: hop };
-            let rows: Vec<(f64, f64)> = results
-                .iter()
-                .map(|r| {
-                    let m = r.mapping.as_deref().expect("CiM points carry their mapping");
-                    let base = &r.metrics;
-                    let with = base.energy_pj + noc.energy_pj(m);
-                    (base.ops as f64 / base.energy_pj, base.ops as f64 / with)
-                })
-                .collect();
+            let mut rows: Vec<(f64, f64)> = Vec::with_capacity(results.len());
+            for r in &results {
+                let m = r.mapping.as_deref().context("CiM points carry their mapping")?;
+                let base = &r.metrics;
+                let with = base.energy_pj + noc.energy_pj(m);
+                rows.push((base.ops as f64 / base.energy_pj, base.ops as f64 / with));
+            }
             let base: Vec<f64> = rows.iter().map(|r| r.0).collect();
             let with: Vec<f64> = rows.iter().map(|r| r.1).collect();
             let (gb, gw) = (geomean(&base), geomean(&with));
@@ -388,7 +386,7 @@ pub fn run_zoo(ctx: &Ctx) -> Result<()> {
         }
         let tc_rows = engine.run(&jobs_for(&wl.name, &gemms, &SystemSpec::Baseline));
         let tc: Vec<f64> = tc_rows.iter().map(|r| r.metrics.tops_per_watt).collect();
-        let (score, label) = best.expect("at least one system evaluated");
+        let (score, label) = best.context("at least one system evaluated")?;
         let ratio = score / geomean(&tc);
         table.row(vec![
             wl.name.clone(),

@@ -6,7 +6,7 @@
 //! panels overlap on the square shapes (x == v appears in every panel),
 //! which the memo cache scores once.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::common::Ctx;
 use crate::cim::CimPrimitive;
@@ -61,7 +61,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         for &x in &dims {
             for &v in &dims {
                 let g = make(x, v);
-                let r = next.next().expect("one result per job");
+                let r = next.next().context("one result per job")?;
                 assert_eq!(r.gemm, g, "job/result iteration drifted out of lockstep");
                 let m = r.metrics;
                 // Print a readable subset; CSV carries the full grid.

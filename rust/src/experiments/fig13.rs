@@ -7,7 +7,7 @@
 //! level sections, so its points are scored once and replayed from the
 //! cache.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::common::Ctx;
 use crate::arch::{MemLevel, SmemConfig};
@@ -82,7 +82,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         ]);
         for g in &squares {
             // Baseline tensor core.
-            let r = next.next().expect("baseline result");
+            let r = next.next().context("baseline result")?;
             assert_eq!((r.gemm, r.system.as_str()), (*g, "Tensor-core"), "lockstep drift");
             let base = r.metrics;
             table.row(breakdown_row(g, "Tcore", &base));
@@ -92,7 +92,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             // All four primitives.
             for prim in CimPrimitive::all() {
                 let label = prim.short_label();
-                let r = next.next().expect("primitive result");
+                let r = next.next().context("primitive result")?;
                 assert_eq!(r.gemm, *g, "lockstep drift");
                 let m = r.metrics;
                 table.row(breakdown_row(g, label, &m));

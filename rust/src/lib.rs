@@ -46,6 +46,7 @@ pub mod cim;
 pub mod coordinator;
 pub mod cost;
 pub mod experiments;
+pub mod lint;
 pub mod mapping;
 pub mod roofline;
 pub mod runtime;

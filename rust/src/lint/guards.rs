@@ -1,0 +1,399 @@
+//! R3 — the version-guard pass.
+//!
+//! Cached sweeps, shard files, and scenario documents are only valid
+//! while the code that produced them is semantically unchanged; the
+//! repo encodes that as version constants (`MAPPER_VERSION`,
+//! `COST_MODEL_VERSION`, `CACHE_FORMAT_VERSION`,
+//! `SCENARIO_FORMAT_VERSION`) pinned into every fingerprint and file
+//! header. The guard manifest (`lint/guards.toml`) closes the loop:
+//! it records, per guarded module, a content hash of its sources and
+//! the version the constant held when that hash was taken. Change a
+//! guarded module without bumping its constant and the lint fails —
+//! the PR-2/PR-3 "model drifted, caches silently stale" class becomes
+//! a CI error.
+//!
+//! Workflow on a legitimate model change:
+//! 1. edit the guarded module; 2. bump its version constant;
+//! 3. `repro lint --fix-guards` re-records the hash; 4. commit both.
+//! `--fix-guards` refuses step 3 while the constant is un-bumped, so
+//! it cannot be used to launder a drift. For a provably non-semantic
+//! edit (comments, formatting) the escape hatch is deliberate and
+//! manual: paste the computed hash from the diagnostic into the
+//! manifest by hand.
+//!
+//! The manifest is a deliberately tiny TOML subset (flat `[[guard]]`
+//! tables, string/integer/string-array values, `#` comments) so the
+//! pass stays dependency-free.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::lexer::TokenKind;
+use super::rs_files;
+use super::rules::{Diagnostic, Scan};
+use crate::util::hash::fnv1a;
+
+/// One `[[guard]]` manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Guard {
+    /// Short id used in diagnostics (e.g. `mapper`).
+    pub name: String,
+    /// The pinned version constant, e.g. `MAPPER_VERSION`.
+    pub version_const: String,
+    /// File (relative to root) declaring `const <version_const>: u32`.
+    pub version_file: String,
+    /// Files/directories (relative to root) whose `.rs` sources the
+    /// content hash covers.
+    pub paths: Vec<String>,
+    /// Value `version_const` held when `hash` was recorded.
+    pub version: u64,
+    /// fnv1a-64 hex of the guarded sources; `""` = not yet recorded
+    /// (bootstrap sentinel that `--fix-guards` adopts).
+    pub hash: String,
+    /// Line of the `[[guard]]` header in the manifest, for diagnostics.
+    pub line: u32,
+}
+
+/// Result of the guard pass.
+pub struct GuardOutcome {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Whether `--fix-guards` rewrote the manifest.
+    pub rewritten: bool,
+}
+
+/// Run the guard pass. `manifest_rel` is the manifest path relative to
+/// `root` (diagnostics point at it). With `fix`, legitimate bumps and
+/// uninitialized entries are recorded back to the manifest; content
+/// drift without a bump is never fixed automatically.
+pub fn check(root: &Path, manifest_rel: &str, fix: bool) -> Result<GuardOutcome> {
+    let manifest_path = root.join(manifest_rel);
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("guards: reading {}", manifest_path.display()))?;
+    let mut guards = parse(&text).context("guards: parsing manifest")?;
+    let mut diagnostics = Vec::new();
+    let mut dirty = false;
+
+    for guard in &mut guards {
+        let diag = |line: u32, message: String, help: String| Diagnostic {
+            file: manifest_rel.to_string(),
+            line,
+            rule: "R3",
+            message,
+            help,
+        };
+        let actual = module_hash(root, &guard.paths)
+            .with_context(|| format!("guards: hashing module {:?}", guard.name))?;
+        let version_src = std::fs::read_to_string(root.join(&guard.version_file))
+            .with_context(|| format!("guards: reading {}", guard.version_file))?;
+        let Some(version_now) = version_constant(&version_src, &guard.version_const) else {
+            diagnostics.push(diag(
+                guard.line,
+                format!(
+                    "guard {:?}: no `const {}: u32` found in {}",
+                    guard.name, guard.version_const, guard.version_file
+                ),
+                "fix the manifest's version_file/version_const or restore the constant"
+                    .to_string(),
+            ));
+            continue;
+        };
+
+        if guard.hash.is_empty() {
+            // Bootstrap: nothing recorded yet.
+            if fix {
+                guard.hash = actual;
+                guard.version = version_now;
+                dirty = true;
+            } else {
+                diagnostics.push(diag(
+                    guard.line,
+                    format!("guard {:?} has no recorded content hash yet", guard.name),
+                    "run `repro lint --fix-guards` to record the current hash".to_string(),
+                ));
+            }
+        } else if actual == guard.hash {
+            if version_now != guard.version {
+                // Constant changed while content (which includes the
+                // constant's own file only if listed under paths) did
+                // not: the manifest's pinned version is stale.
+                if fix {
+                    guard.version = version_now;
+                    dirty = true;
+                } else {
+                    diagnostics.push(diag(
+                        guard.line,
+                        format!(
+                            "guard {:?}: manifest pins {} = {} but the constant is now {}",
+                            guard.name, guard.version_const, guard.version, version_now
+                        ),
+                        "run `repro lint --fix-guards` to refresh the manifest".to_string(),
+                    ));
+                }
+            }
+        } else if version_now == guard.version {
+            // THE guarded failure: content drifted, constant did not.
+            // Never auto-fixed — even with --fix-guards.
+            diagnostics.push(diag(
+                guard.line,
+                format!(
+                    "guarded module {:?} changed (content hash {} != recorded {}) but {} is still {}",
+                    guard.name, actual, guard.hash, guard.version_const, guard.version
+                ),
+                format!(
+                    "bump {} in {} and run `repro lint --fix-guards`; cached artifacts keyed \
+                     on the old version are stale (for a provably non-semantic edit, paste \
+                     the new hash into the manifest by hand)",
+                    guard.version_const, guard.version_file
+                ),
+            ));
+        } else {
+            // Content changed AND the constant was bumped: legitimate;
+            // just needs recording.
+            if fix {
+                guard.hash = actual;
+                guard.version = version_now;
+                dirty = true;
+            } else {
+                diagnostics.push(diag(
+                    guard.line,
+                    format!(
+                        "guard {:?}: {} bumped to {} — the manifest still records \
+                         version {} / the old content hash",
+                        guard.name, guard.version_const, version_now, guard.version
+                    ),
+                    "run `repro lint --fix-guards` to record the new hash".to_string(),
+                ));
+            }
+        }
+    }
+
+    if dirty {
+        std::fs::write(&manifest_path, encode(&guards))
+            .with_context(|| format!("guards: rewriting {}", manifest_path.display()))?;
+    }
+    Ok(GuardOutcome { diagnostics, rewritten: dirty })
+}
+
+/// Content hash of one guarded module: fnv1a-64 over every `.rs` file
+/// under `paths` in sorted relative-path order, each contributing
+/// `<rel path> NUL <contents> NUL` so file renames and content moves
+/// both change the hash.
+pub fn module_hash(root: &Path, paths: &[String]) -> Result<String> {
+    let mut files = Vec::new();
+    for rel in paths {
+        files.extend(rs_files(root, rel)?);
+    }
+    files.sort();
+    files.dedup();
+    let mut bytes = Vec::new();
+    for rel in &files {
+        let content = std::fs::read(root.join(rel))
+            .with_context(|| format!("guards: reading {rel}"))?;
+        bytes.extend_from_slice(rel.as_bytes());
+        bytes.push(0);
+        bytes.extend_from_slice(&content);
+        bytes.push(0);
+    }
+    Ok(format!("{:016x}", fnv1a(&bytes)))
+}
+
+/// Find `const <name>: u32 = <N>;` in `src` by token scan (so the
+/// constant can live anywhere in the file, but a comment or string
+/// mentioning it does not count).
+pub fn version_constant(src: &str, name: &str) -> Option<u64> {
+    let scan = Scan::new(src);
+    let tok = |p: usize| scan.code.get(p).map(|&i| &scan.tokens[i]);
+    for p in 1..scan.code.len() {
+        let is_decl = tok(p).is_some_and(|t| t.kind == TokenKind::Ident && t.text == name)
+            && tok(p - 1).is_some_and(|t| t.kind == TokenKind::Ident && t.text == "const")
+            && tok(p + 1).is_some_and(|t| t.text == ":")
+            && tok(p + 2).is_some_and(|t| t.text == "u32")
+            && tok(p + 3).is_some_and(|t| t.text == "=");
+        if !is_decl {
+            continue;
+        }
+        let number = tok(p + 4).filter(|t| t.kind == TokenKind::Number)?;
+        return number.text.replace('_', "").parse().ok();
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Manifest encode/decode (flat TOML subset)
+// ---------------------------------------------------------------------------
+
+/// Parse the manifest. Accepts exactly what [`encode`] writes: `#`
+/// comments, `[[guard]]` headers, and `key = value` with quoted
+/// strings, integers, or single-line arrays of quoted strings.
+pub fn parse(text: &str) -> Result<Vec<Guard>> {
+    let mut guards: Vec<Guard> = Vec::new();
+    for (index, raw) in text.lines().enumerate() {
+        let lineno = index as u32 + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[guard]]" {
+            guards.push(Guard {
+                name: String::new(),
+                version_const: String::new(),
+                version_file: String::new(),
+                paths: Vec::new(),
+                version: 0,
+                hash: String::new(),
+                line: lineno,
+            });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("guards.toml:{lineno}: expected `key = value`, got {line:?}");
+        };
+        let Some(guard) = guards.last_mut() else {
+            bail!("guards.toml:{lineno}: key outside a [[guard]] table");
+        };
+        let key = key.trim();
+        let value = value.trim();
+        match key {
+            "name" => guard.name = parse_string(value, lineno)?,
+            "version_const" => guard.version_const = parse_string(value, lineno)?,
+            "version_file" => guard.version_file = parse_string(value, lineno)?,
+            "hash" => guard.hash = parse_string(value, lineno)?,
+            "paths" => guard.paths = parse_string_array(value, lineno)?,
+            "version" => {
+                guard.version = value
+                    .parse()
+                    .with_context(|| format!("guards.toml:{lineno}: bad integer {value:?}"))?;
+            }
+            other => bail!("guards.toml:{lineno}: unknown key {other:?}"),
+        }
+    }
+    for guard in &guards {
+        if guard.name.is_empty()
+            || guard.version_const.is_empty()
+            || guard.version_file.is_empty()
+            || guard.paths.is_empty()
+        {
+            bail!(
+                "guards.toml:{}: guard needs name, version_const, version_file and paths",
+                guard.line
+            );
+        }
+    }
+    Ok(guards)
+}
+
+fn parse_string(value: &str, lineno: u32) -> Result<String> {
+    let inner = value
+        .strip_prefix('"')
+        .and_then(|v| v.strip_suffix('"'))
+        .with_context(|| format!("guards.toml:{lineno}: expected a quoted string, got {value:?}"))?;
+    if inner.contains('"') || inner.contains('\\') {
+        bail!("guards.toml:{lineno}: quotes/escapes unsupported in {value:?}");
+    }
+    Ok(inner.to_string())
+}
+
+fn parse_string_array(value: &str, lineno: u32) -> Result<Vec<String>> {
+    let inner = value
+        .strip_prefix('[')
+        .and_then(|v| v.strip_suffix(']'))
+        .with_context(|| format!("guards.toml:{lineno}: expected [\"…\", …], got {value:?}"))?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(parse_string(part, lineno)?);
+    }
+    if out.is_empty() {
+        bail!("guards.toml:{lineno}: empty paths array");
+    }
+    Ok(out)
+}
+
+/// Serialize guards back to the manifest format (stable field order,
+/// one blank line between entries) so `--fix-guards` rewrites produce
+/// minimal diffs.
+pub fn encode(guards: &[Guard]) -> String {
+    let mut out = String::from(
+        "# repro lint version-guard manifest (rule R3).\n\
+         # hash = fnv1a-64 over every guarded .rs file (sorted rel path NUL contents NUL).\n\
+         # On a model change: bump the version constant, then `repro lint --fix-guards`.\n",
+    );
+    for guard in guards {
+        out.push('\n');
+        out.push_str("[[guard]]\n");
+        out.push_str(&format!("name = \"{}\"\n", guard.name));
+        out.push_str(&format!("version_const = \"{}\"\n", guard.version_const));
+        out.push_str(&format!("version_file = \"{}\"\n", guard.version_file));
+        let paths: Vec<String> = guard.paths.iter().map(|p| format!("\"{p}\"")).collect();
+        out.push_str(&format!("paths = [{}]\n", paths.join(", ")));
+        out.push_str(&format!("version = {}\n", guard.version));
+        out.push_str(&format!("hash = \"{}\"\n", guard.hash));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_round_trips_through_encode_and_parse() {
+        let guards = vec![
+            Guard {
+                name: "mapper".into(),
+                version_const: "MAPPER_VERSION".into(),
+                version_file: "rust/src/mapping/mod.rs".into(),
+                paths: vec!["rust/src/mapping".into()],
+                version: 1,
+                hash: "00112233aabbccdd".into(),
+                line: 5,
+            },
+            Guard {
+                name: "cost-model".into(),
+                version_const: "COST_MODEL_VERSION".into(),
+                version_file: "rust/src/cost/mod.rs".into(),
+                paths: vec!["rust/src/cost".into(), "rust/src/arch".into()],
+                version: 3,
+                hash: String::new(),
+                line: 13,
+            },
+        ];
+        let parsed = parse(&encode(&guards)).expect("encode() output must parse");
+        assert_eq!(parsed.len(), 2);
+        for (a, b) in guards.iter().zip(&parsed) {
+            assert_eq!((&a.name, &a.version_const, &a.version_file), (&b.name, &b.version_const, &b.version_file));
+            assert_eq!((&a.paths, a.version, &a.hash), (&b.paths, b.version, &b.hash));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_manifests() {
+        assert!(parse("name = \"orphan\"\n").is_err(), "key outside table");
+        assert!(parse("[[guard]]\nname = \"x\"\n").is_err(), "missing required keys");
+        assert!(parse("[[guard]]\nbogus = 1\n").is_err(), "unknown key");
+        assert!(parse("[[guard]]\nname = unquoted\n").is_err(), "unquoted string");
+    }
+
+    #[test]
+    fn version_constant_is_found_by_token_scan() {
+        let src = "\
+//! Talks about MAPPER_VERSION: u32 = 9 in a doc comment.
+pub const OTHER: u32 = 7;
+/// const MAPPER_VERSION: u32 = 8 (doc, not code)
+pub const MAPPER_VERSION: u32 = 2;
+";
+        assert_eq!(version_constant(src, "MAPPER_VERSION"), Some(2));
+        assert_eq!(version_constant(src, "OTHER"), Some(7));
+        assert_eq!(version_constant(src, "MISSING"), None);
+    }
+
+    #[test]
+    fn version_constant_handles_underscored_literals() {
+        let src = "pub const CACHE_FORMAT_VERSION: u32 = 1_0;";
+        assert_eq!(version_constant(src, "CACHE_FORMAT_VERSION"), Some(10));
+    }
+}

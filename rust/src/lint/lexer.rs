@@ -1,0 +1,425 @@
+//! A small token-level Rust lexer for the `repro lint` analyzer.
+//!
+//! The pre-lint CI enforcement of this repo's invariants was a shell
+//! `grep` — which cannot tell an identifier from a comment, a format
+//! string from a doc example, or a lifetime from a char literal. This
+//! lexer closes exactly that gap and nothing more: it splits source
+//! text into identifiers, literals, punctuation and comments with line
+//! numbers, handling the constructs that defeat regexes (nested block
+//! comments, raw strings with hash fences, `'a` lifetimes vs `'a'`
+//! chars, escapes). It does **not** parse: the rule engine
+//! ([`super::rules`]) works on adjacency in this token stream, which is
+//! enough for every current rule and keeps the pass dependency-free.
+
+/// Classification of one lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifiers and keywords, including the `_` pattern and raw
+    /// `r#ident` forms.
+    Ident,
+    /// A `'name` lifetime (or loop label).
+    Lifetime,
+    /// Integer or float literal (suffixes included).
+    Number,
+    /// Any string-like literal: `"…"`, `r#"…"#`, `b"…"`, `'c'`, `b'c'`.
+    Str,
+    /// Punctuation. Single characters, except `=>` which lexes as one
+    /// token so match arms are recognizable by adjacency.
+    Punct,
+    /// Line or block comment (text includes the delimiters). Kept in
+    /// the stream because `// lint: allow(...)` markers live here.
+    Comment,
+}
+
+/// One token: kind, verbatim source text, and 1-based start line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Token<'a> {
+    pub kind: TokenKind,
+    pub text: &'a str,
+    pub line: u32,
+}
+
+/// Character cursor over the source with line tracking.
+struct Cursor<'a> {
+    src: &'a str,
+    pos: usize,
+    line: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self) -> Option<char> {
+        self.src[self.pos..].chars().next()
+    }
+
+    fn peek_at(&self, n: usize) -> Option<char> {
+        self.src[self.pos..].chars().nth(n)
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += c.len_utf8();
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    /// Consume `c` if it is next.
+    fn eat(&mut self, c: char) -> bool {
+        if self.peek() == Some(c) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens. Never fails: unexpected bytes become `Punct`
+/// tokens, unterminated literals run to end of input — a *lint* must
+/// degrade gracefully on code it cannot fully understand, because the
+/// compiler will reject truly malformed source anyway.
+pub fn lex(src: &str) -> Vec<Token<'_>> {
+    let mut cur = Cursor { src, pos: 0, line: 1 };
+    let mut out = Vec::new();
+    while let Some(c) = cur.peek() {
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        let start = cur.pos;
+        let line = cur.line;
+        let kind = scan_token(&mut cur, c);
+        out.push(Token {
+            kind,
+            text: &src[start..cur.pos],
+            line,
+        });
+    }
+    out
+}
+
+/// Scan one token starting at `c` (not yet consumed).
+fn scan_token(cur: &mut Cursor<'_>, c: char) -> TokenKind {
+    match c {
+        '/' if cur.peek_at(1) == Some('/') => {
+            while let Some(n) = cur.peek() {
+                if n == '\n' {
+                    break;
+                }
+                cur.bump();
+            }
+            TokenKind::Comment
+        }
+        '/' if cur.peek_at(1) == Some('*') => {
+            cur.bump();
+            cur.bump();
+            block_comment_body(cur);
+            TokenKind::Comment
+        }
+        '"' => {
+            cur.bump();
+            quoted_body(cur, '"');
+            TokenKind::Str
+        }
+        'r' if matches!(cur.peek_at(1), Some('"' | '#')) => raw_prefixed(cur),
+        'b' if matches!(cur.peek_at(1), Some('"' | '\'' | 'r')) => byte_prefixed(cur, c),
+        '\'' => {
+            cur.bump();
+            char_or_lifetime(cur)
+        }
+        '=' if cur.peek_at(1) == Some('>') => {
+            cur.bump();
+            cur.bump();
+            TokenKind::Punct
+        }
+        _ if c.is_ascii_digit() => {
+            number_body(cur);
+            TokenKind::Number
+        }
+        _ if is_ident_start(c) => {
+            ident_body(cur);
+            TokenKind::Ident
+        }
+        _ => {
+            cur.bump();
+            TokenKind::Punct
+        }
+    }
+}
+
+/// Body of a `/* … */` comment (delimiters of the outermost level
+/// already consumed). Rust block comments nest.
+fn block_comment_body(cur: &mut Cursor<'_>) {
+    let mut depth = 1u32;
+    while depth > 0 {
+        match cur.bump() {
+            None => break,
+            Some('*') if cur.peek() == Some('/') => {
+                cur.bump();
+                depth -= 1;
+            }
+            Some('/') if cur.peek() == Some('*') => {
+                cur.bump();
+                depth += 1;
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+/// Body of an escaped quoted literal up to the closing `quote`
+/// (opening quote already consumed).
+fn quoted_body(cur: &mut Cursor<'_>, quote: char) {
+    while let Some(c) = cur.bump() {
+        if c == '\\' {
+            cur.bump();
+        } else if c == quote {
+            break;
+        }
+    }
+}
+
+/// `r"…"`, `r#"…"#`, or a raw identifier `r#ident` (leading `r` not
+/// yet consumed).
+fn raw_prefixed(cur: &mut Cursor<'_>) -> TokenKind {
+    cur.bump(); // the r
+    let mut hashes = 0usize;
+    while cur.peek() == Some('#') {
+        // `r#ident` (raw identifier) vs `r#"…"#` (one-hash raw string):
+        // decided by what follows the hash run.
+        if hashes == 0 {
+            if let Some(next) = cur.peek_at(1) {
+                if is_ident_start(next) {
+                    cur.bump();
+                    ident_body(cur);
+                    return TokenKind::Ident;
+                }
+            }
+        }
+        cur.bump();
+        hashes += 1;
+    }
+    if !cur.eat('"') {
+        // Lone `r#` with nothing sensible after it; treat the run as an
+        // identifier and move on.
+        return TokenKind::Ident;
+    }
+    raw_string_body(cur, hashes);
+    TokenKind::Str
+}
+
+/// `b"…"`, `b'…'`, `br#"…"#` (leading `b` not yet consumed).
+fn byte_prefixed(cur: &mut Cursor<'_>, _b: char) -> TokenKind {
+    cur.bump(); // the b
+    match cur.peek() {
+        Some('"') => {
+            cur.bump();
+            quoted_body(cur, '"');
+            TokenKind::Str
+        }
+        Some('\'') => {
+            cur.bump();
+            quoted_body(cur, '\'');
+            TokenKind::Str
+        }
+        Some('r') => {
+            cur.bump();
+            let mut hashes = 0usize;
+            while cur.eat('#') {
+                hashes += 1;
+            }
+            if cur.eat('"') {
+                raw_string_body(cur, hashes);
+            }
+            TokenKind::Str
+        }
+        _ => TokenKind::Ident, // plain identifier starting with b
+    }
+}
+
+/// Raw-string body: runs to `"` followed by `hashes` hash marks
+/// (opening fence already consumed). No escapes inside.
+fn raw_string_body(cur: &mut Cursor<'_>, hashes: usize) {
+    'scan: while let Some(c) = cur.bump() {
+        if c != '"' {
+            continue;
+        }
+        for n in 0..hashes {
+            if cur.peek_at(0) != Some('#') {
+                // Not the fence — keep scanning; the hashes peeked so
+                // far were content and stay unconsumed.
+                let _ = n;
+                continue 'scan;
+            }
+            cur.bump();
+        }
+        break;
+    }
+}
+
+/// After a consumed `'`: disambiguate char literal from lifetime. The
+/// classic rule: `'a` followed by another `'` is a char (`'a'`);
+/// otherwise an identifier run after `'` is a lifetime/label.
+fn char_or_lifetime(cur: &mut Cursor<'_>) -> TokenKind {
+    match cur.peek() {
+        Some('\\') => {
+            quoted_body(cur, '\'');
+            TokenKind::Str
+        }
+        Some(c) if is_ident_start(c) => {
+            ident_body(cur);
+            if cur.eat('\'') {
+                TokenKind::Str
+            } else {
+                TokenKind::Lifetime
+            }
+        }
+        Some(_) => {
+            // Non-identifier char literal: `' '`, `'{'`, `'1'`.
+            cur.bump();
+            cur.eat('\'');
+            TokenKind::Str
+        }
+        None => TokenKind::Punct,
+    }
+}
+
+fn ident_body(cur: &mut Cursor<'_>) {
+    while let Some(c) = cur.peek() {
+        if !is_ident_continue(c) {
+            break;
+        }
+        cur.bump();
+    }
+}
+
+/// Number literal. A `.` joins the token only when a digit follows, so
+/// range expressions (`0..n`) do not fuse into the number.
+fn number_body(cur: &mut Cursor<'_>) {
+    while let Some(c) = cur.peek() {
+        if is_ident_continue(c) {
+            cur.bump();
+        } else if c == '.' && cur.peek_at(1).is_some_and(|d| d.is_ascii_digit()) {
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, &str)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_numbers_punct() {
+        assert_eq!(
+            kinds("let x = 42;"),
+            vec![
+                (TokenKind::Ident, "let"),
+                (TokenKind::Ident, "x"),
+                (TokenKind::Punct, "="),
+                (TokenKind::Number, "42"),
+                (TokenKind::Punct, ";"),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_are_tokens_not_code() {
+        let toks = kinds("a // unwrap() in a comment\nb /* _ => */ c");
+        assert_eq!(toks[0], (TokenKind::Ident, "a"));
+        assert_eq!(toks[1], (TokenKind::Comment, "// unwrap() in a comment"));
+        assert_eq!(toks[2], (TokenKind::Ident, "b"));
+        assert_eq!(toks[3], (TokenKind::Comment, "/* _ => */"));
+        assert_eq!(toks[4], (TokenKind::Ident, "c"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("x /* outer /* inner */ still comment */ y");
+        assert_eq!(toks.len(), 3);
+        assert_eq!(toks[0], (TokenKind::Ident, "x"));
+        assert_eq!(toks[1].0, TokenKind::Comment);
+        assert_eq!(toks[2], (TokenKind::Ident, "y"));
+    }
+
+    #[test]
+    fn strings_swallow_code_like_text() {
+        let toks = kinds(r#"let s = "match x { _ => panic!() }";"#);
+        let strs: Vec<_> = toks.iter().filter(|t| t.0 == TokenKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(!toks.iter().any(|t| t.0 == TokenKind::Ident && t.1 == "panic"));
+    }
+
+    #[test]
+    fn escaped_and_raw_strings() {
+        let toks = kinds(r#"("a\"b", r"c\", r#"d " e"#)"#);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.0 == TokenKind::Str)
+            .map(|t| t.1)
+            .collect();
+        assert_eq!(strs, vec![r#""a\"b""#, r#"r"c\""#, r###"r#"d " e"#"###]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Lifetime && t.1 == "'a"));
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Str && t.1 == "'x'"));
+        let toks = kinds(r"('\n', '\u{0008}', ' ', '{')");
+        let chars = toks.iter().filter(|t| t.0 == TokenKind::Str).count();
+        assert_eq!(chars, 4);
+    }
+
+    #[test]
+    fn fat_arrow_is_one_token() {
+        let toks = kinds("match x { _ => 1, y if y >= 2 => 3 }");
+        let arrows = toks.iter().filter(|t| t.1 == "=>").count();
+        assert_eq!(arrows, 2);
+        // `>=` stays two tokens and never eats into an arrow.
+        assert!(toks.iter().any(|t| t.1 == ">"));
+    }
+
+    #[test]
+    fn ranges_do_not_fuse_into_numbers() {
+        let toks = kinds("for i in 0..n { v[i] = 1.5e3; }");
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Number && t.1 == "0"));
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Number && t.1 == "1.5e3"));
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Ident && t.1 == "n"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_tokens() {
+        let src = "a\n\"two\nline string\"\nb /* block\ncomment */ c";
+        let toks = lex(src);
+        let by_text: Vec<(u32, &str)> = toks.iter().map(|t| (t.line, t.text)).collect();
+        assert_eq!(by_text[0], (1, "a"));
+        assert_eq!(by_text[1].0, 2, "string starts on line 2");
+        assert_eq!(by_text[2], (4, "b"));
+        assert_eq!(by_text[4], (5, "c"), "line count includes the block comment's newline");
+    }
+
+    #[test]
+    fn byte_literals_and_raw_idents() {
+        let toks = kinds(r##"(b"bytes", b'\t', r#match, br#"raw"#)"##);
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Str && t.1 == "b\"bytes\""));
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Str && t.1 == "b'\\t'"));
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Ident && t.1 == "r#match"));
+        assert!(toks.iter().any(|t| t.0 == TokenKind::Str && t.1 == "br#\"raw\"#"));
+    }
+}

@@ -1,0 +1,199 @@
+//! `repro lint` — a dependency-free static-analysis pass over this
+//! repo's own Rust sources.
+//!
+//! The reproduction's core promise is byte-identical results across
+//! caches, shards, processes and batch no-ops. That rests on a small
+//! set of invariants (bit-exact float round-trips, engine-only
+//! evaluation in experiments, version constants bumped with their
+//! models) that used to be enforced by CI greps and reviewer memory.
+//! This module promotes them to first-class, fixture-tested rules:
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | R1 | `experiments/` never constructs `CostModel`/`BaselineModel` directly |
+//! | R2 | no lossy float formatting in fingerprint/persist/canonical code |
+//! | R3 | guarded modules bump their version constant when content changes |
+//! | R4 | no `unwrap()`/`expect()`/`panic!` on the library path |
+//! | R5 | no wildcard `_ =>` arms in persist/canonical decode code |
+//! | R6 | no `HashMap`/`HashSet` in deterministic-output code |
+//!
+//! R1/R2/R4–R6 are token-level checks ([`rules`], over the [`lexer`]
+//! stream); R3 is a tree-level pass against the version-guard manifest
+//! (`guards.toml`, [`guards`]). Sites with a locally provable
+//! justification carry `// lint: allow(Rn): <reason>` markers —
+//! mandatory reason, stale markers are themselves errors.
+//!
+//! Entry point: [`run`] over a repo root (the directory containing
+//! `rust/src`), surfaced as `repro lint [--fix-guards] [path]` and a
+//! CI job. The pass scans `rust/src` only: integration tests, benches
+//! and `build.rs`-style scripts are intentionally out of scope.
+
+pub mod guards;
+pub mod lexer;
+pub mod rules;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use rules::{check_source, Diagnostic, RULES, RULE_IDS};
+
+/// Manifest location relative to the scanned root.
+pub const GUARDS_MANIFEST: &str = "rust/src/lint/guards.toml";
+
+/// Knobs for one lint run.
+#[derive(Debug, Clone)]
+pub struct LintOptions {
+    /// Rewrite the guard manifest after a legitimate version bump
+    /// (`--fix-guards`). Never adopts a content change whose version
+    /// constant is un-bumped.
+    pub fix_guards: bool,
+    /// Run the R3 guard pass. Off for pure rule fixtures (temp trees
+    /// without a manifest).
+    pub check_guards: bool,
+}
+
+impl Default for LintOptions {
+    fn default() -> Self {
+        LintOptions { fix_guards: false, check_guards: true }
+    }
+}
+
+/// Outcome of one lint run over a tree.
+#[derive(Debug)]
+pub struct LintReport {
+    /// All findings, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Whether `--fix-guards` rewrote the manifest.
+    pub guards_rewritten: bool,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-readable report: one block per diagnostic plus a summary
+    /// line (always last).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for diag in &self.diagnostics {
+            out.push_str(&diag.render());
+            out.push('\n');
+        }
+        if self.guards_rewritten {
+            out.push_str("lint: guard manifest rewritten\n");
+        }
+        if self.clean() {
+            out.push_str(&format!("lint: {} files, clean\n", self.files));
+        } else {
+            out.push_str(&format!(
+                "lint: {} issue(s) across {} files\n",
+                self.diagnostics.len(),
+                self.files
+            ));
+        }
+        out
+    }
+}
+
+/// Lint the tree rooted at `root` (must contain `rust/src`). Scans
+/// every `.rs` file in deterministic path order, then runs the guard
+/// pass. Returns an error only for infrastructure failures (unreadable
+/// files, corrupt manifest) — findings are data, in the report.
+pub fn run(root: &Path, opts: &LintOptions) -> Result<LintReport> {
+    let files = rs_files(root, "rust/src")?;
+    if files.is_empty() {
+        bail!("lint: no .rs files under {}/rust/src", root.display());
+    }
+    let mut diagnostics = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("lint: reading {rel}"))?;
+        diagnostics.extend(rules::check_source(rel, &src));
+    }
+    let mut guards_rewritten = false;
+    if opts.check_guards {
+        if root.join(GUARDS_MANIFEST).is_file() {
+            let outcome = guards::check(root, GUARDS_MANIFEST, opts.fix_guards)?;
+            diagnostics.extend(outcome.diagnostics);
+            guards_rewritten = outcome.rewritten;
+        } else {
+            diagnostics.push(Diagnostic {
+                file: GUARDS_MANIFEST.to_string(),
+                line: 0,
+                rule: "R3",
+                message: "version-guard manifest is missing".to_string(),
+                help: "restore rust/src/lint/guards.toml from git (R3 cannot run without it)"
+                    .to_string(),
+            });
+        }
+    }
+    diagnostics.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    Ok(LintReport { diagnostics, files: files.len(), guards_rewritten })
+}
+
+/// Every `.rs` file under `root/rel` (a file or directory), as sorted
+/// `/`-separated paths relative to `root`. Deterministic so lint
+/// output and guard hashes never depend on directory-entry order.
+pub fn rs_files(root: &Path, rel: &str) -> Result<Vec<String>> {
+    let full = root.join(rel);
+    if full.is_file() {
+        return Ok(if rel.ends_with(".rs") { vec![rel.to_string()] } else { Vec::new() });
+    }
+    if !full.is_dir() {
+        bail!("lint: {rel:?} does not exist under {}", root.display());
+    }
+    let mut names = Vec::new();
+    for entry in
+        std::fs::read_dir(&full).with_context(|| format!("lint: listing {rel}"))?
+    {
+        let entry = entry.with_context(|| format!("lint: listing {rel}"))?;
+        names.push(entry.file_name().to_string_lossy().into_owned());
+    }
+    names.sort();
+    let mut out = Vec::new();
+    for name in names {
+        let child_rel = format!("{rel}/{name}");
+        if full.join(&name).is_dir() {
+            out.extend(rs_files(root, &child_rel)?);
+        } else if name.ends_with(".rs") {
+            out.push(child_rel);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rs_files_walks_sorted_and_recursive() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = rs_files(root, "rust/src/lint").expect("lint dir exists");
+        assert_eq!(
+            files,
+            vec![
+                "rust/src/lint/guards.rs",
+                "rust/src/lint/lexer.rs",
+                "rust/src/lint/mod.rs",
+                "rust/src/lint/rules.rs",
+            ]
+        );
+        let single = rs_files(root, "rust/src/lib.rs").expect("file form");
+        assert_eq!(single, vec!["rust/src/lib.rs"]);
+        assert!(rs_files(root, "rust/src/nonexistent").is_err());
+    }
+
+    #[test]
+    fn report_renders_summary_last() {
+        let report = LintReport { diagnostics: Vec::new(), files: 3, guards_rewritten: false };
+        assert!(report.clean());
+        assert!(report.render().ends_with("lint: 3 files, clean\n"));
+    }
+}

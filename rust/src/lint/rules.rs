@@ -1,0 +1,715 @@
+//! The rule engine: token-level checks over one file at a time.
+//!
+//! Each rule pins one of the repo's determinism/correctness invariants
+//! (see `lint/README.md` for the full table). Rules fire on token
+//! adjacency in the [`super::lexer`] stream — no parsing — which keeps
+//! them dependency-free and fast, at the cost of being deliberately
+//! conservative: a rule flags every syntactic occurrence in its scope
+//! and sites that are genuinely fine carry an inline allow marker.
+//!
+//! ## Allow markers
+//!
+//! A site is exempted with a line comment naming the rule **and** a
+//! reason (the reason is mandatory — an exemption nobody can justify
+//! is a violation):
+//!
+//! ```text
+//! // lint: allow(R4): poisoned lock means a sibling thread panicked
+//! ```
+//!
+//! The marker suppresses that rule on the marker's own line and on the
+//! next code line (so it works both trailing a statement and on the
+//! line above it; a run of comment lines between marker and code is
+//! skipped). Malformed markers, unknown rule ids, and markers that
+//! never matched a diagnostic are themselves diagnostics — allowlists
+//! cannot silently rot.
+//!
+//! Doc comments (`///`, `//!`) are never markers, so rule docs can
+//! show the syntax without exempting anything.
+
+use super::lexer::{lex, Token, TokenKind};
+
+/// One finding: where, which rule, what, and how to fix it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    pub line: u32,
+    /// Rule id (`R1`..`R6`, or `lint` for marker hygiene findings).
+    pub rule: &'static str,
+    pub message: String,
+    /// Suggested fix, one line.
+    pub help: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}] {}\n    fix: {}",
+            self.file, self.line, self.rule, self.message, self.help
+        )
+    }
+}
+
+/// Every rule id the analyzer knows, including the guard pass (R3),
+/// which runs per-tree in [`super::guards`] rather than per-file here.
+pub const RULE_IDS: &[&str] = &["R1", "R2", "R3", "R4", "R5", "R6"];
+
+/// One token-level rule.
+pub struct Rule {
+    pub id: &'static str,
+    /// One-line invariant statement (doc table / `repro lint --rules`).
+    pub summary: &'static str,
+    /// Suggested fix attached to every diagnostic of this rule.
+    pub fix: &'static str,
+    /// Scope predicate over the `/`-separated path relative to root.
+    pub applies: fn(&str) -> bool,
+    /// Whether `#[test]` / `#[cfg(test)]` regions are exempt.
+    pub skip_tests: bool,
+    /// Emits `(token_index, message)` pairs for every occurrence.
+    pub check: fn(&Scan<'_>, &mut Vec<(usize, String)>),
+}
+
+/// Files whose string output feeds fingerprints, cache files, or
+/// canonical serializations — where formatting must be bit-exact (R2)
+/// and decoding must be exhaustive (R5). `sweep/output.rs` is absent
+/// on purpose: its CSVs are *display* artifacts with intentional
+/// rounding; byte-identity of those files is pinned by the golden
+/// tests, not by bit-exact floats.
+const PERSIST_PATHS: &[&str] = &[
+    "rust/src/sweep/persist.rs",
+    "rust/src/sweep/shard.rs",
+    "rust/src/sweep/cache.rs",
+    "rust/src/mapping/canonical.rs",
+    "rust/src/scenario/mod.rs",
+];
+
+/// PERSIST_PATHS minus `sweep/cache.rs` — the cache's in-memory maps
+/// are `HashMap` by design (hot path), and `snapshot_stamped()` sorts
+/// before anything escapes, so R6 pins the sinks around it instead.
+const DECODE_PATHS: &[&str] = &[
+    "rust/src/sweep/persist.rs",
+    "rust/src/sweep/shard.rs",
+    "rust/src/mapping/canonical.rs",
+    "rust/src/scenario/mod.rs",
+];
+
+/// Code that writes deterministic output: encoders, CSV/JSON sinks,
+/// and the hash that fingerprints them.
+const OUTPUT_SINK_PATHS: &[&str] = &[
+    "rust/src/sweep/persist.rs",
+    "rust/src/sweep/shard.rs",
+    "rust/src/sweep/output.rs",
+    "rust/src/mapping/canonical.rs",
+    "rust/src/scenario/mod.rs",
+    "rust/src/scenario/exec.rs",
+    "rust/src/scenario/orchestrate.rs",
+    "rust/src/util/json.rs",
+    "rust/src/util/csv.rs",
+    "rust/src/util/hash.rs",
+];
+
+fn in_experiments(path: &str) -> bool {
+    path.starts_with("rust/src/experiments/")
+}
+
+fn in_persist(path: &str) -> bool {
+    PERSIST_PATHS.contains(&path) || path == "rust/src/util/json.rs" || path == "rust/src/util/hash.rs"
+}
+
+fn in_decode(path: &str) -> bool {
+    DECODE_PATHS.contains(&path)
+}
+
+fn in_output_sink(path: &str) -> bool {
+    OUTPUT_SINK_PATHS.contains(&path)
+}
+
+fn library_path(path: &str) -> bool {
+    path != "rust/src/main.rs"
+}
+
+/// The token-level rules. R3 (version guards) is tree-level and lives
+/// in [`super::guards`].
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "R1",
+        summary: "experiments/ must not construct CostModel/BaselineModel directly",
+        fix: "evaluate through sweep::SweepEngine (MapperChoice axis) or coordinator::jobs \
+              so results flow through the memoized, fingerprinted path",
+        applies: in_experiments,
+        // The retired CI grep also covered test code, and golden
+        // equivalence only holds if tests use the engine too.
+        skip_tests: false,
+        check: check_cost_model_use,
+    },
+    Rule {
+        id: "R2",
+        summary: "no lossy float formatting in fingerprint/persist/canonical code",
+        fix: "format floats as f64::to_bits hex (see sweep::persist) so decode round-trips \
+              bit-exactly; decimal rounding belongs in display sinks only",
+        applies: in_persist,
+        skip_tests: true,
+        check: check_lossy_float_format,
+    },
+    Rule {
+        id: "R4",
+        summary: "no unwrap()/expect()/panic! on the library path",
+        fix: "return a typed error (anyhow context) or add `// lint: allow(R4): <reason>` \
+              if the invariant is locally provable",
+        applies: library_path,
+        skip_tests: true,
+        check: check_panics,
+    },
+    Rule {
+        id: "R5",
+        summary: "no wildcard `_ =>` match arms in persist/canonical decode code",
+        fix: "name every variant (or use an explicit or-pattern) so adding a variant is a \
+              compile error here instead of a silent aliasing bug",
+        applies: in_decode,
+        skip_tests: true,
+        check: check_wildcard_arms,
+    },
+    Rule {
+        id: "R6",
+        summary: "no HashMap/HashSet in deterministic-output code",
+        fix: "use BTreeMap/BTreeSet, or collect and sort explicitly before emitting",
+        applies: in_output_sink,
+        skip_tests: true,
+        check: check_hash_collections,
+    },
+];
+
+/// Pre-lexed view of one file that checks operate on.
+pub struct Scan<'a> {
+    pub tokens: Vec<Token<'a>>,
+    /// Indices of non-comment tokens, in order: rules reason about
+    /// *code* adjacency through this list.
+    pub code: Vec<usize>,
+}
+
+impl<'a> Scan<'a> {
+    pub fn new(src: &'a str) -> Self {
+        let tokens = lex(src);
+        let code = (0..tokens.len())
+            .filter(|&i| tokens[i].kind != TokenKind::Comment)
+            .collect();
+        Scan { tokens, code }
+    }
+
+    /// The token at code position `p`, if any.
+    fn at(&self, p: usize) -> Option<&Token<'a>> {
+        self.code.get(p).map(|&i| &self.tokens[i])
+    }
+
+    fn is_punct(&self, p: usize, text: &str) -> bool {
+        self.at(p).is_some_and(|t| t.kind == TokenKind::Punct && t.text == text)
+    }
+}
+
+fn check_cost_model_use(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
+    for p in 0..scan.code.len() {
+        let Some(t) = scan.at(p) else { continue };
+        if t.kind == TokenKind::Ident && (t.text == "CostModel" || t.text == "BaselineModel") {
+            out.push((
+                scan.code[p],
+                format!("direct `{}` use in experiments/ bypasses the sweep engine", t.text),
+            ));
+        }
+    }
+}
+
+/// A string literal contains a lossy float format spec: `{:.N…}` or
+/// `{:e}`/`{:E}`. Detected inside the literal text so comments and
+/// identifiers can mention the syntax freely.
+fn lossy_float_spec(text: &str) -> Option<&'static str> {
+    let bytes = text.as_bytes();
+    for (i, w) in bytes.windows(2).enumerate() {
+        if w == b":." && bytes.get(i + 2).is_some_and(u8::is_ascii_digit) {
+            return Some("{:.N}");
+        }
+        if (w == b":e" || w == b":E") && bytes.get(i + 2) == Some(&b'}') {
+            return Some("{:e}");
+        }
+    }
+    None
+}
+
+fn check_lossy_float_format(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
+    for p in 0..scan.code.len() {
+        let Some(t) = scan.at(p) else { continue };
+        if t.kind != TokenKind::Str {
+            continue;
+        }
+        if let Some(spec) = lossy_float_spec(t.text) {
+            out.push((
+                scan.code[p],
+                format!("`{spec}` float formatting in persist-path string literal"),
+            ));
+        }
+    }
+}
+
+fn check_panics(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
+    for p in 0..scan.code.len() {
+        let Some(t) = scan.at(p) else { continue };
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        match t.text {
+            "unwrap" | "expect" => {
+                let method_call = p > 0
+                    && scan.is_punct(p - 1, ".")
+                    && scan.is_punct(p + 1, "(");
+                if method_call {
+                    out.push((scan.code[p], format!("`.{}()` on the library path", t.text)));
+                }
+            }
+            "panic" => {
+                if scan.is_punct(p + 1, "!") {
+                    out.push((scan.code[p], "`panic!` on the library path".to_string()));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn check_wildcard_arms(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
+    for p in 0..scan.code.len() {
+        let Some(t) = scan.at(p) else { continue };
+        if t.kind == TokenKind::Ident && t.text == "_" && self_is_arrow(scan, p + 1) {
+            out.push((
+                scan.code[p],
+                "wildcard `_ =>` arm in decode/serialization code".to_string(),
+            ));
+        }
+    }
+}
+
+fn self_is_arrow(scan: &Scan<'_>, p: usize) -> bool {
+    scan.is_punct(p, "=>")
+}
+
+fn check_hash_collections(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
+    for p in 0..scan.code.len() {
+        let Some(t) = scan.at(p) else { continue };
+        if t.kind == TokenKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            out.push((
+                scan.code[p],
+                format!("`{}` in deterministic-output code (iteration order varies)", t.text),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Test-region detection
+// ---------------------------------------------------------------------------
+
+/// Per-token mask: `true` for tokens inside an item annotated
+/// `#[test]` or `#[cfg(test)]` (attributes included). Found by token
+/// scan: match the attribute, skip any further attributes, then cover
+/// through the item's brace-matched body (or its terminating `;`).
+pub fn test_region_mask(scan: &Scan<'_>) -> Vec<bool> {
+    let mut mask = vec![false; scan.tokens.len()];
+    let mut p = 0;
+    while p < scan.code.len() {
+        let Some(end) = test_item_end(scan, p) else {
+            p += 1;
+            continue;
+        };
+        let lo = scan.code[p];
+        let hi = scan.code[end.min(scan.code.len() - 1)];
+        for slot in mask.iter_mut().take(hi + 1).skip(lo) {
+            *slot = true;
+        }
+        p = end + 1;
+    }
+    mask
+}
+
+/// If code position `p` starts a test attribute, return the code
+/// position of the annotated item's last token.
+fn test_item_end(scan: &Scan<'_>, p: usize) -> Option<usize> {
+    if !is_test_attr(scan, p) {
+        return None;
+    }
+    let mut q = attr_close(scan, p)? + 1;
+    // Skip any further attributes on the same item (`#[allow(…)]` etc).
+    while scan.is_punct(q, "#") && scan.is_punct(q + 1, "[") {
+        q = attr_close(scan, q)? + 1;
+    }
+    // Find the item body: first `{` or `;` outside parens/brackets
+    // (a fn's argument list, generics' brackets).
+    let mut depth = 0i32;
+    while let Some(t) = scan.at(q) {
+        if t.kind == TokenKind::Punct {
+            match t.text {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                ";" if depth == 0 => return Some(q),
+                "{" if depth == 0 => return brace_close(scan, q),
+                _ => {}
+            }
+        }
+        q += 1;
+    }
+    // Unterminated item: cover to end of file.
+    Some(scan.code.len().saturating_sub(1))
+}
+
+/// Is `#[test]` or `#[cfg(test)]` at code position `p`?
+fn is_test_attr(scan: &Scan<'_>, p: usize) -> bool {
+    if !(scan.is_punct(p, "#") && scan.is_punct(p + 1, "[")) {
+        return false;
+    }
+    let Some(close) = attr_close(scan, p) else { return false };
+    let inner: Vec<&str> = (p + 2..close)
+        .filter_map(|q| scan.at(q).map(|t| t.text))
+        .collect();
+    inner == ["test"] || inner == ["cfg", "(", "test", ")"]
+}
+
+/// Code position of the `]` closing the attribute whose `#` is at `p`.
+fn attr_close(scan: &Scan<'_>, p: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut q = p + 1;
+    while let Some(t) = scan.at(q) {
+        if t.kind == TokenKind::Punct {
+            match t.text {
+                "[" => depth += 1,
+                "]" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(q);
+                    }
+                }
+                _ => {}
+            }
+        }
+        q += 1;
+    }
+    None
+}
+
+/// Code position of the `}` matching the `{` at code position `open`.
+fn brace_close(scan: &Scan<'_>, open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut q = open;
+    while let Some(t) = scan.at(q) {
+        if t.kind == TokenKind::Punct {
+            match t.text {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(q);
+                    }
+                }
+                _ => {}
+            }
+        }
+        q += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Allow markers
+// ---------------------------------------------------------------------------
+
+struct Allow {
+    rule: String,
+    /// Line the marker comment starts on.
+    marker_line: u32,
+    /// First code line at or after the marker (trailing comment: the
+    /// marker's own line; leading comment: the line below the comment
+    /// block). Diagnostics on either line are suppressed.
+    anchor_line: u32,
+    used: bool,
+}
+
+/// Extract allow markers; malformed ones become diagnostics directly.
+fn parse_allows(file: &str, scan: &Scan<'_>) -> (Vec<Allow>, Vec<Diagnostic>) {
+    let mut allows = Vec::new();
+    let mut diags = Vec::new();
+    for (i, t) in scan.tokens.iter().enumerate() {
+        if t.kind != TokenKind::Comment {
+            continue;
+        }
+        let Some(body) = marker_body(t.text) else { continue };
+        let meta = |line: u32, message: String| Diagnostic {
+            file: file.to_string(),
+            line,
+            rule: "lint",
+            message,
+            help: "marker syntax: `// lint: allow(R4): <reason>` — rule id in parens, \
+                   then a colon and a non-empty reason"
+                .to_string(),
+        };
+        match parse_marker(body) {
+            Ok((rule, _reason)) => {
+                if !RULE_IDS.contains(&rule) {
+                    diags.push(meta(t.line, format!("allow marker names unknown rule {rule:?}")));
+                    continue;
+                }
+                // Anchor on the next code token, skipping the rest of
+                // a multi-line comment block.
+                let anchor_line = scan.tokens[i + 1..]
+                    .iter()
+                    .find(|n| n.kind != TokenKind::Comment)
+                    .map_or(t.line, |n| n.line);
+                allows.push(Allow {
+                    rule: rule.to_string(),
+                    marker_line: t.line,
+                    anchor_line,
+                    used: false,
+                });
+            }
+            Err(why) => diags.push(meta(t.line, format!("malformed lint marker: {why}"))),
+        }
+    }
+    (allows, diags)
+}
+
+/// If `comment` is a marker comment, return the text after `lint:`.
+/// Only plain `//` comments qualify — doc comments never do.
+fn marker_body(comment: &str) -> Option<&str> {
+    let rest = comment.strip_prefix("//")?;
+    if rest.starts_with('/') || rest.starts_with('!') {
+        return None; // doc comment
+    }
+    let rest = rest.trim_start();
+    rest.strip_prefix("lint:")
+}
+
+/// Parse `allow(Rn): reason` (input already past `lint:`).
+fn parse_marker(body: &str) -> Result<(&str, &str), String> {
+    let body = body.trim();
+    let Some(rest) = body.strip_prefix("allow(") else {
+        return Err(format!("expected `allow(<rule>)`, got {body:?}"));
+    };
+    let Some(close) = rest.find(')') else {
+        return Err("unclosed `allow(` marker".to_string());
+    };
+    let rule = rest[..close].trim();
+    let tail = rest[close + 1..].trim_start();
+    let Some(reason) = tail.strip_prefix(':') else {
+        return Err("missing `: <reason>` after allow(…)".to_string());
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Err("empty reason — justify the exemption".to_string());
+    }
+    Ok((rule, reason))
+}
+
+// ---------------------------------------------------------------------------
+// Per-file driver
+// ---------------------------------------------------------------------------
+
+/// Run every applicable rule over one file's source. `file` is the
+/// `/`-separated path relative to the scanned root (scopes key off
+/// it). Returns diagnostics sorted by line, then rule.
+pub fn check_source(file: &str, src: &str) -> Vec<Diagnostic> {
+    let scan = Scan::new(src);
+    let mask = test_region_mask(&scan);
+    let (mut allows, mut diags) = parse_allows(file, &scan);
+    for rule in RULES {
+        if !(rule.applies)(file) {
+            continue;
+        }
+        let mut raw = Vec::new();
+        (rule.check)(&scan, &mut raw);
+        for (token_index, message) in raw {
+            if rule.skip_tests && mask[token_index] {
+                continue;
+            }
+            let line = scan.tokens[token_index].line;
+            let exempted = allows
+                .iter_mut()
+                .find(|a| a.rule == rule.id && (a.marker_line == line || a.anchor_line == line));
+            if let Some(allow) = exempted {
+                allow.used = true;
+                continue;
+            }
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line,
+                rule: rule.id,
+                message,
+                help: rule.fix.to_string(),
+            });
+        }
+    }
+    for allow in &allows {
+        if !allow.used {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: allow.marker_line,
+                rule: "lint",
+                message: format!(
+                    "allow({}) marker never matched a diagnostic — stale exemption",
+                    allow.rule
+                ),
+                help: "delete the marker (or move it onto the line it is meant to exempt)"
+                    .to_string(),
+            });
+        }
+    }
+    diags.sort_by(|a, b| (a.line, a.rule, &a.message).cmp(&(b.line, b.rule, &b.message)));
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(file: &str, src: &str) -> Vec<&'static str> {
+        check_source(file, src).into_iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn r1_fires_only_in_experiments() {
+        let src = "pub fn f(s: &CimSystem) { let m = CostModel::new(s); }";
+        assert_eq!(rules_fired("rust/src/experiments/fig9.rs", src), vec!["R1"]);
+        assert_eq!(rules_fired("rust/src/coordinator/jobs.rs", src), Vec::<&str>::new());
+        // Comment and string mentions do not fire (grep would flag both).
+        let quiet = "// CostModel is banned here\npub fn f() -> &'static str { \"CostModel\" }";
+        assert_eq!(rules_fired("rust/src/experiments/fig9.rs", quiet), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn r1_covers_test_code_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { let _ = BaselineModel::new(); }\n}";
+        assert_eq!(rules_fired("rust/src/experiments/fig9.rs", src), vec!["R1"]);
+    }
+
+    #[test]
+    fn r2_fires_on_lossy_float_specs() {
+        let firing = r#"fn enc(x: f64) -> String { format!("{x:.6}") }"#;
+        assert_eq!(rules_fired("rust/src/sweep/persist.rs", firing), vec!["R2"]);
+        let sci = r#"fn enc(x: f64) -> String { format!("{:e}", x) }"#;
+        assert_eq!(rules_fired("rust/src/sweep/persist.rs", sci), vec!["R2"]);
+        let clean = r#"fn enc(x: f64) -> String { format!("{:016x}", x.to_bits()) }"#;
+        assert_eq!(rules_fired("rust/src/sweep/persist.rs", clean), Vec::<&str>::new());
+        // Display sinks are out of scope by design.
+        assert_eq!(rules_fired("rust/src/sweep/output.rs", firing), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn r4_fires_on_unwrap_expect_panic() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", src), vec!["R4"]);
+        let src = "fn f(o: Option<u32>) -> u32 { o.expect(\"set\") }";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", src), vec!["R4"]);
+        let src = "fn f() { panic!(\"boom\") }";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", src), vec!["R4"]);
+    }
+
+    #[test]
+    fn r4_skips_main_tests_and_lookalikes() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        assert_eq!(rules_fired("rust/src/main.rs", src), Vec::<&str>::new());
+        let test_code = "#[test]\nfn t() { None::<u32>.unwrap(); panic!(\"in test\") }";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", test_code), Vec::<&str>::new());
+        // Our own `expect`-named method definitions/calls that are not
+        // `.expect(` method calls stay quiet, as do should_panic
+        // attributes and `std::panic::catch_unwind`.
+        let lookalike = "fn expect(x: u32) -> u32 { expect(x) }\nfn g() { std::panic::catch_unwind(|| 1); }";
+        assert_eq!(rules_fired("rust/src/util/json.rs", lookalike), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn r5_fires_on_wildcard_arms_in_decode_scope() {
+        let src = "fn f(x: u32) -> u32 { match x { 0 => 1, _ => 2 } }";
+        assert_eq!(rules_fired("rust/src/sweep/persist.rs", src), vec!["R5"]);
+        // `_` as a binding or or-pattern member is fine; json.rs (out
+        // of scope) keeps its accessor wildcards.
+        let clean = "fn f(x: Option<u32>) -> u32 { let _ = 3; match x { Some(v) => v, None => 0 } }";
+        assert_eq!(rules_fired("rust/src/sweep/persist.rs", clean), Vec::<&str>::new());
+        assert_eq!(rules_fired("rust/src/util/json.rs", src), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn r6_fires_on_hash_collections_in_sink_scope() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+        let fired = rules_fired("rust/src/util/csv.rs", src);
+        assert!(fired.iter().all(|r| *r == "R6") && !fired.is_empty());
+        assert_eq!(rules_fired("rust/src/sweep/cache.rs", src), Vec::<&str>::new());
+        let clean = "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u32, u32> = BTreeMap::new(); }";
+        assert_eq!(rules_fired("rust/src/util/csv.rs", clean), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn allow_marker_suppresses_same_line_and_next_code_line() {
+        let trailing = "fn f(o: Option<u32>) -> u32 { o.unwrap() } // lint: allow(R4): fixture\n";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", trailing), Vec::<&str>::new());
+        let leading = "fn f(o: Option<u32>) -> u32 {\n    // lint: allow(R4): fixture\n    o.unwrap()\n}";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", leading), Vec::<&str>::new());
+        // A multi-line comment block between marker and code still anchors.
+        let block = "fn f(o: Option<u32>) -> u32 {\n    // lint: allow(R4): fixture reason\n    // spanning two comment lines\n    o.unwrap()\n}";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", block), Vec::<&str>::new());
+        // One trailing marker covers chained calls continuing on the next line.
+        let chained = "fn f(a: Option<u32>, b: Option<u32>) -> u32 {\n    a.unwrap() // lint: allow(R4): both halves of one probe\n        + b.unwrap()\n}";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", chained), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn allow_marker_hygiene_is_enforced() {
+        // Wrong rule id: original diagnostic stands AND the marker is
+        // stale (sorted by line: marker on 2, unwrap on 3).
+        let wrong = "fn f(o: Option<u32>) -> u32 {\n    // lint: allow(R5): wrong rule\n    o.unwrap()\n}";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", wrong), vec!["lint", "R4"]);
+        // Unknown rule id.
+        let unknown = "// lint: allow(R99): nope\nfn f() {}";
+        let diags = check_source("rust/src/cost/mod.rs", unknown);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].message.contains("unknown rule"));
+        // Missing reason.
+        let bare = "fn f(o: Option<u32>) -> u32 { o.unwrap() } // lint: allow(R4)";
+        let diags = check_source("rust/src/cost/mod.rs", bare);
+        assert!(diags.iter().any(|d| d.rule == "lint" && d.message.contains("malformed")));
+        assert!(diags.iter().any(|d| d.rule == "R4"));
+        // Unused marker.
+        let stale = "// lint: allow(R4): nothing here anymore\nfn f() {}";
+        let diags = check_source("rust/src/cost/mod.rs", stale);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].message.contains("never matched"));
+    }
+
+    #[test]
+    fn doc_comments_are_not_markers() {
+        let src = "/// Exempt sites with `// lint: allow(R4): reason`.\nfn f() {}";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", src), Vec::<&str>::new());
+        let inner = "//! lint: allow(R4): module doc, not a marker\nfn f() {}";
+        assert_eq!(rules_fired("rust/src/cost/mod.rs", inner), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn cfg_test_region_covers_nested_items_and_stops() {
+        let src = "\
+fn live(o: Option<u32>) -> u32 { o.unwrap() }
+#[cfg(test)]
+mod tests {
+    fn helper(o: Option<u32>) -> u32 { o.unwrap() }
+    #[test]
+    fn t() { assert_eq!(helper(Some(1)), 1); }
+}
+fn also_live(o: Option<u32>) -> u32 { o.unwrap() }
+";
+        let diags = check_source("rust/src/cost/mod.rs", src);
+        let lines: Vec<u32> = diags.iter().map(|d| d.line).collect();
+        assert_eq!(lines, vec![1, 8], "only the two non-test unwraps fire");
+    }
+
+    #[test]
+    fn diagnostics_render_with_location_rule_and_fix() {
+        let src = "fn f(o: Option<u32>) -> u32 { o.unwrap() }";
+        let diags = check_source("rust/src/cost/mod.rs", src);
+        let text = diags[0].render();
+        assert!(text.starts_with("rust/src/cost/mod.rs:1: [R4] "));
+        assert!(text.contains("fix: "));
+    }
+}

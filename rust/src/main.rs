@@ -13,11 +13,12 @@
 //! * `experiment`  — regenerate a paper table/figure (`all` for every one)
 //! * `validate`    — replay mappings through the PJRT artifacts
 //! * `roofline`    — ridge-point analysis
+//! * `lint`        — static analysis over the repo's own sources
 //! * `list`        — primitives / workloads / experiments / scenarios
 //!
-//! The usage text and `repro list` derive their experiment listings
-//! from [`experiments::REGISTRY`], so they can never drift from the
-//! runnable set.
+//! Dispatch and the usage text both derive from the [`SUBCOMMANDS`]
+//! table, and experiment listings from [`experiments::REGISTRY`], so
+//! neither can drift from what actually runs (the ISSUE 4 bug class).
 
 use std::path::{Path, PathBuf};
 
@@ -28,6 +29,7 @@ use www_cim::cim::CimPrimitive;
 use www_cim::coordinator::validate::validate_mappings;
 use www_cim::cost::{BaselineModel, CostModel, Metrics};
 use www_cim::experiments;
+use www_cim::lint;
 use www_cim::mapping::PriorityMapper;
 use www_cim::roofline::Roofline;
 use www_cim::runtime::{default_artifacts_dir, Engine};
@@ -51,19 +53,120 @@ fn main() {
     }
 }
 
+/// One CLI subcommand. Dispatch and the usage text are both generated
+/// from [`SUBCOMMANDS`], so a subcommand cannot exist without a help
+/// entry or vice versa (the ISSUE 4 missing-ids bug class, applied to
+/// subcommands).
+struct Subcommand {
+    name: &'static str,
+    /// Usage block lines: the first continues the `  name ` column,
+    /// the rest are indented under it. `{builtins}`/`{experiments}`
+    /// expand to the registry-derived id listings.
+    usage: &'static [&'static str],
+    run: fn(&Args) -> Result<()>,
+}
+
+/// Every subcommand, in help order.
+const SUBCOMMANDS: &[Subcommand] = &[
+    Subcommand {
+        name: "evaluate",
+        usage: &["--gemm MxNxK [--prim d1|d2|a1|a2] [--level rf|smem] [--smem-config a|b]"],
+        run: cmd_evaluate,
+    },
+    Subcommand {
+        name: "compare",
+        usage: &["--gemm MxNxK"],
+        run: cmd_compare,
+    },
+    Subcommand {
+        name: "run",
+        usage: &[
+            "<scenario.json|name> [--shard i/n] [--quick] [--seed N]",
+            "[--threads N] [--out dir] [--tag name] [--json]",
+            "[--cache[=results/cache.bin]] [--cache-max-mb N]",
+            "(executes any scenario; built-in names:",
+            " {builtins})",
+        ],
+        run: cmd_run,
+    },
+    Subcommand {
+        name: "orchestrate",
+        usage: &[
+            "<scenario.json|name> [--procs n] [+ run's overrides]",
+            "(spawns n shard subprocesses of the sweep scenario and",
+            " merges their results on completion)",
+        ],
+        run: cmd_orchestrate,
+    },
+    Subcommand {
+        name: "sweep",
+        usage: &[
+            "[--workloads all|real|bert,gptj,...|synthetic[:N]]",
+            "[--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]",
+            "[--sms 1,2,4] [--batch 1,4,16,64] [--threads N]",
+            "[--mapper priority|priority:t<n>|priority:order-<mnk perm>|",
+            "          dup[:t<n>]|heuristic[:budget]|",
+            "          exhaustive[:energy|delay|edp]]",
+            "[--seed N] [--out results] [--tag name] [--json]",
+            "[--cache[=results/cache.bin]] [--cache-max-mb N] [--shard i/n]",
+            "[--emit-scenario[=file.json]]",
+            "(defaults sweep the full zoo x 13 systems, >= 500 points;",
+            " --batch expands every workload at each batch size,",
+            " --cache persists the memo cache across runs with an",
+            " optional LRU size cap, --shard runs one deterministic",
+            " 1/n slice, --emit-scenario writes the equivalent",
+            " scenario instead of running)",
+        ],
+        run: cmd_sweep,
+    },
+    Subcommand {
+        name: "merge",
+        usage: &["<shard.json> <shard.json> ... [--tag name] [--out results] [--json]"],
+        run: cmd_merge,
+    },
+    Subcommand {
+        name: "experiment",
+        usage: &[
+            "<{experiments}>",
+            "[--quick] [--out results] [--threads N] [--seed N]",
+            "[--cache[=results/cache.bin]] [--cache-max-mb N]",
+        ],
+        run: cmd_experiment,
+    },
+    Subcommand {
+        name: "validate",
+        usage: &["[--artifacts artifacts] [--seed N]"],
+        run: cmd_validate,
+    },
+    Subcommand {
+        name: "roofline",
+        usage: &["(ridge-point analysis per system)"],
+        run: cmd_roofline,
+    },
+    Subcommand {
+        name: "lint",
+        usage: &[
+            "[--fix-guards] [--rules] [path]",
+            "(static analysis over rust/src: determinism, versioning and",
+            " cache-correctness rules R1-R6 — see rust/src/lint/README.md;",
+            " --fix-guards refreshes the version-guard manifest after a",
+            " legitimate version bump, --rules prints the rule table)",
+        ],
+        run: cmd_lint,
+    },
+    Subcommand {
+        name: "list",
+        usage: &["(primitives / workloads / experiments / built-in scenarios)"],
+        run: cmd_list,
+    },
+];
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
-        Some("evaluate") => cmd_evaluate(args),
-        Some("compare") => cmd_compare(args),
-        Some("run") => cmd_run(args),
-        Some("orchestrate") => cmd_orchestrate(args),
-        Some("sweep") => cmd_sweep(args),
-        Some("merge") => cmd_merge(args),
-        Some("experiment") => cmd_experiment(args),
-        Some("validate") => cmd_validate(args),
-        Some("roofline") => cmd_roofline(),
-        Some("list") => cmd_list(),
-        Some(other) => bail!("unknown subcommand {other:?} — try `repro list`"),
+        Some(name) => match SUBCOMMANDS.iter().find(|s| s.name == name) {
+            Some(sub) => (sub.run)(args),
+            None => bail!("unknown subcommand {name:?} — try `repro list`"),
+        },
         None => {
             println!("{}", usage());
             Ok(())
@@ -94,53 +197,33 @@ fn wrap_ids(ids: &[&str], indent: usize, width: usize) -> String {
     lines.join(&format!("\n{}", " ".repeat(indent)))
 }
 
-/// The usage text. Experiment ids come from [`experiments::REGISTRY`];
-/// this cannot drift from `repro list` or the dispatcher (the
-/// regression ISSUE 4 fixes: `optimality`, `scaling`, `zoo`, … used to
-/// be missing here).
+/// The usage text, generated from [`SUBCOMMANDS`] (so no subcommand
+/// can be missing from help) with experiment/scenario ids expanded
+/// from their registries (so no runnable id can be missing either —
+/// the regression ISSUE 4 fixed: `optimality`, `scaling`, `zoo`, …
+/// used to be hand-listed and absent).
 fn usage() -> String {
     let mut exp_ids: Vec<&str> = experiments::ids();
     exp_ids.push("all");
+    let mut body = String::new();
+    for sub in SUBCOMMANDS {
+        for (i, line) in sub.usage.iter().enumerate() {
+            let formatted = if i == 0 {
+                format!("  {:<11} {line}", sub.name)
+            } else {
+                format!("              {line}")
+            };
+            body.push_str(formatted.trim_end());
+            body.push('\n');
+        }
+    }
+    let body = body
+        .replace("{builtins}", &wrap_ids(&scenario::builtin_names(), 15, 76))
+        .replace("{experiments}", &wrap_ids(&exp_ids, 15, 76));
     format!(
-        "\
-repro — WWW: What, When, Where to Compute-in-Memory (reproduction)
-
-usage: repro <subcommand> [options]
-
-  evaluate    --gemm MxNxK [--prim d1|d2|a1|a2] [--level rf|smem] [--smem-config a|b]
-  compare     --gemm MxNxK
-  run         <scenario.json|name> [--shard i/n] [--quick] [--seed N]
-              [--threads N] [--out dir] [--tag name] [--json]
-              [--cache[=results/cache.bin]] [--cache-max-mb N]
-              (executes any scenario; built-in names:
-               {builtins})
-  orchestrate <scenario.json|name> [--procs n] [+ run's overrides]
-              (spawns n shard subprocesses of the sweep scenario and
-               merges their results on completion)
-  sweep       [--workloads all|real|bert,gptj,...|synthetic[:N]]
-              [--prims baseline,all|d1,d2,a1,a2] [--levels rf,smem-a,smem-b]
-              [--sms 1,2,4] [--batch 1,4,16,64] [--threads N]
-              [--mapper priority|priority:t<n>|priority:order-<mnk perm>|
-                        dup[:t<n>]|heuristic[:budget]|
-                        exhaustive[:energy|delay|edp]]
-              [--seed N] [--out results] [--tag name] [--json]
-              [--cache[=results/cache.bin]] [--cache-max-mb N] [--shard i/n]
-              [--emit-scenario[=file.json]]
-              (defaults sweep the full zoo x 13 systems, >= 500 points;
-               --batch expands every workload at each batch size,
-               --cache persists the memo cache across runs with an
-               optional LRU size cap, --shard runs one deterministic
-               1/n slice, --emit-scenario writes the equivalent
-               scenario instead of running)
-  merge       <shard.json> <shard.json> ... [--tag name] [--out results] [--json]
-  experiment  <{experiments}>
-              [--quick] [--out results] [--threads N] [--seed N]
-              [--cache[=results/cache.bin]] [--cache-max-mb N]
-  validate    [--artifacts artifacts] [--seed N]
-  roofline
-  list",
-        builtins = wrap_ids(&scenario::builtin_names(), 15, 76),
-        experiments = wrap_ids(&exp_ids, 15, 76),
+        "repro — WWW: What, When, Where to Compute-in-Memory (reproduction)\n\n\
+         usage: repro <subcommand> [options]\n\n{}",
+        body.trim_end()
     )
 }
 
@@ -571,7 +654,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_roofline() -> Result<()> {
+fn cmd_roofline(_args: &Args) -> Result<()> {
     let arch = Architecture::default_sm();
     let mut t = Table::new(vec!["system", "peak GOPS", "ridge SMEM", "ridge DRAM"]);
     t.row(vec![
@@ -593,7 +676,59 @@ fn cmd_roofline() -> Result<()> {
     Ok(())
 }
 
-fn cmd_list() -> Result<()> {
+/// `repro lint [--fix-guards] [--rules] [path]` — run the static
+/// analyzer ([`www_cim::lint`]) over a repo tree (default: the
+/// current directory if it contains `rust/src`, else the tree this
+/// binary was built from). Exits non-zero on any finding, so CI can
+/// gate on it directly.
+fn cmd_lint(args: &Args) -> Result<()> {
+    if let Some(err) = args.unknown_flags(&["fix-guards", "rules"]) {
+        bail!(err);
+    }
+    if args.flag("rules") {
+        for id in lint::RULE_IDS {
+            let summary = lint::RULES
+                .iter()
+                .find(|r| r.id == *id)
+                .map(|r| r.summary)
+                .unwrap_or(
+                    "version guards: guarded modules must bump their version constant \
+                     when content changes (lint/guards.toml)",
+                );
+            println!("{id}  {summary}");
+        }
+        return Ok(());
+    }
+    let root = match args.positional.first() {
+        Some(p) => PathBuf::from(p),
+        None => default_lint_root(),
+    };
+    let opts = lint::LintOptions {
+        fix_guards: args.flag("fix-guards"),
+        ..lint::LintOptions::default()
+    };
+    let report = lint::run(&root, &opts)?;
+    print!("{}", report.render());
+    if report.clean() {
+        Ok(())
+    } else {
+        bail!("lint found {} issue(s)", report.diagnostics.len())
+    }
+}
+
+/// Where `repro lint` looks when no path is given: the working
+/// directory if it is a repo root, otherwise the source tree this
+/// binary was compiled from (covers `cargo run -- lint` anywhere).
+fn default_lint_root() -> PathBuf {
+    let cwd = PathBuf::from(".");
+    if cwd.join("rust").join("src").is_dir() {
+        cwd
+    } else {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    }
+}
+
+fn cmd_list(_args: &Args) -> Result<()> {
     println!("primitives (Table IV):");
     for p in CimPrimitive::all() {
         println!(
@@ -637,9 +772,40 @@ mod tests {
         for name in scenario::builtin_names() {
             assert!(text.contains(name), "usage() omits built-in scenario {name:?}");
         }
-        for sub in ["run", "orchestrate", "sweep", "merge", "experiment"] {
-            assert!(text.contains(&format!("\n  {sub}")), "usage() omits {sub}");
+        for sub in SUBCOMMANDS {
+            assert!(
+                text.contains(&format!("\n  {}", sub.name)),
+                "usage() omits subcommand {:?}",
+                sub.name
+            );
         }
+        assert!(!text.contains('{'), "unexpanded placeholder in usage text");
+    }
+
+    /// The subcommand table is the single source of truth for dispatch
+    /// and help (this PR's bug-class fix): names must be unique, every
+    /// entry needs a usage block, and the new `lint`/`list` entries are
+    /// present with their documented flags.
+    #[test]
+    fn subcommand_table_is_coherent() {
+        for (i, sub) in SUBCOMMANDS.iter().enumerate() {
+            assert!(!sub.name.is_empty());
+            assert!(
+                !sub.usage.is_empty(),
+                "{}: every subcommand documents its usage",
+                sub.name
+            );
+            assert!(
+                !SUBCOMMANDS[i + 1..].iter().any(|s| s.name == sub.name),
+                "duplicate subcommand {:?}",
+                sub.name
+            );
+        }
+        for required in ["lint", "list"] {
+            assert!(SUBCOMMANDS.iter().any(|s| s.name == required));
+        }
+        let text = usage();
+        assert!(text.contains("--fix-guards"), "lint flags documented");
     }
 
     #[test]

@@ -120,7 +120,9 @@ impl Mapping {
 fn parse_u64_pos(s: &str, what: &str) -> Result<u64> {
     match s.parse::<u64>() {
         Ok(v) if v >= 1 => Ok(v),
-        _ => bail!("{what}: want a positive integer, got {s:?}"),
+        // Zero falls through the guard and is as corrupt as a parse
+        // failure; spelled exhaustively (lint R5).
+        Ok(_) | Err(_) => bail!("{what}: want a positive integer, got {s:?}"),
     }
 }
 
@@ -181,7 +183,7 @@ fn parse_nest(val: &str) -> Result<Vec<Block>> {
                     Some('M') => Dim::M,
                     Some('N') => Dim::N,
                     Some('K') => Dim::K,
-                    _ => bail!("mapping loop {l:?}: want <M|N|K><factor>"),
+                    Some(_) | None => bail!("mapping loop {l:?}: want <M|N|K><factor>"),
                 };
                 loops.push(Loop::new(dim, parse_u64_pos(&l[1..], "loop factor")?));
             }

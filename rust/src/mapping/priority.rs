@@ -254,6 +254,7 @@ impl<'a> PriorityMapper<'a> {
                 best = Some((e, mapping));
             }
         }
+        // lint: allow(R4): the loop above iterates the fixed six-element permutation table, so best is always set
         best.expect("at least one permutation").1.nest
     }
 }

@@ -105,6 +105,7 @@ impl Engine {
 
         self.executable(name)?;
         let cache = self.cache.borrow();
+        // lint: allow(R4): executable() on the line above inserted this name into the cache
         let exe = cache.get(name).expect("just compiled");
         let result = exe.execute::<xla::Literal>(&literals)?[0][0]
             .to_literal_sync()

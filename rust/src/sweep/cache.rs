@@ -149,6 +149,7 @@ pub fn system_fingerprint(sys: &CimSystem) -> String {
         (MemLevel::RegisterFile, _) => format!("rf:{p}"),
         (MemLevel::Smem, Some(SmemConfig::ConfigA)) => format!("smem-a:{p}"),
         (MemLevel::Smem, Some(SmemConfig::ConfigB)) => format!("smem-b:{p}"),
+        // lint: allow(R4): aliasing a malformed system onto a real cache entry is worse than aborting (doc above)
         (MemLevel::Smem, None) => panic!(
             "CimSystem at SMEM without an smem_config cannot be fingerprinted \
              (it would silently alias a ConfigA/ConfigB cache entry)"
@@ -227,6 +228,12 @@ struct Slot {
 /// point key (`&str`) and only allocates on a miss.
 type Shard = HashMap<String, HashMap<Gemm, Slot>>;
 
+/// Lock one shard — the single place the cache touches a `Mutex`.
+fn locked(shard: &Mutex<Shard>) -> std::sync::MutexGuard<'_, Shard> {
+    // lint: allow(R4): a poisoned lock means a sibling eval thread already panicked; there is no cache state to recover
+    shard.lock().expect("cache shard poisoned")
+}
+
 /// Sharded (system fingerprint, GEMM) → [`CacheEntry`] memoization
 /// cache with hit/miss accounting and per-entry last-used stamps.
 #[derive(Debug)]
@@ -287,9 +294,7 @@ impl EvalCache {
         f: F,
     ) -> CacheEntry {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
-        if let Some(slot) = shard
-            .lock()
-            .expect("cache shard poisoned")
+        if let Some(slot) = locked(shard)
             .get_mut(point)
             .and_then(|per_gemm| per_gemm.get_mut(&gemm))
         {
@@ -299,7 +304,7 @@ impl EvalCache {
         }
         let e = f();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = shard.lock().expect("cache shard poisoned");
+        let mut guard = locked(shard);
         let slot = guard
             .entry(point.to_string())
             .or_default()
@@ -325,9 +330,7 @@ impl EvalCache {
         f: F,
     ) -> Metrics {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
-        if let Some(slot) = shard
-            .lock()
-            .expect("cache shard poisoned")
+        if let Some(slot) = locked(shard)
             .get_mut(point)
             .and_then(|per_gemm| per_gemm.get_mut(&gemm))
         {
@@ -337,7 +340,7 @@ impl EvalCache {
         }
         let e = f();
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = shard.lock().expect("cache shard poisoned");
+        let mut guard = locked(shard);
         let slot = guard
             .entry(point.to_string())
             .or_default()
@@ -367,9 +370,7 @@ impl EvalCache {
     /// included.
     pub fn preload_stamped(&self, point: &str, gemm: Gemm, entry: CacheEntry, last_used: u64) {
         let shard = &self.shards[Self::shard_of(point, &gemm)];
-        shard
-            .lock()
-            .expect("cache shard poisoned")
+        locked(shard)
             .entry(point.to_string())
             .or_default()
             .entry(gemm)
@@ -392,7 +393,7 @@ impl EvalCache {
     pub fn snapshot_stamped(&self) -> Vec<(String, Gemm, u64, CacheEntry)> {
         let mut out = Vec::new();
         for s in &self.shards {
-            let shard = s.lock().expect("cache shard poisoned");
+            let shard = locked(s);
             for (point, per_gemm) in shard.iter() {
                 for (gemm, slot) in per_gemm {
                     out.push((point.clone(), *gemm, slot.last_used, slot.entry.clone()));
@@ -409,13 +410,7 @@ impl EvalCache {
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| {
-                s.lock()
-                    .expect("cache shard poisoned")
-                    .values()
-                    .map(HashMap::len)
-                    .sum::<usize>()
-            })
+            .map(|s| locked(s).values().map(HashMap::len).sum::<usize>())
             .sum()
     }
 
@@ -447,7 +442,7 @@ impl EvalCache {
     /// Drop all cached entries and reset the counters.
     pub fn clear(&self) {
         for s in &self.shards {
-            s.lock().expect("cache shard poisoned").clear();
+            locked(s).clear();
         }
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);

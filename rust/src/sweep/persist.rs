@@ -233,7 +233,8 @@ pub fn encode_capped(cache: &EvalCache, max_bytes: Option<u64>) -> (String, usiz
             }
             keep
         }
-        _ => vec![true; lines.len()],
+        // Under the cap (or uncapped): everything survives.
+        Some(_) | None => vec![true; lines.len()],
     };
     let mut out = String::new();
     out.push_str(&header);
@@ -378,7 +379,11 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
         );
         let gemm = match dims {
             (Ok(m), Ok(n), Ok(k)) if m > 0 && n > 0 && k > 0 => Gemm::new(m, n, k),
-            _ => return discard(format!("corrupt GEMM dims on line {}", i + 2)),
+            // Any parse failure — or a zero dimension slipping past the
+            // guard — is corruption, spelled exhaustively (lint R5).
+            (Ok(_) | Err(_), _, _) => {
+                return discard(format!("corrupt GEMM dims on line {}", i + 2))
+            }
         };
         let last_used = match parse_u64(fields[4]) {
             Ok(v) => v,

@@ -390,8 +390,8 @@ pub fn merge_files(paths: &[PathBuf]) -> Result<MergedSweep> {
     }
     let shards: Vec<ShardDoc> = by_index
         .into_iter()
-        .map(|d| d.expect("every index filled (checked above)"))
-        .collect();
+        .collect::<Option<Vec<ShardDoc>>>()
+        .context("merge: internal error — a shard index was left unfilled")?;
 
     // Re-interleave: global point g was computed by shard g % count at
     // local position g / count.
@@ -401,10 +401,10 @@ pub fn merge_files(paths: &[PathBuf]) -> Result<MergedSweep> {
         results.push(shards[g % count].results[g / count].clone());
     }
     Ok(MergedSweep {
-        spec_name: name.expect("first shard recorded"),
-        fingerprint: fingerprint.expect("first shard recorded"),
+        spec_name: name.context("merge: no shard file recorded a spec name")?,
+        fingerprint: fingerprint.context("merge: no shard file recorded a fingerprint")?,
         shard_count: count,
-        cost_model: cost_model.expect("first shard recorded"),
+        cost_model: cost_model.context("merge: no shard file recorded a cost-model version")?,
         results,
     })
 }

@@ -124,6 +124,7 @@ impl Bencher {
         };
         println!("{}", m.report());
         self.measurements.push(m);
+        // lint: allow(R4): the push on the preceding line guarantees the vec is non-empty
         self.measurements.last().expect("just pushed")
     }
 

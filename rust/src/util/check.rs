@@ -62,6 +62,7 @@ where
         let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9);
         let mut rng = Rng::new(case_seed);
         if let Err(msg) = prop(&mut rng) {
+            // lint: allow(R4): aborting with the failing seed is this property harness's contract
             panic!(
                 "property '{name}' failed at case {case}/{} (WWW_SEED={} reproduces): {msg}",
                 cfg.cases, cfg.seed
@@ -84,6 +85,7 @@ where
         let input = gen(&mut rng);
         if let Err(first_msg) = prop(&input) {
             let (shrunk, msg) = shrink(&input, &mut prop, first_msg);
+            // lint: allow(R4): aborting with the shrunk counterexample is this property harness's contract
             panic!(
                 "property '{name}' failed at case {case} (WWW_SEED={} reproduces)\n  \
                  original input: {input:?}\n  shrunk input:   {shrunk:?}\n  error: {msg}",

@@ -213,7 +213,7 @@ impl Parser {
         }
     }
 
-    fn expect(&mut self, want: char) -> Result<()> {
+    fn expect_char(&mut self, want: char) -> Result<()> {
         match self.bump() {
             Some(c) if c == want => Ok(()),
             Some(c) => bail!("json: expected {want:?}, found {c:?} at offset {}", self.pos - 1),
@@ -257,7 +257,7 @@ impl Parser {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect('{')?;
+        self.expect_char('{')?;
         let mut fields = Vec::new();
         self.skip_ws();
         if self.peek() == Some('}') {
@@ -268,7 +268,7 @@ impl Parser {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(':')?;
+            self.expect_char(':')?;
             let value = self.value()?;
             fields.push((key, value));
             self.skip_ws();
@@ -282,7 +282,7 @@ impl Parser {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect('[')?;
+        self.expect_char('[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(']') {
@@ -302,7 +302,7 @@ impl Parser {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect('"')?;
+        self.expect_char('"')?;
         let mut out = String::new();
         loop {
             match self.bump() {

@@ -44,7 +44,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    // total_cmp orders NaN after +inf instead of panicking: a NaN
+    // sample skews the tail percentile rather than aborting a report.
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
     if lo == hi {

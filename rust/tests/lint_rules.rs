@@ -1,0 +1,307 @@
+//! Integration tests for `repro lint`: per-rule fixtures (firing,
+//! clean, allowlisted), the allow-marker hygiene diagnostics, the R3
+//! version-guard lifecycle over a temp tree, and the self-test that
+//! the repo's own sources come out clean.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use www_cim::lint::{self, check_source, guards, LintOptions, RULE_IDS};
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn rule_ids(diags: &[lint::Diagnostic]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.rule).collect()
+}
+
+/// Fresh temp tree rooted at a unique dir; caller writes files under it.
+fn temp_root(tag: &str) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("www_cim_lint_it_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&root);
+    fs::create_dir_all(&root).expect("create temp root");
+    root
+}
+
+fn write(root: &Path, rel: &str, content: &str) {
+    let path = root.join(rel);
+    fs::create_dir_all(path.parent().expect("rel has a parent")).expect("mkdir");
+    fs::write(path, content).expect("write fixture");
+}
+
+fn no_guards() -> LintOptions {
+    LintOptions { fix_guards: false, check_guards: false }
+}
+
+// ---------------------------------------------------------------------------
+// R1 — no direct cost-model construction in experiments/
+// ---------------------------------------------------------------------------
+
+const R1_FIRING: &str = "pub fn run() -> f64 {\n    let m = CostModel::new(&sys());\n    m.evaluate()\n}\n";
+
+#[test]
+fn r1_fires_on_cost_model_in_experiments() {
+    let diags = check_source("rust/src/experiments/fig_x.rs", R1_FIRING);
+    assert_eq!(rule_ids(&diags), ["R1"], "{diags:?}");
+    assert_eq!(diags[0].line, 2);
+}
+
+#[test]
+fn r1_fires_on_baseline_model_too() {
+    let src = "pub fn run() { let _b = BaselineModel::new(); }\n";
+    let diags = check_source("rust/src/experiments/fig_y.rs", src);
+    assert_eq!(rule_ids(&diags), ["R1"]);
+}
+
+#[test]
+fn r1_ignores_same_code_outside_experiments() {
+    assert!(check_source("rust/src/sweep/engine.rs", R1_FIRING).is_empty());
+}
+
+#[test]
+fn r1_applies_inside_test_code_as_well() {
+    // Experiments must route through the engine even in their tests —
+    // R1 sets skip_tests = false.
+    let src = "#[test]\nfn t() {\n    let _m = CostModel::new(&sys());\n}\n";
+    let diags = check_source("rust/src/experiments/fig_z.rs", src);
+    assert_eq!(rule_ids(&diags), ["R1"]);
+}
+
+#[test]
+fn r1_allow_marker_suppresses_with_reason() {
+    let src = "pub fn run() -> f64 {\n    // lint: allow(R1): fixture exercises the raw model\n    let m = CostModel::new(&sys());\n    m.evaluate()\n}\n";
+    assert!(check_source("rust/src/experiments/fig_x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R2 — no lossy float formatting in fingerprint/persist code
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r2_fires_on_precision_format_in_persist() {
+    let src = "pub fn enc(x: f64) -> String {\n    format!(\"{:.6}\", x)\n}\n";
+    let diags = check_source("rust/src/sweep/persist.rs", src);
+    assert_eq!(rule_ids(&diags), ["R2"]);
+    assert_eq!(diags[0].line, 2);
+}
+
+#[test]
+fn r2_fires_on_scientific_notation() {
+    let src = "pub fn enc(x: f64) -> String {\n    format!(\"{:e}\", x)\n}\n";
+    assert_eq!(rule_ids(&check_source("rust/src/util/hash.rs", src)), ["R2"]);
+}
+
+#[test]
+fn r2_allows_exact_formatting_and_out_of_scope_files() {
+    let exact = "pub fn enc(bits: u64) -> String {\n    format!(\"{bits:016x}\")\n}\n";
+    assert!(check_source("rust/src/sweep/persist.rs", exact).is_empty());
+    // Report tables may round for display.
+    let lossy = "pub fn cell(x: f64) -> String {\n    format!(\"{x:.2}\")\n}\n";
+    assert!(check_source("rust/src/util/table.rs", lossy).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R4 — no unwrap()/expect()/panic! on the library path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r4_fires_on_unwrap_expect_and_panic() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n    let a = v.first().unwrap();\n    let b: u32 = \"7\".parse().expect(\"digit\");\n    if *a == b { panic!(\"collision\") }\n    *a + b\n}\n";
+    let diags = check_source("rust/src/cost/mod.rs", src);
+    assert_eq!(rule_ids(&diags), ["R4", "R4", "R4"], "{diags:?}");
+    assert_eq!(diags.iter().map(|d| d.line).collect::<Vec<_>>(), [2, 3, 4]);
+}
+
+#[test]
+fn r4_skips_tests_benches_and_main() {
+    let in_test = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        assert_eq!(\"7\".parse::<u32>().unwrap(), 7);\n    }\n}\n";
+    assert!(check_source("rust/src/cost/mod.rs", in_test).is_empty());
+    let in_main = "fn main() {\n    run().unwrap();\n}\n";
+    assert!(check_source("rust/src/main.rs", in_main).is_empty());
+}
+
+#[test]
+fn r4_allow_marker_covers_marker_line_and_next_code_line() {
+    let own_line = "pub fn f(v: &[u32]) -> u32 {\n    // lint: allow(R4): fixture-provable non-empty\n    *v.first().unwrap()\n}\n";
+    assert!(check_source("rust/src/cost/mod.rs", own_line).is_empty());
+    let trailing = "pub fn f(v: &[u32]) -> u32 {\n    *v.first().unwrap() // lint: allow(R4): fixture-provable non-empty\n}\n";
+    assert!(check_source("rust/src/cost/mod.rs", trailing).is_empty());
+}
+
+#[test]
+fn r4_method_named_like_expect_does_not_fire_at_declaration() {
+    // Only call sites shaped like `.expect(` are flagged; declaring an
+    // inherent method named `expect` is not itself a violation (its
+    // call sites would be — json.rs renamed to expect_char for that).
+    let src = "impl P {\n    fn expect(&mut self, c: char) -> bool {\n        self.peek() == Some(c)\n    }\n}\n";
+    assert!(check_source("rust/src/util/json.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R5 — no wildcard `_ =>` arms in decode code
+// ---------------------------------------------------------------------------
+
+const R5_FIRING: &str = "pub fn dec(t: u8) -> u8 {\n    match t {\n        1 => 10,\n        _ => 0,\n    }\n}\n";
+
+#[test]
+fn r5_fires_on_wildcard_arm_in_decode_code() {
+    let diags = check_source("rust/src/sweep/persist.rs", R5_FIRING);
+    assert_eq!(rule_ids(&diags), ["R5"]);
+    assert_eq!(diags[0].line, 4);
+}
+
+#[test]
+fn r5_ignores_wildcards_outside_decode_scope_and_bound_patterns() {
+    assert!(check_source("rust/src/cost/mod.rs", R5_FIRING).is_empty());
+    // `Some(_) | None` spells the cases out — no bare `_ =>`.
+    let explicit = "pub fn dec(t: Option<u8>) -> u8 {\n    match t {\n        Some(v) => v,\n        None => 0,\n    }\n}\n";
+    assert!(check_source("rust/src/sweep/persist.rs", explicit).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// R6 — no HashMap/HashSet in deterministic-output code
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r6_fires_on_hashmap_in_output_sink() {
+    let src = "use std::collections::HashMap;\n\npub fn rows() -> HashMap<String, u64> {\n    HashMap::new()\n}\n";
+    let diags = check_source("rust/src/sweep/output.rs", src);
+    assert_eq!(rule_ids(&diags), ["R6", "R6", "R6"]);
+}
+
+#[test]
+fn r6_allows_btreemap_and_out_of_scope_hashmaps() {
+    let btree = "use std::collections::BTreeMap;\n\npub fn rows() -> BTreeMap<String, u64> {\n    BTreeMap::new()\n}\n";
+    assert!(check_source("rust/src/sweep/output.rs", btree).is_empty());
+    let hash = "use std::collections::HashMap;\npub type Memo = HashMap<String, u64>;\n";
+    assert!(check_source("rust/src/mapping/priority.rs", hash).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Allow-marker hygiene — bad markers are themselves diagnostics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allow_marker_without_reason_is_rejected() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n    // lint: allow(R4):\n    *v.first().unwrap()\n}\n";
+    let diags = check_source("rust/src/cost/mod.rs", src);
+    // The malformed marker reports, and without a valid marker the
+    // unwrap underneath still fires.
+    assert_eq!(rule_ids(&diags), ["lint", "R4"], "{diags:?}");
+}
+
+#[test]
+fn allow_marker_with_unknown_rule_is_rejected() {
+    let src = "// lint: allow(R9): no such rule\npub fn f() {}\n";
+    let diags = check_source("rust/src/cost/mod.rs", src);
+    assert_eq!(rule_ids(&diags), ["lint"]);
+}
+
+#[test]
+fn unused_allow_marker_is_reported() {
+    let src = "pub fn f(v: &[u32]) -> u32 {\n    // lint: allow(R4): nothing here needs it\n    v.len() as u32\n}\n";
+    let diags = check_source("rust/src/cost/mod.rs", src);
+    assert_eq!(rule_ids(&diags), ["lint"]);
+    assert!(diags[0].message.contains("never matched"), "{:?}", diags[0].message);
+}
+
+// ---------------------------------------------------------------------------
+// R3 — version-guard lifecycle over a temp tree
+// ---------------------------------------------------------------------------
+
+const GUARDED_V1: &str = "pub const MAPPER_VERSION: u32 = 1;\n\npub fn map(x: u64) -> u64 {\n    x * 7\n}\n";
+const GUARDED_V1_EDITED: &str = "pub const MAPPER_VERSION: u32 = 1;\n\npub fn map(x: u64) -> u64 {\n    x * 8\n}\n";
+const GUARDED_V2_EDITED: &str = "pub const MAPPER_VERSION: u32 = 2;\n\npub fn map(x: u64) -> u64 {\n    x * 8\n}\n";
+
+const BOOTSTRAP_MANIFEST: &str = "[[guard]]\nname = \"mapper\"\nversion_const = \"MAPPER_VERSION\"\nversion_file = \"rust/src/mapping/mod.rs\"\npaths = [\"rust/src/mapping\"]\nversion = 1\nhash = \"\"\n";
+
+fn run_guarded(root: &Path, fix: bool) -> lint::LintReport {
+    lint::run(root, &LintOptions { fix_guards: fix, check_guards: true })
+        .expect("lint runs on temp tree")
+}
+
+#[test]
+fn guard_lifecycle_bootstrap_drift_bump_fix() {
+    let root = temp_root("guard_lifecycle");
+    write(&root, "rust/src/mapping/mod.rs", GUARDED_V1);
+    write(&root, lint::GUARDS_MANIFEST, BOOTSTRAP_MANIFEST);
+
+    // 1. Bootstrap: empty hash reports until --fix-guards records it.
+    let report = run_guarded(&root, false);
+    assert_eq!(rule_ids(&report.diagnostics), ["R3"], "{report:?}");
+    assert!(report.diagnostics[0].message.contains("no recorded content hash"));
+    let report = run_guarded(&root, true);
+    assert!(report.clean(), "{}", report.render());
+    assert!(report.guards_rewritten);
+    let report = run_guarded(&root, false);
+    assert!(report.clean(), "recorded manifest must be stable: {}", report.render());
+
+    // 2. Drift: content changes, constant does not → fails, and
+    //    --fix-guards refuses to launder it.
+    write(&root, "rust/src/mapping/mod.rs", GUARDED_V1_EDITED);
+    let report = run_guarded(&root, false);
+    assert_eq!(rule_ids(&report.diagnostics), ["R3"]);
+    assert!(report.diagnostics[0].message.contains("MAPPER_VERSION is still 1"), "{}", report.render());
+    let report = run_guarded(&root, true);
+    assert_eq!(rule_ids(&report.diagnostics), ["R3"], "--fix-guards must not adopt drift");
+    assert!(!report.guards_rewritten);
+
+    // 3. Bump the constant: now the fix records the new (version, hash).
+    write(&root, "rust/src/mapping/mod.rs", GUARDED_V2_EDITED);
+    let report = run_guarded(&root, false);
+    assert_eq!(rule_ids(&report.diagnostics), ["R3"], "bump still needs recording");
+    let report = run_guarded(&root, true);
+    assert!(report.clean(), "{}", report.render());
+    assert!(report.guards_rewritten);
+
+    // 4. Steady state again.
+    let report = run_guarded(&root, false);
+    assert!(report.clean(), "{}", report.render());
+    let manifest = fs::read_to_string(root.join(lint::GUARDS_MANIFEST)).expect("manifest");
+    assert!(manifest.contains("version = 2"), "{manifest}");
+
+    let _ = fs::remove_dir_all(&root);
+}
+
+#[test]
+fn missing_manifest_is_an_r3_diagnostic() {
+    let root = temp_root("guard_missing_manifest");
+    write(&root, "rust/src/cost/mod.rs", "pub fn f() {}\n");
+    let report = lint::run(&root, &LintOptions::default()).expect("lint runs");
+    assert_eq!(rule_ids(&report.diagnostics), ["R3"]);
+    assert!(report.diagnostics[0].message.contains("missing"));
+    let _ = fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// The repo itself
+// ---------------------------------------------------------------------------
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let report = lint::run(repo_root(), &LintOptions::default()).expect("lint runs on the repo");
+    assert!(report.clean(), "repo must be lint-clean:\n{}", report.render());
+    assert!(!report.guards_rewritten);
+}
+
+#[test]
+fn repo_manifest_guards_the_four_versioned_modules() {
+    let text = fs::read_to_string(repo_root().join(lint::GUARDS_MANIFEST)).expect("manifest");
+    let parsed = guards::parse(&text).expect("manifest parses");
+    let names: Vec<&str> = parsed.iter().map(|g| g.name.as_str()).collect();
+    assert_eq!(names, ["mapper", "cost-model", "cache-format", "scenario-format"]);
+    for g in &parsed {
+        assert!(!g.hash.is_empty(), "guard {:?} left at bootstrap sentinel", g.name);
+        assert_eq!(g.hash.len(), 16, "guard {:?} hash is not fnv1a-64 hex", g.name);
+    }
+}
+
+#[test]
+fn rule_ids_cover_r1_through_r6() {
+    assert_eq!(RULE_IDS, ["R1", "R2", "R3", "R4", "R5", "R6"]);
+}
