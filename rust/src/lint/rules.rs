@@ -35,7 +35,7 @@ pub struct Diagnostic {
     /// Path relative to the scanned root, `/`-separated.
     pub file: String,
     pub line: u32,
-    /// Rule id (`R1`..`R6`, or `lint` for marker hygiene findings).
+    /// Rule id (`R1`..`R7`, or `lint` for marker hygiene findings).
     pub rule: &'static str,
     pub message: String,
     /// Suggested fix, one line.
@@ -53,7 +53,7 @@ impl Diagnostic {
 
 /// Every rule id the analyzer knows, including the guard pass (R3),
 /// which runs per-tree in [`super::guards`] rather than per-file here.
-pub const RULE_IDS: &[&str] = &["R1", "R2", "R3", "R4", "R5", "R6"];
+pub const RULE_IDS: &[&str] = &["R1", "R2", "R3", "R4", "R5", "R6", "R7"];
 
 /// One token-level rule.
 pub struct Rule {
@@ -178,6 +178,16 @@ pub const RULES: &[Rule] = &[
         skip_tests: true,
         check: check_hash_collections,
     },
+    Rule {
+        id: "R7",
+        summary: "no un-sorted read_dir walks in deterministic-output code",
+        fix: "collect the entries' paths into a Vec and sort before iterating (read_dir \
+              order is filesystem-dependent), or add `// lint: allow(R7): <reason>` \
+              where order provably cannot escape",
+        applies: in_output_sink,
+        skip_tests: true,
+        check: check_read_dir,
+    },
 ];
 
 /// Pre-lexed view of one file that checks operate on.
@@ -289,6 +299,20 @@ fn check_wildcard_arms(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
 
 fn self_is_arrow(scan: &Scan<'_>, p: usize) -> bool {
     scan.is_punct(p, "=>")
+}
+
+fn check_read_dir(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
+    for p in 0..scan.code.len() {
+        let Some(t) = scan.at(p) else { continue };
+        if t.kind == TokenKind::Ident && t.text == "read_dir" {
+            out.push((
+                scan.code[p],
+                "`read_dir` in deterministic-output code (entry order is \
+                 filesystem-dependent)"
+                    .to_string(),
+            ));
+        }
+    }
 }
 
 fn check_hash_collections(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
@@ -640,6 +664,25 @@ mod tests {
         assert_eq!(rules_fired("rust/src/sweep/cache.rs", src), Vec::<&str>::new());
         let clean = "use std::collections::BTreeMap;\nfn f() { let m: BTreeMap<u32, u32> = BTreeMap::new(); }";
         assert_eq!(rules_fired("rust/src/util/csv.rs", clean), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn r7_fires_on_read_dir_in_sink_scope() {
+        let src = "fn f(d: &std::path::Path) {\n    for e in std::fs::read_dir(d).unwrap() {\n        drop(e);\n    }\n}";
+        let fired = rules_fired("rust/src/sweep/output.rs", src);
+        // read_dir fires R7; the unwrap alongside it fires R4.
+        assert!(fired.contains(&"R7"), "{fired:?}");
+        // Out of sink scope: no R7 (walking a dir for internal state
+        // is fine; only deterministic-output code is pinned).
+        let elsewhere = rules_fired("rust/src/mapping/priority.rs", src);
+        assert!(!elsewhere.contains(&"R7"), "{elsewhere:?}");
+        // Sorting after collecting is the idiom — no read_dir token,
+        // nothing fires.
+        let clean = "fn f(paths: &mut Vec<std::path::PathBuf>) {\n    paths.sort();\n}";
+        assert_eq!(rules_fired("rust/src/sweep/output.rs", clean), Vec::<&str>::new());
+        // An allow marker with a reason exempts a provably-sorted walk.
+        let allowed = "fn f(d: &std::path::Path) -> std::io::Result<()> {\n    // lint: allow(R7): entries are collected and sorted two lines down\n    let it = std::fs::read_dir(d)?;\n    drop(it);\n    Ok(())\n}";
+        assert_eq!(rules_fired("rust/src/sweep/output.rs", allowed), Vec::<&str>::new());
     }
 
     #[test]

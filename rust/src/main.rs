@@ -92,9 +92,11 @@ const SUBCOMMANDS: &[Subcommand] = &[
     Subcommand {
         name: "orchestrate",
         usage: &[
-            "<scenario.json|name> [--procs n] [+ run's overrides]",
-            "(spawns n shard subprocesses of the sweep scenario and",
-            " merges their results on completion)",
+            "<scenario.json|name> [--procs n] [--shard-timeout-s N]",
+            "[--shard-retries N] [--resume] [+ run's overrides]",
+            "(spawns n supervised shard subprocesses of the sweep",
+            " scenario — timeout + retry + resume — merges their",
+            " results on completion, and writes a run manifest)",
         ],
         run: cmd_orchestrate,
     },
@@ -434,16 +436,28 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 /// `repro orchestrate <scenario.json|name> --procs n` — multi-process
-/// sweeps in one command: spawn the shard subprocesses, merge on
-/// completion.
+/// sweeps in one command: spawn the shard subprocesses (supervised:
+/// per-shard timeout, retries with backoff, `--resume`), merge on
+/// completion, and write the `<base>.orchestrate.json` run manifest.
 fn cmd_orchestrate(args: &Args) -> Result<()> {
     if let Some(err) = args.unknown_flags(&[
-        "procs", "out", "tag", "threads", "seed", "cache", "cache-max-mb", "json",
+        "procs",
+        "out",
+        "tag",
+        "threads",
+        "seed",
+        "cache",
+        "cache-max-mb",
+        "json",
+        "shard-timeout-s",
+        "shard-retries",
+        "resume",
     ]) {
         bail!(err);
     }
     let target = args.positional.first().context(
-        "usage: repro orchestrate <scenario.json|name> [--procs n] [--out dir] [--tag name]",
+        "usage: repro orchestrate <scenario.json|name> [--procs n] [--out dir] [--tag name] \
+         [--shard-timeout-s N] [--shard-retries N] [--resume]",
     )?;
     let mut sc = resolve_scenario(target)?;
     apply_overrides(&mut sc, args)?;
@@ -457,7 +471,24 @@ fn cmd_orchestrate(args: &Args) -> Result<()> {
         // would be pointless — default to 2.
         None => sc.shards.unwrap_or(2),
     };
-    scenario::orchestrate(&sc, procs)
+    // Supervision defaults come from the scenario's orchestrate block;
+    // the flags override per invocation.
+    let mut opts = scenario::orchestrate::OrchestrateOptions::from_scenario(&sc, procs);
+    if let Some(t) = args.get("shard-timeout-s") {
+        let secs: u64 = t
+            .parse()
+            .ok()
+            .filter(|s| *s >= 1)
+            .with_context(|| format!("--shard-timeout-s wants a positive integer, got {t:?}"))?;
+        opts.timeout = Some(std::time::Duration::from_secs(secs));
+    }
+    if let Some(r) = args.get("shard-retries") {
+        opts.retries = r
+            .parse()
+            .with_context(|| format!("--shard-retries wants an integer, got {r:?}"))?;
+    }
+    opts.resume = args.flag("resume");
+    scenario::orchestrate::orchestrate_scenario(&sc, &opts)
 }
 
 /// Construct the scenario `repro sweep`'s grid flags describe — the

@@ -54,8 +54,10 @@ pub use orchestrate::orchestrate;
 
 /// Version of the scenario JSON schema. Bump on any structural change;
 /// files of other versions are rejected at load, never half-read.
-/// History: v1 = the initial schema; v2 added the `sweep.batch` axis.
-pub const SCENARIO_FORMAT_VERSION: u32 = 2;
+/// History: v1 = the initial schema; v2 added the `sweep.batch` axis;
+/// v3 added the `orchestrate` block (timeout_s, retries, hosts,
+/// remote_exe).
+pub const SCENARIO_FORMAT_VERSION: u32 = 3;
 
 /// Largest integer the JSON number carrier (f64) holds exactly — the
 /// bound on every integral scenario field.
@@ -110,6 +112,29 @@ pub struct CachePolicy {
     pub max_bytes: Option<u64>,
 }
 
+/// Supervision policy for `repro orchestrate`: the per-shard
+/// wall-clock timeout, the retry budget for failed/timed-out shards
+/// (safe: shards are deterministic, so a retried shard's summary is
+/// byte-identical), and the optional ssh host list that turns the
+/// orchestrator multi-host — shard `i` runs on `hosts[i % len]` via
+/// `ssh host <remote_exe> run <scenario> --shard i/n`, assuming a
+/// shared filesystem for the scenario file and the output dir. CLI
+/// flags (`--shard-timeout-s`, `--shard-retries`) override these.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct OrchestratePolicy {
+    /// Kill and reap a shard running longer than this (None = no
+    /// timeout).
+    pub timeout_s: Option<u64>,
+    /// Re-spawn a failed/timed-out shard up to this many times (None =
+    /// the orchestrator's default of 1).
+    pub retries: Option<u64>,
+    /// ssh hosts to spread shards over (empty = local subprocesses).
+    pub hosts: Vec<String>,
+    /// Path of the `repro` binary on the remote hosts (None = `repro`
+    /// on the remote PATH). Only meaningful with `hosts`.
+    pub remote_exe: Option<String>,
+}
+
 /// Output sinks: the directory CSV/JSON mirrors land in, an optional
 /// tag overriding the scenario name as the file base name, and whether
 /// the machine-readable summary is also printed to stdout. `tag` and
@@ -148,6 +173,8 @@ pub struct Scenario {
     /// Default process count for `repro orchestrate` (None = the
     /// orchestrator's own default).
     pub shards: Option<usize>,
+    /// Supervision + multi-host policy for `repro orchestrate`.
+    pub orchestrate: OrchestratePolicy,
     pub output: OutputPolicy,
 }
 
@@ -164,6 +191,7 @@ impl Scenario {
                 threads: None,
                 cache: CachePolicy::default(),
                 shards: None,
+                orchestrate: OrchestratePolicy::default(),
                 output: OutputPolicy::default(),
             },
             quick_on_sweep: false,
@@ -184,8 +212,12 @@ impl Scenario {
         if self.name.is_empty() {
             bail!("scenario: empty name");
         }
-        for (field, v) in [("seed", Some(self.seed)), ("cache.max_bytes", self.cache.max_bytes)]
-        {
+        for (field, v) in [
+            ("seed", Some(self.seed)),
+            ("cache.max_bytes", self.cache.max_bytes),
+            ("orchestrate.timeout_s", self.orchestrate.timeout_s),
+            ("orchestrate.retries", self.orchestrate.retries),
+        ] {
             if let Some(v) = v {
                 if v > MAX_SAFE_INT {
                     bail!("scenario: {field} {v} exceeds the JSON-safe integer range");
@@ -197,6 +229,15 @@ impl Scenario {
         }
         if self.shards == Some(0) {
             bail!("scenario: shards must be >= 1");
+        }
+        if self.orchestrate.timeout_s == Some(0) {
+            bail!("scenario: orchestrate.timeout_s must be >= 1");
+        }
+        if self.orchestrate.remote_exe.is_some() && self.orchestrate.hosts.is_empty() {
+            bail!("scenario: orchestrate.remote_exe needs orchestrate.hosts");
+        }
+        if self.orchestrate.hosts.iter().any(String::is_empty) {
+            bail!("scenario: orchestrate.hosts entries must be non-empty");
         }
         match &self.kind {
             ScenarioKind::Sweep(_) => {
@@ -221,6 +262,9 @@ impl Scenario {
                 }
                 if self.shards.is_some() {
                     bail!("scenario: shards (the orchestrate plan) applies to sweep scenarios");
+                }
+                if self.orchestrate != OrchestratePolicy::default() {
+                    bail!("scenario: the orchestrate block applies to sweep scenarios");
                 }
                 Ok(())
             }
@@ -290,6 +334,30 @@ impl Scenario {
                 ]),
             ),
             (
+                "orchestrate".to_string(),
+                Json::Obj(vec![
+                    (
+                        "timeout_s".to_string(),
+                        opt_num(self.orchestrate.timeout_s),
+                    ),
+                    ("retries".to_string(), opt_num(self.orchestrate.retries)),
+                    (
+                        "hosts".to_string(),
+                        Json::Arr(
+                            self.orchestrate
+                                .hosts
+                                .iter()
+                                .map(|h| Json::Str(h.clone()))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "remote_exe".to_string(),
+                        opt_str(&self.orchestrate.remote_exe),
+                    ),
+                ]),
+            ),
+            (
                 "output".to_string(),
                 Json::Obj(vec![
                     (
@@ -345,6 +413,7 @@ impl Scenario {
             "threads",
             "shards",
             "cache",
+            "orchestrate",
             "output",
             "sweep",
             "experiment",
@@ -398,6 +467,55 @@ impl Scenario {
                         Some(v) => Some(
                             v.as_u64()
                                 .context("scenario: cache.max_bytes must be an integer")?,
+                        ),
+                        None => None,
+                    },
+                }
+            }
+        };
+        let orchestrate = match present(&doc, "orchestrate") {
+            None => OrchestratePolicy::default(),
+            Some(o) => {
+                check_keys(o, &["timeout_s", "retries", "hosts", "remote_exe"], "orchestrate")?;
+                OrchestratePolicy {
+                    timeout_s: match present(o, "timeout_s") {
+                        Some(v) => Some(
+                            v.as_u64()
+                                .context("scenario: orchestrate.timeout_s must be an integer")?,
+                        ),
+                        None => None,
+                    },
+                    retries: match present(o, "retries") {
+                        Some(v) => Some(
+                            v.as_u64()
+                                .context("scenario: orchestrate.retries must be an integer")?,
+                        ),
+                        None => None,
+                    },
+                    hosts: match present(o, "hosts") {
+                        None => Vec::new(),
+                        Some(v) => {
+                            let arr = v
+                                .as_array()
+                                .context("scenario: orchestrate.hosts must be an array")?;
+                            let mut hosts = Vec::with_capacity(arr.len());
+                            for h in arr {
+                                hosts.push(
+                                    h.as_str()
+                                        .context(
+                                            "scenario: orchestrate.hosts entries must be strings",
+                                        )?
+                                        .to_string(),
+                                );
+                            }
+                            hosts
+                        }
+                    },
+                    remote_exe: match present(o, "remote_exe") {
+                        Some(v) => Some(
+                            v.as_str()
+                                .context("scenario: orchestrate.remote_exe must be a string")?
+                                .to_string(),
                         ),
                         None => None,
                     },
@@ -486,6 +604,7 @@ impl Scenario {
             threads,
             cache,
             shards,
+            orchestrate,
             output,
         };
         sc.validate()?;
@@ -663,6 +782,31 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Per-shard wall-clock timeout for `repro orchestrate`, seconds.
+    pub fn shard_timeout_s(mut self, timeout_s: u64) -> Self {
+        self.sc.orchestrate.timeout_s = Some(timeout_s);
+        self
+    }
+
+    /// Retry budget for failed/timed-out shards.
+    pub fn shard_retries(mut self, retries: u64) -> Self {
+        self.sc.orchestrate.retries = Some(retries);
+        self
+    }
+
+    /// ssh hosts for multi-host orchestration (round-robin over
+    /// shards). Empty = local subprocesses.
+    pub fn hosts(mut self, hosts: &[&str]) -> Self {
+        self.sc.orchestrate.hosts = hosts.iter().map(|h| h.to_string()).collect();
+        self
+    }
+
+    /// Path of the `repro` binary on the remote hosts.
+    pub fn remote_exe(mut self, exe: &str) -> Self {
+        self.sc.orchestrate.remote_exe = Some(exe.to_string());
+        self
+    }
+
     pub fn out_dir(mut self, dir: &Path) -> Self {
         self.sc.output.dir = dir.to_path_buf();
         self
@@ -754,6 +898,21 @@ mod tests {
         if !experiment_kind && rng.gen_range(0, 2) == 0 {
             b = b.shards(rng.gen_range(1, 8) as usize);
         }
+        // The orchestrate block is sweep-only, like shards.
+        if !experiment_kind {
+            if rng.gen_range(0, 2) == 0 {
+                b = b.shard_timeout_s(rng.gen_range(1, 3600));
+            }
+            if rng.gen_range(0, 2) == 0 {
+                b = b.shard_retries(rng.gen_range(0, 5));
+            }
+            if rng.gen_range(0, 2) == 0 {
+                b = b.hosts(&["cim-a", "cim-b.local"]);
+                if rng.gen_range(0, 2) == 0 {
+                    b = b.remote_exe("/opt/www-cim/bin/repro");
+                }
+            }
+        }
         if rng.gen_range(0, 2) == 0 {
             b = b.cache_path(Path::new("results/cache \"x\".bin"));
         }
@@ -796,23 +955,23 @@ mod tests {
         let sc = Scenario::builder("v").workloads("bert").prims("d1").build().unwrap();
         let bumped = sc
             .to_json()
-            .replace("\"scenario_format\": 2", "\"scenario_format\": 3");
+            .replace("\"scenario_format\": 3", "\"scenario_format\": 4");
         let err = Scenario::from_json(&bumped).unwrap_err();
         assert!(
-            format!("{err:#}").contains("format v3"),
-            "must reject v3: {err:#}"
+            format!("{err:#}").contains("format v4"),
+            "must reject v4: {err:#}"
         );
-        // v1 files predate the sweep.batch axis; they are rejected at
+        // v2 files predate the orchestrate block; they are rejected at
         // load (with the version named) rather than half-read.
         let old = sc
             .to_json()
-            .replace("\"scenario_format\": 2", "\"scenario_format\": 1");
+            .replace("\"scenario_format\": 3", "\"scenario_format\": 2");
         let err = Scenario::from_json(&old).unwrap_err();
         assert!(
-            format!("{err:#}").contains("format v1"),
-            "must reject v1: {err:#}"
+            format!("{err:#}").contains("format v2"),
+            "must reject v2: {err:#}"
         );
-        let missing = sc.to_json().replace("  \"scenario_format\": 2,\n", "");
+        let missing = sc.to_json().replace("  \"scenario_format\": 3,\n", "");
         assert!(Scenario::from_json(&missing).is_err(), "version is mandatory");
     }
 
@@ -843,6 +1002,17 @@ mod tests {
             .build()
             .is_err());
         assert!(Scenario::builder("x").experiment("fig2").shards(2).build().is_err());
+        // ...as is the whole orchestrate block.
+        assert!(Scenario::builder("x")
+            .experiment("fig2")
+            .shard_retries(3)
+            .build()
+            .is_err());
+        // remote_exe without hosts, empty host names, and a zero
+        // timeout are all malformed orchestrate blocks.
+        assert!(Scenario::builder("x").remote_exe("/usr/bin/repro").build().is_err());
+        assert!(Scenario::builder("x").hosts(&["a", ""]).build().is_err());
+        assert!(Scenario::builder("x").shard_timeout_s(0).build().is_err());
         // ...and quick is experiment-only: a sweep build errors rather
         // than silently dropping the request, while a later
         // .experiment() adopts it regardless of call order.
@@ -861,18 +1031,22 @@ mod tests {
         sc.shards = None;
         sc.seed = MAX_SAFE_INT + 1;
         assert!(sc.validate().is_err());
+        sc.seed = 7;
+        sc.orchestrate.retries = Some(MAX_SAFE_INT + 1);
+        assert!(sc.validate().is_err());
     }
 
     #[test]
     fn missing_optional_fields_take_defaults() {
         let sc = Scenario::from_json(
-            r#"{"scenario_format": 2, "name": "minimal",
+            r#"{"scenario_format": 3, "name": "minimal",
                 "sweep": {"workloads": "bert", "prims": "d1", "levels": "rf"}}"#,
         )
         .unwrap();
         assert_eq!(sc.seed, synthetic::DEFAULT_SEED);
         assert_eq!(sc.threads, None);
         assert_eq!(sc.cache, CachePolicy::default());
+        assert_eq!(sc.orchestrate, OrchestratePolicy::default());
         assert_eq!(sc.output, OutputPolicy::default());
         match &sc.kind {
             ScenarioKind::Sweep(axes) => {
@@ -888,12 +1062,12 @@ mod tests {
     #[test]
     fn sweep_and_experiment_are_mutually_exclusive() {
         let err = Scenario::from_json(
-            r#"{"scenario_format": 2, "name": "both", "sweep": {},
+            r#"{"scenario_format": 3, "name": "both", "sweep": {},
                 "experiment": {"id": "fig9"}}"#,
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("not both"), "{err:#}");
-        let err = Scenario::from_json(r#"{"scenario_format": 2, "name": "neither"}"#)
+        let err = Scenario::from_json(r#"{"scenario_format": 3, "name": "neither"}"#)
             .unwrap_err();
         assert!(format!("{err:#}").contains("missing"), "{err:#}");
     }

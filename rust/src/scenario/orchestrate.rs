@@ -1,52 +1,619 @@
-//! The multi-process sweep orchestrator: `repro orchestrate
-//! <scenario.json|name> --procs n` in library form.
+//! The fault-tolerant multi-process sweep orchestrator: `repro
+//! orchestrate <scenario.json|name>` in library form.
 //!
 //! PR 2 made distributed sweeps *possible* (`--shard i/n` + `repro
-//! merge`) but left the choreography manual. The orchestrator closes
-//! the loop: it writes the canonical scenario file, spawns one `repro
-//! run <scenario> --shard i/n` subprocess per shard, waits for all of
-//! them, and merges the per-shard summaries into the final
-//! `<base>.csv` / `<base>.json` — byte-identical to a single-process
-//! `repro run` of the same scenario (the shard/merge guarantee, now
-//! exercised end-to-end in CI).
+//! merge`) but left the choreography manual; PR 4's first orchestrator
+//! automated it but died wholesale on any shard failure, could
+//! deadlock on its own children's output, and only knew how to spawn
+//! local subprocesses. This version supervises every shard:
+//!
+//! * **Streaming child I/O** — two reader threads per shard relay
+//!   stdout/stderr line-by-line (prefixed `[shard i/n]`) as the child
+//!   produces them. The old sequential `wait_with_output` loop could
+//!   deadlock: a later-index shard blocks writing to its full 64 KiB
+//!   pipe while the parent is still waiting on shard 0.
+//! * **Supervision** — a per-shard wall-clock timeout
+//!   ([`OrchestrateOptions::timeout`]) kills and reaps hung shards;
+//!   failed, timed-out or invalid-summary shards are re-spawned up to
+//!   [`OrchestrateOptions::retries`] times with exponential backoff.
+//!   Retrying is safe because shards are deterministic: a retried
+//!   shard's summary is byte-identical, so the shard/merge guarantee
+//!   holds.
+//! * **Resume** — [`OrchestrateOptions::resume`] fingerprints the
+//!   existing `<base>-shard<i>of<n>.json` summaries and re-runs only
+//!   the missing or invalid shards.
+//! * **Manifest** — every orchestration (success or failure) writes
+//!   `<base>.orchestrate.json` recording per-shard status, every
+//!   attempt's locus/outcome/wall-time, and the sweep fingerprint.
+//! * **Pluggable spawning** — the [`Spawner`] trait abstracts *where*
+//!   a shard runs: [`LocalSpawner`] forks this binary,
+//!   [`SshSpawner`] round-robins shards over `orchestrate.hosts` via
+//!   non-interactive ssh (shared-filesystem deployments).
 //!
 //! Subprocess (not thread) sharding is deliberate: it exercises the
 //! same process boundary a multi-host deployment has, and each shard
-//! gets its own address space. A shared cache path is safe but only
-//! best-effort across *concurrent* shards: each save merges the
-//! entries already on disk, yet the final rename is last-writer-wins
-//! (see [`crate::sweep::persist::save`]), so shards finishing at the
-//! same instant can drop each other's entries from the file — they are
-//! recomputed on the next run, never corrupted. Sweep correctness
-//! never depends on the cache: the merged CSV is assembled from the
-//! shard summaries, not the cache file.
+//! gets its own address space. A shared cache path is safe across
+//! concurrent shards: saves serialize on a sidecar lock file and union
+//! the entries already on disk (see [`crate::sweep::persist::save`]).
+//! Sweep correctness never depends on the cache either way: the merged
+//! CSV is assembled from the shard summaries, not the cache file.
 
-use std::path::PathBuf;
-use std::process::{Command, Stdio};
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::arch::Architecture;
 use crate::sweep::{output, shard};
+use crate::util::json::Json;
 
 use super::{Scenario, ScenarioKind};
 
-/// Run `sc` as `procs` shard subprocesses of this binary and merge the
-/// results. Sweep scenarios only — experiments parallelize internally.
+/// Version of the `<base>.orchestrate.json` run-manifest layout.
+pub const ORCHESTRATE_FORMAT_VERSION: u32 = 1;
+
+/// Default retry budget: one re-spawn per shard. Deterministic shards
+/// make retries safe, so a single transient failure (OOM kill, a
+/// dropped ssh connection) should not abort a long sweep.
+pub const DEFAULT_RETRIES: u32 = 1;
+
+/// First retry backoff; doubles per subsequent attempt of that shard.
+const BACKOFF_BASE: Duration = Duration::from_millis(250);
+
+/// Supervision poll interval.
+const POLL: Duration = Duration::from_millis(15);
+
+/// How the orchestrator supervises its shards. Scenario defaults come
+/// from [`OrchestrateOptions::from_scenario`]; CLI flags override the
+/// individual fields afterwards.
+#[derive(Debug, Clone)]
+pub struct OrchestrateOptions {
+    /// Shard count (one subprocess per shard).
+    pub procs: usize,
+    /// Kill a shard running longer than this (None = no timeout).
+    pub timeout: Option<Duration>,
+    /// Re-spawns allowed per shard after a failure/timeout.
+    pub retries: u32,
+    /// Keep shards whose on-disk summary already validates.
+    pub resume: bool,
+}
+
+impl OrchestrateOptions {
+    /// Options seeded from the scenario's `orchestrate` block.
+    pub fn from_scenario(sc: &Scenario, procs: usize) -> OrchestrateOptions {
+        OrchestrateOptions {
+            procs,
+            timeout: sc.orchestrate.timeout_s.map(Duration::from_secs),
+            retries: match sc.orchestrate.retries {
+                Some(r) => r.min(u64::from(u32::MAX)) as u32,
+                None => DEFAULT_RETRIES,
+            },
+            resume: false,
+        }
+    }
+}
+
+/// Where and how a shard subprocess starts. Implementations must hand
+/// back a [`Child`] with piped stdout/stderr (the orchestrator streams
+/// both) running `repro run <scenario> --shard i/n`.
+pub trait Spawner {
+    fn spawn_shard(&self, shard: shard::ShardId, scenario: &Path) -> Result<Child>;
+
+    /// Human-readable execution locus for logs and the manifest
+    /// (`"local"`, `"ssh host-a"`, ...).
+    fn locus(&self, shard: shard::ShardId) -> String;
+}
+
+/// Spawns shards as local subprocesses of one `repro` binary.
+#[derive(Debug, Clone)]
+pub struct LocalSpawner {
+    exe: PathBuf,
+}
+
+impl LocalSpawner {
+    /// Spawn shards from an explicit binary path (tests pass
+    /// `env!("CARGO_BIN_EXE_repro")`; inside an integration test,
+    /// `current_exe` would be the *test* binary).
+    pub fn new(exe: impl Into<PathBuf>) -> LocalSpawner {
+        LocalSpawner { exe: exe.into() }
+    }
+
+    /// Spawn shards from the currently running binary.
+    pub fn from_current_exe() -> Result<LocalSpawner> {
+        let exe = std::env::current_exe()
+            .context("locating the repro binary for shard subprocesses")?;
+        Ok(LocalSpawner { exe })
+    }
+}
+
+impl Spawner for LocalSpawner {
+    fn spawn_shard(&self, shard: shard::ShardId, scenario: &Path) -> Result<Child> {
+        Command::new(&self.exe)
+            .arg("run")
+            .arg(scenario)
+            .arg("--shard")
+            .arg(shard.to_string())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning shard {shard}"))
+    }
+
+    fn locus(&self, _shard: shard::ShardId) -> String {
+        "local".to_string()
+    }
+}
+
+/// Spawns shards over non-interactive ssh, round-robin across a host
+/// list: shard `i` runs on `hosts[i % len]` as
+/// `ssh -o BatchMode=yes <host> '<remote_exe>' run '<scenario>' --shard i/n`.
+///
+/// The scenario file and the output directory must resolve on every
+/// host (a shared filesystem, or identical layouts): the remote shard
+/// reads the scenario path and writes its summary where the
+/// orchestrator will merge it.
+#[derive(Debug, Clone)]
+pub struct SshSpawner {
+    hosts: Vec<String>,
+    remote_exe: String,
+}
+
+impl SshSpawner {
+    pub fn new(hosts: Vec<String>, remote_exe: Option<String>) -> Result<SshSpawner> {
+        if hosts.is_empty() {
+            bail!("ssh spawner needs at least one host");
+        }
+        if hosts.iter().any(String::is_empty) {
+            bail!("ssh spawner host names must be non-empty");
+        }
+        Ok(SshSpawner {
+            hosts,
+            remote_exe: remote_exe.unwrap_or_else(|| "repro".to_string()),
+        })
+    }
+
+    fn host(&self, shard: shard::ShardId) -> &str {
+        &self.hosts[shard.index % self.hosts.len()]
+    }
+}
+
+/// Single-quote `s` for the remote shell.
+fn sh_quote(s: &str) -> String {
+    format!("'{}'", s.replace('\'', "'\\''"))
+}
+
+impl Spawner for SshSpawner {
+    fn spawn_shard(&self, shard: shard::ShardId, scenario: &Path) -> Result<Child> {
+        let remote_cmd = format!(
+            "{} run {} --shard {}",
+            sh_quote(&self.remote_exe),
+            sh_quote(&scenario.to_string_lossy()),
+            shard
+        );
+        Command::new("ssh")
+            .arg("-o")
+            .arg("BatchMode=yes")
+            .arg(self.host(shard))
+            .arg(remote_cmd)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning shard {shard} via ssh {}", self.host(shard)))
+    }
+
+    fn locus(&self, shard: shard::ShardId) -> String {
+        format!("ssh {}", self.host(shard))
+    }
+}
+
+/// One spawn of one shard, as recorded in the run manifest.
+#[derive(Debug, Clone)]
+struct Attempt {
+    locus: String,
+    /// `ok`, `exit:<code/signal>`, `timeout`, `wait-error: ...` or
+    /// `invalid-summary: ...`.
+    outcome: String,
+    wall_s: f64,
+}
+
+/// Supervision state of one shard.
+enum State {
+    /// Waiting to (re)spawn; not before the backoff deadline.
+    Pending { not_before: Instant },
+    Running {
+        child: Child,
+        started: Instant,
+        readers: Vec<thread::JoinHandle<()>>,
+    },
+    /// Resume found a valid summary; never spawned.
+    Skipped,
+    /// Exited 0 with a validated summary.
+    Done,
+    /// Retry budget exhausted.
+    GivenUp,
+}
+
+struct Task {
+    id: shard::ShardId,
+    state: State,
+    spawned: u32,
+    attempts: Vec<Attempt>,
+}
+
+impl Task {
+    fn status(&self) -> &'static str {
+        match &self.state {
+            State::Skipped => "skipped",
+            State::Done => "ok",
+            State::GivenUp => {
+                if self.attempts.last().is_some_and(|a| a.outcome == "timeout") {
+                    "timeout"
+                } else {
+                    "failed"
+                }
+            }
+            State::Pending { .. } | State::Running { .. } => "aborted",
+        }
+    }
+}
+
+/// What a finished shard's summary file must agree with.
+struct Expected {
+    name: String,
+    fingerprint: String,
+    points_total: usize,
+}
+
+impl Expected {
+    fn check(&self, path: &Path, id: shard::ShardId) -> Result<()> {
+        let s = shard::read_shard_file(path)?;
+        if s.sweep != self.name {
+            bail!("summary names sweep {:?}, expected {:?}", s.sweep, self.name);
+        }
+        if s.fingerprint != self.fingerprint {
+            bail!(
+                "summary fingerprint {} does not match the scenario's {}",
+                s.fingerprint,
+                self.fingerprint
+            );
+        }
+        if s.points_total != self.points_total {
+            bail!(
+                "summary points_total {} does not match the scenario's {}",
+                s.points_total,
+                self.points_total
+            );
+        }
+        if s.shard != id {
+            bail!("summary carries shard identity {}, expected {id}", s.shard);
+        }
+        Ok(())
+    }
+}
+
+/// Relay one child stream line-by-line under the shard prefix. Reader
+/// threads (instead of a post-exit drain) are what keep a chatty shard
+/// from blocking on a full pipe while the parent waits on another.
+fn stream_reader<R: std::io::Read + Send + 'static>(
+    source: R,
+    prefix: String,
+    to_stderr: bool,
+) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        let reader = std::io::BufReader::new(source);
+        for line in reader.lines() {
+            match line {
+                Ok(line) => {
+                    if to_stderr {
+                        eprintln!("{prefix} {line}");
+                    } else {
+                        println!("{prefix} {line}");
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    })
+}
+
+fn spawn_task(task: &mut Task, spawner: &dyn Spawner, sc_path: &Path) -> Result<()> {
+    let mut child = spawner.spawn_shard(task.id, sc_path)?;
+    let mut readers = Vec::with_capacity(2);
+    let prefix = format!("[shard {}]", task.id);
+    if let Some(stdout) = child.stdout.take() {
+        readers.push(stream_reader(stdout, prefix.clone(), false));
+    }
+    if let Some(stderr) = child.stderr.take() {
+        readers.push(stream_reader(stderr, prefix, true));
+    }
+    task.spawned += 1;
+    task.state = State::Running {
+        child,
+        started: Instant::now(),
+        readers,
+    };
+    Ok(())
+}
+
+/// Kill and reap a running child, joining its reader threads.
+fn reap(child: &mut Child, readers: Vec<thread::JoinHandle<()>>) {
+    let _ = child.kill();
+    let _ = child.wait();
+    for r in readers {
+        let _ = r.join();
+    }
+}
+
+/// Kill every still-running shard (the spawn-error cleanup path: no
+/// zombies survive a failed orchestration).
+fn kill_all(tasks: &mut [Task]) {
+    for task in tasks {
+        if !matches!(task.state, State::Running { .. }) {
+            continue;
+        }
+        if let State::Running { child, readers, started } =
+            std::mem::replace(&mut task.state, State::GivenUp)
+        {
+            let mut child = child;
+            let wall_s = started.elapsed().as_secs_f64();
+            reap(&mut child, readers);
+            task.attempts.push(Attempt {
+                locus: String::new(),
+                outcome: "killed: orchestration aborted".to_string(),
+                wall_s,
+            });
+        }
+    }
+}
+
+/// Record a failed attempt and either schedule a retry (exponential
+/// backoff) or give the shard up.
+fn after_failure(task: &mut Task, opts: &OrchestrateOptions, outcome: String, wall_s: f64) {
+    task.attempts.push(Attempt { locus: String::new(), outcome: outcome.clone(), wall_s });
+    if task.spawned <= opts.retries {
+        let backoff = BACKOFF_BASE * 2u32.saturating_pow(task.spawned.saturating_sub(1));
+        println!(
+            "orchestrate: shard {} attempt {} failed ({outcome}); retrying in {}ms",
+            task.id,
+            task.spawned,
+            backoff.as_millis()
+        );
+        task.state = State::Pending { not_before: Instant::now() + backoff };
+    } else {
+        println!(
+            "orchestrate: shard {} failed after {} attempt(s) ({outcome}); giving up",
+            task.id, task.spawned
+        );
+        task.state = State::GivenUp;
+    }
+}
+
+/// Drive every shard to Done/Skipped/GivenUp. Returns Err only for
+/// orchestration-level errors (a spawn failure) — and only after every
+/// already-running child has been killed and reaped. Per-shard *run*
+/// failures drain normally so `--resume` can pick up the survivors.
+fn supervise(
+    tasks: &mut [Task],
+    opts: &OrchestrateOptions,
+    spawner: &dyn Spawner,
+    sc_path: &Path,
+    shard_path: &dyn Fn(shard::ShardId) -> PathBuf,
+    expected: &Expected,
+) -> Result<()> {
+    loop {
+        let mut active = false;
+        for i in 0..tasks.len() {
+            let task = &mut tasks[i];
+            match &mut task.state {
+                State::Skipped | State::Done | State::GivenUp => {}
+                State::Pending { not_before } => {
+                    active = true;
+                    if Instant::now() >= *not_before {
+                        let locus = spawner.locus(task.id);
+                        if let Err(e) = spawn_task(task, spawner, sc_path) {
+                            task.attempts.push(Attempt {
+                                locus,
+                                outcome: format!("spawn-error: {e:#}"),
+                                wall_s: 0.0,
+                            });
+                            task.state = State::GivenUp;
+                            kill_all(tasks);
+                            return Err(e);
+                        }
+                    }
+                }
+                State::Running { child, started, readers } => {
+                    active = true;
+                    let wall = started.elapsed();
+                    match child.try_wait() {
+                        Ok(None) => {
+                            // Still running; enforce the timeout.
+                            if opts.timeout.is_some_and(|t| wall > t) {
+                                let readers = std::mem::take(readers);
+                                reap(child, readers);
+                                let locus = spawner.locus(task.id);
+                                after_failure(
+                                    task,
+                                    opts,
+                                    "timeout".to_string(),
+                                    wall.as_secs_f64(),
+                                );
+                                stamp_locus(task, locus);
+                            }
+                        }
+                        Ok(Some(status)) => {
+                            let readers = std::mem::take(readers);
+                            for r in readers {
+                                let _ = r.join();
+                            }
+                            let locus = spawner.locus(task.id);
+                            if status.success() {
+                                // Exit 0 still only counts with a
+                                // valid summary on disk.
+                                match expected.check(&shard_path(task.id), task.id) {
+                                    Ok(()) => {
+                                        task.attempts.push(Attempt {
+                                            locus,
+                                            outcome: "ok".to_string(),
+                                            wall_s: wall.as_secs_f64(),
+                                        });
+                                        task.state = State::Done;
+                                    }
+                                    Err(e) => {
+                                        after_failure(
+                                            task,
+                                            opts,
+                                            format!("invalid-summary: {e:#}"),
+                                            wall.as_secs_f64(),
+                                        );
+                                        stamp_locus(task, locus);
+                                    }
+                                }
+                            } else {
+                                after_failure(
+                                    task,
+                                    opts,
+                                    format!("exit:{status}"),
+                                    wall.as_secs_f64(),
+                                );
+                                stamp_locus(task, locus);
+                            }
+                        }
+                        Err(e) => {
+                            let readers = std::mem::take(readers);
+                            reap(child, readers);
+                            let locus = spawner.locus(task.id);
+                            after_failure(
+                                task,
+                                opts,
+                                format!("wait-error: {e}"),
+                                wall.as_secs_f64(),
+                            );
+                            stamp_locus(task, locus);
+                        }
+                    }
+                }
+            }
+        }
+        if !active {
+            return Ok(());
+        }
+        thread::sleep(POLL);
+    }
+}
+
+/// `after_failure` records the attempt before it knows the locus (it
+/// borrows the task mutably); fill it in on the freshly pushed record.
+fn stamp_locus(task: &mut Task, locus: String) {
+    if let Some(last) = task.attempts.last_mut() {
+        if last.locus.is_empty() {
+            last.locus = locus;
+        }
+    }
+}
+
+/// Encode the run manifest.
+fn manifest_json(
+    sc: &Scenario,
+    expected: &Expected,
+    opts: &OrchestrateOptions,
+    tasks: &[Task],
+    status: &str,
+) -> String {
+    let shards: Vec<Json> = tasks
+        .iter()
+        .map(|t| {
+            let attempts: Vec<Json> = t
+                .attempts
+                .iter()
+                .map(|a| {
+                    Json::Obj(vec![
+                        ("locus".to_string(), Json::Str(a.locus.clone())),
+                        ("outcome".to_string(), Json::Str(a.outcome.clone())),
+                        ("wall_s".to_string(), Json::Num(a.wall_s)),
+                    ])
+                })
+                .collect();
+            Json::Obj(vec![
+                ("index".to_string(), Json::Num(t.id.index as f64)),
+                ("status".to_string(), Json::Str(t.status().to_string())),
+                ("attempts".to_string(), Json::Arr(attempts)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        (
+            "orchestrate_format".to_string(),
+            Json::Num(f64::from(ORCHESTRATE_FORMAT_VERSION)),
+        ),
+        ("scenario".to_string(), Json::Str(sc.name.clone())),
+        ("base".to_string(), Json::Str(sc.base_name().to_string())),
+        (
+            "fingerprint".to_string(),
+            Json::Str(expected.fingerprint.clone()),
+        ),
+        ("procs".to_string(), Json::Num(opts.procs as f64)),
+        ("status".to_string(), Json::Str(status.to_string())),
+        ("shards".to_string(), Json::Arr(shards)),
+    ])
+    .encode()
+}
+
+/// Run `sc` as shard subprocesses of this binary and merge the
+/// results, with the scenario's own supervision policy. Sweep
+/// scenarios only — experiments parallelize internally.
 pub fn orchestrate(sc: &Scenario, procs: usize) -> Result<()> {
+    let opts = OrchestrateOptions::from_scenario(sc, procs);
+    orchestrate_scenario(sc, &opts)
+}
+
+/// [`orchestrate`] with explicit options (the CLI path: flag overrides
+/// already folded in). Picks the spawner from the scenario:
+/// `orchestrate.hosts` → ssh, else local subprocesses.
+pub fn orchestrate_scenario(sc: &Scenario, opts: &OrchestrateOptions) -> Result<()> {
+    if sc.orchestrate.hosts.is_empty() {
+        let spawner = LocalSpawner::from_current_exe()?;
+        orchestrate_with(sc, opts, &spawner)
+    } else {
+        let spawner = SshSpawner::new(
+            sc.orchestrate.hosts.clone(),
+            sc.orchestrate.remote_exe.clone(),
+        )?;
+        orchestrate_with(sc, opts, &spawner)
+    }
+}
+
+/// The full orchestration against any [`Spawner`]: validate + persist
+/// the scenario, (optionally) adopt resumable shard summaries,
+/// supervise the rest to completion, write the run manifest, merge.
+pub fn orchestrate_with(
+    sc: &Scenario,
+    opts: &OrchestrateOptions,
+    spawner: &dyn Spawner,
+) -> Result<()> {
     if let ScenarioKind::Experiment { id, .. } = &sc.kind {
         bail!(
             "orchestrate drives sweep scenarios; experiment {id:?} already \
              parallelizes internally — use `repro run {id}`"
         );
     }
+    let procs = opts.procs;
     if procs == 0 {
         bail!("--procs must be >= 1");
     }
     // Lowering doubles as validation for a sweep scenario (a scenario
-    // that lowers is a scenario that runs); the grid is only needed
-    // for the point count here — each shard expands its own.
+    // that lowers is a scenario that runs); the grid here feeds the
+    // point count and the fingerprint — each shard expands its own.
     let spec = sc.sweep_spec()?;
     sc.validate()?;
+    let expected = Expected {
+        name: spec.name.clone(),
+        fingerprint: shard::sweep_fingerprint(&Architecture::default_sm(), &spec),
+        points_total: spec.n_points(),
+    };
 
     // Persist the canonical scenario the shard subprocesses will run:
     // the children re-load exactly what we validated, and the file
@@ -55,65 +622,75 @@ pub fn orchestrate(sc: &Scenario, procs: usize) -> Result<()> {
     let base = sc.base_name();
     let sc_path = out_dir.join(format!("{base}.scenario.json"));
     sc.write(&sc_path)?;
-    let exe = std::env::current_exe()
-        .context("locating the repro binary for shard subprocesses")?;
+    let shard_path = |id: shard::ShardId| -> PathBuf {
+        out_dir.join(format!("{base}-{}.json", id.file_tag()))
+    };
     println!(
         "orchestrate: {procs} shard process(es) over {} grid points ({})",
-        spec.n_points(),
+        expected.points_total,
         sc_path.display()
     );
 
-    // Spawn every shard, then collect: shards run concurrently and a
-    // failure anywhere fails the whole orchestration (after every
-    // child has been reaped — no zombies, and all diagnostics print).
-    let mut children = Vec::with_capacity(procs);
-    for index in 0..procs {
-        let child = Command::new(&exe)
-            .arg("run")
-            .arg(&sc_path)
-            .arg("--shard")
-            .arg(format!("{index}/{procs}"))
-            .stdout(Stdio::piped())
-            .stderr(Stdio::piped())
-            .spawn()
-            .with_context(|| format!("spawning shard {index}/{procs}"))?;
-        children.push((index, child));
-    }
-    let mut failures = Vec::new();
-    for (index, child) in children {
-        let out = child
-            .wait_with_output()
-            .with_context(|| format!("waiting for shard {index}/{procs}"))?;
-        // Replay the child's output prefixed with its shard identity,
-        // so concurrent shards stay readable.
-        for line in String::from_utf8_lossy(&out.stdout).lines() {
-            println!("[shard {index}/{procs}] {line}");
-        }
-        for line in String::from_utf8_lossy(&out.stderr).lines() {
-            eprintln!("[shard {index}/{procs}] {line}");
-        }
-        if !out.status.success() {
-            failures.push(format!("shard {index}/{procs} exited with {}", out.status));
+    let mut tasks: Vec<Task> = (0..procs)
+        .map(|index| Task {
+            id: shard::ShardId { index, count: procs },
+            state: State::Pending { not_before: Instant::now() },
+            spawned: 0,
+            attempts: Vec::new(),
+        })
+        .collect();
+
+    // Resume: a shard whose summary already validates against this
+    // scenario (format, fingerprint, identity, result count) is
+    // adopted as-is; anything missing or invalid re-runs.
+    if opts.resume {
+        for task in &mut tasks {
+            let path = shard_path(task.id);
+            if path.exists() {
+                match expected.check(&path, task.id) {
+                    Ok(()) => {
+                        println!("orchestrate: shard {} already valid; skipping", task.id);
+                        task.state = State::Skipped;
+                    }
+                    Err(e) => {
+                        println!(
+                            "orchestrate: shard {} summary invalid ({e:#}); re-running",
+                            task.id
+                        );
+                    }
+                }
+            }
         }
     }
-    if !failures.is_empty() {
-        bail!("orchestrate failed: {}", failures.join("; "));
+
+    let run = supervise(&mut tasks, opts, spawner, &sc_path, &shard_path, &expected);
+    let failed: Vec<String> = tasks
+        .iter()
+        .filter(|t| !matches!(t.state, State::Done | State::Skipped))
+        .map(|t| format!("shard {} {}", t.id, t.status()))
+        .collect();
+    let status = if run.is_ok() && failed.is_empty() { "ok" } else { "failed" };
+
+    // The manifest documents every orchestration, failures included —
+    // that is what makes an aborted run diagnosable and resumable.
+    let manifest_path = out_dir.join(format!("{base}.orchestrate.json"));
+    std::fs::write(&manifest_path, manifest_json(sc, &expected, opts, &tasks, status))
+        .with_context(|| format!("writing run manifest {}", manifest_path.display()))?;
+    println!("[manifest] {}", manifest_path.display());
+
+    run?;
+    if !failed.is_empty() {
+        bail!(
+            "orchestrate failed: {} (resume with `repro orchestrate ... --resume` \
+             after fixing the cause; see {})",
+            failed.join("; "),
+            manifest_path.display()
+        );
     }
 
     // Merge the per-shard summaries back into the unsharded artifacts
     // (the validated, byte-identical combine of `repro merge`).
-    let shard_paths: Vec<PathBuf> = (0..procs)
-        .map(|index| {
-            out_dir.join(format!(
-                "{base}-{}.json",
-                shard::ShardId {
-                    index,
-                    count: procs
-                }
-                .file_tag()
-            ))
-        })
-        .collect();
+    let shard_paths: Vec<PathBuf> = tasks.iter().map(|t| shard_path(t.id)).collect();
     let merged = shard::merge_files(&shard_paths)?;
     println!(
         "orchestrate: merged {} shard(s) of {:?}: {} points (fingerprint {})",
@@ -155,5 +732,46 @@ mod tests {
             .build()
             .unwrap();
         assert!(orchestrate(&sweep, 0).is_err());
+    }
+
+    #[test]
+    fn options_inherit_the_scenario_orchestrate_block() {
+        let sc = Scenario::builder("o")
+            .workloads("synthetic:2")
+            .prims("d1")
+            .levels("rf")
+            .shard_timeout_s(90)
+            .shard_retries(4)
+            .build()
+            .unwrap();
+        let opts = OrchestrateOptions::from_scenario(&sc, 3);
+        assert_eq!(opts.procs, 3);
+        assert_eq!(opts.timeout, Some(Duration::from_secs(90)));
+        assert_eq!(opts.retries, 4);
+        assert!(!opts.resume);
+        let plain = Scenario::builder("p")
+            .workloads("synthetic:2")
+            .prims("d1")
+            .levels("rf")
+            .build()
+            .unwrap();
+        let opts = OrchestrateOptions::from_scenario(&plain, 2);
+        assert_eq!(opts.timeout, None);
+        assert_eq!(opts.retries, DEFAULT_RETRIES);
+    }
+
+    #[test]
+    fn ssh_spawner_round_robins_hosts_and_quotes() {
+        let sp = SshSpawner::new(
+            vec!["a".to_string(), "b".to_string()],
+            Some("/opt/repro".to_string()),
+        )
+        .unwrap();
+        let id = |index| shard::ShardId { index, count: 5 };
+        assert_eq!(sp.locus(id(0)), "ssh a");
+        assert_eq!(sp.locus(id(1)), "ssh b");
+        assert_eq!(sp.locus(id(4)), "ssh a");
+        assert!(SshSpawner::new(vec![], None).is_err());
+        assert_eq!(sh_quote("it's"), "'it'\\''s'");
     }
 }

@@ -28,14 +28,17 @@
 //! files fall here) therefore invalidates every persisted entry instead
 //! of serving stale metrics or mapper-less entries. Saves are atomic
 //! (pid-unique temp file + rename), so a crash mid-save can corrupt at
-//! worst a temp file, never the cache — and a save first merges any
-//! compatible entries already on disk, so processes sharing one
-//! `--cache` path accumulate a union (see [`save`] for the
-//! simultaneous-save caveat).
+//! worst a temp file, never the cache — and each save's
+//! read-union-write cycle holds a sidecar lock file
+//! (`<cache>.lock`, create-exclusive with bounded retry), so processes
+//! sharing one `--cache` path accumulate a true union even when their
+//! saves race: the rename-loser's entries are merged by the winner
+//! instead of dropped (see [`save`]).
 
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -256,16 +259,95 @@ pub fn encode_capped(cache: &EvalCache, max_bytes: Option<u64>) -> (String, usiz
 ///
 /// Saving first folds any *compatible* entries already at `path` into
 /// the in-memory cache, so the written file is the union of both —
-/// sequential shard processes pointing `--cache` at one file each
-/// contribute their slice instead of overwriting each other's. The
-/// temp name embeds the pid, so concurrent savers never clobber each
-/// other's in-flight temp file; the final rename, however, is
-/// last-writer-wins — two processes saving at the same instant can
-/// lose the entries only the rename-loser computed (they are merely
-/// recomputed on the next run, never corrupted). True concurrent
-/// accumulation needs file locking, which std does not portably offer.
+/// shard processes pointing `--cache` at one file each contribute
+/// their slice instead of overwriting each other's. The whole
+/// read-union-write cycle runs under a sidecar lock file
+/// (`<cache>.lock`, create-exclusive, bounded retry with a stale-lock
+/// breaker — see [`SaveLock`]), which closes the historical
+/// last-writer-wins window: two shards finishing at the same instant
+/// serialize their saves, so the second one merges the first one's
+/// entries rather than renaming over them.
 pub fn save(cache: &EvalCache, path: &Path) -> Result<usize> {
     save_capped(cache, path, None).map(|o| o.entries)
+}
+
+/// How long an acquire waits for `<cache>.lock` before presuming its
+/// holder died mid-save and breaking the lock (once). Generous: a real
+/// save holds the lock for milliseconds.
+const LOCK_DEADLINE: Duration = Duration::from_secs(5);
+
+/// RAII guard serializing concurrent saves to one cache path via a
+/// sidecar `<cache>.lock` file. std offers no portable byte-range
+/// locking, but `O_CREAT|O_EXCL` (create-exclusive) is atomic on every
+/// platform we target, including over NFS mounts modern enough to
+/// matter — so the lock is a file whose *existence* is the lock.
+///
+/// Acquire retries with a growing sleep for [`LOCK_DEADLINE`]; if the
+/// lock still exists after that (a holder that crashed between
+/// creating it and its `Drop`), it is presumed stale and broken once —
+/// a second full deadline expiring is an error, not a second break, so
+/// two live processes can never steal the lock from each other
+/// repeatedly. The holder's pid is written into the file to make a
+/// stuck lock diagnosable. Dropping the guard removes the file.
+struct SaveLock {
+    path: PathBuf,
+}
+
+impl SaveLock {
+    fn acquire(cache_path: &Path) -> Result<SaveLock> {
+        let path = lock_path(cache_path);
+        let mut start = Instant::now();
+        let mut sleep = Duration::from_millis(5);
+        let mut broke_stale = false;
+        loop {
+            match fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut file) => {
+                    use std::io::Write;
+                    // Best-effort diagnostics; the lock is the file's
+                    // existence, not its content.
+                    let _ = writeln!(file, "{}", std::process::id());
+                    return Ok(SaveLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if start.elapsed() >= LOCK_DEADLINE {
+                        if broke_stale {
+                            bail!(
+                                "cache lock {} still held after two {}s waits — \
+                                 remove it manually if no saver is running",
+                                path.display(),
+                                LOCK_DEADLINE.as_secs()
+                            );
+                        }
+                        broke_stale = true;
+                        start = Instant::now();
+                        let _ = fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(sleep);
+                    sleep = (sleep * 2).min(Duration::from_millis(100));
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("creating cache lock {}", path.display()))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for SaveLock {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.path);
+    }
+}
+
+/// The sidecar lock path for a cache file: `<cache>.lock`.
+fn lock_path(cache_path: &Path) -> PathBuf {
+    let name = cache_path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("cache.bin");
+    cache_path.with_file_name(format!("{name}.lock"))
 }
 
 /// Outcome of [`save_capped`]: how many entries were written and how
@@ -301,18 +383,25 @@ pub fn save_capped(
     path: &Path,
     max_bytes: Option<u64>,
 ) -> Result<SaveOutcome> {
-    // Loaded => existing entries merged into the union written below;
-    // Missing/Discarded => nothing (valid) to merge. A real read error
-    // must propagate: overwriting a file we could not read would
-    // silently destroy previously persisted entries.
-    load_into(cache, path)
-        .with_context(|| format!("refusing to overwrite unreadable cache {}", path.display()))?;
+    // The lock lives next to the cache file, so the parent dir must
+    // exist before acquiring.
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             fs::create_dir_all(parent)
                 .with_context(|| format!("creating cache dir {}", parent.display()))?;
         }
     }
+    // Hold the sidecar lock across the whole read-union-write cycle:
+    // a concurrent saver's entries land on disk either before our
+    // load_into (merged into our union) or after our rename (merging
+    // ours in turn) — never in between, where they would be lost.
+    let _lock = SaveLock::acquire(path)?;
+    // Loaded => existing entries merged into the union written below;
+    // Missing/Discarded => nothing (valid) to merge. A real read error
+    // must propagate: overwriting a file we could not read would
+    // silently destroy previously persisted entries.
+    load_into(cache, path)
+        .with_context(|| format!("refusing to overwrite unreadable cache {}", path.display()))?;
     let tmp: PathBuf = {
         let name = path
             .file_name()
@@ -783,6 +872,72 @@ mod tests {
             }
             other => panic!("foreign file must be discarded, got {other:?}"),
         }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn racing_saves_union_instead_of_last_writer_wins() {
+        // Two threads repeatedly save disjoint single-entry caches to
+        // one path, released from a barrier so the read-union-write
+        // cycles actually overlap. The sidecar lock must serialize
+        // them: every entry either lands before the rival's load_into
+        // (and is merged) or after its rename (and merges the rival's)
+        // — the historical last-writer-wins race dropped the loser's.
+        let path = tmp_path("racing");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(&lock_path(&path));
+        const ROUNDS: u64 = 8;
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                let barrier = &barrier;
+                let path = &path;
+                s.spawn(move || {
+                    for round in 0..ROUNDS {
+                        let cache = EvalCache::new();
+                        let key = format!("pt-{t}-{round}");
+                        cache.get_or_compute(&key, Gemm::new(8, 8, 8), || {
+                            entry((t * 100 + round) as f64 + 1.0)
+                        });
+                        barrier.wait();
+                        save(&cache, path).expect("racing save must succeed");
+                    }
+                });
+            }
+        });
+        let merged = EvalCache::new();
+        match load_into(&merged, &path).unwrap() {
+            CacheLoad::Loaded { entries } => assert_eq!(
+                entries as u64,
+                2 * ROUNDS,
+                "every racing save's entry must survive the union"
+            ),
+            other => panic!("expected Loaded, got {other:?}"),
+        }
+        assert!(
+            !lock_path(&path).exists(),
+            "the lock must be released after every save"
+        );
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stale_lock_is_broken_after_the_deadline() {
+        // A lock whose holder crashed mid-save must not wedge saves
+        // forever: after LOCK_DEADLINE the acquirer breaks it once.
+        let path = tmp_path("stale-lock");
+        let _ = fs::remove_file(&path);
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(lock_path(&path), "999999\n").unwrap();
+        let cache = EvalCache::new();
+        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || entry(1.0));
+        let start = Instant::now();
+        assert_eq!(save(&cache, &path).unwrap(), 1);
+        assert!(
+            start.elapsed() >= LOCK_DEADLINE,
+            "the breaker must wait out the full deadline first"
+        );
+        assert!(!lock_path(&path).exists(), "broken lock must not linger");
         let _ = fs::remove_file(&path);
     }
 

@@ -219,9 +219,92 @@ pub struct MergedSweep {
     pub results: Vec<SweepResult>,
 }
 
-struct ShardDoc {
-    shard: ShardId,
-    results: Vec<SweepResult>,
+/// One parsed + structurally validated shard summary file. Shared by
+/// `repro merge` / the orchestrator's post-run validation / `--resume`
+/// (which treats an unreadable summary as "shard must re-run").
+#[derive(Debug, Clone)]
+pub struct ShardSummary {
+    pub sweep: String,
+    pub fingerprint: String,
+    pub points_total: usize,
+    pub cost_model: u64,
+    pub shard: ShardId,
+    /// This shard's results in local (sliced) order.
+    pub results: Vec<SweepResult>,
+}
+
+/// Read and validate one per-shard summary file: format version,
+/// required header fields, a sane shard identity, and a result count
+/// matching the shard's slice of `points_total`.
+pub fn read_shard_file(path: &Path) -> Result<ShardSummary> {
+    let loc = format!("shard file {}", path.display());
+    let text = fs::read_to_string(path).with_context(|| loc.clone())?;
+    let doc = Json::parse(&text).with_context(|| loc.clone())?;
+    let format = doc
+        .get("format")
+        .and_then(Json::as_u64)
+        .with_context(|| format!("{loc}: missing shard format version"))?;
+    if format != u64::from(SHARD_FORMAT_VERSION) {
+        bail!("{loc}: shard format v{format}, this binary reads v{SHARD_FORMAT_VERSION}");
+    }
+    let sweep = doc
+        .get("sweep")
+        .and_then(Json::as_str)
+        .with_context(|| format!("{loc}: missing sweep name"))?
+        .to_string();
+    let fingerprint = doc
+        .get("fingerprint")
+        .and_then(Json::as_str)
+        .with_context(|| format!("{loc}: missing sweep fingerprint"))?
+        .to_string();
+    let points_total = doc
+        .get("points_total")
+        .and_then(Json::as_u64)
+        .with_context(|| format!("{loc}: missing points_total"))? as usize;
+    let cost_model = doc
+        .get("cost_model")
+        .and_then(Json::as_u64)
+        .with_context(|| format!("{loc}: missing cost_model version"))?;
+    let shard_obj = doc
+        .get("shard")
+        .with_context(|| format!("{loc}: missing shard identity"))?;
+    let shard = ShardId {
+        index: shard_obj
+            .get("index")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("{loc}: missing shard index"))? as usize,
+        count: shard_obj
+            .get("count")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("{loc}: missing shard count"))? as usize,
+    };
+    if shard.count == 0 || shard.index >= shard.count {
+        bail!("{loc}: bad shard identity {shard}");
+    }
+    let rows = doc
+        .get("results")
+        .and_then(Json::as_array)
+        .with_context(|| format!("{loc}: missing results"))?;
+    let expect = shard.len_of(points_total);
+    if rows.len() != expect {
+        bail!(
+            "{loc}: shard {shard} carries {} results, expected {expect}",
+            rows.len()
+        );
+    }
+    let results = rows
+        .iter()
+        .map(result_from_json)
+        .collect::<Result<Vec<SweepResult>>>()
+        .with_context(|| loc.clone())?;
+    Ok(ShardSummary {
+        sweep,
+        fingerprint,
+        points_total,
+        cost_model,
+        shard,
+        results,
+    })
 }
 
 fn result_from_json(v: &Json) -> Result<SweepResult> {
@@ -282,91 +365,37 @@ pub fn merge_files(paths: &[PathBuf]) -> Result<MergedSweep> {
     let mut fingerprint: Option<String> = None;
     let mut points_total: Option<usize> = None;
     let mut cost_model: Option<u64> = None;
-    let mut docs: Vec<ShardDoc> = Vec::new();
+    let mut docs: Vec<ShardSummary> = Vec::new();
     for path in paths {
         let loc = format!("shard file {}", path.display());
-        let text = fs::read_to_string(path).with_context(|| loc.clone())?;
-        let doc = Json::parse(&text).with_context(|| loc.clone())?;
-        let format = doc
-            .get("format")
-            .and_then(Json::as_u64)
-            .with_context(|| format!("{loc}: missing shard format version"))?;
-        if format != u64::from(SHARD_FORMAT_VERSION) {
-            bail!("{loc}: shard format v{format}, this binary reads v{SHARD_FORMAT_VERSION}");
-        }
-        let this_name = doc
-            .get("sweep")
-            .and_then(Json::as_str)
-            .with_context(|| format!("{loc}: missing sweep name"))?
-            .to_string();
-        let this_fp = doc
-            .get("fingerprint")
-            .and_then(Json::as_str)
-            .with_context(|| format!("{loc}: missing sweep fingerprint"))?
-            .to_string();
-        let this_total = doc
-            .get("points_total")
-            .and_then(Json::as_u64)
-            .with_context(|| format!("{loc}: missing points_total"))? as usize;
-        let this_model = doc
-            .get("cost_model")
-            .and_then(Json::as_u64)
-            .with_context(|| format!("{loc}: missing cost_model version"))?;
-        let shard_obj = doc
-            .get("shard")
-            .with_context(|| format!("{loc}: missing shard identity"))?;
-        let shard = ShardId {
-            index: shard_obj
-                .get("index")
-                .and_then(Json::as_u64)
-                .with_context(|| format!("{loc}: missing shard index"))? as usize,
-            count: shard_obj
-                .get("count")
-                .and_then(Json::as_u64)
-                .with_context(|| format!("{loc}: missing shard count"))? as usize,
-        };
-        if shard.count == 0 || shard.index >= shard.count {
-            bail!("{loc}: bad shard identity {shard}");
-        }
+        let summary = read_shard_file(path)?;
         match &fingerprint {
             None => {
-                name = Some(this_name);
-                fingerprint = Some(this_fp);
-                points_total = Some(this_total);
-                cost_model = Some(this_model);
+                name = Some(summary.sweep.clone());
+                fingerprint = Some(summary.fingerprint.clone());
+                points_total = Some(summary.points_total);
+                cost_model = Some(summary.cost_model);
             }
             Some(fp) => {
-                if *fp != this_fp {
+                if *fp != summary.fingerprint {
                     bail!(
-                        "{loc}: sweep fingerprint {this_fp} does not match the first \
-                         shard's {fp} — shards come from different spec/arch"
+                        "{loc}: sweep fingerprint {} does not match the first \
+                         shard's {fp} — shards come from different spec/arch",
+                        summary.fingerprint
                     );
                 }
-                if points_total != Some(this_total) {
-                    bail!("{loc}: points_total {this_total} disagrees with the first shard");
+                if points_total != Some(summary.points_total) {
+                    bail!(
+                        "{loc}: points_total {} disagrees with the first shard",
+                        summary.points_total
+                    );
                 }
-                if cost_model != Some(this_model) {
+                if cost_model != Some(summary.cost_model) {
                     bail!("{loc}: cost-model version disagrees with the first shard");
                 }
             }
         }
-        let rows = doc
-            .get("results")
-            .and_then(Json::as_array)
-            .with_context(|| format!("{loc}: missing results"))?;
-        let expect = shard.len_of(this_total);
-        if rows.len() != expect {
-            bail!(
-                "{loc}: shard {shard} carries {} results, expected {expect}",
-                rows.len()
-            );
-        }
-        let results = rows
-            .iter()
-            .map(result_from_json)
-            .collect::<Result<Vec<SweepResult>>>()
-            .with_context(|| loc.clone())?;
-        docs.push(ShardDoc { shard, results });
+        docs.push(summary);
     }
 
     let count = docs[0].shard.count;
@@ -380,7 +409,7 @@ pub fn merge_files(paths: &[PathBuf]) -> Result<MergedSweep> {
             docs.len()
         );
     }
-    let mut by_index: Vec<Option<ShardDoc>> = (0..count).map(|_| None).collect();
+    let mut by_index: Vec<Option<ShardSummary>> = (0..count).map(|_| None).collect();
     for d in docs {
         let i = d.shard.index;
         if by_index[i].is_some() {
@@ -388,9 +417,9 @@ pub fn merge_files(paths: &[PathBuf]) -> Result<MergedSweep> {
         }
         by_index[i] = Some(d);
     }
-    let shards: Vec<ShardDoc> = by_index
+    let shards: Vec<ShardSummary> = by_index
         .into_iter()
-        .collect::<Option<Vec<ShardDoc>>>()
+        .collect::<Option<Vec<ShardSummary>>>()
         .context("merge: internal error — a shard index was left unfilled")?;
 
     // Re-interleave: global point g was computed by shard g % count at

@@ -1,0 +1,307 @@
+//! Fault-injection tests for the shard orchestrator: a SIGKILLed shard
+//! is retried and the merged CSV stays byte-identical to a
+//! single-process run; a hung shard is killed by the wall-clock
+//! timeout; `--resume` re-runs only the missing shards; and a spawn
+//! failure reaps every already-running child. All drive
+//! `orchestrate_with` against test [`Spawner`]s wrapping the real
+//! binary (`CARGO_BIN_EXE_repro` — inside an integration test,
+//! `current_exe` would be the *test* binary).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use www_cim::arch::Architecture;
+use www_cim::scenario::orchestrate::{
+    orchestrate_with, LocalSpawner, OrchestrateOptions, Spawner,
+};
+use www_cim::scenario::Scenario;
+use www_cim::sweep::shard::ShardId;
+use www_cim::sweep::{output, SweepEngine};
+use www_cim::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn repro_exe() -> &'static str {
+    env!("CARGO_BIN_EXE_repro")
+}
+
+/// Fresh output dir per test (orchestrations share nothing).
+fn temp_out(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("www_cim_orch_it_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).expect("create temp out dir");
+    dir
+}
+
+/// A small, fast sweep scenario writing into `out`.
+fn scenario(name: &str, out: &Path) -> Scenario {
+    Scenario::builder(name)
+        .workloads("synthetic:2")
+        .prims("d1")
+        .levels("rf")
+        .out_dir(out)
+        .build()
+        .expect("scenario builds")
+}
+
+fn opts(procs: usize) -> OrchestrateOptions {
+    OrchestrateOptions { procs, timeout: None, retries: 0, resume: false }
+}
+
+/// The unsharded ground truth: the same scenario evaluated in-process.
+fn reference_csv(sc: &Scenario) -> String {
+    let spec = sc.sweep_spec().expect("scenario lowers");
+    let run = SweepEngine::new(Architecture::default_sm()).run_spec(&spec);
+    output::results_csv(&run.results).expect("csv encodes").encode()
+}
+
+fn read_manifest(out: &Path, base: &str) -> Json {
+    let text = fs::read_to_string(out.join(format!("{base}.orchestrate.json")))
+        .expect("run manifest exists");
+    Json::parse(&text).expect("run manifest parses")
+}
+
+fn manifest_shard(manifest: &Json, index: usize) -> Json {
+    let shards = manifest.get("shards").and_then(Json::as_array).expect("shards array");
+    shards
+        .iter()
+        .find(|s| s.get("index").and_then(Json::as_u64) == Some(index as u64))
+        .unwrap_or_else(|| panic!("manifest has no shard {index}"))
+        .clone()
+}
+
+fn shard_status(manifest: &Json, index: usize) -> String {
+    manifest_shard(manifest, index)
+        .get("status")
+        .and_then(Json::as_str)
+        .expect("shard status")
+        .to_string()
+}
+
+fn shard_attempts(manifest: &Json, index: usize) -> usize {
+    manifest_shard(manifest, index)
+        .get("attempts")
+        .and_then(Json::as_array)
+        .expect("shard attempts")
+        .len()
+}
+
+// ---------------------------------------------------------------------------
+// Test spawners
+// ---------------------------------------------------------------------------
+
+/// Delegates to [`LocalSpawner`], except the first spawn of shard
+/// `victim` becomes a child that SIGKILLs itself before writing any
+/// summary — a stand-in for an OOM kill mid-shard.
+struct KillOnce {
+    inner: LocalSpawner,
+    victim: usize,
+    kills: AtomicUsize,
+}
+
+impl Spawner for KillOnce {
+    fn spawn_shard(&self, shard: ShardId, scenario: &Path) -> Result<Child> {
+        if shard.index == self.victim && self.kills.fetch_add(1, Ordering::SeqCst) == 0 {
+            return Command::new("sh")
+                .arg("-c")
+                .arg("kill -KILL $$")
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .context("spawning the self-killing child");
+        }
+        self.inner.spawn_shard(shard, scenario)
+    }
+
+    fn locus(&self, shard: ShardId) -> String {
+        self.inner.locus(shard)
+    }
+}
+
+/// Every shard hangs forever (well, 1000 s).
+struct Hang;
+
+impl Spawner for Hang {
+    fn spawn_shard(&self, _shard: ShardId, _scenario: &Path) -> Result<Child> {
+        Command::new("sleep")
+            .arg("1000")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .context("spawning the hung child")
+    }
+
+    fn locus(&self, _shard: ShardId) -> String {
+        "hang".to_string()
+    }
+}
+
+/// Delegates to [`LocalSpawner`] and counts spawns (resume must re-run
+/// only the missing shards).
+struct Counting {
+    inner: LocalSpawner,
+    spawns: AtomicUsize,
+}
+
+impl Counting {
+    fn new() -> Counting {
+        Counting { inner: LocalSpawner::new(repro_exe()), spawns: AtomicUsize::new(0) }
+    }
+}
+
+impl Spawner for Counting {
+    fn spawn_shard(&self, shard: ShardId, scenario: &Path) -> Result<Child> {
+        self.spawns.fetch_add(1, Ordering::SeqCst);
+        self.inner.spawn_shard(shard, scenario)
+    }
+
+    fn locus(&self, shard: ShardId) -> String {
+        self.inner.locus(shard)
+    }
+}
+
+/// Shard 0 becomes a long sleeper (its pid recorded); shard 1 fails to
+/// spawn at all. The orchestrator must kill and reap the sleeper on its
+/// way out.
+struct FailSecond {
+    sleeper_pid: AtomicUsize,
+}
+
+impl Spawner for FailSecond {
+    fn spawn_shard(&self, shard: ShardId, _scenario: &Path) -> Result<Child> {
+        if shard.index == 0 {
+            let child = Command::new("sleep")
+                .arg("1000")
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .context("spawning the sleeper")?;
+            self.sleeper_pid.store(child.id() as usize, Ordering::SeqCst);
+            Ok(child)
+        } else {
+            bail!("injected spawn failure")
+        }
+    }
+
+    fn locus(&self, _shard: ShardId) -> String {
+        "test".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_shard_is_retried_and_merge_matches_single_process() {
+    let out = temp_out("killonce");
+    let sc = scenario("orch-killonce", &out);
+    let spawner =
+        KillOnce { inner: LocalSpawner::new(repro_exe()), victim: 1, kills: AtomicUsize::new(0) };
+    let opts = OrchestrateOptions { retries: 1, ..opts(2) };
+    orchestrate_with(&sc, &opts, &spawner).expect("one SIGKILL must not abort the run");
+    assert!(spawner.kills.load(Ordering::SeqCst) >= 1, "the victim shard never spawned");
+
+    // The retried shard is deterministic, so the merged CSV is
+    // byte-identical to an unsharded in-process evaluation.
+    let merged = fs::read_to_string(out.join("orch-killonce.csv")).expect("merged csv");
+    assert_eq!(merged, reference_csv(&sc), "merged CSV must be byte-identical");
+
+    // The manifest records both attempts of the killed shard.
+    let manifest = read_manifest(&out, "orch-killonce");
+    assert_eq!(manifest.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(shard_status(&manifest, 1), "ok");
+    assert_eq!(shard_attempts(&manifest, 1), 2, "SIGKILLed attempt + successful retry");
+    assert_eq!(shard_attempts(&manifest, 0), 1);
+
+    let _ = fs::remove_dir_all(&out);
+}
+
+#[test]
+fn timeout_kills_hung_shards() {
+    let out = temp_out("timeout");
+    let sc = scenario("orch-timeout", &out);
+    let opts = OrchestrateOptions { timeout: Some(Duration::from_millis(300)), ..opts(1) };
+    let started = Instant::now();
+    let err = orchestrate_with(&sc, &opts, &Hang).expect_err("a hung shard must fail the run");
+    assert!(
+        started.elapsed() < Duration::from_secs(60),
+        "the 1000 s sleeper must have been killed by the 300 ms timeout"
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("timeout"), "{msg}");
+    assert!(msg.contains("--resume"), "failure must point at resume: {msg}");
+
+    // Failures still write the manifest — that is what makes them
+    // diagnosable and resumable.
+    let manifest = read_manifest(&out, "orch-timeout");
+    assert_eq!(manifest.get("status").and_then(Json::as_str), Some("failed"));
+    assert_eq!(shard_status(&manifest, 0), "timeout");
+
+    let _ = fs::remove_dir_all(&out);
+}
+
+#[test]
+fn resume_reruns_only_the_missing_shard() {
+    let out = temp_out("resume");
+    let sc = scenario("orch-resume", &out);
+
+    let first = Counting::new();
+    orchestrate_with(&sc, &opts(2), &first).expect("first run");
+    assert_eq!(first.spawns.load(Ordering::SeqCst), 2);
+    let csv_path = out.join("orch-resume.csv");
+    let first_csv = fs::read_to_string(&csv_path).expect("first merged csv");
+
+    // Lose shard 0's summary; resume must re-run exactly that shard and
+    // adopt the surviving one.
+    fs::remove_file(out.join("orch-resume-shard0of2.json")).expect("remove shard 0 summary");
+    let second = Counting::new();
+    let opts = OrchestrateOptions { resume: true, ..opts(2) };
+    orchestrate_with(&sc, &opts, &second).expect("resumed run");
+    assert_eq!(second.spawns.load(Ordering::SeqCst), 1, "resume must spawn only shard 0");
+    assert_eq!(
+        fs::read_to_string(&csv_path).expect("resumed merged csv"),
+        first_csv,
+        "resumed merge must be byte-identical"
+    );
+
+    let manifest = read_manifest(&out, "orch-resume");
+    assert_eq!(shard_status(&manifest, 0), "ok");
+    assert_eq!(shard_status(&manifest, 1), "skipped");
+    assert_eq!(shard_attempts(&manifest, 1), 0, "an adopted shard never spawned");
+
+    let _ = fs::remove_dir_all(&out);
+}
+
+#[test]
+fn spawn_failure_reaps_already_spawned_children() {
+    let out = temp_out("spawnfail");
+    let sc = scenario("orch-spawnfail", &out);
+    let spawner = FailSecond { sleeper_pid: AtomicUsize::new(0) };
+    let err = orchestrate_with(&sc, &opts(2), &spawner)
+        .expect_err("a spawn failure must abort the run");
+    assert!(format!("{err:#}").contains("injected spawn failure"), "{err:#}");
+
+    let pid = spawner.sleeper_pid.load(Ordering::SeqCst);
+    assert!(pid != 0, "the sleeper was spawned before the failure");
+    if cfg!(target_os = "linux") {
+        assert!(
+            !Path::new(&format!("/proc/{pid}")).exists(),
+            "the sleeper (pid {pid}) must be killed and reaped, not leaked"
+        );
+    }
+
+    // Even the aborted run documents itself.
+    let manifest = read_manifest(&out, "orch-spawnfail");
+    assert_eq!(manifest.get("status").and_then(Json::as_str), Some("failed"));
+
+    let _ = fs::remove_dir_all(&out);
+}

@@ -390,6 +390,61 @@ fn shard_merge_reproduces_unsharded_sweep() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Two *processes* saving into one `--cache` path concurrently must
+/// union their entries, not last-writer-win: the saves serialize on
+/// the sidecar lock and each re-reads the file before writing, so a
+/// warm rerun of EITHER sweep is served fully from the shared cache.
+#[test]
+fn racing_processes_union_the_shared_cache() {
+    use std::process::{Command, Stdio};
+
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let dir = tmp_dir("race");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache = dir.join("cache.bin");
+
+    let sweep = |seed: u32, tag: &str| -> Command {
+        let mut cmd = Command::new(exe);
+        cmd.arg("sweep")
+            .arg("--workloads")
+            .arg("synthetic:3")
+            .arg("--prims")
+            .arg("d1")
+            .arg("--levels")
+            .arg("rf")
+            .arg("--seed")
+            .arg(seed.to_string())
+            .arg("--tag")
+            .arg(tag)
+            .arg("--out")
+            .arg(&dir)
+            .arg(format!("--cache={}", cache.display()));
+        cmd
+    };
+
+    // The race: two different sweeps (different seeds -> disjoint
+    // synthetic workloads) run and save concurrently.
+    let mut a = sweep(1, "race-a").stdout(Stdio::null()).spawn().unwrap();
+    let mut b = sweep(2, "race-b").stdout(Stdio::null()).spawn().unwrap();
+    assert!(a.wait().unwrap().success(), "seed 1 sweep failed");
+    assert!(b.wait().unwrap().success(), "seed 2 sweep failed");
+    assert!(cache.exists(), "shared cache file must exist after both saves");
+
+    // Warm reruns: a lost save would force recomputation of that
+    // sweep's points ("N unique" with N > 0).
+    for (seed, tag) in [(1, "race-a"), (2, "race-b")] {
+        let out = sweep(seed, tag).output().unwrap();
+        assert!(out.status.success(), "seed {seed} warm rerun failed");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            stdout.contains("cache: 0 unique"),
+            "seed {seed} warm rerun must be all hits:\n{stdout}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Sharding composes with the persistent cache: shards sharing one
 /// cache file leave a cache that fully warms the unsharded sweep.
 #[test]

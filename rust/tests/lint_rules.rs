@@ -179,6 +179,30 @@ fn r6_allows_btreemap_and_out_of_scope_hashmaps() {
 }
 
 // ---------------------------------------------------------------------------
+// R7 — no un-sorted read_dir walks in deterministic-output code
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r7_fires_on_read_dir_in_output_sink() {
+    let src = "pub fn shard_paths(dir: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {\n    let mut out = Vec::new();\n    for entry in std::fs::read_dir(dir)? {\n        out.push(entry?.path());\n    }\n    Ok(out)\n}\n";
+    let diags = check_source("rust/src/sweep/output.rs", src);
+    assert_eq!(rule_ids(&diags), ["R7"], "{diags:?}");
+    assert_eq!(diags[0].line, 3);
+}
+
+#[test]
+fn r7_ignores_read_dir_outside_sink_scope() {
+    let src = "pub fn count(dir: &std::path::Path) -> usize {\n    std::fs::read_dir(dir).map(|it| it.count()).unwrap_or(0)\n}\n";
+    assert!(check_source("rust/src/mapping/priority.rs", src).is_empty());
+}
+
+#[test]
+fn r7_allow_marker_suppresses_with_reason() {
+    let src = "pub fn sorted_paths(dir: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {\n    let mut out = Vec::new();\n    // lint: allow(R7): entries are collected and sorted before use\n    for entry in std::fs::read_dir(dir)? {\n        out.push(entry?.path());\n    }\n    out.sort();\n    Ok(out)\n}\n";
+    assert!(check_source("rust/src/sweep/output.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------------
 // Allow-marker hygiene — bad markers are themselves diagnostics
 // ---------------------------------------------------------------------------
 
@@ -302,6 +326,6 @@ fn repo_manifest_guards_the_four_versioned_modules() {
 }
 
 #[test]
-fn rule_ids_cover_r1_through_r6() {
-    assert_eq!(RULE_IDS, ["R1", "R2", "R3", "R4", "R5", "R6"]);
+fn rule_ids_cover_r1_through_r7() {
+    assert_eq!(RULE_IDS, ["R1", "R2", "R3", "R4", "R5", "R6", "R7"]);
 }
