@@ -1,0 +1,97 @@
+//! Scripted client for the `repro serve` daemon.
+//!
+//! With an address argument it talks to a running daemon:
+//!
+//! ```sh
+//! target/release/repro serve --addr 127.0.0.1:7878 --cache=results/cache.bin &
+//! cargo run --example serve_client -- 127.0.0.1:7878
+//! ```
+//!
+//! Without one it is self-contained: it starts an in-process daemon on
+//! a free port, queries it, and drains it — so the walkthrough always
+//! runs. Either way it shows the full protocol round trip: `ping`, a
+//! cold `eval`, the same `eval` warm (zero misses), `stats`, and the
+//! raw newline-delimited JSON a non-Rust client would speak.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::Result;
+use www_cim::scenario::Scenario;
+use www_cim::serve::{Client, ServeOptions, Server};
+use www_cim::util::json::Json;
+
+fn main() -> Result<()> {
+    // 1. Find (or start) a daemon.
+    let arg_addr = std::env::args().nth(1);
+    let mut local = None;
+    let addr = match &arg_addr {
+        Some(addr) => addr.clone(),
+        None => {
+            let server = Server::bind(ServeOptions {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 2,
+                queue_depth: 4,
+                quiet: true,
+                ..ServeOptions::default()
+            })?;
+            let addr = server.local_addr()?.to_string();
+            println!("(no address given; started an in-process daemon on {addr})");
+            local = Some(std::thread::spawn(move || server.run()));
+            addr
+        }
+    };
+
+    // 2. The typed client: ping, then evaluate a scenario twice.
+    let mut client = Client::connect(&addr)?;
+    let pong = client.ping()?;
+    println!("ping -> {}", pong.encode_compact());
+
+    let sc = Scenario::builder("serve-demo")
+        .workloads("synthetic:4")
+        .prims("baseline,d1")
+        .levels("rf,smem-b")
+        .seed(11)
+        .build()?;
+
+    let cold = client.eval(&sc)?;
+    println!(
+        "cold eval: {} CSV rows, stats {}",
+        cold.csv.lines().count() - 1,
+        cold.stats.encode_compact()
+    );
+    let warm = client.eval(&sc)?;
+    println!(
+        "warm eval: byte-identical = {}, stats {}",
+        warm.csv == cold.csv,
+        warm.stats.encode_compact()
+    );
+
+    let stats = client.stats()?;
+    if let Some(cache) = stats.get("cache") {
+        println!("daemon cache: {}", cache.encode_compact());
+    }
+
+    // 3. The same thing a non-Rust client would do: write one JSON
+    //    line, read JSON lines until "done":true.
+    let raw = TcpStream::connect(&addr)?;
+    let mut reader = BufReader::new(raw.try_clone()?);
+    (&raw).write_all(b"{\"op\":\"ping\"}\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    println!("raw protocol: {} -> {}", "{\"op\":\"ping\"}", line.trim());
+    drop(reader);
+    drop(raw);
+
+    // 4. Drain the in-process daemon (leave a real one running).
+    if let Some(daemon) = local {
+        client.shutdown()?;
+        daemon.join().expect("daemon thread")?;
+        println!("in-process daemon drained cleanly");
+    }
+
+    // Sanity: warmth must never change the payload.
+    assert_eq!(cold.csv, warm.csv);
+    assert_eq!(warm.stats.get("misses").and_then(Json::as_u64), Some(0));
+    Ok(())
+}

@@ -51,6 +51,7 @@ pub mod mapping;
 pub mod roofline;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sweep;
 pub mod util;
 pub mod workload;

@@ -104,6 +104,8 @@ const OUTPUT_SINK_PATHS: &[&str] = &[
     "rust/src/scenario/mod.rs",
     "rust/src/scenario/exec.rs",
     "rust/src/scenario/orchestrate.rs",
+    "rust/src/serve/protocol.rs",
+    "rust/src/serve/metrics.rs",
     "rust/src/util/json.rs",
     "rust/src/util/csv.rs",
     "rust/src/util/hash.rs",

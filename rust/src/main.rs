@@ -10,9 +10,14 @@
 //! * `sweep`       — grid flags parsed into a scenario and executed
 //!   (`--emit-scenario` writes the scenario instead of running it)
 //! * `merge`       — combine per-shard sweep summaries into one result
+//! * `serve`       — persistent warm-cache evaluation daemon (JSON
+//!   protocol over TCP; see `rust/src/serve/README.md`)
+//! * `query`       — client for a running `serve` daemon
 //! * `experiment`  — regenerate a paper table/figure (`all` for every one)
 //! * `validate`    — replay mappings through the PJRT artifacts
 //! * `roofline`    — ridge-point analysis
+//! * `bench`       — in-process benchmark suite (`--json` for
+//!   machine-readable results)
 //! * `lint`        — static analysis over the repo's own sources
 //! * `list`        — primitives / workloads / experiments / scenarios
 //!
@@ -33,9 +38,12 @@ use www_cim::lint;
 use www_cim::mapping::PriorityMapper;
 use www_cim::roofline::Roofline;
 use www_cim::runtime::{default_artifacts_dir, Engine};
-use www_cim::scenario::{self, Scenario, ScenarioKind};
-use www_cim::sweep::{output, shard, spec, ShardId};
+use www_cim::scenario::{self, exec, Scenario, ScenarioKind};
+use www_cim::serve::{Client, ServeOptions, Server};
+use www_cim::sweep::{output, shard, spec, EvalCache, ShardId};
+use www_cim::util::bench::Bencher;
 use www_cim::util::cli::Args;
+use www_cim::util::json::Json;
 use www_cim::util::table::Table;
 use www_cim::workload::{synthetic, Gemm};
 
@@ -127,6 +135,30 @@ const SUBCOMMANDS: &[Subcommand] = &[
         run: cmd_merge,
     },
     Subcommand {
+        name: "serve",
+        usage: &[
+            "[--addr 127.0.0.1:7878] [--workers N] [--queue N]",
+            "[--cache[=results/cache.bin]] [--cache-max-mb N]",
+            "(persistent warm-cache evaluation daemon: newline-delimited",
+            " JSON ops eval/ping/stats/flush/shutdown over TCP; drains",
+            " in-flight requests and flushes the cache on SIGTERM —",
+            " protocol spec in rust/src/serve/README.md)",
+        ],
+        run: cmd_serve,
+    },
+    Subcommand {
+        name: "query",
+        usage: &[
+            "<scenario.json|name> [--addr 127.0.0.1:7878] [--op eval|ping|",
+            "stats|flush|shutdown] [--out results] [--tag name]",
+            "[--threads N] [--seed N]",
+            "(client for a running serve daemon; eval writes the",
+            " response rows as <out>/<name>.csv, byte-identical to",
+            " what `repro run` produces for the same scenario)",
+        ],
+        run: cmd_query,
+    },
+    Subcommand {
         name: "experiment",
         usage: &[
             "<{experiments}>",
@@ -144,6 +176,16 @@ const SUBCOMMANDS: &[Subcommand] = &[
         name: "roofline",
         usage: &["(ridge-point analysis per system)"],
         run: cmd_roofline,
+    },
+    Subcommand {
+        name: "bench",
+        usage: &[
+            "[--json[=BENCH_sweep.json]] [--samples N] [--warmup N]",
+            "(in-process benchmark suite: cold/warm sweep and cold/warm",
+            " serve round-trips; --json writes machine-readable results",
+            " for perf tracking)",
+        ],
+        run: cmd_bench,
     },
     Subcommand {
         name: "lint",
@@ -610,6 +652,102 @@ fn cmd_merge(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro serve` — the persistent warm-cache evaluation daemon. Owns
+/// the calling thread until drained (SIGTERM/SIGINT or a `shutdown`
+/// op), then flushes the cache under the save lock and returns.
+fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(err) =
+        args.unknown_flags(&["addr", "workers", "queue", "cache", "cache-max-mb"])
+    {
+        bail!(err);
+    }
+    let defaults = ServeOptions::default();
+    let workers = args.get_parsed_or("workers", defaults.workers)?;
+    let opts = ServeOptions {
+        addr: args.get_or("addr", &defaults.addr).to_string(),
+        workers,
+        queue_depth: args.get_parsed_or("queue", workers * 2)?,
+        cache_path: cache_path_flag(args),
+        cache_max_bytes: cache_cap_flag(args)?,
+        // The CLI daemon drains on real signals; in-process servers
+        // (tests, bench) use the shutdown op instead.
+        watch_signals: true,
+        quiet: false,
+    };
+    if opts.workers == 0 {
+        bail!("--workers wants a positive integer");
+    }
+    Server::bind(opts)?.run()
+}
+
+/// `repro query` — client for a running serve daemon. `eval` writes
+/// the streamed rows as `<out>/<name>.csv` (byte-identical to `repro
+/// run`'s CSV for the same scenario); the other ops print the daemon's
+/// response line.
+fn cmd_query(args: &Args) -> Result<()> {
+    if let Some(err) =
+        args.unknown_flags(&["addr", "op", "out", "tag", "threads", "seed"])
+    {
+        bail!(err);
+    }
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(addr)?;
+    let op = args.get_or("op", "eval");
+    match op {
+        "ping" | "stats" | "flush" | "shutdown" => {
+            let response = match op {
+                "ping" => client.ping()?,
+                "stats" => client.stats()?,
+                "flush" => client.flush()?,
+                _ => client.shutdown()?,
+            };
+            println!("{}", response.encode_compact());
+            Ok(())
+        }
+        "eval" => {
+            let target = args.positional.first().context(
+                "usage: repro query <scenario.json|name> [--addr host:port] [--op eval|\
+                 ping|stats|flush|shutdown] [--out dir] [--tag name] [--threads N] \
+                 [--seed N]",
+            )?;
+            let mut sc = resolve_scenario(target)?;
+            apply_overrides(&mut sc, args)?;
+            let response = client.eval(&sc)?;
+            let stat = |key: &str| {
+                response.stats.get(key).and_then(Json::as_u64).unwrap_or(0)
+            };
+            println!(
+                "[serve] eval {:?}: {} points in {:.3}s",
+                response.name,
+                stat("points"),
+                stat("elapsed_us") as f64 / 1e6,
+            );
+            // Same accounting shape as the batch paths; the CI warm
+            // pass greps for "0 misses" and "0 mapper call(s)" here.
+            println!(
+                "[serve] run stats: {} hits / {} misses, {} mapper call(s)",
+                stat("hits"),
+                stat("misses"),
+                stat("mapper_calls"),
+            );
+            let out_dir = PathBuf::from(args.get_or("out", "results"));
+            std::fs::create_dir_all(&out_dir)?;
+            let csv_path = out_dir.join(format!("{}.csv", response.name));
+            std::fs::write(&csv_path, &response.csv)?;
+            println!(
+                "[csv] {} rows -> {}",
+                response.csv.lines().count().saturating_sub(1),
+                csv_path.display()
+            );
+            Ok(())
+        }
+        other => bail!(
+            "--op {other:?} is not a serve op (expected eval, ping, stats, flush \
+             or shutdown)"
+        ),
+    }
+}
+
 /// `repro experiment <id|all>` — kept as the familiar spelling; the
 /// flags construct an experiment [`Scenario`] and execution goes
 /// through the same scenario path as `repro run <id>`, so the two are
@@ -704,6 +842,152 @@ fn cmd_roofline(_args: &Args) -> Result<()> {
         ]);
     }
     print!("{t}");
+    Ok(())
+}
+
+/// The fixed grid every bench case evaluates: small enough that a
+/// full suite stays interactive, big enough to exercise the engine's
+/// parallel path (6 points: 3 GEMMs x {baseline, d1@rf}).
+fn bench_scenario() -> Result<Scenario> {
+    Scenario::builder("bench-serve")
+        .workloads("synthetic:3")
+        .prims("baseline,d1")
+        .levels("rf")
+        .seed(13)
+        .threads(2)
+        .build()
+}
+
+/// One full daemon lifecycle against a cold cache: bind on a free
+/// port, serve one eval, drain. Returns the per-request stats.
+fn serve_roundtrip_cold(sc: &Scenario) -> Result<Json> {
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_depth: 4,
+        quiet: true,
+        ..ServeOptions::default()
+    })?;
+    let addr = server.local_addr()?;
+    let daemon = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(&addr.to_string())?;
+    let response = client.eval(sc)?;
+    client.shutdown()?;
+    daemon
+        .join()
+        .map_err(|_| anyhow::anyhow!("daemon thread panicked"))??;
+    Ok(response.stats)
+}
+
+/// `repro bench` — the in-process benchmark suite (same cases as
+/// `cargo bench`, plus the serve round-trips). `--json` writes
+/// machine-readable results so the repo's perf trajectory is tracked.
+fn cmd_bench(args: &Args) -> Result<()> {
+    if let Some(err) = args.unknown_flags(&["json", "samples", "warmup"]) {
+        bail!(err);
+    }
+    let mut b = Bencher::new();
+    b.samples = args.get_parsed_or("samples", b.samples)?;
+    b.warmup = args.get_parsed_or("warmup", b.warmup)?;
+    if b.samples == 0 {
+        bail!("--samples wants a positive integer");
+    }
+    let sc = bench_scenario()?;
+    let cache_stats = |hits: u64, misses: u64, mapper_calls: u64| {
+        Json::Obj(vec![
+            ("hits".to_string(), Json::Num(hits as f64)),
+            ("misses".to_string(), Json::Num(misses as f64)),
+            ("mapper_calls".to_string(), Json::Num(mapper_calls as f64)),
+        ])
+    };
+    // One cache-stats object per case, parallel to the measurements.
+    let mut extras: Vec<Json> = Vec::new();
+
+    let cold = exec::eval_sweep(&sc, std::sync::Arc::new(EvalCache::new()))?;
+    let points = cold.points as u64;
+    b.bench_with_items("sweep/cold (fresh cache)", points, &mut || {
+        exec::eval_sweep(&sc, std::sync::Arc::new(EvalCache::new()))
+            .map(|e| e.points)
+            .unwrap_or(0)
+    });
+    extras.push(cache_stats(0, cold.misses, cold.mapper_calls));
+
+    let warm_cache = std::sync::Arc::new(EvalCache::new());
+    exec::eval_sweep(&sc, std::sync::Arc::clone(&warm_cache))?;
+    b.bench_with_items("sweep/warm (shared cache)", points, &mut || {
+        exec::eval_sweep(&sc, std::sync::Arc::clone(&warm_cache))
+            .map(|e| e.points)
+            .unwrap_or(0)
+    });
+    extras.push(cache_stats(
+        warm_cache.hits(),
+        warm_cache.misses(),
+        warm_cache.mapper_calls(),
+    ));
+
+    let mut last_cold_stats = Json::Null;
+    b.bench_with_items("serve/roundtrip-cold (bind+eval+drain)", points, &mut || {
+        match serve_roundtrip_cold(&sc) {
+            Ok(stats) => last_cold_stats = stats,
+            Err(e) => eprintln!("serve/roundtrip-cold failed: {e:#}"),
+        }
+    });
+    extras.push(last_cold_stats);
+
+    // Warm round-trips: one long-lived daemon, one keep-alive client.
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_depth: 4,
+        quiet: true,
+        ..ServeOptions::default()
+    })?;
+    let addr = server.local_addr()?;
+    let daemon = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(&addr.to_string())?;
+    client.eval(&sc)?; // warm the daemon's cache
+    b.bench_with_items("serve/roundtrip-warm (keep-alive eval)", points, &mut || {
+        if let Err(e) = client.eval(&sc) {
+            eprintln!("serve/roundtrip-warm failed: {e:#}");
+        }
+    });
+    let daemon_stats = client.stats()?;
+    extras.push(daemon_stats.get("cache").cloned().unwrap_or(Json::Null));
+    client.shutdown()?;
+    daemon
+        .join()
+        .map_err(|_| anyhow::anyhow!("daemon thread panicked"))??;
+
+    b.finish("sweep");
+
+    if let Some(file) = args.get("json") {
+        let path = PathBuf::from(if file == "true" { "BENCH_sweep.json" } else { file });
+        let cases: Vec<Json> = b
+            .measurements()
+            .iter()
+            .zip(extras)
+            .map(|(m, cache)| {
+                let Json::Obj(mut fields) = m.to_json() else {
+                    return Json::Null;
+                };
+                fields.push(("cache".to_string(), cache));
+                Json::Obj(fields)
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            ("suite".to_string(), Json::Str("sweep".to_string())),
+            ("samples".to_string(), Json::Num(b.samples as f64)),
+            ("warmup".to_string(), Json::Num(b.warmup as f64)),
+            ("cases".to_string(), Json::Arr(cases)),
+        ]);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&path, doc.encode())?;
+        println!("[json] bench results -> {}", path.display());
+    }
     Ok(())
 }
 

@@ -11,11 +11,13 @@
 //!   experiment registry, identically to `repro experiment <id>`
 //!   (pinned by the golden-equivalence suite for every registered id).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::arch::Architecture;
 use crate::experiments::{self, Ctx};
-use crate::sweep::{output, persist, shard, ShardId, SweepEngine};
+use crate::sweep::{output, persist, shard, EvalCache, ShardId, SweepEngine};
 use crate::util::pool;
 
 use super::{Scenario, ScenarioKind};
@@ -170,6 +172,64 @@ fn run_sweep(sc: &Scenario, shard_id: Option<ShardId>) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// One in-memory sweep evaluation: everything `repro run` would have
+/// produced for the same scenario, minus the console output and file
+/// sinks. The serve daemon streams `csv` back to clients — it must stay
+/// byte-identical to the `<base>.csv` that [`execute`] writes (pinned
+/// by the serve integration tests and the CI e2e `cmp`).
+#[derive(Debug, Clone)]
+pub struct SweepEval {
+    /// Output base name (`tag`, else scenario name).
+    pub name: String,
+    /// Full CSV document (header + rows, trailing newline).
+    pub csv: String,
+    /// Grid points evaluated.
+    pub points: usize,
+    /// Cache hits attributable to this run (delta of the shared
+    /// counters; approximate when other requests run concurrently —
+    /// the daemon's `stats` op reads the exact global totals).
+    pub hits: u64,
+    /// Cache misses attributable to this run (see `hits`).
+    pub misses: u64,
+    /// Mapper invocations attributable to this run (see `hits`).
+    pub mapper_calls: u64,
+    /// Wall-clock time of the sweep itself.
+    pub elapsed: std::time::Duration,
+}
+
+/// Evaluate a sweep scenario against a caller-owned [`EvalCache`] and
+/// return the rows instead of writing them — the library entry behind
+/// [`crate::serve`]. The daemon owns cache persistence and output
+/// policy, so the scenario's `cache`/`output` sections are ignored
+/// here; experiment scenarios (multi-file artifact writers) are
+/// refused.
+pub fn eval_sweep(sc: &Scenario, cache: Arc<EvalCache>) -> Result<SweepEval> {
+    sc.validate()?;
+    if let ScenarioKind::Experiment { id, .. } = &sc.kind {
+        bail!(
+            "serve evaluates sweep scenarios; experiment {id:?} writes \
+             multi-file artifacts — run it locally with `repro run`"
+        );
+    }
+    let threads = sc.threads.unwrap_or_else(pool::default_threads);
+    let sweep_spec = sc.sweep_spec()?;
+    let engine =
+        SweepEngine::with_cache(Architecture::default_sm(), cache).threads(threads);
+    let mapper_calls_before = engine.cache().mapper_calls();
+    let all_jobs = sweep_spec.jobs();
+    let run = engine.run_jobs_named(&sweep_spec.name, &all_jobs);
+    let csv = output::results_csv(&run.results)?.encode();
+    Ok(SweepEval {
+        name: sc.base_name().to_string(),
+        csv,
+        points: run.n_points(),
+        hits: run.cache_hits,
+        misses: run.cache_misses,
+        mapper_calls: engine.cache().mapper_calls() - mapper_calls_before,
+        elapsed: run.elapsed,
+    })
 }
 
 #[cfg(test)]

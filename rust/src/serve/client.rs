@@ -1,0 +1,147 @@
+//! Blocking client for the serve protocol — the library behind
+//! `repro query`, the integration tests and `examples/serve_client.rs`.
+//!
+//! One [`Client`] is one keep-alive connection: issue as many requests
+//! as you like, in order. Each call sends one request line and reads
+//! response lines until the `"done":true` terminator.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::scenario::Scenario;
+use crate::util::json::Json;
+
+/// A decoded `eval` response.
+#[derive(Debug, Clone)]
+pub struct EvalResponse {
+    /// Output base name the daemon derived from the scenario.
+    pub name: String,
+    /// The reconstructed CSV document — byte-identical to what
+    /// `repro run` writes for the same scenario.
+    pub csv: String,
+    /// The per-request stats object from the terminator line
+    /// (`points`, `hits`, `misses`, `mapper_calls`, `elapsed_us`).
+    pub stats: Json,
+}
+
+/// One keep-alive connection to a serve daemon.
+#[derive(Debug)]
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `127.0.0.1:7878`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to serve daemon at {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Send one request line, collect response lines through the
+    /// `"done":true` terminator (inclusive). A busy/error response is
+    /// a single terminator line, so this never hangs on rejection.
+    fn exchange(&mut self, request: &str) -> Result<Vec<Json>> {
+        self.writer.write_all(request.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                bail!("daemon closed the connection mid-response");
+            }
+            let v = Json::parse(line.trim())
+                .with_context(|| format!("undecodable response line: {}", line.trim()))?;
+            let done = v.get("done").and_then(Json::as_bool) == Some(true);
+            lines.push(v);
+            if done {
+                return Ok(lines);
+            }
+        }
+    }
+
+    /// A simple op (`ping`/`stats`/`flush`/`shutdown`): one response
+    /// line. Errors (including busy) surface as `Err`.
+    fn simple(&mut self, op: &str) -> Result<Json> {
+        let lines = self.exchange(&format!("{{\"op\":\"{op}\"}}"))?;
+        let v = lines
+            .into_iter()
+            .next_back()
+            .ok_or_else(|| anyhow!("empty response"))?;
+        check_ok(&v)?;
+        Ok(v)
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        self.simple("ping")
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.simple("stats")
+    }
+
+    pub fn flush(&mut self) -> Result<Json> {
+        self.simple("flush")
+    }
+
+    /// Ask the daemon to drain and exit (it finishes in-flight
+    /// requests, flushes the cache, then terminates).
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.simple("shutdown")
+    }
+
+    /// Evaluate a sweep scenario on the daemon's warm cache.
+    pub fn eval(&mut self, sc: &Scenario) -> Result<EvalResponse> {
+        // `Scenario::to_json` pretty-prints; the wire format is one
+        // line per request, so re-encode compactly.
+        let compact = Json::parse(&sc.to_json())
+            .context("re-encoding the scenario for the wire")?
+            .encode_compact();
+        let request = format!("{{\"op\":\"eval\",\"scenario\":{compact}}}");
+        let lines = self.exchange(&request)?;
+        let header = lines
+            .first()
+            .ok_or_else(|| anyhow!("empty eval response"))?;
+        check_ok(header)?;
+        let name = header
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("eval header missing \"name\""))?
+            .to_string();
+        let mut csv = String::new();
+        for v in &lines {
+            if let Some(row) = v.get("row").and_then(Json::as_str) {
+                csv.push_str(row);
+                csv.push('\n');
+            }
+        }
+        let last = lines
+            .last()
+            .ok_or_else(|| anyhow!("eval response missing terminator"))?;
+        check_ok(last)?;
+        let stats = last
+            .get("stats")
+            .cloned()
+            .ok_or_else(|| anyhow!("eval terminator missing \"stats\""))?;
+        Ok(EvalResponse { name, csv, stats })
+    }
+}
+
+/// Turn `{"ok":false,...}` responses into typed errors.
+fn check_ok(v: &Json) -> Result<()> {
+    if v.get("ok").and_then(Json::as_bool) == Some(false) {
+        let msg = v
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("daemon reported an unspecified error");
+        bail!("{msg}");
+    }
+    Ok(())
+}

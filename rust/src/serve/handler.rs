@@ -1,0 +1,281 @@
+//! Request handlers: one shared [`ServerState`] behind every worker,
+//! one function per op. Handlers are pure with respect to the
+//! connection — they return response *lines* (already
+//! compact-encoded); the listener owns sockets, framing and flushing.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::scenario::exec;
+use crate::sweep::{persist, EvalCache};
+use crate::util::json::Json;
+
+use super::metrics::ServeMetrics;
+use super::protocol::{self, Request};
+
+/// Everything the workers share: the warm cache, its persistence
+/// policy, metrics, and the drain flag.
+#[derive(Debug)]
+pub struct ServerState {
+    pub cache: Arc<EvalCache>,
+    pub cache_path: Option<PathBuf>,
+    pub cache_max_bytes: Option<u64>,
+    pub metrics: ServeMetrics,
+    /// Flipped by `shutdown` (and by the listener on SIGTERM); workers
+    /// finish in-flight requests, then the listener flushes and exits.
+    pub draining: AtomicBool,
+    pub started: Instant,
+}
+
+impl ServerState {
+    pub fn new(
+        cache: Arc<EvalCache>,
+        cache_path: Option<PathBuf>,
+        cache_max_bytes: Option<u64>,
+    ) -> Self {
+        ServerState {
+            cache,
+            cache_path,
+            cache_max_bytes,
+            metrics: ServeMetrics::new(),
+            draining: AtomicBool::new(false),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    /// Persist the cache under the save-lock sidecar. No-op (`None`)
+    /// without a configured cache path.
+    pub fn flush_cache(&self) -> anyhow::Result<Option<persist::SaveOutcome>> {
+        match &self.cache_path {
+            None => Ok(None),
+            Some(path) => {
+                let outcome =
+                    persist::save_capped(&self.cache, path, self.cache_max_bytes)?;
+                Ok(Some(outcome))
+            }
+        }
+    }
+}
+
+/// Handle one decoded request. Returns the response lines (in order)
+/// and whether the daemon should begin draining afterwards.
+pub fn handle(state: &ServerState, request: &Request) -> (Vec<String>, bool) {
+    match request {
+        Request::Ping => (vec![protocol::done_line("ping", vec![])], false),
+        Request::Stats => (vec![stats_line(state)], false),
+        Request::Flush => (vec![flush_line(state)], false),
+        Request::Shutdown => {
+            state.draining.store(true, Ordering::Relaxed);
+            (
+                vec![protocol::done_line(
+                    "shutdown",
+                    vec![("draining".to_string(), Json::Bool(true))],
+                )],
+                true,
+            )
+        }
+        Request::Eval(sc) => eval_lines(state, sc),
+    }
+}
+
+fn eval_lines(state: &ServerState, sc: &crate::scenario::Scenario) -> (Vec<String>, bool) {
+    let eval = match exec::eval_sweep(sc, Arc::clone(&state.cache)) {
+        Ok(eval) => eval,
+        Err(e) => return (vec![protocol::error_line(&format!("{e:#}"))], false),
+    };
+    let mut lines = Vec::with_capacity(eval.csv.lines().count() + 2);
+    lines.push(protocol::eval_header(&eval.name, eval.points));
+    for row in eval.csv.lines() {
+        lines.push(protocol::row_line(row));
+    }
+    lines.push(protocol::eval_done(vec![
+        ("points".to_string(), Json::Num(eval.points as f64)),
+        ("hits".to_string(), Json::Num(eval.hits as f64)),
+        ("misses".to_string(), Json::Num(eval.misses as f64)),
+        (
+            "mapper_calls".to_string(),
+            Json::Num(eval.mapper_calls as f64),
+        ),
+        (
+            "elapsed_us".to_string(),
+            Json::Num(eval.elapsed.as_micros() as f64),
+        ),
+    ]));
+    (lines, false)
+}
+
+/// The `stats` response: protocol + uptime + exact global cache
+/// counters + per-op metrics. Global counters (not per-request deltas)
+/// are what tests assert on — they are exact under concurrency.
+fn stats_line(state: &ServerState) -> String {
+    let cache = Json::Obj(vec![
+        ("entries".to_string(), Json::Num(state.cache.len() as f64)),
+        ("hits".to_string(), Json::Num(state.cache.hits() as f64)),
+        ("misses".to_string(), Json::Num(state.cache.misses() as f64)),
+        (
+            "mapper_calls".to_string(),
+            Json::Num(state.cache.mapper_calls() as f64),
+        ),
+        (
+            "coalesced".to_string(),
+            Json::Num(state.cache.coalesced() as f64),
+        ),
+    ]);
+    protocol::done_line(
+        "stats",
+        vec![
+            (
+                "uptime_us".to_string(),
+                Json::Num(state.started.elapsed().as_micros() as f64),
+            ),
+            ("draining".to_string(), Json::Bool(state.draining())),
+            ("cache".to_string(), cache),
+            ("metrics".to_string(), state.metrics.snapshot()),
+        ],
+    )
+}
+
+fn flush_line(state: &ServerState) -> String {
+    match state.flush_cache() {
+        Err(e) => protocol::error_line(&format!("flush failed: {e:#}")),
+        Ok(None) => protocol::done_line(
+            "flush",
+            vec![("persisted".to_string(), Json::Bool(false))],
+        ),
+        Ok(Some(outcome)) => protocol::done_line(
+            "flush",
+            vec![
+                ("persisted".to_string(), Json::Bool(true)),
+                ("entries".to_string(), Json::Num(outcome.entries as f64)),
+                ("evicted".to_string(), Json::Num(outcome.evicted as f64)),
+            ],
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Scenario;
+
+    fn state() -> ServerState {
+        ServerState::new(Arc::new(EvalCache::new()), None, None)
+    }
+
+    fn quick_scenario(name: &str) -> Scenario {
+        Scenario::builder(name)
+            .workloads("synthetic:3")
+            .prims("baseline,d1")
+            .levels("rf")
+            .seed(5)
+            .threads(2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn eval_rows_reconstruct_the_repro_run_csv() {
+        let st = state();
+        let sc = quick_scenario("hq");
+        let (lines, shutdown) = handle(&st, &Request::Eval(Box::new(sc.clone())));
+        assert!(!shutdown);
+        let rows: Vec<String> = lines
+            .iter()
+            .filter_map(|l| {
+                Json::parse(l).ok().and_then(|v| {
+                    v.get("row").and_then(Json::as_str).map(|s| s.to_string())
+                })
+            })
+            .collect();
+        let reconstructed = rows.join("\n") + "\n";
+        let direct = exec::eval_sweep(&sc, Arc::new(EvalCache::new())).unwrap().csv;
+        assert_eq!(reconstructed, direct, "streamed rows must rebuild the CSV");
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(last.get("done").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            last.get("stats")
+                .and_then(|s| s.get("misses"))
+                .and_then(Json::as_u64),
+            Some(6),
+            "3 GEMMs x 2 systems, cold cache"
+        );
+    }
+
+    #[test]
+    fn second_eval_is_all_hits() {
+        let st = state();
+        let sc = quick_scenario("warm");
+        let _ = handle(&st, &Request::Eval(Box::new(sc.clone())));
+        let (lines, _) = handle(&st, &Request::Eval(Box::new(sc)));
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        let stats = last.get("stats").unwrap();
+        assert_eq!(stats.get("misses").and_then(Json::as_u64), Some(0));
+        assert_eq!(stats.get("mapper_calls").and_then(Json::as_u64), Some(0));
+        assert_eq!(stats.get("hits").and_then(Json::as_u64), Some(6));
+    }
+
+    #[test]
+    fn experiment_scenarios_are_refused_not_panicked() {
+        let st = state();
+        let sc = Scenario::builder("fig2").experiment("fig2").build().unwrap();
+        let (lines, shutdown) = handle(&st, &Request::Eval(Box::new(sc)));
+        assert!(!shutdown);
+        assert_eq!(lines.len(), 1);
+        let v = Json::parse(&lines[0]).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(v.get("error").and_then(Json::as_str).unwrap().contains("sweep"));
+    }
+
+    #[test]
+    fn shutdown_flips_the_drain_flag() {
+        let st = state();
+        assert!(!st.draining());
+        let (lines, shutdown) = handle(&st, &Request::Shutdown);
+        assert!(shutdown);
+        assert!(st.draining());
+        assert!(lines[0].contains("\"draining\":true"));
+    }
+
+    #[test]
+    fn stats_reports_exact_global_cache_counters() {
+        let st = state();
+        let sc = quick_scenario("st");
+        let _ = handle(&st, &Request::Eval(Box::new(sc.clone())));
+        let _ = handle(&st, &Request::Eval(Box::new(sc)));
+        let (lines, _) = handle(&st, &Request::Stats);
+        let v = Json::parse(&lines[0]).unwrap();
+        let cache = v.get("cache").unwrap();
+        assert_eq!(cache.get("entries").and_then(Json::as_u64), Some(6));
+        assert_eq!(cache.get("misses").and_then(Json::as_u64), Some(6));
+        assert_eq!(cache.get("hits").and_then(Json::as_u64), Some(6));
+    }
+
+    #[test]
+    fn flush_without_a_cache_path_reports_not_persisted() {
+        let st = state();
+        let (lines, _) = handle(&st, &Request::Flush);
+        assert!(lines[0].contains("\"persisted\":false"), "{}", lines[0]);
+    }
+
+    #[test]
+    fn flush_with_a_path_writes_a_loadable_cache_file() {
+        let dir = std::env::temp_dir().join("www_cim_serve_handler_flush");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("cache.bin");
+        let st = ServerState::new(Arc::new(EvalCache::new()), Some(path.clone()), None);
+        let _ = handle(&st, &Request::Eval(Box::new(quick_scenario("fl"))));
+        let (lines, _) = handle(&st, &Request::Flush);
+        assert!(lines[0].contains("\"persisted\":true"), "{}", lines[0]);
+        assert!(path.exists());
+        let fresh = EvalCache::new();
+        persist::load_into(&fresh, &path).unwrap();
+        assert_eq!(fresh.len(), 6, "flushed file must reload");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

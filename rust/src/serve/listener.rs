@@ -1,0 +1,287 @@
+//! The TCP listener, accept loop and worker pool.
+//!
+//! One acceptor thread (the caller of [`Server::run`]) and `workers`
+//! persistent worker threads joined by a [`BoundedQueue`] of accepted
+//! connections. The queue is the backpressure boundary: when it is
+//! full the acceptor answers the connection with the explicit busy
+//! line and closes it — the daemon never buffers without bound.
+//!
+//! Connections are keep-alive: a worker serves requests off one socket
+//! until the client closes it (or the daemon drains), so a scripted
+//! client pays connection setup once. Reads use a short timeout so
+//! idle workers notice the drain flag promptly.
+//!
+//! Drain (SIGTERM, `shutdown` op, or [`Server::request_drain`]): the
+//! acceptor stops accepting, closes the queue (queued connections
+//! still get served), joins every worker — which finish their
+//! in-flight request and then close their connection at the next read
+//! boundary — and finally persists the cache under the save lock.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::sweep::{persist, EvalCache};
+use crate::util::json::Json;
+use crate::util::pool::{self, BoundedQueue};
+
+use super::drain;
+use super::handler::{self, ServerState};
+use super::protocol::{self, Request};
+
+/// How the daemon is configured (CLI flags map 1:1 onto this).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:7878` (`:0` picks a free port).
+    pub addr: String,
+    /// Worker threads serving connections.
+    pub workers: usize,
+    /// Accepted-connection queue capacity; overflow answers busy.
+    pub queue_depth: usize,
+    /// Cache file to warm from at startup and flush to on drain/`flush`.
+    pub cache_path: Option<PathBuf>,
+    /// LRU size cap applied when persisting.
+    pub cache_max_bytes: Option<u64>,
+    /// Honor process-wide SIGTERM/SIGINT (CLI: yes; in-process tests:
+    /// no — the flag is global and sticky, which would couple tests).
+    pub watch_signals: bool,
+    /// Suppress status lines (in-process servers in tests/bench).
+    pub quiet: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        let workers = pool::default_threads();
+        ServeOptions {
+            addr: "127.0.0.1:7878".to_string(),
+            workers,
+            queue_depth: workers * 2,
+            cache_path: None,
+            cache_max_bytes: None,
+            watch_signals: false,
+            quiet: false,
+        }
+    }
+}
+
+/// A bound (but not yet running) daemon.
+#[derive(Debug)]
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    opts: ServeOptions,
+}
+
+/// Accept-loop poll interval; also bounds drain-detection latency.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Per-read socket timeout; bounds how long an idle worker takes to
+/// notice the drain flag.
+const READ_POLL: Duration = Duration::from_millis(250);
+
+impl Server {
+    /// Bind the listener and warm the cache from `cache_path` (if any).
+    pub fn bind(opts: ServeOptions) -> Result<Server> {
+        let cache = Arc::new(EvalCache::new());
+        if let Some(path) = &opts.cache_path {
+            let load = persist::load_into(&cache, path)?;
+            if !opts.quiet {
+                println!("[serve] cache: {} ({})", load.describe(), path.display());
+            }
+        }
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        // Non-blocking accept so the loop can poll the drain flag.
+        listener.set_nonblocking(true)?;
+        let state = Arc::new(ServerState::new(
+            cache,
+            opts.cache_path.clone(),
+            opts.cache_max_bytes,
+        ));
+        Ok(Server { listener, state, opts })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Shared handle onto the daemon's state (tests assert on it).
+    pub fn state(&self) -> Arc<ServerState> {
+        Arc::clone(&self.state)
+    }
+
+    /// Programmatic drain trigger equivalent to the `shutdown` op —
+    /// the in-process way to stop a [`Server::run`] loop.
+    pub fn request_drain(&self) {
+        self.state
+            .draining
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn drain_requested(&self) -> bool {
+        self.state.draining()
+            || (self.opts.watch_signals && drain::termination_requested())
+    }
+
+    /// Serve until drained, then flush the cache and return. This is
+    /// the daemon's whole life; it owns the calling thread.
+    pub fn run(self) -> Result<()> {
+        if self.opts.watch_signals {
+            drain::install();
+        }
+        let queue: BoundedQueue<TcpStream> = BoundedQueue::new(self.opts.queue_depth);
+        let addr = self.local_addr()?;
+        if !self.opts.quiet {
+            println!(
+                "[serve] listening on {addr} (protocol v{}, {} worker(s), queue {})",
+                protocol::SERVE_PROTOCOL_VERSION,
+                self.opts.workers,
+                self.opts.queue_depth
+            );
+        }
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.opts.workers {
+                scope.spawn(|| worker_loop(&self.state, &queue));
+            }
+
+            // Accept loop: runs on the caller's thread until drained.
+            loop {
+                if self.drain_requested() {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => match queue.try_push(stream) {
+                        Ok(()) => self.state.metrics.record_connection(),
+                        Err(stream) => reject_busy(&self.state, stream),
+                    },
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        // Transient accept failures (e.g. EMFILE) must
+                        // not kill the daemon; back off and retry.
+                        eprintln!("[serve] accept error: {e}");
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                }
+            }
+
+            // Drain: make the flag visible to workers parked on idle
+            // connections, stop feeding the queue, serve what is
+            // already queued, and wait for every in-flight request.
+            self.state
+                .draining
+                .store(true, std::sync::atomic::Ordering::Relaxed);
+            if !self.opts.quiet {
+                println!("[serve] draining: finishing in-flight requests");
+            }
+            queue.close();
+        });
+
+        // Every worker has exited; flush under the save lock.
+        let flushed = self.state.flush_cache()?;
+        if !self.opts.quiet {
+            match flushed {
+                Some(outcome) => {
+                    println!("[serve] final flush: {}", outcome.describe())
+                }
+                None => println!("[serve] no cache path configured; nothing to flush"),
+            }
+            println!("[serve] drained; bye");
+        }
+        Ok(())
+    }
+}
+
+/// Answer a connection the queue rejected with the explicit busy line.
+fn reject_busy(state: &ServerState, mut stream: TcpStream) {
+    state.metrics.record_busy();
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = stream.write_all(protocol::busy_line().as_bytes());
+    let _ = stream.write_all(b"\n");
+    // Dropping the stream closes it.
+}
+
+fn worker_loop(state: &ServerState, queue: &BoundedQueue<TcpStream>) {
+    while let Some(stream) = queue.pop() {
+        serve_connection(state, stream);
+    }
+}
+
+/// Serve one keep-alive connection until the client closes it, an IO
+/// error occurs, or the daemon drains (checked between requests).
+fn serve_connection(state: &ServerState, mut stream: TcpStream) {
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        // Serve every complete line already buffered.
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&line);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if !respond(state, &mut stream, line) {
+                return;
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return, // client closed
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                // Idle poll: close only when draining and no request
+                // is partially buffered.
+                if state.draining() && buf.is_empty() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Decode, dispatch and answer one request line. Returns `false` when
+/// the connection should close (write failure).
+fn respond(state: &ServerState, stream: &mut TcpStream, line: &str) -> bool {
+    let started = Instant::now();
+    let (op, lines, ok) = match Request::parse(line) {
+        Ok(request) => {
+            let (lines, _shutdown) = handler::handle(state, &request);
+            let ok = lines
+                .first()
+                .and_then(|l| Json::parse(l).ok())
+                .and_then(|v| v.get("ok").and_then(Json::as_bool))
+                .unwrap_or(false);
+            (request.op(), lines, ok)
+        }
+        Err(e) => {
+            state.metrics.record_bad_request();
+            ("", vec![protocol::error_line(&format!("{e:#}"))], false)
+        }
+    };
+    let mut payload = String::new();
+    for l in &lines {
+        payload.push_str(l);
+        payload.push('\n');
+    }
+    let written = stream.write_all(payload.as_bytes()).is_ok() && stream.flush().is_ok();
+    if !op.is_empty() {
+        state.metrics.record(op, started.elapsed(), ok && written);
+    }
+    written
+}

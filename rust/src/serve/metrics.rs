@@ -1,0 +1,179 @@
+//! Per-op counters and latency histograms for the daemon.
+//!
+//! Lock-free atomics on the request path; the `stats` op snapshots
+//! everything into deterministic JSON (keys in fixed order, buckets
+//! always present) so dashboards and tests can diff responses.
+//!
+//! Latency uses log2 microsecond buckets: bucket `i` counts requests
+//! with `latency_us` in `[2^i, 2^(i+1))` (bucket 0 additionally takes
+//! sub-microsecond requests, the last bucket is open-ended). Fixed
+//! 20 buckets cover 1 µs .. ~0.5 s, plenty for an analytical model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Histogram bucket count: log2 µs buckets 0..19, last open-ended.
+pub const LATENCY_BUCKETS: usize = 20;
+
+/// The ops tracked, in the order they appear in every stats snapshot.
+pub const TRACKED_OPS: &[&str] = &["eval", "ping", "stats", "flush", "shutdown"];
+
+/// Counters + latency histogram for one op.
+#[derive(Debug, Default)]
+struct OpMetrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    total_us: AtomicU64,
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl OpMetrics {
+    fn record(&self, latency: Duration, ok: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (63 - us.max(1).leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> Json {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .map(|b| Json::Num(b.load(Ordering::Relaxed) as f64))
+            .collect();
+        Json::Obj(vec![
+            ("requests".into(), Json::Num(requests as f64)),
+            (
+                "errors".into(),
+                Json::Num(self.errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "total_us".into(),
+                Json::Num(self.total_us.load(Ordering::Relaxed) as f64),
+            ),
+            ("latency_log2us".into(), Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// All daemon metrics: per-op plus listener-level counters that have
+/// no op to attribute to (busy rejections, undecodable requests).
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    ops: [OpMetrics; TRACKED_OPS.len()],
+    busy: AtomicU64,
+    bad_requests: AtomicU64,
+    connections: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one handled request. Unknown op names count as
+    /// bad requests (they were answered with an error line).
+    pub fn record(&self, op: &str, latency: Duration, ok: bool) {
+        match TRACKED_OPS.iter().position(|&t| t == op) {
+            Some(i) => self.ops[i].record(latency, ok),
+            None => {
+                self.bad_requests.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// A connection was rejected with the explicit busy response.
+    pub fn record_busy(&self) {
+        self.busy.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A line arrived that did not decode to a request.
+    pub fn record_bad_request(&self) {
+        self.bad_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection was accepted and handed to a worker.
+    pub fn record_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn busy_count(&self) -> u64 {
+        self.busy.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic JSON snapshot, embedded in the `stats` response.
+    pub fn snapshot(&self) -> Json {
+        let ops: Vec<(String, Json)> = TRACKED_OPS
+            .iter()
+            .zip(self.ops.iter())
+            .map(|(name, m)| ((*name).to_string(), m.snapshot()))
+            .collect();
+        Json::Obj(vec![
+            (
+                "connections".into(),
+                Json::Num(self.connections.load(Ordering::Relaxed) as f64),
+            ),
+            ("busy".into(), Json::Num(self.busy.load(Ordering::Relaxed) as f64)),
+            (
+                "bad_requests".into(),
+                Json::Num(self.bad_requests.load(Ordering::Relaxed) as f64),
+            ),
+            ("ops".into(), Json::Obj(ops)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_lands_in_the_log2_bucket() {
+        let m = ServeMetrics::new();
+        m.record("eval", Duration::from_micros(0), true); // bucket 0
+        m.record("eval", Duration::from_micros(1), true); // bucket 0
+        m.record("eval", Duration::from_micros(3), true); // bucket 1
+        m.record("eval", Duration::from_micros(1500), false); // bucket 10
+        m.record("eval", Duration::from_secs(3600), true); // clamped to last
+        let snap = m.snapshot();
+        let eval = snap.get("ops").unwrap().get("eval").unwrap();
+        assert_eq!(eval.get("requests").unwrap().as_u64(), Some(5));
+        assert_eq!(eval.get("errors").unwrap().as_u64(), Some(1));
+        let buckets = eval.get("latency_log2us").unwrap().as_array().unwrap();
+        assert_eq!(buckets.len(), LATENCY_BUCKETS);
+        assert_eq!(buckets[0].as_u64(), Some(2));
+        assert_eq!(buckets[1].as_u64(), Some(1));
+        assert_eq!(buckets[10].as_u64(), Some(1));
+        assert_eq!(buckets[LATENCY_BUCKETS - 1].as_u64(), Some(1));
+    }
+
+    #[test]
+    fn unknown_ops_count_as_bad_requests() {
+        let m = ServeMetrics::new();
+        m.record("frobnicate", Duration::from_micros(1), false);
+        m.record_busy();
+        let snap = m.snapshot();
+        assert_eq!(snap.get("bad_requests").unwrap().as_u64(), Some(1));
+        assert_eq!(snap.get("busy").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn snapshot_lists_every_tracked_op_even_when_idle() {
+        let snap = ServeMetrics::new().snapshot();
+        let ops = snap.get("ops").unwrap();
+        for op in TRACKED_OPS {
+            assert_eq!(
+                ops.get(op).and_then(|o| o.get("requests")).and_then(Json::as_u64),
+                Some(0),
+                "op {op} missing from idle snapshot"
+            );
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! `repro serve` — a persistent warm-cache evaluation daemon.
+//!
+//! Every other entry point (`run`, `sweep`, `experiment`,
+//! `orchestrate`) is a cold-start batch process that pays process
+//! spawn plus cache load/save per invocation. This module keeps one
+//! shared [`crate::sweep::EvalCache`] warm in a long-lived process and
+//! answers scenario evaluations over a newline-delimited JSON protocol
+//! on `std::net::TcpListener` — interactive design-space queries on
+//! top of the paper's analytical model, with zero new dependencies.
+//!
+//! Layout:
+//!
+//! * [`protocol`] — wire format: request decoding, response encoding,
+//!   and [`protocol::SERVE_PROTOCOL_VERSION`] (R3-guarded).
+//! * [`handler`] — op implementations over the shared [`handler::ServerState`].
+//! * [`listener`] — accept loop, bounded queue, worker pool, drain.
+//! * [`metrics`] — per-op counters and log2-µs latency histograms.
+//! * [`drain`] — SIGTERM/SIGINT → drain-flag bridge (no `libc` crate).
+//! * [`client`] — the blocking client behind `repro query`.
+//!
+//! Determinism invariant (pinned by `tests/integration_serve.rs` and
+//! the CI e2e step): the row stream of an `eval` response is
+//! byte-identical to the CSV the same scenario writes via `repro run`.
+//! Cache warmth, worker count, request interleaving and coalescing
+//! must not be observable in the payload — only in the stats.
+
+pub mod client;
+pub mod drain;
+pub mod handler;
+pub mod listener;
+pub mod metrics;
+pub mod protocol;
+
+pub use client::{Client, EvalResponse};
+pub use listener::{Server, ServeOptions};
+pub use protocol::SERVE_PROTOCOL_VERSION;

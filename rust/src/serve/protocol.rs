@@ -1,0 +1,207 @@
+//! The newline-delimited JSON wire protocol.
+//!
+//! One request per line, one *or more* response lines per request:
+//!
+//! * `{"op":"ping"}` → `{"ok":true,"op":"ping","protocol":1,"done":true}`
+//! * `{"op":"eval","scenario":{...}}` → a header line
+//!   (`{"ok":true,"op":"eval",...,"points":N}`), then one
+//!   `{"row":"<csv line>"}` per CSV line (header row included), then a
+//!   final `{"done":true,"ok":true,"stats":{...}}`. Joining the `row`
+//!   strings with `\n` (plus a trailing `\n`) reproduces the `repro
+//!   run` CSV byte-for-byte.
+//! * `{"op":"stats"}` / `{"op":"flush"}` / `{"op":"shutdown"}` →
+//!   a single line carrying `"done":true`.
+//!
+//! Every response line carries `"ok"`; the last line of a response
+//! carries `"done":true`. Errors are a single
+//! `{"ok":false,"error":"...","done":true}` line; an overloaded daemon
+//! answers the *connection* with `{"ok":false,"busy":true,...}` before
+//! closing it. Responses are [`Json::encode_compact`] — exactly one
+//! line each, deterministic key order.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::scenario::Scenario;
+use crate::util::json::{escape, Json};
+
+/// Wire-protocol version, reported by `ping` and `stats`. Bump on any
+/// change to request/response shapes (guarded by `repro lint` R3).
+pub const SERVE_PROTOCOL_VERSION: u32 = 1;
+
+/// A decoded client request.
+#[derive(Debug)]
+pub enum Request {
+    /// Evaluate a sweep scenario and stream its rows back.
+    Eval(Box<Scenario>),
+    /// Liveness + protocol probe.
+    Ping,
+    /// Global cache/metrics snapshot.
+    Stats,
+    /// Persist the cache now (under the save lock).
+    Flush,
+    /// Drain and exit after in-flight requests finish.
+    Shutdown,
+}
+
+impl Request {
+    /// Op name as it appears on the wire (and in metrics).
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Eval(_) => "eval",
+            Request::Ping => "ping",
+            Request::Stats => "stats",
+            Request::Flush => "flush",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// Decode one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let v = Json::parse(line)?;
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request needs a string \"op\" field"))?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "stats" => Ok(Request::Stats),
+            "flush" => Ok(Request::Flush),
+            "shutdown" => Ok(Request::Shutdown),
+            "eval" => {
+                let sc = v
+                    .get("scenario")
+                    .ok_or_else(|| anyhow!("eval requests need a \"scenario\" object"))?;
+                // Scenario::from_json parses text; round-tripping the
+                // already-parsed object through the compact encoder
+                // keeps one strict scenario decoder in the tree.
+                let sc = Scenario::from_json(&sc.encode_compact())?;
+                Ok(Request::Eval(Box::new(sc)))
+            }
+            other => bail!(
+                "unknown op {other:?} (expected eval, ping, stats, flush or shutdown)"
+            ),
+        }
+    }
+}
+
+/// `{"ok":false,"error":"...","done":true}` — the single-line error
+/// response.
+pub fn error_line(message: &str) -> String {
+    format!("{{\"ok\":false,\"error\":\"{}\",\"done\":true}}", escape(message))
+}
+
+/// The explicit overload response, written straight from the acceptor
+/// when the bounded queue rejects a connection.
+pub fn busy_line() -> String {
+    format!(
+        "{{\"ok\":false,\"busy\":true,\"error\":\"server busy: accept queue full\",\
+         \"protocol\":{SERVE_PROTOCOL_VERSION},\"done\":true}}"
+    )
+}
+
+/// One streamed CSV line (without its trailing newline).
+pub fn row_line(row: &str) -> String {
+    format!("{{\"row\":\"{}\"}}", escape(row))
+}
+
+/// Build the single-line response for simple ops: merges `"ok":true`,
+/// the op name, the protocol version, any op-specific fields, and the
+/// `"done":true` terminator.
+pub fn done_line(op: &str, fields: Vec<(String, Json)>) -> String {
+    let mut obj = vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str(op.to_string())),
+        (
+            "protocol".to_string(),
+            Json::Num(f64::from(SERVE_PROTOCOL_VERSION)),
+        ),
+    ];
+    obj.extend(fields);
+    obj.push(("done".to_string(), Json::Bool(true)));
+    Json::Obj(obj).encode_compact()
+}
+
+/// The eval response header (precedes the row stream).
+pub fn eval_header(name: &str, points: usize) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(true)),
+        ("op".to_string(), Json::Str("eval".to_string())),
+        (
+            "protocol".to_string(),
+            Json::Num(f64::from(SERVE_PROTOCOL_VERSION)),
+        ),
+        ("name".to_string(), Json::Str(name.to_string())),
+        ("points".to_string(), Json::Num(points as f64)),
+    ])
+    .encode_compact()
+}
+
+/// The eval response terminator with per-request stats.
+pub fn eval_done(stats: Vec<(String, Json)>) -> String {
+    Json::Obj(vec![
+        ("done".to_string(), Json::Bool(true)),
+        ("ok".to_string(), Json::Bool(true)),
+        ("stats".to_string(), Json::Obj(stats)),
+    ])
+    .encode_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_ops_parse() {
+        for (line, op) in [
+            ("{\"op\":\"ping\"}", "ping"),
+            ("{\"op\":\"stats\"}", "stats"),
+            ("{\"op\":\"flush\"}", "flush"),
+            ("{\"op\":\"shutdown\"}", "shutdown"),
+        ] {
+            assert_eq!(Request::parse(line).unwrap().op(), op);
+        }
+    }
+
+    #[test]
+    fn eval_parses_an_inline_scenario() {
+        let sc = Scenario::builder("wire")
+            .workloads("synthetic:2")
+            .prims("d1")
+            .levels("rf")
+            .seed(3)
+            .build()
+            .unwrap();
+        let line = format!("{{\"op\":\"eval\",\"scenario\":{}}}", sc.to_json());
+        match Request::parse(&line).unwrap() {
+            Request::Eval(parsed) => assert_eq!(parsed.name, "wire"),
+            other => panic!("expected eval, got {}", other.op()),
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_with_context() {
+        let err = Request::parse("{\"op\":\"frobnicate\"}").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown op"), "{err:#}");
+        let err = Request::parse("{\"op\":\"eval\"}").unwrap_err();
+        assert!(format!("{err:#}").contains("scenario"), "{err:#}");
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("{\"noop\":true}").is_err());
+    }
+
+    #[test]
+    fn response_lines_are_single_line_json() {
+        for line in [
+            error_line("boom \"quoted\""),
+            busy_line(),
+            row_line("a,b,c"),
+            done_line("ping", vec![]),
+            eval_header("quick", 12),
+            eval_done(vec![("hits".to_string(), Json::Num(3.0))]),
+        ] {
+            assert!(!line.contains('\n'), "multi-line response: {line}");
+            Json::parse(&line).expect("response must be valid JSON");
+        }
+        assert!(busy_line().contains("\"busy\":true"));
+        assert!(done_line("ping", vec![]).contains("\"done\":true"));
+    }
+}

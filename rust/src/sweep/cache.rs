@@ -26,10 +26,10 @@
 //! re-invoking the mapper.
 
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::arch::{Architecture, CimSystem, MemLevel, SmemConfig};
@@ -246,6 +246,19 @@ pub struct EvalCache {
     /// point costs exactly one, so a fully warm run reports zero — the
     /// invariant the warm-start tests pin.
     mapper_calls: AtomicU64,
+    /// Probes that waited for a concurrent identical computation
+    /// instead of evaluating redundantly (single-flight coalescing).
+    /// Each coalesced probe also counts as a hit — it was served a
+    /// memoized value — so `misses` stays exactly "unique points
+    /// computed" even under concurrent duplicate traffic (the property
+    /// the serve daemon's warm-pass checks rely on).
+    coalesced: AtomicU64,
+    /// Keys currently being computed by some thread. A probe that
+    /// misses first claims its key here; duplicates wait on
+    /// [`Self::in_flight_done`] and are then served the freshly
+    /// inserted entry.
+    in_flight: Mutex<HashSet<(String, Gemm)>>,
+    in_flight_done: Condvar,
     /// Last-used stamp applied to every entry touched by this run
     /// (see [`process_stamp`]).
     run_stamp: u64,
@@ -264,6 +277,9 @@ impl EvalCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             mapper_calls: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            in_flight: Mutex::new(HashSet::new()),
+            in_flight_done: Condvar::new(),
             run_stamp: process_stamp(),
         }
     }
@@ -281,29 +297,72 @@ impl EvalCache {
         (h.finish() as usize) % SHARDS
     }
 
+    /// Serve a hit from the shard holding `(point, gemm)`, refreshing
+    /// its recency stamp. `coalesced` marks a probe that waited for a
+    /// concurrent identical computation (counted separately so the
+    /// serve daemon can prove duplicates evaluated once).
+    fn probe(&self, point: &str, gemm: &Gemm, coalesced: bool) -> Option<CacheEntry> {
+        let shard = &self.shards[Self::shard_of(point, gemm)];
+        let mut guard = locked(shard);
+        let slot = guard.get_mut(point)?.get_mut(gemm)?;
+        slot.last_used = self.run_stamp;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        if coalesced {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(slot.entry.clone())
+    }
+
+    /// Lock the in-flight registry (single-flight bookkeeping).
+    fn in_flight_locked(&self) -> std::sync::MutexGuard<'_, HashSet<(String, Gemm)>> {
+        // lint: allow(R4): a poisoned registry means a sibling eval thread already panicked
+        self.in_flight.lock().expect("in-flight registry poisoned")
+    }
+
     /// Return the memoized entry for `(point, gemm)`, computing it with
-    /// `f` on a miss. The evaluation runs outside the shard lock so
-    /// concurrent misses on other keys proceed; a racing duplicate miss
-    /// computes redundantly but deterministically (first insert wins).
-    /// The hit-path clone is cheap (`Arc` bump + `Metrics` copy — see
-    /// [`CacheEntry`]).
+    /// `f` on a miss. The evaluation runs outside every lock so
+    /// concurrent misses on other keys proceed; concurrent misses on
+    /// the *same* key are single-flighted — exactly one thread
+    /// evaluates, the rest wait and are served the fresh entry (counted
+    /// in [`Self::coalesced`], and as hits). The hit-path clone is
+    /// cheap (`Arc` bump + `Metrics` copy — see [`CacheEntry`]).
     pub fn get_or_compute<F: FnOnce() -> CacheEntry>(
         &self,
         point: &str,
         gemm: Gemm,
         f: F,
     ) -> CacheEntry {
-        let shard = &self.shards[Self::shard_of(point, &gemm)];
-        if let Some(slot) = locked(shard)
-            .get_mut(point)
-            .and_then(|per_gemm| per_gemm.get_mut(&gemm))
-        {
-            slot.last_used = self.run_stamp;
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return slot.entry.clone();
+        if let Some(entry) = self.probe(point, &gemm, false) {
+            return entry;
         }
+        let key = (point.to_string(), gemm);
+        loop {
+            {
+                let mut in_flight = self.in_flight_locked();
+                if !in_flight.contains(&key) {
+                    in_flight.insert(key.clone());
+                    break; // this thread owns the computation
+                }
+                // Another thread is computing this key: wait it out.
+                while in_flight.contains(&key) {
+                    in_flight = self
+                        .in_flight_done
+                        .wait(in_flight)
+                        // lint: allow(R4): same poisoning contract as in_flight_locked
+                        .expect("in-flight registry poisoned");
+                }
+            }
+            // The computation finished (or its thread unwound without
+            // inserting): re-probe, else claim the key ourselves.
+            if let Some(entry) = self.probe(point, &gemm, true) {
+                return entry;
+            }
+        }
+        // Release the claim even if `f` unwinds, so waiters never hang.
+        let _claim = InFlightClaim { cache: self, key: &key };
         let e = f();
         self.misses.fetch_add(1, Ordering::Relaxed);
+        let shard = &self.shards[Self::shard_of(point, &gemm)];
         let mut guard = locked(shard);
         let slot = guard
             .entry(point.to_string())
@@ -318,39 +377,18 @@ impl EvalCache {
     }
 
     /// Metrics-only variant of [`Self::get_or_compute`]: serves hits by
-    /// copying the `Metrics` (a `Copy` type) out from under the shard
-    /// lock without cloning the cached mapping. The hybrid router's hot
-    /// path — it prices thousands of trace layers and never reads the
-    /// mapping — uses this; the engine, whose results carry the
-    /// mapping, uses `get_or_compute`.
+    /// copying the `Metrics` (a `Copy` type) without holding onto the
+    /// cached mapping. The hybrid router's hot path — it prices
+    /// thousands of trace layers and never reads the mapping — uses
+    /// this; the engine, whose results carry the mapping, uses
+    /// `get_or_compute`.
     pub fn get_or_compute_metrics<F: FnOnce() -> CacheEntry>(
         &self,
         point: &str,
         gemm: Gemm,
         f: F,
     ) -> Metrics {
-        let shard = &self.shards[Self::shard_of(point, &gemm)];
-        if let Some(slot) = locked(shard)
-            .get_mut(point)
-            .and_then(|per_gemm| per_gemm.get_mut(&gemm))
-        {
-            slot.last_used = self.run_stamp;
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return slot.entry.metrics;
-        }
-        let e = f();
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = locked(shard);
-        let slot = guard
-            .entry(point.to_string())
-            .or_default()
-            .entry(gemm)
-            .or_insert(Slot {
-                entry: e,
-                last_used: self.run_stamp,
-            });
-        slot.last_used = self.run_stamp;
-        slot.entry.metrics
+        self.get_or_compute(point, gemm, f).metrics
     }
 
     /// Insert an entry without touching the hit/miss counters (cache
@@ -439,6 +477,14 @@ impl EvalCache {
         self.mapper_calls.load(Ordering::Relaxed)
     }
 
+    /// Probes served by waiting on a concurrent identical computation
+    /// instead of evaluating redundantly (see [`Self::get_or_compute`]).
+    /// The serve daemon's concurrency tests pin `misses == unique
+    /// points` through this mechanism.
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
     /// Drop all cached entries and reset the counters.
     pub fn clear(&self) {
         for s in &self.shards {
@@ -447,6 +493,22 @@ impl EvalCache {
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
         self.mapper_calls.store(0, Ordering::Relaxed);
+        self.coalesced.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Unwind-safe release of a single-flight claim: removing the key and
+/// waking waiters happens on drop, so a panicking evaluation closure
+/// can never leave duplicates blocked forever.
+struct InFlightClaim<'a> {
+    cache: &'a EvalCache,
+    key: &'a (String, Gemm),
+}
+
+impl Drop for InFlightClaim<'_> {
+    fn drop(&mut self) {
+        self.cache.in_flight_locked().remove(self.key);
+        self.cache.in_flight_done.notify_all();
     }
 }
 
@@ -552,6 +614,54 @@ mod tests {
         // included.
         cache.preload_stamped("stale", g, dummy_entry(9.0), old);
         assert_eq!(cache.snapshot_stamped()[1].2, cache.run_stamp());
+    }
+
+    #[test]
+    fn concurrent_identical_probes_single_flight() {
+        use std::sync::atomic::AtomicU64;
+        let cache = Arc::new(EvalCache::new());
+        let g = Gemm::new(16, 16, 16);
+        let computes = Arc::new(AtomicU64::new(0));
+        let n = 8;
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let cache = Arc::clone(&cache);
+            let computes = Arc::clone(&computes);
+            handles.push(std::thread::spawn(move || {
+                cache.get_or_compute("p", g, || {
+                    computes.fetch_add(1, Ordering::SeqCst);
+                    // Widen the race window so duplicates overlap.
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                    dummy_entry(1.0)
+                })
+            }));
+        }
+        let entries: Vec<CacheEntry> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(entries.iter().all(|e| *e == dummy_entry(1.0)));
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "exactly one evaluation");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), n - 1, "duplicates served as hits");
+        assert_eq!(cache.coalesced(), n - 1, "duplicates waited, not recomputed");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn panicking_computation_releases_the_single_flight_claim() {
+        let cache = Arc::new(EvalCache::new());
+        let g = Gemm::new(8, 8, 8);
+        let c2 = Arc::clone(&cache);
+        let panicker = std::thread::spawn(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                c2.get_or_compute("p", g, || panic!("evaluation blew up"))
+            }));
+            assert!(result.is_err());
+        });
+        panicker.join().unwrap();
+        // The claim was released on unwind: a later probe computes
+        // normally instead of deadlocking on the in-flight registry.
+        let e = cache.get_or_compute("p", g, || dummy_entry(2.0));
+        assert_eq!(e, dummy_entry(2.0));
+        assert_eq!(cache.misses(), 1);
     }
 
     #[test]

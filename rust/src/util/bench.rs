@@ -9,6 +9,8 @@
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 /// Re-export of `std::hint::black_box` under the criterion-style name.
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
@@ -61,6 +63,30 @@ impl Measurement {
             s.push_str(&format!("  ({per_sec:.0} items/s)"));
         }
         s
+    }
+
+    /// Machine-readable form (`repro bench --json`): one object per
+    /// case with the iteration count and nanosecond timings. Callers
+    /// may append case-specific keys (e.g. cache stats) to the
+    /// returned object before encoding.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("iters".to_string(), Json::Num(self.samples.len() as f64)),
+            (
+                "ns_per_iter".to_string(),
+                Json::Num(self.mean().as_nanos() as f64),
+            ),
+            ("min_ns".to_string(), Json::Num(self.min().as_nanos() as f64)),
+            (
+                "stddev_ns".to_string(),
+                Json::Num(self.std_dev().as_nanos() as f64),
+            ),
+            (
+                "items_per_iter".to_string(),
+                Json::Num(self.items_per_iter as f64),
+            ),
+        ])
     }
 }
 
@@ -168,6 +194,25 @@ mod tests {
         assert_eq!(m.min(), Duration::from_micros(10));
         assert_eq!(m.mean(), Duration::from_micros(20));
         assert!(m.std_dev() > Duration::ZERO);
+    }
+
+    #[test]
+    fn json_form_carries_the_timing_fields() {
+        let m = Measurement {
+            name: "case".into(),
+            samples: vec![Duration::from_micros(10), Duration::from_micros(30)],
+            items_per_iter: 6,
+        };
+        let v = m.to_json();
+        assert_eq!(v.get("name").and_then(Json::as_str), Some("case"));
+        assert_eq!(v.get("iters").and_then(Json::as_u64), Some(2));
+        assert_eq!(v.get("ns_per_iter").and_then(Json::as_u64), Some(20_000));
+        assert_eq!(v.get("min_ns").and_then(Json::as_u64), Some(10_000));
+        assert_eq!(v.get("items_per_iter").and_then(Json::as_u64), Some(6));
+        // The object is open for extension (cache stats etc.).
+        let Json::Obj(mut fields) = v else { panic!("object expected") };
+        fields.push(("cache".to_string(), Json::Null));
+        assert!(Json::Obj(fields).encode_compact().contains("\"cache\":null"));
     }
 
     #[test]

@@ -89,6 +89,54 @@ impl Json {
         }
     }
 
+    /// Single-line encoding (no indentation, no trailing newline) for
+    /// newline-delimited protocols ([`crate::serve`]): one value per
+    /// line, so embedded newlines must never appear outside string
+    /// escapes. Same determinism contract as [`Json::encode`]: same
+    /// tree → same bytes, and `Json::parse` inverts it exactly.
+    pub fn encode_compact(&self) -> String {
+        let mut out = String::new();
+        self.encode_compact_into(&mut out);
+        out
+    }
+
+    fn encode_compact_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => out.push_str(&encode_number(*n)),
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.encode_compact_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.encode_compact_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     /// Pretty-print with two-space indentation and a trailing newline.
     /// Deterministic: object keys are emitted in stored order, numbers
     /// via [`encode_number`], so encoding the same tree twice yields
@@ -473,6 +521,29 @@ mod tests {
         // Integers render without a fractional part.
         assert!(text.contains("\"n\": 42,"), "{text}");
         assert!(text.contains("\"neg\": -7,"), "{text}");
+    }
+
+    #[test]
+    fn compact_encoding_is_one_line_and_round_trips() {
+        let doc = Json::Obj(vec![
+            ("op".to_string(), Json::Str("eval".to_string())),
+            ("n".to_string(), Json::Num(42.0)),
+            ("x".to_string(), Json::Num(1.5)),
+            ("row".to_string(), Json::Str("a,b\nc".to_string())),
+            ("arr".to_string(), Json::Arr(vec![Json::Num(1.0), Json::Null])),
+            ("obj".to_string(), Json::Obj(vec![("k".to_string(), Json::Bool(true))])),
+            ("empty".to_string(), Json::Arr(vec![])),
+        ]);
+        let line = doc.encode_compact();
+        assert!(!line.contains('\n'), "one value per line: {line:?}");
+        assert_eq!(Json::parse(&line).unwrap(), doc, "compact must be lossless");
+        assert_eq!(
+            line,
+            r#"{"op":"eval","n":42,"x":1.5,"row":"a,b\nc","arr":[1,null],"obj":{"k":true},"empty":[]}"#
+        );
+        // Compact and pretty agree on content: re-encoding the parsed
+        // compact line pretty-prints identically to the original tree.
+        assert_eq!(Json::parse(&line).unwrap().encode(), doc.encode());
     }
 
     #[test]

@@ -4,9 +4,15 @@
 //! grid cells) out over OS threads. Jobs are CPU-bound and independent,
 //! so a shared atomic cursor over the job list (self-balancing: fast
 //! workers simply take more items) is all that is needed.
+//!
+//! For long-lived components ([`crate::serve`]) the module also
+//! provides [`BoundedQueue`]: a fixed-capacity MPMC hand-off between an
+//! acceptor and a persistent worker pool, with non-blocking rejection
+//! on overflow (backpressure instead of unbounded buffering).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Number of worker threads to use by default: `WWW_THREADS` env var or
 /// available parallelism (min 1).
@@ -61,6 +67,90 @@ where
                 .expect("worker skipped an item")
         })
         .collect()
+}
+
+/// Fixed-capacity multi-producer/multi-consumer queue for persistent
+/// worker pools. Pushes never block: a full (or closed) queue rejects
+/// the item back to the caller, which is the backpressure signal the
+/// serve daemon turns into an explicit busy response instead of
+/// queueing without bound. Pops block until an item arrives or the
+/// queue is closed and drained.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    available: Condvar,
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+}
+
+/// Lock the queue state — the single place this type touches a Mutex.
+fn queue_locked<T>(m: &Mutex<QueueState<T>>) -> std::sync::MutexGuard<'_, QueueState<T>> {
+    // lint: allow(R4): a poisoned queue means a worker panicked mid-pop; propagating is correct
+    m.lock().expect("bounded queue poisoned")
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `capacity` items (minimum 1).
+    pub fn new(capacity: usize) -> Self {
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                capacity: capacity.max(1),
+                closed: false,
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Enqueue without blocking. Returns the item back when the queue
+    /// is full or closed — the caller decides what rejection means.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut s = queue_locked(&self.state);
+        if s.closed || s.items.len() >= s.capacity {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking until an item is available. Returns `None`
+    /// once the queue is closed *and* drained (worker shutdown signal).
+    pub fn pop(&self) -> Option<T> {
+        let mut s = queue_locked(&self.state);
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            // lint: allow(R4): same poisoning contract as queue_locked above
+            s = self.available.wait(s).expect("bounded queue poisoned");
+        }
+    }
+
+    /// Close the queue: pending items still drain, new pushes are
+    /// rejected, and blocked `pop`s wake with `None` once empty.
+    pub fn close(&self) {
+        queue_locked(&self.state).closed = true;
+        self.available.notify_all();
+    }
+
+    /// Items currently waiting.
+    pub fn len(&self) -> usize {
+        queue_locked(&self.state).items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// `map_parallel` with indices — handy when the closure needs to know
@@ -120,5 +210,66 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow_and_preserves_fifo() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3), "full queue hands the item back");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok(), "pop frees a slot");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_queue_close_drains_then_wakes_poppers() {
+        use std::sync::Arc;
+        let q = Arc::new(BoundedQueue::new(4));
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(8), "closed queue rejects pushes");
+        assert_eq!(q.pop(), Some(7), "pending items still drain");
+        assert_eq!(q.pop(), None, "closed + drained = shutdown signal");
+        // A popper blocked on an empty queue wakes with None on close.
+        let q2 = Arc::new(BoundedQueue::<u32>::new(1));
+        let popper = {
+            let q2 = Arc::clone(&q2);
+            std::thread::spawn(move || q2.pop())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q2.close();
+        assert_eq!(popper.join().unwrap(), None);
+    }
+
+    #[test]
+    fn bounded_queue_hand_off_across_threads() {
+        use std::sync::Arc;
+        let q = Arc::new(BoundedQueue::new(8));
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        for i in 0..100 {
+            // Spin on overflow: the consumer drains concurrently.
+            let mut item = i;
+            while let Err(back) = q.try_push(item) {
+                item = back;
+                std::thread::yield_now();
+            }
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>(), "FIFO order preserved");
     }
 }

@@ -7,5 +7,13 @@ pub mod models;
 pub mod resnet;
 pub mod synthetic;
 
+/// Version of the workload substrate's GEMM shapes and constructors.
+/// The batched constructors feed every sweep fingerprint and cache key
+/// (workload name + `MxNxK` appear in both), so a semantic change here
+/// silently invalidates persisted caches and golden CSVs — bump this
+/// constant whenever shapes, names, or batching semantics change
+/// (guarded by `repro lint` R3 via `lint/guards.toml`).
+pub const WORKLOAD_VERSION: u32 = 1;
+
 pub use gemm::Gemm;
 pub use models::{Workload, WorkloadKind};

@@ -1,0 +1,285 @@
+//! Integration tests for the `repro serve` daemon: concurrent
+//! determinism (the tentpole invariant — an `eval` response is
+//! byte-identical to the CSV `repro run` writes for the same
+//! scenario), single-flight coalescing accounting, warm-cache
+//! zero-miss passes, explicit busy responses under overload, and
+//! drain/flush semantics. Everything runs in-process against the
+//! library API on `127.0.0.1:0`; the CI e2e step covers the real
+//! binary + real SIGTERM.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use www_cim::scenario::{exec, Scenario};
+use www_cim::serve::handler::ServerState;
+use www_cim::serve::{Client, ServeOptions, Server};
+use www_cim::sweep::{persist, EvalCache};
+use www_cim::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("www_cim_serve_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small sweep scenario; `extra` GEMMs vary the grid so tests can
+/// use distinct point sets.
+fn scenario(name: &str, synthetic: usize) -> Scenario {
+    Scenario::builder(name)
+        .workloads(&format!("synthetic:{synthetic}"))
+        .prims("baseline,d1")
+        .levels("rf")
+        .seed(7)
+        .threads(2)
+        .build()
+        .expect("valid scenario")
+}
+
+/// Bind on a free port and run the daemon on a background thread.
+fn start(opts: ServeOptions) -> (String, Arc<ServerState>, JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind(ServeOptions { addr: "127.0.0.1:0".to_string(), quiet: true, ..opts })
+        .expect("bind on a free port");
+    let addr = server.local_addr().expect("bound address").to_string();
+    let state = server.state();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, state, handle)
+}
+
+/// The CSV `repro run` produces for `sc`, via the same library entry
+/// the daemon uses *plus* the file-writing `execute` path, asserted
+/// identical to each other first.
+fn reference_csv(sc: &Scenario, tag: &str) -> String {
+    let dir = tmp_dir(tag);
+    let mut on_disk = sc.clone();
+    on_disk.output.dir = dir.clone();
+    exec::execute(&on_disk, None).expect("repro run path");
+    let path = dir.join(format!("{}.csv", sc.base_name()));
+    let written = std::fs::read_to_string(&path).expect("run CSV written");
+    let evaled = exec::eval_sweep(sc, Arc::new(EvalCache::new())).expect("eval_sweep").csv;
+    assert_eq!(written, evaled, "eval_sweep must mirror execute()'s CSV");
+    let _ = std::fs::remove_dir_all(&dir);
+    written
+}
+
+#[test]
+fn concurrent_clients_all_get_byte_identical_responses() {
+    let sc_a = scenario("conc-a", 3); // 6 points
+    let sc_b = scenario("conc-b", 4); // 8 points
+    let expect_a = reference_csv(&sc_a, "conc_a");
+    let expect_b = reference_csv(&sc_b, "conc_b");
+
+    let (addr, _state, handle) = start(ServeOptions {
+        workers: 4,
+        queue_depth: 16,
+        ..ServeOptions::default()
+    });
+
+    // 6 client threads, half per scenario, two evals each, all racing
+    // on a cold cache.
+    let threads: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.clone();
+            let (sc, expect) = if i % 2 == 0 {
+                (sc_a.clone(), expect_a.clone())
+            } else {
+                (sc_b.clone(), expect_b.clone())
+            };
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                for _ in 0..2 {
+                    let r = client.eval(&sc).expect("eval");
+                    assert_eq!(r.csv, expect, "response must be byte-identical");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread");
+    }
+
+    // Single-flight proof: 6 threads x 2 evals raced, yet every unique
+    // point was computed exactly once — global misses equal the unique
+    // point count and the daemon's stats op exposes the coalesced
+    // counter that accounts for the duplicate in-flight probes.
+    let mut client = Client::connect(&addr).expect("connect");
+    let stats = client.stats().expect("stats");
+    let cache = stats.get("cache").expect("cache stats");
+    let n = |k: &str| cache.get(k).and_then(Json::as_u64).expect(k);
+    assert_eq!(n("misses"), 6 + 8, "every unique point computed exactly once");
+    assert_eq!(n("entries"), 6 + 8);
+    // 3 threads x 2 evals x points per scenario served in total.
+    assert_eq!(n("hits") + n("misses"), 6 * (6 + 8));
+    assert!(n("coalesced") <= n("hits"), "coalesced probes are a subset of hits");
+    assert_eq!(n("mapper_calls"), 3 + 4, "one mapper call per unique d1 point");
+
+    client.shutdown().expect("shutdown");
+    handle.join().expect("daemon thread").expect("clean drain");
+}
+
+#[test]
+fn warm_second_pass_reports_zero_misses_and_zero_mapper_calls() {
+    let sc = scenario("warm", 3);
+    let (addr, _state, handle) = start(ServeOptions {
+        workers: 2,
+        queue_depth: 4,
+        ..ServeOptions::default()
+    });
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let cold = client.eval(&sc).expect("cold eval");
+    let warm = client.eval(&sc).expect("warm eval");
+    assert_eq!(cold.csv, warm.csv, "cache warmth must be payload-invisible");
+
+    let stat = |r: &www_cim::serve::EvalResponse, k: &str| {
+        r.stats.get(k).and_then(Json::as_u64).expect("stat")
+    };
+    assert_eq!(stat(&cold, "misses"), 6);
+    assert_eq!(stat(&warm, "misses"), 0, "warm pass misses");
+    assert_eq!(stat(&warm, "mapper_calls"), 0, "warm pass mapper calls");
+    assert_eq!(stat(&warm, "hits"), 6);
+
+    client.shutdown().expect("shutdown");
+    handle.join().expect("daemon thread").expect("clean drain");
+}
+
+#[test]
+fn overload_gets_an_explicit_busy_response() {
+    // One worker, queue depth one: the worker is pinned to the first
+    // keep-alive connection, the second parks in the queue, so the
+    // third must be rejected with the busy line.
+    let (addr, state, handle) = start(ServeOptions {
+        workers: 1,
+        queue_depth: 1,
+        ..ServeOptions::default()
+    });
+
+    let mut held = Client::connect(&addr).expect("c1");
+    held.ping().expect("c1 round-trip pins the only worker");
+
+    let _queued = TcpStream::connect(&addr).expect("c2");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while state.metrics.snapshot().get("connections").and_then(Json::as_u64) != Some(2) {
+        assert!(Instant::now() < deadline, "c2 never reached the queue");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let c3 = TcpStream::connect(&addr).expect("c3");
+    let mut line = String::new();
+    BufReader::new(c3).read_line(&mut line).expect("busy line");
+    let v = Json::parse(line.trim()).expect("busy response is JSON");
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(v.get("busy").and_then(Json::as_bool), Some(true));
+    assert_eq!(state.metrics.busy_count(), 1);
+
+    held.shutdown().expect("drain");
+    handle.join().expect("daemon thread").expect("clean drain");
+}
+
+#[test]
+fn shutdown_drains_and_flushes_the_cache_under_the_lock() {
+    let dir = tmp_dir("flush");
+    let cache_path = dir.join("serve-cache.bin");
+    let sc = scenario("drain", 3);
+    let (addr, _state, handle) = start(ServeOptions {
+        workers: 2,
+        queue_depth: 4,
+        cache_path: Some(cache_path.clone()),
+        ..ServeOptions::default()
+    });
+    let mut client = Client::connect(&addr).expect("connect");
+    client.eval(&sc).expect("eval");
+
+    // Explicit flush persists mid-life...
+    let flushed = client.flush().expect("flush");
+    assert_eq!(flushed.get("persisted").and_then(Json::as_bool), Some(true));
+    assert_eq!(flushed.get("entries").and_then(Json::as_u64), Some(6));
+
+    // ...and the drain flushes again on the way out.
+    client.shutdown().expect("shutdown");
+    handle.join().expect("daemon thread").expect("clean drain");
+    let reloaded = EvalCache::new();
+    persist::load_into(&reloaded, &cache_path).expect("flushed file loads");
+    assert_eq!(reloaded.len(), 6, "drained daemon persisted its entries");
+    assert!(!cache_path.with_extension("bin.lock").exists(), "save lock released");
+
+    // A daemon started on the flushed file is warm from request one.
+    let (addr2, _state2, handle2) = start(ServeOptions {
+        workers: 2,
+        queue_depth: 4,
+        cache_path: Some(cache_path),
+        ..ServeOptions::default()
+    });
+    let mut client2 = Client::connect(&addr2).expect("connect");
+    let warm = client2.eval(&sc).expect("warm eval");
+    assert_eq!(
+        warm.stats.get("misses").and_then(Json::as_u64),
+        Some(0),
+        "preloaded cache serves with zero misses"
+    );
+    client2.shutdown().expect("shutdown");
+    handle2.join().expect("daemon thread").expect("clean drain");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_lines_error_without_poisoning_the_connection() {
+    let (addr, _state, handle) = start(ServeOptions {
+        workers: 1,
+        queue_depth: 2,
+        ..ServeOptions::default()
+    });
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut write = |s: &str| {
+        let mut w = &stream;
+        w.write_all(s.as_bytes()).expect("write");
+        w.write_all(b"\n").expect("write");
+    };
+    let mut read = || {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read");
+        Json::parse(line.trim()).expect("response parses")
+    };
+
+    write("this is not json");
+    let v = read();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(v.get("error").is_some());
+
+    write("{\"op\":\"frobnicate\"}");
+    let v = read();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+
+    // The same connection still serves real requests afterwards.
+    write("{\"op\":\"ping\"}");
+    let v = read();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("done").and_then(Json::as_bool), Some(true));
+
+    write("{\"op\":\"shutdown\"}");
+    let _ = read();
+    handle.join().expect("daemon thread").expect("clean drain");
+}
+
+#[test]
+fn signal_watching_server_drains_on_the_termination_flag() {
+    // The global flag is sticky, so exactly one in-process test may
+    // exercise the signal path; real SIGTERM delivery to the binary is
+    // covered by the CI e2e step.
+    let (addr, state, handle) = start(ServeOptions {
+        workers: 1,
+        queue_depth: 2,
+        watch_signals: true,
+        ..ServeOptions::default()
+    });
+    let mut client = Client::connect(&addr).expect("connect");
+    client.eval(&scenario("sig", 2)).expect("in-flight work");
+    www_cim::serve::drain::request_termination();
+    handle.join().expect("daemon thread").expect("clean drain after signal");
+    assert!(state.draining.load(Ordering::Relaxed), "drain flag latched");
+}

@@ -314,11 +314,14 @@ fn repo_tree_is_lint_clean() {
 }
 
 #[test]
-fn repo_manifest_guards_the_four_versioned_modules() {
+fn repo_manifest_guards_the_six_versioned_modules() {
     let text = fs::read_to_string(repo_root().join(lint::GUARDS_MANIFEST)).expect("manifest");
     let parsed = guards::parse(&text).expect("manifest parses");
     let names: Vec<&str> = parsed.iter().map(|g| g.name.as_str()).collect();
-    assert_eq!(names, ["mapper", "cost-model", "cache-format", "scenario-format"]);
+    assert_eq!(
+        names,
+        ["mapper", "cost-model", "cache-format", "scenario-format", "workload", "serve-protocol"]
+    );
     for g in &parsed {
         assert!(!g.hash.is_empty(), "guard {:?} left at bootstrap sentinel", g.name);
         assert_eq!(g.hash.len(), 16, "guard {:?} hash is not fnv1a-64 hex", g.name);
