@@ -17,8 +17,9 @@
 //! | R5 | no wildcard `_ =>` arms in persist/canonical decode code |
 //! | R6 | no `HashMap`/`HashSet` in deterministic-output code |
 //! | R7 | no un-sorted `read_dir` walks in deterministic-output code |
+//! | R8 | persistent-artifact writes go through `util::fsx::write_atomic`, never bare `fs::write` |
 //!
-//! R1/R2/R4–R7 are token-level checks ([`rules`], over the [`lexer`]
+//! R1/R2/R4–R8 are token-level checks ([`rules`], over the [`lexer`]
 //! stream); R3 is a tree-level pass against the version-guard manifest
 //! (`guards.toml`, [`guards`]). Sites with a locally provable
 //! justification carry `// lint: allow(Rn): <reason>` markers —

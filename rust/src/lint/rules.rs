@@ -35,7 +35,7 @@ pub struct Diagnostic {
     /// Path relative to the scanned root, `/`-separated.
     pub file: String,
     pub line: u32,
-    /// Rule id (`R1`..`R7`, or `lint` for marker hygiene findings).
+    /// Rule id (`R1`..`R8`, or `lint` for marker hygiene findings).
     pub rule: &'static str,
     pub message: String,
     /// Suggested fix, one line.
@@ -53,7 +53,7 @@ impl Diagnostic {
 
 /// Every rule id the analyzer knows, including the guard pass (R3),
 /// which runs per-tree in [`super::guards`] rather than per-file here.
-pub const RULE_IDS: &[&str] = &["R1", "R2", "R3", "R4", "R5", "R6", "R7"];
+pub const RULE_IDS: &[&str] = &["R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"];
 
 /// One token-level rule.
 pub struct Rule {
@@ -110,6 +110,20 @@ const OUTPUT_SINK_PATHS: &[&str] = &[
     "rust/src/util/csv.rs",
     "rust/src/util/hash.rs",
 ];
+
+/// Code that persists artifacts other processes reload (cache files,
+/// shard manifests, merged outputs, anything the serve daemon hands
+/// back from disk). A bare `fs::write` here can leave a torn file
+/// behind a crash; writes must go through `util::fsx::write_atomic`
+/// (temp sibling + rename) so readers only ever see whole files.
+const ATOMIC_WRITE_PATHS: &[&str] = &[
+    "rust/src/sweep/persist.rs",
+    "rust/src/scenario/orchestrate.rs",
+];
+
+fn in_atomic_write_scope(path: &str) -> bool {
+    ATOMIC_WRITE_PATHS.contains(&path) || path.starts_with("rust/src/serve/")
+}
 
 fn in_experiments(path: &str) -> bool {
     path.starts_with("rust/src/experiments/")
@@ -189,6 +203,16 @@ pub const RULES: &[Rule] = &[
         applies: in_output_sink,
         skip_tests: true,
         check: check_read_dir,
+    },
+    Rule {
+        id: "R8",
+        summary: "persistent-artifact writes must go through util::fsx::write_atomic",
+        fix: "replace `fs::write` with `util::fsx::write_atomic` (temp sibling + rename) \
+              so a crash mid-write leaves the old file intact instead of a torn one, or \
+              add `// lint: allow(R8): <reason>` for a provably throwaway file",
+        applies: in_atomic_write_scope,
+        skip_tests: true,
+        check: check_bare_fs_write,
     },
 ];
 
@@ -312,6 +336,23 @@ fn check_read_dir(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
                 "`read_dir` in deterministic-output code (entry order is \
                  filesystem-dependent)"
                     .to_string(),
+            ));
+        }
+    }
+}
+
+fn check_bare_fs_write(scan: &Scan<'_>, out: &mut Vec<(usize, String)>) {
+    for p in 0..scan.code.len() {
+        let Some(t) = scan.at(p) else { continue };
+        if t.kind == TokenKind::Ident
+            && t.text == "write"
+            && p >= 2
+            && scan.is_punct(p - 1, "::")
+            && scan.at(p - 2).is_some_and(|q| q.kind == TokenKind::Ident && q.text == "fs")
+        {
+            out.push((
+                scan.code[p],
+                "bare `fs::write` in persistence code (torn file behind a crash)".to_string(),
             ));
         }
     }
@@ -685,6 +726,28 @@ mod tests {
         // An allow marker with a reason exempts a provably-sorted walk.
         let allowed = "fn f(d: &std::path::Path) -> std::io::Result<()> {\n    // lint: allow(R7): entries are collected and sorted two lines down\n    let it = std::fs::read_dir(d)?;\n    drop(it);\n    Ok(())\n}";
         assert_eq!(rules_fired("rust/src/sweep/output.rs", allowed), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn r8_fires_on_bare_fs_write_in_persistence_scope() {
+        let src = "fn f(p: &std::path::Path) -> std::io::Result<()> {\n    std::fs::write(p, \"x\")\n}";
+        let fired = rules_fired("rust/src/sweep/persist.rs", src);
+        assert!(fired.contains(&"R8"), "{fired:?}");
+        // The serve tree is covered by prefix, not by an explicit list entry.
+        let fired = rules_fired("rust/src/serve/handler.rs", src);
+        assert!(fired.contains(&"R8"), "{fired:?}");
+        // Out of scope: fsx.rs itself hosts the one sanctioned fs::write.
+        let elsewhere = rules_fired("rust/src/util/fsx.rs", src);
+        assert!(!elsewhere.contains(&"R8"), "{elsewhere:?}");
+        // The replacement idiom and non-path `write` idents stay quiet.
+        let clean = "fn f(p: &std::path::Path) -> anyhow::Result<()> {\n    crate::util::fsx::write_atomic(p, \"x\")\n}";
+        assert_eq!(rules_fired("rust/src/sweep/persist.rs", clean), Vec::<&str>::new());
+        let method = "fn f(w: &mut dyn std::io::Write, b: &[u8]) { let _ = w.write(b); }";
+        let fired = rules_fired("rust/src/sweep/persist.rs", method);
+        assert!(!fired.contains(&"R8"), "{fired:?}");
+        // An allow marker with a reason exempts a throwaway file.
+        let allowed = "fn f(p: &std::path::Path) -> std::io::Result<()> {\n    // lint: allow(R8): scratch probe file, never reloaded\n    std::fs::write(p, \"x\")\n}";
+        assert_eq!(rules_fired("rust/src/sweep/persist.rs", allowed), Vec::<&str>::new());
     }
 
     #[test]

@@ -39,10 +39,11 @@ use www_cim::mapping::PriorityMapper;
 use www_cim::roofline::Roofline;
 use www_cim::runtime::{default_artifacts_dir, Engine};
 use www_cim::scenario::{self, exec, Scenario, ScenarioKind};
-use www_cim::serve::{Client, ServeOptions, Server};
+use www_cim::serve::{self, Client, RetryPolicy, ServeOptions, Server};
 use www_cim::sweep::{output, shard, spec, EvalCache, ShardId};
 use www_cim::util::bench::Bencher;
 use www_cim::util::cli::Args;
+use www_cim::util::fsx;
 use www_cim::util::json::Json;
 use www_cim::util::table::Table;
 use www_cim::workload::{synthetic, Gemm};
@@ -192,7 +193,7 @@ const SUBCOMMANDS: &[Subcommand] = &[
         usage: &[
             "[--fix-guards] [--rules] [path]",
             "(static analysis over rust/src: determinism, versioning and",
-            " cache-correctness rules R1-R6 — see rust/src/lint/README.md;",
+            " cache-correctness rules R1-R8 — see rust/src/lint/README.md;",
             " --fix-guards refreshes the version-guard manifest after a",
             " legitimate version bump, --rules prints the rule table)",
         ],
@@ -644,7 +645,7 @@ fn cmd_merge(args: &Args) -> Result<()> {
     println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
     // csv.write above already created out_dir.
     let json_path = out_dir.join(format!("{base}.json"));
-    std::fs::write(&json_path, shard::merged_json(&merged))?;
+    fsx::write_atomic(&json_path, &shard::merged_json(&merged))?;
     println!("[json] merged summary -> {}", json_path.display());
     if args.flag("json") {
         print!("{}", shard::merged_json(&merged));
@@ -683,24 +684,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `repro query` — client for a running serve daemon. `eval` writes
 /// the streamed rows as `<out>/<name>.csv` (byte-identical to `repro
 /// run`'s CSV for the same scenario); the other ops print the daemon's
-/// response line.
+/// response line. `--retries`/`--backoff-ms`/`--deadline-ms` configure
+/// the deterministic retry policy for transient failures (busy daemon,
+/// refused connection, torn response).
 fn cmd_query(args: &Args) -> Result<()> {
-    if let Some(err) =
-        args.unknown_flags(&["addr", "op", "out", "tag", "threads", "seed"])
-    {
+    if let Some(err) = args.unknown_flags(&[
+        "addr", "op", "out", "tag", "threads", "seed", "retries", "backoff-ms",
+        "deadline-ms",
+    ]) {
         bail!(err);
     }
     let addr = args.get_or("addr", "127.0.0.1:7878");
-    let mut client = Client::connect(addr)?;
+    let policy = RetryPolicy {
+        retries: args.get_parsed_or("retries", RetryPolicy::default().retries)?,
+        backoff_ms: args.get_parsed_or("backoff-ms", RetryPolicy::default().backoff_ms)?,
+        deadline_ms: args
+            .get_parsed_or("deadline-ms", RetryPolicy::default().deadline_ms)?,
+    };
     let op = args.get_or("op", "eval");
     match op {
         "ping" | "stats" | "flush" | "shutdown" => {
-            let response = match op {
-                "ping" => client.ping()?,
-                "stats" => client.stats()?,
-                "flush" => client.flush()?,
-                _ => client.shutdown()?,
-            };
+            let response = serve::simple_with_retry(addr, op, &policy)?;
             println!("{}", response.encode_compact());
             Ok(())
         }
@@ -708,11 +712,11 @@ fn cmd_query(args: &Args) -> Result<()> {
             let target = args.positional.first().context(
                 "usage: repro query <scenario.json|name> [--addr host:port] [--op eval|\
                  ping|stats|flush|shutdown] [--out dir] [--tag name] [--threads N] \
-                 [--seed N]",
+                 [--seed N] [--retries N] [--backoff-ms N] [--deadline-ms N]",
             )?;
             let mut sc = resolve_scenario(target)?;
             apply_overrides(&mut sc, args)?;
-            let response = client.eval(&sc)?;
+            let response = serve::eval_with_retry(addr, &sc, &policy)?;
             let stat = |key: &str| {
                 response.stats.get(key).and_then(Json::as_u64).unwrap_or(0)
             };
@@ -731,9 +735,8 @@ fn cmd_query(args: &Args) -> Result<()> {
                 stat("mapper_calls"),
             );
             let out_dir = PathBuf::from(args.get_or("out", "results"));
-            std::fs::create_dir_all(&out_dir)?;
             let csv_path = out_dir.join(format!("{}.csv", response.name));
-            std::fs::write(&csv_path, &response.csv)?;
+            fsx::write_atomic(&csv_path, &response.csv)?;
             println!(
                 "[csv] {} rows -> {}",
                 response.csv.lines().count().saturating_sub(1),

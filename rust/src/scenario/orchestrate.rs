@@ -49,6 +49,7 @@ use anyhow::{bail, Context, Result};
 use crate::arch::Architecture;
 use crate::sweep::{output, shard};
 use crate::util::json::Json;
+use crate::util::{faults, fsx};
 
 use super::{Scenario, ScenarioKind};
 
@@ -320,6 +321,11 @@ fn stream_reader<R: std::io::Read + Send + 'static>(
 }
 
 fn spawn_task(task: &mut Task, spawner: &dyn Spawner, sc_path: &Path) -> Result<()> {
+    // Chaos hook: a deterministic stand-in for fork/exec failure
+    // (EAGAIN, a dead ssh host) — exercises the retry/giving-up path.
+    if faults::check("shard.spawn") == faults::FaultAction::Fail {
+        bail!("injected fault: shard.spawn refusing to spawn shard {}", task.id);
+    }
     let mut child = spawner.spawn_shard(task.id, sc_path)?;
     let mut readers = Vec::with_capacity(2);
     let prefix = format!("[shard {}]", task.id);
@@ -674,7 +680,7 @@ pub fn orchestrate_with(
     // The manifest documents every orchestration, failures included —
     // that is what makes an aborted run diagnosable and resumable.
     let manifest_path = out_dir.join(format!("{base}.orchestrate.json"));
-    std::fs::write(&manifest_path, manifest_json(sc, &expected, opts, &tasks, status))
+    fsx::write_atomic(&manifest_path, &manifest_json(sc, &expected, opts, &tasks, status))
         .with_context(|| format!("writing run manifest {}", manifest_path.display()))?;
     println!("[manifest] {}", manifest_path.display());
 
@@ -706,7 +712,7 @@ pub fn orchestrate_with(
     csv.write(&csv_path)?;
     println!("[csv] {} rows -> {}", csv.n_rows(), csv_path.display());
     let json_path = out_dir.join(format!("{base}.json"));
-    std::fs::write(&json_path, shard::merged_json(&merged))
+    fsx::write_atomic(&json_path, &shard::merged_json(&merged))
         .with_context(|| format!("writing merged summary {}", json_path.display()))?;
     println!("[json] merged summary -> {}", json_path.display());
     if sc.output.stdout_json {

@@ -4,11 +4,26 @@
 //! One [`Client`] is one keep-alive connection: issue as many requests
 //! as you like, in order. Each call sends one request line and reads
 //! response lines until the `"done":true` terminator.
+//!
+//! ## Retryable vs fatal
+//!
+//! Every failure an attempt can hit is classified once, here:
+//! *retryable* outcomes are transient daemon/transport states — an
+//! explicit `busy:true` rejection, a refused/timed-out connection, a
+//! connection closed mid-response before the `done` terminator, a
+//! request-deadline expiry — while *fatal* outcomes are protocol-level
+//! errors that would fail identically on any retry (an `ok:false`
+//! response without `busy`, an undecodable response line, a malformed
+//! response shape). [`eval_with_retry`] / [`simple_with_retry`] drive
+//! a fresh connection per attempt under a [`RetryPolicy`]:
+//! exponential backoff, **no jitter** — retry schedules are as
+//! deterministic as every other output of this tree.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::scenario::Scenario;
 use crate::util::json::Json;
@@ -26,6 +41,56 @@ pub struct EvalResponse {
     pub stats: Json,
 }
 
+/// Deterministic client-side retry policy (`repro query --retries
+/// --backoff-ms --deadline-ms`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Extra attempts after the first (0 = fail fast, the default).
+    pub retries: u32,
+    /// Base backoff; attempt `k` sleeps `backoff_ms << k`. No jitter:
+    /// the schedule is reproducible.
+    pub backoff_ms: u64,
+    /// Per-attempt deadline covering connect and every read/write
+    /// (0 = no deadline).
+    pub deadline_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            retries: 0,
+            backoff_ms: 50,
+            deadline_ms: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based): exponential,
+    /// saturating, jitter-free.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        Duration::from_millis(self.backoff_ms.saturating_mul(1u64 << attempt.min(16)))
+    }
+}
+
+/// One attempt's failure, classified for the retry loop.
+#[derive(Debug)]
+enum AttemptError {
+    /// Transient: a later attempt may succeed (busy daemon, refused
+    /// connection, torn response, deadline expiry).
+    Retryable(anyhow::Error),
+    /// Protocol-level: every retry would fail identically.
+    Fatal(anyhow::Error),
+}
+
+impl AttemptError {
+    fn into_error(self) -> anyhow::Error {
+        match self {
+            AttemptError::Retryable(e) | AttemptError::Fatal(e) => e,
+        }
+    }
+}
+
 /// One keep-alive connection to a serve daemon.
 #[derive(Debug)]
 pub struct Client {
@@ -34,31 +99,61 @@ pub struct Client {
 }
 
 impl Client {
-    /// Connect to `addr` (e.g. `127.0.0.1:7878`).
+    /// Connect to `addr` (e.g. `127.0.0.1:7878`) with no deadline.
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to serve daemon at {addr}"))?;
-        let _ = stream.set_nodelay(true);
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: stream })
+        connect_within(addr, 0).map_err(AttemptError::into_error)
     }
 
     /// Send one request line, collect response lines through the
     /// `"done":true` terminator (inclusive). A busy/error response is
     /// a single terminator line, so this never hangs on rejection.
-    fn exchange(&mut self, request: &str) -> Result<Vec<Json>> {
-        self.writer.write_all(request.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        self.writer.flush()?;
+    fn try_exchange(&mut self, request: &str) -> Result<Vec<Json>, AttemptError> {
+        let sent = self
+            .writer
+            .write_all(request.as_bytes())
+            .and_then(|()| self.writer.write_all(b"\n"))
+            .and_then(|()| self.writer.flush());
+        if let Err(e) = sent {
+            // A send failure means the daemon went away (or the
+            // deadline expired) — transient either way.
+            return Err(AttemptError::Retryable(anyhow!("sending request: {e}")));
+        }
         let mut lines = Vec::new();
         loop {
             let mut line = String::new();
-            let n = self.reader.read_line(&mut line)?;
+            let n = match self.reader.read_line(&mut line) {
+                Ok(n) => n,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut =>
+                {
+                    return Err(AttemptError::Retryable(anyhow!(
+                        "request deadline exceeded waiting for a response line"
+                    )));
+                }
+                Err(e) => {
+                    return Err(AttemptError::Retryable(anyhow!(
+                        "reading response: {e}"
+                    )));
+                }
+            };
             if n == 0 {
-                bail!("daemon closed the connection mid-response");
+                // EOF before the terminator: the daemon died or
+                // dropped us mid-response — the response is torn, a
+                // fresh attempt gets a whole one.
+                return Err(AttemptError::Retryable(anyhow!(
+                    "daemon closed the connection mid-response"
+                )));
             }
-            let v = Json::parse(line.trim())
-                .with_context(|| format!("undecodable response line: {}", line.trim()))?;
+            let v = match Json::parse(line.trim()) {
+                Ok(v) => v,
+                Err(e) => {
+                    return Err(AttemptError::Fatal(anyhow!(
+                        "undecodable response line {:?}: {e:#}",
+                        line.trim()
+                    )));
+                }
+            };
             let done = v.get("done").and_then(Json::as_bool) == Some(true);
             lines.push(v);
             if done {
@@ -69,51 +164,37 @@ impl Client {
 
     /// A simple op (`ping`/`stats`/`flush`/`shutdown`): one response
     /// line. Errors (including busy) surface as `Err`.
-    fn simple(&mut self, op: &str) -> Result<Json> {
-        let lines = self.exchange(&format!("{{\"op\":\"{op}\"}}"))?;
+    fn try_simple(&mut self, op: &str) -> Result<Json, AttemptError> {
+        let lines = self.try_exchange(&format!("{{\"op\":\"{op}\"}}"))?;
         let v = lines
             .into_iter()
             .next_back()
-            .ok_or_else(|| anyhow!("empty response"))?;
-        check_ok(&v)?;
+            .ok_or_else(|| AttemptError::Fatal(anyhow!("empty response")))?;
+        classify_ok(&v)?;
         Ok(v)
     }
 
-    pub fn ping(&mut self) -> Result<Json> {
-        self.simple("ping")
-    }
-
-    pub fn stats(&mut self) -> Result<Json> {
-        self.simple("stats")
-    }
-
-    pub fn flush(&mut self) -> Result<Json> {
-        self.simple("flush")
-    }
-
-    /// Ask the daemon to drain and exit (it finishes in-flight
-    /// requests, flushes the cache, then terminates).
-    pub fn shutdown(&mut self) -> Result<Json> {
-        self.simple("shutdown")
-    }
-
-    /// Evaluate a sweep scenario on the daemon's warm cache.
-    pub fn eval(&mut self, sc: &Scenario) -> Result<EvalResponse> {
+    fn try_eval(&mut self, sc: &Scenario) -> Result<EvalResponse, AttemptError> {
         // `Scenario::to_json` pretty-prints; the wire format is one
         // line per request, so re-encode compactly.
-        let compact = Json::parse(&sc.to_json())
-            .context("re-encoding the scenario for the wire")?
-            .encode_compact();
+        let compact = match Json::parse(&sc.to_json()) {
+            Ok(v) => v.encode_compact(),
+            Err(e) => {
+                return Err(AttemptError::Fatal(
+                    e.context("re-encoding the scenario for the wire"),
+                ));
+            }
+        };
         let request = format!("{{\"op\":\"eval\",\"scenario\":{compact}}}");
-        let lines = self.exchange(&request)?;
+        let lines = self.try_exchange(&request)?;
         let header = lines
             .first()
-            .ok_or_else(|| anyhow!("empty eval response"))?;
-        check_ok(header)?;
+            .ok_or_else(|| AttemptError::Fatal(anyhow!("empty eval response")))?;
+        classify_ok(header)?;
         let name = header
             .get("name")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("eval header missing \"name\""))?
+            .ok_or_else(|| AttemptError::Fatal(anyhow!("eval header missing \"name\"")))?
             .to_string();
         let mut csv = String::new();
         for v in &lines {
@@ -124,24 +205,202 @@ impl Client {
         }
         let last = lines
             .last()
-            .ok_or_else(|| anyhow!("eval response missing terminator"))?;
-        check_ok(last)?;
+            .ok_or_else(|| AttemptError::Fatal(anyhow!("eval response missing terminator")))?;
+        classify_ok(last)?;
         let stats = last
             .get("stats")
             .cloned()
-            .ok_or_else(|| anyhow!("eval terminator missing \"stats\""))?;
+            .ok_or_else(|| AttemptError::Fatal(anyhow!("eval terminator missing \"stats\"")))?;
         Ok(EvalResponse { name, csv, stats })
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        self.try_simple("ping").map_err(AttemptError::into_error)
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.try_simple("stats").map_err(AttemptError::into_error)
+    }
+
+    pub fn flush(&mut self) -> Result<Json> {
+        self.try_simple("flush").map_err(AttemptError::into_error)
+    }
+
+    /// Ask the daemon to drain and exit (it finishes in-flight
+    /// requests, flushes the cache, then terminates).
+    pub fn shutdown(&mut self) -> Result<Json> {
+        self.try_simple("shutdown").map_err(AttemptError::into_error)
+    }
+
+    /// Evaluate a sweep scenario on the daemon's warm cache.
+    pub fn eval(&mut self, sc: &Scenario) -> Result<EvalResponse> {
+        self.try_eval(sc).map_err(AttemptError::into_error)
     }
 }
 
-/// Turn `{"ok":false,...}` responses into typed errors.
-fn check_ok(v: &Json) -> Result<()> {
+/// Connect with an optional per-attempt deadline applied to the
+/// connect itself and, via socket timeouts, to every later read and
+/// write on the connection. Connection failures are retryable — the
+/// daemon may simply not be up yet.
+fn connect_within(addr: &str, deadline_ms: u64) -> Result<Client, AttemptError> {
+    let stream = if deadline_ms == 0 {
+        TcpStream::connect(addr)
+            .with_context(|| format!("connecting to serve daemon at {addr}"))
+            .map_err(AttemptError::Retryable)?
+    } else {
+        use std::net::ToSocketAddrs;
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving serve daemon address {addr}"))
+            .map_err(AttemptError::Fatal)?
+            .next()
+            .ok_or_else(|| {
+                AttemptError::Fatal(anyhow!("no socket address behind {addr}"))
+            })?;
+        TcpStream::connect_timeout(&sock, Duration::from_millis(deadline_ms))
+            .with_context(|| {
+                format!("connecting to serve daemon at {addr} within {deadline_ms} ms")
+            })
+            .map_err(AttemptError::Retryable)?
+    };
+    if deadline_ms > 0 {
+        let timeout = Some(Duration::from_millis(deadline_ms));
+        let _ = stream.set_read_timeout(timeout);
+        let _ = stream.set_write_timeout(timeout);
+    }
+    let _ = stream.set_nodelay(true);
+    let reader = BufReader::new(
+        stream
+            .try_clone()
+            .context("cloning the daemon connection")
+            .map_err(AttemptError::Retryable)?,
+    );
+    Ok(Client { reader, writer: stream })
+}
+
+/// Classify `{"ok":false,...}` responses: an explicit `busy:true` is
+/// the daemon shedding load (retryable); anything else is a protocol
+/// error a retry would only repeat (fatal).
+fn classify_ok(v: &Json) -> Result<(), AttemptError> {
     if v.get("ok").and_then(Json::as_bool) == Some(false) {
         let msg = v
             .get("error")
             .and_then(Json::as_str)
             .unwrap_or("daemon reported an unspecified error");
-        bail!("{msg}");
+        if v.get("busy").and_then(Json::as_bool) == Some(true) {
+            return Err(AttemptError::Retryable(anyhow!("daemon busy: {msg}")));
+        }
+        return Err(AttemptError::Fatal(anyhow!("{msg}")));
     }
     Ok(())
+}
+
+/// Run one attempt function against a fresh connection per attempt,
+/// under `policy`. Retryable failures sleep the deterministic backoff
+/// and try again; fatal failures and exhausted budgets return the
+/// underlying error.
+fn retry_loop<T>(
+    addr: &str,
+    policy: &RetryPolicy,
+    mut attempt: impl FnMut(&mut Client) -> Result<T, AttemptError>,
+) -> Result<T> {
+    let mut tries = 0u32;
+    loop {
+        let outcome = match connect_within(addr, policy.deadline_ms) {
+            Ok(mut client) => attempt(&mut client),
+            Err(e) => Err(e),
+        };
+        match outcome {
+            Ok(v) => return Ok(v),
+            Err(AttemptError::Fatal(e)) => return Err(e),
+            Err(AttemptError::Retryable(e)) => {
+                if tries >= policy.retries {
+                    return Err(
+                        e.context(format!("giving up after {} attempt(s)", tries + 1))
+                    );
+                }
+                let backoff = policy.backoff(tries);
+                eprintln!(
+                    "[query] attempt {}/{} failed ({e:#}); retrying in {} ms",
+                    tries + 1,
+                    policy.retries + 1,
+                    backoff.as_millis()
+                );
+                std::thread::sleep(backoff);
+                tries += 1;
+            }
+        }
+    }
+}
+
+/// [`Client::eval`] under a retry policy, one fresh connection per
+/// attempt (the previous connection may be dead or timed out).
+pub fn eval_with_retry(
+    addr: &str,
+    sc: &Scenario,
+    policy: &RetryPolicy,
+) -> Result<EvalResponse> {
+    retry_loop(addr, policy, |client| client.try_eval(sc))
+}
+
+/// A simple op under a retry policy (see [`eval_with_retry`]).
+pub fn simple_with_retry(addr: &str, op: &str, policy: &RetryPolicy) -> Result<Json> {
+    retry_loop(addr, policy, |client| client.try_simple(op))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_exponential_and_deterministic() {
+        let policy = RetryPolicy {
+            retries: 5,
+            backoff_ms: 50,
+            deadline_ms: 0,
+        };
+        let schedule: Vec<u128> =
+            (0..4).map(|k| policy.backoff(k).as_millis()).collect();
+        assert_eq!(schedule, vec![50, 100, 200, 400]);
+        // Identical inputs, identical schedule — no jitter.
+        assert_eq!(policy.backoff(3), policy.backoff(3));
+        // Huge attempt numbers saturate instead of overflowing.
+        let far = RetryPolicy {
+            retries: 0,
+            backoff_ms: u64::MAX,
+            deadline_ms: 0,
+        };
+        assert_eq!(far.backoff(40).as_millis(), u64::MAX as u128);
+    }
+
+    #[test]
+    fn default_policy_fails_fast() {
+        let policy = RetryPolicy::default();
+        assert_eq!(policy.retries, 0);
+        assert_eq!(policy.deadline_ms, 0);
+        assert_eq!(policy.backoff(0).as_millis(), 50);
+    }
+
+    #[test]
+    fn busy_is_retryable_other_errors_are_fatal() {
+        let busy = Json::parse(
+            "{\"ok\":false,\"busy\":true,\"error\":\"server busy\",\"done\":true}",
+        )
+        .unwrap();
+        match classify_ok(&busy) {
+            Err(AttemptError::Retryable(e)) => {
+                assert!(format!("{e:#}").contains("busy"), "{e:#}")
+            }
+            other => panic!("busy must be retryable, got {other:?}"),
+        }
+        let fatal =
+            Json::parse("{\"ok\":false,\"error\":\"unknown op\",\"done\":true}").unwrap();
+        match classify_ok(&fatal) {
+            Err(AttemptError::Fatal(e)) => {
+                assert!(format!("{e:#}").contains("unknown op"), "{e:#}")
+            }
+            other => panic!("protocol errors must be fatal, got {other:?}"),
+        }
+        assert!(classify_ok(&Json::parse("{\"ok\":true}").unwrap()).is_ok());
+    }
 }

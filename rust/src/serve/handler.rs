@@ -27,6 +27,11 @@ pub struct ServerState {
     /// finish in-flight requests, then the listener flushes and exits.
     pub draining: AtomicBool,
     pub started: Instant,
+    /// Entries kept / lines dropped by a salvaging startup cache load
+    /// (both 0 after a clean load), reported by `stats` so chaos tests
+    /// can assert the daemon recovered instead of discarding.
+    pub salvaged_kept: u64,
+    pub salvaged_dropped: u64,
 }
 
 impl ServerState {
@@ -42,7 +47,16 @@ impl ServerState {
             metrics: ServeMetrics::new(),
             draining: AtomicBool::new(false),
             started: Instant::now(),
+            salvaged_kept: 0,
+            salvaged_dropped: 0,
         }
+    }
+
+    /// Record the outcome of a salvaging startup cache load.
+    pub fn with_salvage(mut self, kept: u64, dropped: u64) -> Self {
+        self.salvaged_kept = kept;
+        self.salvaged_dropped = dropped;
+        self
     }
 
     pub fn draining(&self) -> bool {
@@ -110,9 +124,30 @@ fn eval_lines(state: &ServerState, sc: &crate::scenario::Scenario) -> (Vec<Strin
     (lines, false)
 }
 
+/// The armed fault points as `{point: {"hits":h,"fired":f}}` — an
+/// empty object when `REPRO_FAULTS` is off. The snapshot is sorted by
+/// point name, so the encoding is deterministic.
+fn faults_json() -> Json {
+    Json::Obj(
+        crate::util::faults::snapshot()
+            .into_iter()
+            .map(|c| {
+                (
+                    c.point,
+                    Json::Obj(vec![
+                        ("hits".to_string(), Json::Num(c.hits as f64)),
+                        ("fired".to_string(), Json::Num(c.fired as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
 /// The `stats` response: protocol + uptime + exact global cache
-/// counters + per-op metrics. Global counters (not per-request deltas)
-/// are what tests assert on — they are exact under concurrency.
+/// counters + salvage/fault counters + per-op metrics. Global counters
+/// (not per-request deltas) are what tests assert on — they are exact
+/// under concurrency.
 fn stats_line(state: &ServerState) -> String {
     let cache = Json::Obj(vec![
         ("entries".to_string(), Json::Num(state.cache.len() as f64)),
@@ -136,6 +171,20 @@ fn stats_line(state: &ServerState) -> String {
             ),
             ("draining".to_string(), Json::Bool(state.draining())),
             ("cache".to_string(), cache),
+            (
+                "salvage".to_string(),
+                Json::Obj(vec![
+                    (
+                        "kept".to_string(),
+                        Json::Num(state.salvaged_kept as f64),
+                    ),
+                    (
+                        "dropped".to_string(),
+                        Json::Num(state.salvaged_dropped as f64),
+                    ),
+                ]),
+            ),
+            ("faults".to_string(), faults_json()),
             ("metrics".to_string(), state.metrics.snapshot()),
         ],
     )
@@ -254,6 +303,26 @@ mod tests {
         assert_eq!(cache.get("entries").and_then(Json::as_u64), Some(6));
         assert_eq!(cache.get("misses").and_then(Json::as_u64), Some(6));
         assert_eq!(cache.get("hits").and_then(Json::as_u64), Some(6));
+    }
+
+    #[test]
+    fn stats_reports_salvage_and_fault_counters() {
+        let st = state();
+        let (lines, _) = handle(&st, &Request::Stats);
+        let v = Json::parse(&lines[0]).unwrap();
+        let salvage = v.get("salvage").expect("stats must carry salvage");
+        assert_eq!(salvage.get("kept").and_then(Json::as_u64), Some(0));
+        assert_eq!(salvage.get("dropped").and_then(Json::as_u64), Some(0));
+        // Unarmed (the unit-test process never sets REPRO_FAULTS), the
+        // faults object is present but empty.
+        assert!(lines[0].contains("\"faults\":{}"), "{}", lines[0]);
+
+        let st = state().with_salvage(41, 1);
+        let (lines, _) = handle(&st, &Request::Stats);
+        let v = Json::parse(&lines[0]).unwrap();
+        let salvage = v.get("salvage").unwrap();
+        assert_eq!(salvage.get("kept").and_then(Json::as_u64), Some(41));
+        assert_eq!(salvage.get("dropped").and_then(Json::as_u64), Some(1));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::sweep::{persist, EvalCache};
+use crate::util::faults::{self, FaultAction};
 use crate::util::json::Json;
 use crate::util::pool::{self, BoundedQueue};
 
@@ -86,8 +87,12 @@ impl Server {
     /// Bind the listener and warm the cache from `cache_path` (if any).
     pub fn bind(opts: ServeOptions) -> Result<Server> {
         let cache = Arc::new(EvalCache::new());
+        let mut salvage = (0u64, 0u64);
         if let Some(path) = &opts.cache_path {
             let load = persist::load_into(&cache, path)?;
+            if let persist::CacheLoad::Salvaged { kept, dropped, .. } = &load {
+                salvage = (*kept as u64, *dropped as u64);
+            }
             if !opts.quiet {
                 println!("[serve] cache: {} ({})", load.describe(), path.display());
             }
@@ -96,11 +101,10 @@ impl Server {
             .with_context(|| format!("binding {}", opts.addr))?;
         // Non-blocking accept so the loop can poll the drain flag.
         listener.set_nonblocking(true)?;
-        let state = Arc::new(ServerState::new(
-            cache,
-            opts.cache_path.clone(),
-            opts.cache_max_bytes,
-        ));
+        let state = Arc::new(
+            ServerState::new(cache, opts.cache_path.clone(), opts.cache_max_bytes)
+                .with_salvage(salvage.0, salvage.1),
+        );
         Ok(Server { listener, state, opts })
     }
 
@@ -155,10 +159,19 @@ impl Server {
                     break;
                 }
                 match self.listener.accept() {
-                    Ok((stream, _peer)) => match queue.try_push(stream) {
-                        Ok(()) => self.state.metrics.record_connection(),
-                        Err(stream) => reject_busy(&self.state, stream),
-                    },
+                    Ok((stream, _peer)) => {
+                        // Chaos hook: force this accept down the busy
+                        // path as if the queue were full, so client
+                        // retry handling is testable deterministically.
+                        if faults::check("serve.accept") == FaultAction::Fail {
+                            reject_busy(&self.state, stream);
+                        } else {
+                            match queue.try_push(stream) {
+                                Ok(()) => self.state.metrics.record_connection(),
+                                Err(stream) => reject_busy(&self.state, stream),
+                            }
+                        }
+                    }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => {
                         std::thread::sleep(ACCEPT_POLL);
                     }

@@ -16,7 +16,10 @@
 //! * [`listener`] — accept loop, bounded queue, worker pool, drain.
 //! * [`metrics`] — per-op counters and log2-µs latency histograms.
 //! * [`drain`] — SIGTERM/SIGINT → drain-flag bridge (no `libc` crate).
-//! * [`client`] — the blocking client behind `repro query`.
+//! * [`client`] — the blocking client behind `repro query`, with a
+//!   deterministic retry policy (exponential backoff, no jitter)
+//!   distinguishing retryable outcomes (busy, connect-refused, torn
+//!   response) from fatal protocol errors.
 //!
 //! Determinism invariant (pinned by `tests/integration_serve.rs` and
 //! the CI e2e step): the row stream of an `eval` response is
@@ -31,6 +34,8 @@ pub mod listener;
 pub mod metrics;
 pub mod protocol;
 
-pub use client::{Client, EvalResponse};
+pub use client::{
+    eval_with_retry, simple_with_retry, Client, EvalResponse, RetryPolicy,
+};
 pub use listener::{Server, ServeOptions};
 pub use protocol::SERVE_PROTOCOL_VERSION;

@@ -2,7 +2,7 @@
 //!
 //! One request per line, one *or more* response lines per request:
 //!
-//! * `{"op":"ping"}` → `{"ok":true,"op":"ping","protocol":1,"done":true}`
+//! * `{"op":"ping"}` → `{"ok":true,"op":"ping","protocol":2,"done":true}`
 //! * `{"op":"eval","scenario":{...}}` → a header line
 //!   (`{"ok":true,"op":"eval",...,"points":N}`), then one
 //!   `{"row":"<csv line>"}` per CSV line (header row included), then a
@@ -10,7 +10,11 @@
 //!   strings with `\n` (plus a trailing `\n`) reproduces the `repro
 //!   run` CSV byte-for-byte.
 //! * `{"op":"stats"}` / `{"op":"flush"}` / `{"op":"shutdown"}` →
-//!   a single line carrying `"done":true`.
+//!   a single line carrying `"done":true`. The `stats` line reports,
+//!   besides uptime/cache/metrics, a `"salvage"` object (`kept` /
+//!   `dropped` counts from the startup cache load) and a `"faults"`
+//!   object (per-point hit/fire counters when `REPRO_FAULTS` is
+//!   armed, `{}` otherwise) — protocol v2.
 //!
 //! Every response line carries `"ok"`; the last line of a response
 //! carries `"done":true`. Errors are a single
@@ -26,7 +30,8 @@ use crate::util::json::{escape, Json};
 
 /// Wire-protocol version, reported by `ping` and `stats`. Bump on any
 /// change to request/response shapes (guarded by `repro lint` R3).
-pub const SERVE_PROTOCOL_VERSION: u32 = 1;
+/// v2: the `stats` response gained the `salvage` and `faults` objects.
+pub const SERVE_PROTOCOL_VERSION: u32 = 2;
 
 /// A decoded client request.
 #[derive(Debug)]

@@ -20,15 +20,23 @@
 //! long-lived shared cache file stops growing without bound
 //! (`--cache-max-mb` on the CLI, `cache.max_bytes` in a scenario).
 //!
-//! Loading is *compatible-or-discarded*: a file whose header does not
-//! match the running binary's versions — or that fails to parse at all
-//! — is ignored wholesale ([`CacheLoad::Discarded`]) rather than
-//! trusted partially or turned into a hard error. A bumped cost-model
-//! version (or mapper version, or cache-format version — PR 2-format
-//! files fall here) therefore invalidates every persisted entry instead
-//! of serving stale metrics or mapper-less entries. Saves are atomic
-//! (pid-unique temp file + rename), so a crash mid-save can corrupt at
-//! worst a temp file, never the cache — and each save's
+//! Loading is *compatible-or-salvaged*: a file whose header does not
+//! match the running binary's versions is ignored wholesale
+//! ([`CacheLoad::Discarded`]) rather than trusted partially or turned
+//! into a hard error — a bumped cost-model version (or mapper version,
+//! or cache-format version; pre-v4 files fall here) invalidates every
+//! persisted entry instead of serving stale metrics or mapper-less
+//! entries. A file with a *compatible* header whose body is damaged —
+//! a torn tail from a crashed writer, a flipped byte — is salvaged
+//! line by line instead: every entry carries a trailing fnv1a-64
+//! checksum (format v4), lines that verify are kept, corrupt lines
+//! are dropped, and the damaged original is moved aside to
+//! `<cache>.quarantine.<pid>` for post-mortem
+//! ([`CacheLoad::Salvaged`]). One interrupted save can therefore no
+//! longer cost hours of cached mapper searches. Saves are atomic
+//! (pid-unique temp file + rename, via [`crate::util::fsx`] with the
+//! `persist.write`/`persist.rename` fault points), so a crash mid-save
+//! can corrupt at worst a temp file, never the cache — and each save's
 //! read-union-write cycle holds a sidecar lock file
 //! (`<cache>.lock`, create-exclusive with bounded retry), so processes
 //! sharing one `--cache` path accumulate a true union even when their
@@ -44,6 +52,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cost::{EnergyBreakdown, Metrics, COST_MODEL_VERSION};
 use crate::mapping::{Mapping, MAPPER_VERSION};
+use crate::util::{fsx, hash::fnv1a};
 use crate::workload::Gemm;
 
 use super::cache::{f64_bits_hex, CacheEntry, EvalCache};
@@ -54,7 +63,10 @@ use super::cache::{f64_bits_hex, CacheEntry, EvalCache};
 /// `mapper=` token (v1 files — PR 2's format — are discarded).
 /// v3: entries gained the last-used stamp column (unix seconds), the
 /// recency signal for `max_bytes` LRU eviction (v2 files discarded).
-pub const CACHE_FORMAT_VERSION: u32 = 3;
+/// v4: entries gained a trailing fnv1a-64 checksum column over the rest
+/// of the line, the per-line integrity signal that lets `load_into`
+/// salvage intact entries from a damaged file (v3 files discarded).
+pub const CACHE_FORMAT_VERSION: u32 = 4;
 
 /// First token of the header line — identifies the file type.
 const MAGIC: &str = "www-cim-cache";
@@ -63,8 +75,8 @@ const MAGIC: &str = "www-cim-cache";
 const METRIC_FIELDS: usize = 18;
 
 /// Fields per entry line: point key, 3 GEMM dims, last-used stamp,
-/// mapping, metrics.
-const ENTRY_FIELDS: usize = 6 + METRIC_FIELDS;
+/// mapping, metrics, trailing checksum.
+const ENTRY_FIELDS: usize = 7 + METRIC_FIELDS;
 
 /// Mapping column marker for entries without a mapping (baseline).
 const NO_MAPPING: &str = "-";
@@ -76,7 +88,16 @@ pub enum CacheLoad {
     Missing,
     /// Compatible file; `entries` points preloaded.
     Loaded { entries: usize },
-    /// Incompatible or corrupt file; nothing was preloaded.
+    /// Compatible header but a damaged body: `kept` checksum-verified
+    /// entries preloaded, `dropped` corrupt lines skipped, and the
+    /// damaged original moved to `<cache>.quarantine.<pid>` when
+    /// `quarantined` (the move is best-effort).
+    Salvaged {
+        kept: usize,
+        dropped: usize,
+        quarantined: bool,
+    },
+    /// Incompatible or unrecognizable file; nothing was preloaded.
     Discarded { reason: String },
 }
 
@@ -87,6 +108,22 @@ impl CacheLoad {
             CacheLoad::Missing => "no persisted cache (cold start)".to_string(),
             CacheLoad::Loaded { entries } => {
                 format!("loaded {entries} persisted design points")
+            }
+            CacheLoad::Salvaged {
+                kept,
+                dropped,
+                quarantined,
+            } => {
+                let tail = if *quarantined {
+                    "; damaged original quarantined"
+                } else {
+                    ""
+                };
+                format!(
+                    "salvaged {kept} of {} persisted design points \
+                     ({dropped} corrupt line(s) dropped{tail})",
+                    kept + dropped
+                )
             }
             CacheLoad::Discarded { reason } => {
                 format!("discarded persisted cache: {reason}")
@@ -173,7 +210,9 @@ pub fn metrics_from_fields(fields: &[&str]) -> Result<Metrics> {
     })
 }
 
-/// One serialized entry line (no trailing newline).
+/// One serialized entry line (no trailing newline). The final column
+/// is an fnv1a-64 checksum (16 hex digits) over everything before it
+/// — the per-line integrity signal salvaging loads verify.
 fn encode_entry(point: &str, gemm: &Gemm, last_used: u64, entry: &CacheEntry) -> String {
     let mut line = String::new();
     line.push_str(point);
@@ -190,6 +229,9 @@ fn encode_entry(point: &str, gemm: &Gemm, last_used: u64, entry: &CacheEntry) ->
         line.push('\t');
         line.push_str(&field);
     }
+    let sum = fnv1a(line.as_bytes());
+    line.push('\t');
+    line.push_str(&format!("{sum:016x}"));
     line
 }
 
@@ -402,27 +444,87 @@ pub fn save_capped(
     // silently destroy previously persisted entries.
     load_into(cache, path)
         .with_context(|| format!("refusing to overwrite unreadable cache {}", path.display()))?;
-    let tmp: PathBuf = {
-        let name = path
-            .file_name()
-            .and_then(|n| n.to_str())
-            .unwrap_or("cache.bin");
-        path.with_file_name(format!("{name}.{}.tmp", std::process::id()))
-    };
     let (text, evicted) = encode_capped(cache, max_bytes);
-    fs::write(&tmp, text)
-        .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
-    fs::rename(&tmp, path)
-        .with_context(|| format!("renaming cache file into place at {}", path.display()))?;
+    fsx::write_atomic_named(path, &text, "persist.write", "persist.rename")
+        .with_context(|| format!("writing cache file {}", path.display()))?;
     Ok(SaveOutcome {
         entries: cache.len() - evicted,
         evicted,
     })
 }
 
+/// Post-mortem destination for a damaged cache file:
+/// `<cache>.quarantine.<pid>` next to the original, so a salvaging
+/// load leaves the evidence behind instead of silently rewriting it.
+fn quarantine_path(cache_path: &Path) -> PathBuf {
+    let name = cache_path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("cache.bin");
+    cache_path.with_file_name(format!("{name}.quarantine.{}", std::process::id()))
+}
+
+/// Parse one v4 entry line: verify the trailing checksum, then decode
+/// the body fields. Any failure condemns this line only — the caller
+/// salvages around it.
+fn parse_entry_line(line: &str) -> Result<(String, Gemm, u64, CacheEntry)> {
+    let (body, sum_text) = match line.rsplit_once('\t') {
+        Some(parts) => parts,
+        None => bail!("no checksum column"),
+    };
+    let sum = match u64::from_str_radix(sum_text, 16) {
+        Ok(s) if sum_text.len() == 16 => s,
+        // A short/long or non-hex checksum field is corruption, spelled
+        // exhaustively (lint R5).
+        Ok(_) | Err(_) => bail!("bad checksum field {sum_text:?}"),
+    };
+    if fnv1a(body.as_bytes()) != sum {
+        bail!("checksum mismatch");
+    }
+    let fields: Vec<&str> = body.split('\t').collect();
+    if fields.len() != ENTRY_FIELDS - 1 {
+        bail!("{} fields, want {ENTRY_FIELDS}", fields.len() + 1);
+    }
+    let dims = (
+        parse_u64(fields[1]),
+        parse_u64(fields[2]),
+        parse_u64(fields[3]),
+    );
+    let gemm = match dims {
+        (Ok(m), Ok(n), Ok(k)) if m > 0 && n > 0 && k > 0 => Gemm::new(m, n, k),
+        // Any parse failure — or a zero dimension slipping past the
+        // guard — is corruption, spelled exhaustively (lint R5).
+        (Ok(_) | Err(_), _, _) => bail!("corrupt GEMM dims"),
+    };
+    let last_used = parse_u64(fields[4]).context("corrupt last-used stamp")?;
+    let mapping = if fields[5] == NO_MAPPING {
+        None
+    } else {
+        match Mapping::from_canonical(fields[5]) {
+            // The mapping's embedded GEMM must agree with the entry key
+            // it is stored under — a mismatch means the line was
+            // spliced or hand-edited (with a recomputed checksum, or it
+            // would already have failed above).
+            Ok(m) if m.gemm == gemm => Some(Arc::new(m)),
+            Ok(_) => bail!("mapping/GEMM mismatch"),
+            Err(e) => bail!("corrupt mapping: {e:#}"),
+        }
+    };
+    let metrics = metrics_from_fields(&fields[6..]).context("corrupt metrics")?;
+    Ok((
+        fields[0].to_string(),
+        gemm,
+        last_used,
+        CacheEntry { mapping, metrics },
+    ))
+}
+
 /// Load a persisted cache into `cache` (no hit/miss counter changes).
-/// A missing file is a cold start; an incompatible or corrupt file is
-/// discarded in full — only I/O failures on an existing file error.
+/// A missing file is a cold start; an incompatible header is discarded
+/// in full; a compatible file with damaged lines is salvaged — every
+/// checksum-verified line kept, corrupt lines dropped, the damaged
+/// original quarantined — and only I/O failures on an existing file
+/// error.
 pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
     let discard = |reason: String| Ok(CacheLoad::Discarded { reason });
     let text = match fs::read_to_string(path) {
@@ -446,68 +548,39 @@ pub fn load_into(cache: &EvalCache, path: &Path) -> Result<CacheLoad> {
             header()
         ));
     }
-    // Parse every line before preloading anything: a corrupt tail must
-    // not leave a half-loaded cache behind.
+    // Salvage line by line: keep every entry whose checksum verifies,
+    // drop the rest. Parsing completes before any preload so a
+    // quarantine rename below never races a half-loaded cache.
     let mut parsed: Vec<(String, Gemm, u64, CacheEntry)> = Vec::new();
+    let mut dropped = 0usize;
     for (i, line) in lines.enumerate() {
         if line.is_empty() {
             continue;
         }
-        let fields: Vec<&str> = line.split('\t').collect();
-        if fields.len() != ENTRY_FIELDS {
-            return discard(format!(
-                "corrupt entry on line {} ({} fields, want {ENTRY_FIELDS})",
-                i + 2,
-                fields.len(),
-            ));
+        match parse_entry_line(line) {
+            Ok(entry) => parsed.push(entry),
+            Err(e) => {
+                eprintln!("[cache] dropping corrupt line {}: {e:#}", i + 2);
+                dropped += 1;
+            }
         }
-        let dims = (
-            parse_u64(fields[1]),
-            parse_u64(fields[2]),
-            parse_u64(fields[3]),
-        );
-        let gemm = match dims {
-            (Ok(m), Ok(n), Ok(k)) if m > 0 && n > 0 && k > 0 => Gemm::new(m, n, k),
-            // Any parse failure — or a zero dimension slipping past the
-            // guard — is corruption, spelled exhaustively (lint R5).
-            (Ok(_) | Err(_), _, _) => {
-                return discard(format!("corrupt GEMM dims on line {}", i + 2))
-            }
-        };
-        let last_used = match parse_u64(fields[4]) {
-            Ok(v) => v,
-            Err(_) => return discard(format!("corrupt last-used stamp on line {}", i + 2)),
-        };
-        let mapping = if fields[5] == NO_MAPPING {
-            None
-        } else {
-            match Mapping::from_canonical(fields[5]) {
-                // The mapping's embedded GEMM must agree with the entry
-                // key it is stored under — a mismatch means the file
-                // was spliced or hand-edited.
-                Ok(m) if m.gemm == gemm => Some(Arc::new(m)),
-                Ok(_) => return discard(format!("mapping/GEMM mismatch on line {}", i + 2)),
-                Err(e) => {
-                    return discard(format!("corrupt mapping on line {}: {e:#}", i + 2))
-                }
-            }
-        };
-        let metrics = match metrics_from_fields(&fields[6..]) {
-            Ok(m) => m,
-            Err(e) => return discard(format!("corrupt metrics on line {}: {e:#}", i + 2)),
-        };
-        parsed.push((
-            fields[0].to_string(),
-            gemm,
-            last_used,
-            CacheEntry { mapping, metrics },
-        ));
     }
-    let entries = parsed.len();
+    let kept = parsed.len();
     for (point, gemm, last_used, entry) in parsed {
         cache.preload_stamped(&point, gemm, entry, last_used);
     }
-    Ok(CacheLoad::Loaded { entries })
+    if dropped > 0 {
+        // Move the damaged original aside (best-effort — the load
+        // succeeded regardless): the next save writes a clean file and
+        // the evidence survives for post-mortem.
+        let quarantined = fs::rename(path, quarantine_path(path)).is_ok();
+        return Ok(CacheLoad::Salvaged {
+            kept,
+            dropped,
+            quarantined,
+        });
+    }
+    Ok(CacheLoad::Loaded { entries: kept })
 }
 
 #[cfg(test)]
@@ -704,6 +777,35 @@ mod tests {
     }
 
     #[test]
+    fn pr4_format_v3_cache_is_discarded_wholesale() {
+        // A PR 4-era file: format=3 header, no per-entry checksum
+        // column. The versioning contract discards it in full —
+        // salvage only applies within the current format.
+        let path = tmp_path("pr4-format");
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        let mut old = format!(
+            "{MAGIC}\tformat=3\tcost-model={COST_MODEL_VERSION}\tmapper={MAPPER_VERSION}\n"
+        );
+        old.push_str("pt\t8\t8\t8\t12345\t-");
+        for f in metrics_fields(&metrics(1.0)) {
+            old.push('\t');
+            old.push_str(&f);
+        }
+        old.push('\n');
+        fs::write(&path, old).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Discarded { reason } => {
+                assert!(reason.contains("incompatible header"), "{reason}");
+            }
+            other => panic!("format-v3 cache must be discarded, got {other:?}"),
+        }
+        assert!(fresh.is_empty(), "no v3 entries may survive");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
     fn pr3_format_v2_cache_is_discarded_wholesale() {
         // A PR 3-era file: format=2 header, no last-used column. The
         // versioning contract discards it in full.
@@ -782,8 +884,10 @@ mod tests {
     }
 
     #[test]
-    fn mapping_gemm_mismatch_discards_the_file() {
+    fn spliced_line_fails_its_checksum_and_is_dropped() {
         // Splice the mapping of one entry under another entry's GEMM.
+        // The edit invalidates the line's checksum, so the salvaging
+        // load drops exactly that line.
         let cache = EvalCache::new();
         let g = Gemm::new(16, 32, 64);
         cache.get_or_compute("pt", g, || mapped_entry(1.0, g));
@@ -796,12 +900,52 @@ mod tests {
 
         let fresh = EvalCache::new();
         match load_into(&fresh, &path).unwrap() {
-            CacheLoad::Discarded { reason } => {
-                assert!(reason.contains("mismatch"), "{reason}");
+            CacheLoad::Salvaged {
+                kept,
+                dropped,
+                quarantined,
+            } => {
+                assert_eq!((kept, dropped), (0, 1));
+                assert!(quarantined, "damaged original must be moved aside");
             }
-            other => panic!("spliced cache must be discarded, got {other:?}"),
+            other => panic!("spliced line must be dropped, got {other:?}"),
         }
         assert!(fresh.is_empty());
+        assert!(!path.exists(), "quarantine must move the damaged file");
+        assert!(quarantine_path(&path).exists());
+        let _ = fs::remove_file(quarantine_path(&path));
+    }
+
+    #[test]
+    fn spliced_line_with_recomputed_checksum_is_still_dropped() {
+        // An adversarially hand-edited line — GEMM dims spliced *and*
+        // the checksum recomputed to match — passes the integrity
+        // check but still fails the semantic mapping/GEMM cross-check.
+        let cache = EvalCache::new();
+        let g = Gemm::new(16, 32, 64);
+        cache.get_or_compute("pt", g, || mapped_entry(1.0, g));
+        let path = tmp_path("spliced-resummed");
+        save(&cache, &path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        let (head, entry_line) = text.trim_end().split_once('\n').unwrap();
+        let (body, _old_sum) = entry_line.rsplit_once('\t').unwrap();
+        let spliced_body = body.replacen("pt\t16\t32\t64\t", "pt\t16\t32\t65\t", 1);
+        assert_ne!(body, spliced_body);
+        let resummed = format!(
+            "{head}\n{spliced_body}\t{:016x}\n",
+            fnv1a(spliced_body.as_bytes())
+        );
+        fs::write(&path, resummed).unwrap();
+
+        let fresh = EvalCache::new();
+        match load_into(&fresh, &path).unwrap() {
+            CacheLoad::Salvaged { kept, dropped, .. } => {
+                assert_eq!((kept, dropped), (0, 1));
+            }
+            other => panic!("hand-edited line must be dropped, got {other:?}"),
+        }
+        assert!(fresh.is_empty());
+        let _ = fs::remove_file(quarantine_path(&path));
         let _ = fs::remove_file(&path);
     }
 
@@ -842,21 +986,67 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_entries_discard_the_whole_file() {
+    fn corrupt_tail_is_salvaged_around_not_discarded() {
         let cache = EvalCache::new();
         cache.get_or_compute("pt", Gemm::new(8, 8, 8), || entry(1.0));
         let path = tmp_path("corrupt");
+        let _ = fs::remove_file(&path);
         save(&cache, &path).unwrap();
         let mut text = fs::read_to_string(&path).unwrap();
         text.push_str("pt-broken\t1\t2\n"); // truncated entry
         fs::write(&path, &text).unwrap();
 
         let fresh = EvalCache::new();
-        match load_into(&fresh, &path).unwrap() {
-            CacheLoad::Discarded { reason } => assert!(reason.contains("corrupt"), "{reason}"),
-            other => panic!("corrupt cache must be discarded, got {other:?}"),
+        let load = load_into(&fresh, &path).unwrap();
+        assert_eq!(
+            load,
+            CacheLoad::Salvaged {
+                kept: 1,
+                dropped: 1,
+                quarantined: true
+            }
+        );
+        assert!(load.describe().contains("salvaged 1 of 2"), "{}", load.describe());
+        assert_eq!(fresh.len(), 1, "the intact entry must survive");
+        let e = fresh.get_or_compute("pt", Gemm::new(8, 8, 8), || {
+            panic!("salvaged entry must hit")
+        });
+        assert_eq!(e, entry(1.0));
+        assert!(!path.exists(), "quarantine must move the damaged file");
+        let _ = fs::remove_file(quarantine_path(&path));
+    }
+
+    #[test]
+    fn salvaging_save_cycle_rewrites_a_clean_cache() {
+        // End-to-end crash recovery: load a damaged file (salvage +
+        // quarantine), then save — the new file is clean and loads as
+        // Loaded, and the quarantined original is still on disk.
+        let cache = EvalCache::new();
+        cache.get_or_compute("pt", Gemm::new(8, 8, 8), || entry(1.0));
+        let path = tmp_path("salvage-cycle");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(quarantine_path(&path));
+        save(&cache, &path).unwrap();
+        let mut text = fs::read_to_string(&path).unwrap();
+        let torn_at = text.len() - 10; // tear inside the last line
+        text.truncate(torn_at);
+        fs::write(&path, &text).unwrap();
+
+        let recovered = EvalCache::new();
+        match load_into(&recovered, &path).unwrap() {
+            CacheLoad::Salvaged { dropped, .. } => assert_eq!(dropped, 1),
+            other => panic!("torn tail must salvage, got {other:?}"),
         }
-        assert!(fresh.is_empty(), "corrupt file must not half-load");
+        recovered.get_or_compute("pt-new", Gemm::new(4, 4, 4), || entry(2.0));
+        save(&recovered, &path).unwrap();
+        let reloaded = EvalCache::new();
+        assert_eq!(
+            load_into(&reloaded, &path).unwrap(),
+            CacheLoad::Loaded { entries: 1 },
+            "the re-saved cache must be clean"
+        );
+        assert!(quarantine_path(&path).exists(), "evidence must survive");
+        let _ = fs::remove_file(quarantine_path(&path));
         let _ = fs::remove_file(&path);
     }
 

@@ -1,0 +1,312 @@
+//! Deterministic fault injection for robustness tests and chaos e2e.
+//!
+//! Production code declares *named fault points* at its failure-prone
+//! seams (`faults::check("persist.rename")`); a run arms them through
+//! the `REPRO_FAULTS` environment variable. Unarmed — the normal case —
+//! a check is one branch on a lazily initialised `None`: no
+//! allocation, no atomics, no syscalls, so the hot path is untouched
+//! and an unarmed build's output is byte-identical to a build without
+//! the layer at all. Armed, every crash/torn-write/overload scenario
+//! becomes a reproducible test instead of a hope.
+//!
+//! ## Spec grammar
+//!
+//! `REPRO_FAULTS` is a comma-separated list of `point=mode[@n]`
+//! clauses:
+//!
+//! ```text
+//! REPRO_FAULTS='persist.rename=fail@1,serve.accept=delay_ms:250@2'
+//! ```
+//!
+//! * `fail` — the point reports [`FaultAction::Fail`]; the caller
+//!   returns an injected error (a simulated crash or syscall failure).
+//! * `torn` — the point reports [`FaultAction::Torn`]; write-shaped
+//!   callers persist only a prefix of their payload (a torn write).
+//! * `delay_ms:<d>` — the check sleeps `d` milliseconds in place (a
+//!   simulated stall); the caller proceeds normally.
+//! * `@n` — fire on the *n*-th hit of the point only (1-based,
+//!   default 1). Hits keep counting after the firing, so counters
+//!   stay meaningful.
+//!
+//! A malformed spec disarms the layer with a loud stderr note instead
+//! of failing the run — the injection layer must never be able to
+//! crash a run on its own.
+//!
+//! Every armed clause counts its hits and firings; [`snapshot`]
+//! reports them aggregated per point, sorted by point name (so
+//! rendering is deterministic — the serve daemon's `stats` op exposes
+//! the snapshot for CI assertions).
+//!
+//! ## Known fault points
+//!
+//! | point            | site                                        |
+//! |------------------|---------------------------------------------|
+//! | `persist.write`  | cache temp-file write (`sweep::persist`)    |
+//! | `persist.rename` | cache rename-into-place (`sweep::persist`)  |
+//! | `fsx.write`      | other atomic artifact writes ([`super::fsx`]) |
+//! | `fsx.rename`     | their rename-into-place                     |
+//! | `serve.accept`   | accepted connection → forced busy rejection |
+//! | `shard.spawn`    | orchestrator shard spawn (`scenario::orchestrate`) |
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// What an armed fault point tells its caller to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Not armed, or not this hit: proceed normally.
+    None,
+    /// Fail the operation with an injected error.
+    Fail,
+    /// Truncate the write — the caller persists a torn payload.
+    Torn,
+}
+
+/// Fault mode parsed from one spec clause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Fail,
+    Torn,
+    DelayMs(u64),
+}
+
+/// One armed clause with its live counters.
+#[derive(Debug)]
+struct Point {
+    name: String,
+    mode: Mode,
+    /// 1-based hit index the clause fires on.
+    at: u64,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// Aggregated hit/fire counts for one point name ([`snapshot`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultCount {
+    pub point: String,
+    pub hits: u64,
+    pub fired: u64,
+}
+
+/// Parse one `point=mode[@n]` clause.
+fn parse_clause(clause: &str) -> Result<Point, String> {
+    let (name, rest) = clause
+        .split_once('=')
+        .ok_or_else(|| format!("clause {clause:?} wants point=mode[@n]"))?;
+    let name = name.trim();
+    if name.is_empty() {
+        return Err(format!("clause {clause:?} has an empty point name"));
+    }
+    let (mode_text, at) = match rest.rsplit_once('@') {
+        Some((m, n)) => {
+            let at = n
+                .parse::<u64>()
+                .map_err(|_| format!("bad hit index {n:?} in {clause:?}"))?;
+            if at == 0 {
+                return Err(format!("hit index in {clause:?} is 1-based"));
+            }
+            (m, at)
+        }
+        None => (rest, 1),
+    };
+    let mode = if mode_text == "fail" {
+        Mode::Fail
+    } else if mode_text == "torn" {
+        Mode::Torn
+    } else if let Some(d) = mode_text.strip_prefix("delay_ms:") {
+        Mode::DelayMs(
+            d.parse::<u64>()
+                .map_err(|_| format!("bad delay {d:?} in {clause:?}"))?,
+        )
+    } else {
+        return Err(format!(
+            "unknown mode {mode_text:?} in {clause:?} (want fail, torn or delay_ms:<d>)"
+        ));
+    };
+    Ok(Point {
+        name: name.to_string(),
+        mode,
+        at,
+        hits: AtomicU64::new(0),
+        fired: AtomicU64::new(0),
+    })
+}
+
+/// Parse a whole spec into clauses sorted by point name. Several
+/// clauses may share one point (e.g. a delay on hit 1, a failure on
+/// hit 3); each keeps its own counters and [`snapshot`] aggregates.
+fn parse_spec(spec: &str) -> Result<Vec<Point>, String> {
+    let mut points = Vec::new();
+    for clause in spec.split(',') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        points.push(parse_clause(clause)?);
+    }
+    points.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(points)
+}
+
+/// The process-wide registry: parsed once from `REPRO_FAULTS` on first
+/// check. `None` = unarmed.
+static REGISTRY: OnceLock<Option<Vec<Point>>> = OnceLock::new();
+
+fn registry() -> Option<&'static Vec<Point>> {
+    REGISTRY
+        .get_or_init(|| {
+            let spec = match std::env::var("REPRO_FAULTS") {
+                Ok(s) => s,
+                Err(_) => return None,
+            };
+            match parse_spec(&spec) {
+                Ok(points) if points.is_empty() => None,
+                Ok(points) => {
+                    eprintln!("[faults] armed: {spec}");
+                    Some(points)
+                }
+                Err(why) => {
+                    eprintln!("[faults] ignoring malformed REPRO_FAULTS: {why}");
+                    None
+                }
+            }
+        })
+        .as_ref()
+}
+
+/// True when any fault point is armed.
+pub fn armed() -> bool {
+    registry().is_some()
+}
+
+/// Declare a fault point. Unarmed this is a no-op branch. Armed, it
+/// counts the hit, serves `delay_ms` stalls in place, and returns
+/// `Fail`/`Torn` for the caller to honour (`Fail` wins when several
+/// clauses fire on the same hit).
+pub fn check(point: &str) -> FaultAction {
+    match registry() {
+        Some(points) => check_in(points, point),
+        None => FaultAction::None,
+    }
+}
+
+fn check_in(points: &[Point], point: &str) -> FaultAction {
+    let mut action = FaultAction::None;
+    for p in points.iter().filter(|p| p.name == point) {
+        let hit = p.hits.fetch_add(1, Ordering::Relaxed) + 1;
+        if hit != p.at {
+            continue;
+        }
+        p.fired.fetch_add(1, Ordering::Relaxed);
+        match p.mode {
+            Mode::DelayMs(ms) => {
+                eprintln!("[faults] {point}: delaying {ms} ms (hit {hit})");
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Mode::Fail => {
+                eprintln!("[faults] {point}: injecting failure (hit {hit})");
+                action = FaultAction::Fail;
+            }
+            Mode::Torn => {
+                eprintln!("[faults] {point}: tearing write (hit {hit})");
+                if action == FaultAction::None {
+                    action = FaultAction::Torn;
+                }
+            }
+        }
+    }
+    action
+}
+
+/// Hit/fire counts aggregated per point name, sorted by name (the
+/// clause list is kept sorted, so aggregation is a single pass and the
+/// order is deterministic). Empty when unarmed.
+pub fn snapshot() -> Vec<FaultCount> {
+    let Some(points) = registry() else {
+        return Vec::new();
+    };
+    let mut out: Vec<FaultCount> = Vec::new();
+    for p in points {
+        let hits = p.hits.load(Ordering::Relaxed);
+        let fired = p.fired.load(Ordering::Relaxed);
+        match out.last_mut() {
+            Some(last) if last.point == p.name => {
+                last.hits += hits;
+                last.fired += fired;
+            }
+            Some(_) | None => out.push(FaultCount {
+                point: p.name.clone(),
+                hits,
+                fired,
+            }),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no test here sets REPRO_FAULTS — the registry is
+    // process-global and the whole unit-test binary shares it. The
+    // env-armed path is exercised end-to-end by the CI chaos step.
+
+    #[test]
+    fn clauses_parse_modes_and_hit_indices() {
+        let p = parse_clause("persist.rename=fail@3").unwrap();
+        assert_eq!((p.name.as_str(), p.mode, p.at), ("persist.rename", Mode::Fail, 3));
+        let p = parse_clause("serve.accept=torn").unwrap();
+        assert_eq!((p.mode, p.at), (Mode::Torn, 1), "hit index defaults to 1");
+        let p = parse_clause("x=delay_ms:250@2").unwrap();
+        assert_eq!((p.mode, p.at), (Mode::DelayMs(250), 2));
+    }
+
+    #[test]
+    fn malformed_clauses_are_rejected_with_context() {
+        for (spec, needle) in [
+            ("nomode", "point=mode"),
+            ("=fail", "empty point name"),
+            ("x=explode", "unknown mode"),
+            ("x=fail@0", "1-based"),
+            ("x=fail@many", "bad hit index"),
+            ("x=delay_ms:soon", "bad delay"),
+        ] {
+            let err = parse_spec(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec:?} -> {err:?}");
+        }
+    }
+
+    #[test]
+    fn spec_parses_multiple_clauses_sorted_and_skips_blanks() {
+        let points = parse_spec("b=fail, a=torn@2, ,c=delay_ms:1").unwrap();
+        let names: Vec<&str> = points.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        assert!(parse_spec("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn clause_fires_on_its_hit_only_and_counts_every_hit() {
+        let points = parse_spec("pt=fail@2").unwrap();
+        assert_eq!(check_in(&points, "pt"), FaultAction::None);
+        assert_eq!(check_in(&points, "pt"), FaultAction::Fail);
+        assert_eq!(check_in(&points, "pt"), FaultAction::None);
+        assert_eq!(check_in(&points, "other"), FaultAction::None);
+        assert_eq!(points[0].hits.load(Ordering::Relaxed), 3);
+        assert_eq!(points[0].fired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fail_wins_over_torn_on_the_same_hit() {
+        let points = parse_spec("pt=torn@1,pt=fail@1").unwrap();
+        assert_eq!(check_in(&points, "pt"), FaultAction::Fail);
+    }
+
+    #[test]
+    fn torn_fires_as_torn() {
+        let points = parse_spec("pt=torn@1").unwrap();
+        assert_eq!(check_in(&points, "pt"), FaultAction::Torn);
+    }
+}

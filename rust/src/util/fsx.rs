@@ -1,0 +1,131 @@
+//! Atomic artifact writes: unique temp file + rename.
+//!
+//! Every persistent artifact (cache files, orchestrator manifests,
+//! merged sweep JSON, query CSVs) must hit disk atomically so a crash
+//! mid-write can never leave a half-written file that poisons a later
+//! load or `--resume`. This factors out the idiom `sweep::persist`
+//! established — write `<name>.<pid>.tmp` in the destination
+//! directory, then `rename` into place — and threads it through the
+//! [`super::faults`] layer so chaos tests can tear or fail the write
+//! deterministically. Lint rule R8 rejects bare `fs::write` in the
+//! persistent-artifact scope and points here.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::faults::{self, FaultAction};
+
+/// Temp-file sibling for `path`: `<file name>.<pid>.tmp` in the same
+/// directory, so the final `rename` never crosses a filesystem.
+fn tmp_path(path: &Path) -> PathBuf {
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned());
+    let name = match name {
+        Some(n) => n,
+        None => "artifact".to_string(),
+    };
+    path.with_file_name(format!("{name}.{}.tmp", std::process::id()))
+}
+
+/// Write `contents` to `path` atomically under the generic
+/// `fsx.write` / `fsx.rename` fault points.
+pub fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    write_atomic_named(path, contents, "fsx.write", "fsx.rename")
+}
+
+/// Write `contents` to `path` atomically, declaring caller-chosen
+/// fault points (so e.g. the sweep cache arms `persist.write` /
+/// `persist.rename` independently of other artifacts). Creates parent
+/// directories. A `Fail` on the rename point leaves the temp file
+/// behind — exactly the debris a crash between write and rename
+/// would leave.
+pub fn write_atomic_named(
+    path: &Path,
+    contents: &str,
+    write_point: &str,
+    rename_point: &str,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating directory {}", parent.display()))?;
+        }
+    }
+    let tmp = tmp_path(path);
+    let payload = match faults::check(write_point) {
+        FaultAction::Fail => {
+            bail!("injected fault: {write_point} failing write of {}", path.display())
+        }
+        FaultAction::Torn => &contents.as_bytes()[..contents.len() / 2],
+        FaultAction::None => contents.as_bytes(),
+    };
+    fs::write(&tmp, payload).with_context(|| format!("writing {}", tmp.display()))?;
+    if faults::check(rename_point) == FaultAction::Fail {
+        bail!(
+            "injected fault: {rename_point} failing rename of {} into place",
+            path.display()
+        );
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "www-cim-fsx-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_atomic_round_trips() {
+        let dir = tmp_dir("round-trip");
+        let path = dir.join("artifact.json");
+        write_atomic(&path, "{\"ok\":true}\n").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "{\"ok\":true}\n");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_atomic_creates_parent_directories() {
+        let dir = tmp_dir("parents");
+        let path = dir.join("deep/nested/out.csv");
+        write_atomic(&path, "a,b\n1,2\n").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "a,b\n1,2\n");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_atomic_leaves_no_temp_debris() {
+        let dir = tmp_dir("no-debris");
+        let path = dir.join("artifact.txt");
+        write_atomic(&path, "payload").unwrap();
+        let mut names: Vec<String> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert_eq!(names, vec!["artifact.txt".to_string()]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overwrites_are_atomic_replacements() {
+        let dir = tmp_dir("overwrite");
+        let path = dir.join("artifact.txt");
+        write_atomic(&path, "first").unwrap();
+        write_atomic(&path, "second").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "second");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,10 @@
 //! * [`json`] — minimal JSON reader (serde_json replacement) for the
 //!   shard-merge tool.
 //! * [`check`] — mini property-testing harness (proptest replacement).
+//! * [`faults`] — deterministic fault injection (`REPRO_FAULTS`) for
+//!   chaos tests; a no-op branch when unarmed.
+//! * [`fsx`] — atomic artifact writes (unique temp + rename), wired
+//!   through the fault points.
 //! * [`hash`] — stable FNV-1a hashing for cross-process fingerprints.
 //! * [`cli`] — subcommand/flag parser (clap replacement).
 //! * [`pool`] — scoped worker pool (tokio/rayon replacement).
@@ -18,6 +22,8 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod csv;
+pub mod faults;
+pub mod fsx;
 pub mod hash;
 pub mod json;
 pub mod pool;

@@ -483,3 +483,184 @@ fn shards_prime_the_persistent_cache_for_full_runs() {
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Save a small mixed (baseline + CiM) grid and return the cache-file
+/// text plus the clean-load entry set the salvage tests check against.
+fn saved_cache_text(dir: &std::path::Path) -> (String, Vec<(String, Gemm)>) {
+    let arch = Architecture::default_sm();
+    let spec = SweepSpec::new("salvage")
+        .workload("w", vec![
+            Gemm::new(8, 8, 8),
+            Gemm::new(64, 32, 16),
+            Gemm::new(256, 64, 128),
+        ])
+        .systems(vec![
+            SystemSpec::Baseline,
+            SystemSpec::CimAtRf(CimPrimitive::digital_6t()),
+        ]);
+    let engine = SweepEngine::new(arch).threads(1);
+    engine.run_spec(&spec);
+    let path = dir.join("clean.bin");
+    persist::save(engine.cache(), &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let keys: Vec<(String, Gemm)> = engine
+        .cache()
+        .snapshot()
+        .into_iter()
+        .map(|(p, g, _)| (p, g))
+        .collect();
+    (text, keys)
+}
+
+/// Every surviving entry must be one the undamaged file held — a
+/// salvaging load may lose a line, never invent or mutate one.
+fn assert_no_invented_entries(cache: &EvalCache, original: &[(String, Gemm)]) {
+    for (point, gemm, _) in cache.snapshot() {
+        assert!(
+            original.contains(&(point.clone(), gemm)),
+            "salvage invented entry {point:?} {gemm}"
+        );
+    }
+}
+
+/// ISSUE 10 property: flipping any single non-newline byte after the
+/// header of a saved v4 cache file salvages all but at most one entry
+/// — and never invents one. (Header damage is out of scope by design:
+/// an unrecognizable header discards the file wholesale.)
+#[test]
+fn prop_single_byte_flip_salvages_all_but_one_entry() {
+    let dir = tmp_dir("flip");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (text, original) = saved_cache_text(&dir);
+    let total = original.len();
+    assert!(total >= 3, "grid must persist several entries");
+    let body_start = text.find('\n').unwrap() + 1;
+    let mut case = 0u32;
+    check(
+        Config::default().cases(40),
+        "single byte flip salvages all but one entry",
+        |rng| {
+            case += 1;
+            let mut bytes = text.clone().into_bytes();
+            // Flip a body byte that is not a line separator: merging
+            // two lines (or splitting one — both halves then fail the
+            // checksum) is a different, multi-line corruption.
+            let mut pos = body_start + rng.index(bytes.len() - body_start);
+            while bytes[pos] == b'\n' {
+                pos = body_start + rng.index(bytes.len() - body_start);
+            }
+            let xor = 1 + rng.index(255) as u8;
+            bytes[pos] ^= xor;
+            let path = dir.join(format!("flip-{case}.bin"));
+            std::fs::write(&path, &bytes).map_err(|e| format!("write: {e}"))?;
+
+            let cache = EvalCache::new();
+            let load = persist::load_into(&cache, &path)
+                .map_err(|e| format!("load: {e:#}"))?;
+            let kept = match load {
+                CacheLoad::Salvaged { kept, dropped, quarantined } => {
+                    // One flipped byte damages one line — except a
+                    // flip *to* the newline value, which splits a line
+                    // into two corrupt halves (dropped == 2).
+                    if dropped == 0 || dropped > 2 {
+                        return Err(format!(
+                            "one flipped byte, {dropped} dropped lines (pos {pos})"
+                        ));
+                    }
+                    if !quarantined {
+                        return Err("damaged file must be quarantined".to_string());
+                    }
+                    kept
+                }
+                other => return Err(format!("expected Salvaged, got {other:?}")),
+            };
+            if kept + 1 < total {
+                return Err(format!("kept {kept} of {total} (pos {pos})"));
+            }
+            assert_no_invented_entries(&cache, &original);
+            // The quarantined original still exists for post-mortem.
+            let _ = std::fs::remove_file(dir.join(format!(
+                "flip-{case}.bin.quarantine.{}",
+                std::process::id()
+            )));
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fixture: a file truncated mid-line (the classic torn tail from a
+/// crashed writer) loses only its final entry.
+#[test]
+fn truncated_mid_line_fixture_salvages_the_rest() {
+    let dir = tmp_dir("torn_tail");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (text, original) = saved_cache_text(&dir);
+    let total = original.len();
+    // Cut inside the last entry line, well before its checksum.
+    let last_line_start = text.trim_end().rfind('\n').unwrap() + 1;
+    let torn = &text[..last_line_start + 10];
+    let path = dir.join("torn.bin");
+    std::fs::write(&path, torn).unwrap();
+
+    let cache = EvalCache::new();
+    let load = persist::load_into(&cache, &path).unwrap();
+    assert_eq!(
+        load,
+        CacheLoad::Salvaged { kept: total - 1, dropped: 1, quarantined: true }
+    );
+    assert_no_invented_entries(&cache, &original);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fixture: a file truncated inside the final checksum column — the
+/// short checksum field condemns that line only.
+#[test]
+fn truncated_mid_checksum_fixture_salvages_the_rest() {
+    let dir = tmp_dir("torn_sum");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (text, original) = saved_cache_text(&dir);
+    let total = original.len();
+    // The file ends "...\t<16 hex digits>\n"; keep 7 checksum digits.
+    let torn = &text[..text.len() - 10];
+    assert!(!torn.ends_with('\n'), "cut must land inside the checksum");
+    let path = dir.join("torn-sum.bin");
+    std::fs::write(&path, torn).unwrap();
+
+    let cache = EvalCache::new();
+    let load = persist::load_into(&cache, &path).unwrap();
+    assert_eq!(
+        load,
+        CacheLoad::Salvaged { kept: total - 1, dropped: 1, quarantined: true }
+    );
+    assert_no_invented_entries(&cache, &original);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fixture: a duplicated entry line (e.g. a partially-flushed append
+/// replayed). Every checksum verifies, so the load is clean — and the
+/// duplicate deduplicates instead of inventing an entry.
+#[test]
+fn duplicated_line_fixture_loads_clean_without_inventing_entries() {
+    let dir = tmp_dir("dup_line");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let (text, original) = saved_cache_text(&dir);
+    let total = original.len();
+    let first_entry_line = text.lines().nth(1).unwrap().to_string();
+    let dup = format!("{}{first_entry_line}\n", text);
+    let path = dir.join("dup.bin");
+    std::fs::write(&path, dup).unwrap();
+
+    let cache = EvalCache::new();
+    let load = persist::load_into(&cache, &path).unwrap();
+    // All lines verify; the duplicated key collapses in the cache map.
+    assert_eq!(load, CacheLoad::Loaded { entries: total + 1 });
+    assert_eq!(cache.len(), total, "duplicate must deduplicate");
+    assert_no_invented_entries(&cache, &original);
+    assert!(path.exists(), "a clean load must not quarantine");
+    let _ = std::fs::remove_dir_all(&dir);
+}

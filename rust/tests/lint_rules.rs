@@ -203,6 +203,45 @@ fn r7_allow_marker_suppresses_with_reason() {
 }
 
 // ---------------------------------------------------------------------------
+// R8 — persistent-artifact writes go through util::fsx::write_atomic
+// ---------------------------------------------------------------------------
+
+const R8_FIRING: &str = "pub fn save(path: &std::path::Path, text: &str) -> std::io::Result<()> {\n    std::fs::write(path, text)\n}\n";
+
+#[test]
+fn r8_fires_on_bare_fs_write_in_persist_and_serve() {
+    let diags = check_source("rust/src/sweep/persist.rs", R8_FIRING);
+    assert_eq!(rule_ids(&diags), ["R8"], "{diags:?}");
+    assert_eq!(diags[0].line, 2);
+    let diags = check_source("rust/src/scenario/orchestrate.rs", R8_FIRING);
+    assert_eq!(rule_ids(&diags), ["R8"]);
+    // The whole serve tree is in scope by prefix.
+    let diags = check_source("rust/src/serve/listener.rs", R8_FIRING);
+    assert_eq!(rule_ids(&diags), ["R8"]);
+}
+
+#[test]
+fn r8_allows_write_atomic_and_out_of_scope_writes() {
+    let clean = "pub fn save(path: &std::path::Path, text: &str) -> anyhow::Result<()> {\n    crate::util::fsx::write_atomic(path, text)\n}\n";
+    assert!(check_source("rust/src/sweep/persist.rs", clean).is_empty());
+    // fsx.rs itself hosts the one sanctioned fs::write; cost/ never
+    // persists artifacts — both out of scope.
+    assert!(check_source("rust/src/util/fsx.rs", R8_FIRING).is_empty());
+    assert!(check_source("rust/src/cost/mod.rs", R8_FIRING).is_empty());
+    // io::Write method calls are not `fs::write` paths.
+    let method = "pub fn put(w: &mut dyn std::io::Write, b: &[u8]) -> std::io::Result<usize> {\n    w.write(b)\n}\n";
+    assert!(check_source("rust/src/sweep/persist.rs", method).is_empty());
+}
+
+#[test]
+fn r8_skips_tests_and_honors_allow_markers() {
+    let in_test = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        std::fs::write(std::path::Path::new(\"/tmp/x\"), \"fixture\").unwrap();\n    }\n}\n";
+    assert!(check_source("rust/src/sweep/persist.rs", in_test).is_empty());
+    let allowed = "pub fn scratch(path: &std::path::Path) -> std::io::Result<()> {\n    // lint: allow(R8): probe file is unlinked before anyone can read it\n    std::fs::write(path, \"probe\")\n}\n";
+    assert!(check_source("rust/src/serve/listener.rs", allowed).is_empty());
+}
+
+// ---------------------------------------------------------------------------
 // Allow-marker hygiene — bad markers are themselves diagnostics
 // ---------------------------------------------------------------------------
 
@@ -329,6 +368,6 @@ fn repo_manifest_guards_the_six_versioned_modules() {
 }
 
 #[test]
-fn rule_ids_cover_r1_through_r7() {
-    assert_eq!(RULE_IDS, ["R1", "R2", "R3", "R4", "R5", "R6", "R7"]);
+fn rule_ids_cover_r1_through_r8() {
+    assert_eq!(RULE_IDS, ["R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"]);
 }
